@@ -1,0 +1,79 @@
+"""Fig. 6a reproduction: multi-cluster MATMUL scaling, interleaved vs baseline.
+
+Matmul kernels are "simulated by scaling the number of TAC clusters" (paper
+wording): per-cluster compute demand comes from the TAC performance model;
+the shared-L2 island simulator delivers bandwidth under contention; achieved
+GOPS = min(compute-bound, bandwidth-bound) per cluster, summed.
+
+Claims validated:
+  * beyond two active clusters the non-interleaved baseline is bottlenecked
+    by inter-cluster conflicts;
+  * the interleaved scheme reaches up to ~2× higher performance at identical
+    physical bandwidth.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import memory_island as mi
+from repro.core import tac
+
+# Skinny weight-streaming GEMM: the working set does NOT fit TCDM, so each
+# cluster continuously streams weights from L2 — the Fig. 1b multi-cluster
+# pressure pattern Fig. 6a measures (large-M blocked GEMMs reuse TCDM and
+# never expose the interconnect bottleneck).
+MATMUL = (8, 2048, 2048)
+
+
+def per_cluster_demand_bytes_per_cycle() -> float:
+    m, k, n = MATMUL
+    rep = tac.matmul_report(m, k, n, source="L2")
+    return rep.bytes_l2 / rep.cycles
+
+
+def run(n_clusters: int, interleaved: bool):
+    rep = tac.matmul_report(*MATMUL, source="L2")
+    demand = per_cluster_demand_bytes_per_cycle()
+    sim = mi.multicluster_bandwidth_experiment(
+        n_clusters, interleaved, burst_beats=16, n_bursts=300)
+    delivered = sim.wide_bw_bytes_per_cycle  # aggregate B/cycle
+    per_cluster_bw = delivered / n_clusters
+    slowdown = max(1.0, demand / max(per_cluster_bw, 1e-9))
+    eff_cycles = rep.cycles * slowdown
+    gops_per_cluster = rep.ops / eff_cycles * (
+        tac.PERFORMANCE_CORNER.freq_hz / 1e9)
+    return gops_per_cluster * n_clusters, delivered
+
+
+def main(csv: bool = True):
+    rows = []
+    for interleaved in (False, True):
+        for c in (1, 2, 3, 4, 5):
+            t0 = time.perf_counter()
+            gops, bw = run(c, interleaved)
+            us = (time.perf_counter() - t0) * 1e6
+            label = "interleaved" if interleaved else "baseline"
+            rows.append((f"fig6a_{label}_c{c}", us, f"{gops:.1f}GOPS|{bw:.1f}B/cyc"))
+    # claim checks
+    base5 = run(5, False)[0]
+    inter5 = run(5, True)[0]
+    ratio = inter5 / base5
+    base2, base3 = run(2, False)[0], run(3, False)[0]
+    rows.append(("fig6a_speedup_at_5_clusters", 0.0, f"{ratio:.2f}x (paper: up to 2x)"))
+    # "beyond two active clusters the baseline is bottlenecked": scaling
+    # 2→3 clusters falls well short of ideal (+50%) and 3→5 is flat
+    saturated = base3 < base2 * 1.4 and base5 < base3 * 1.05
+    rows.append(("fig6a_baseline_saturates_past_2", 0.0,
+                 "yes" if saturated else "no"))
+    assert saturated, "baseline did not show the paper's >2-cluster bottleneck"
+
+    if csv:
+        for r in rows:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    assert 1.7 <= ratio <= 2.3, f"interleaving speedup {ratio:.2f} outside paper band"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Kernel micro-benchmarks (beyond paper): wall time of the op backends on
+this host + bit-exactness spot checks. On CPU the 'interpret' backend is a
+correctness vehicle, not a speed claim — timings are recorded for
+regression tracking only; real-hardware numbers come from the roofline
+analysis of the compiled dry-run.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(csv: bool = True):
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # int8 GEMM
+    from repro.kernels.int8_gemm.ops import QuantizedLinearParams, int8_gemm
+
+    m, k, n = 256, 512, 256
+    w = rng.standard_normal((k, n), np.float32) / np.sqrt(k)
+    p = QuantizedLinearParams.from_float(
+        jnp.asarray(w), jnp.zeros((n,)), 0.05, 0.05)
+    xq = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    us_x = _timeit(lambda a: int8_gemm(a, p, backend="xla"), xq)
+    y1 = int8_gemm(xq, p, backend="xla")
+    y2 = int8_gemm(xq, p, backend="interpret")
+    exact = bool((np.asarray(y1) == np.asarray(y2)).all())
+    rows.append((f"int8_gemm_{m}x{k}x{n}_xla", us_x, f"bitexact_vs_pallas={exact}"))
+
+    # ITA attention
+    from repro.kernels.ita_attention.ops import ita_attention
+
+    b, h, s, d = 1, 4, 256, 64
+    q8 = jnp.asarray(rng.integers(-127, 128, (b, h, s, d)), jnp.int8)
+    k8 = jnp.asarray(rng.integers(-127, 128, (b, h, s, d)), jnp.int8)
+    v8 = jnp.asarray(rng.integers(-127, 128, (b, h, s, d)), jnp.int8)
+    kw = dict(qk_scale=9e-4, v_scale=0.03, out_scale=0.02, causal=True)
+    us_a = _timeit(lambda a, b_, c: ita_attention(a, b_, c, backend="xla", **kw),
+                   q8, k8, v8)
+    ya = ita_attention(q8, k8, v8, backend="xla", **kw)
+    yb = ita_attention(q8, k8, v8, backend="interpret", **kw)
+    exact = bool((np.asarray(ya) == np.asarray(yb)).all())
+    rows.append((f"ita_attention_{s}x{d}_xla", us_a, f"bitexact_vs_pallas={exact}"))
+
+    # SSD scan
+    from repro.kernels.ssd_scan.ops import ssd_scan
+
+    B, H, S, P, G, N = 1, 4, 512, 32, 1, 32
+    dta = jnp.asarray(-rng.random((B, H, S), np.float32) * 0.1)
+    x = jnp.asarray(rng.standard_normal((B, H, S, P), np.float32))
+    bm = jnp.asarray(rng.standard_normal((B, G, S, N), np.float32) * 0.3)
+    cm = jnp.asarray(rng.standard_normal((B, G, S, N), np.float32) * 0.3)
+    us_s = _timeit(lambda *a: ssd_scan(*a, backend="xla"), dta, x, bm, cm)
+    rows.append((f"ssd_scan_{S}x{P}x{N}_xla", us_s, "chunked-matmul-form"))
+
+    # RG-LRU
+    from repro.kernels.rglru.ops import rglru
+
+    log_a = jnp.asarray(-np.abs(rng.standard_normal((1, 512, 128))) * 0.1,
+                        jnp.float32)
+    u = jnp.asarray(rng.standard_normal((1, 512, 128)), jnp.float32)
+    us_r = _timeit(lambda *a: rglru(*a, backend="xla"), log_a, u)
+    rows.append(("rglru_512x128_xla", us_r, "associative-scan-form"))
+
+    if csv:
+        for r in rows:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

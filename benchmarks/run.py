@@ -1,0 +1,45 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Sections:
+  fig6a   — multi-cluster matmul scaling, interleaved vs baseline (2×)
+  fig6b   — QoS narrow-latency under bursts (16×, 34-cycle worst case)
+  table1  — peak perf/efficiency incl. Fig. 7 L1/L2 and Fig. 8b shmoo
+  table2  — full-network energy/throughput (MobileBERT/Whisper/DINOv2)
+  kernels — op-backend micro-benchmarks + bit-exactness
+"""
+
+from __future__ import annotations
+
+import importlib
+import sys
+import traceback
+
+
+def main() -> None:
+    failures = 0
+    print("name,us_per_call,derived")
+    for label, mod in [
+        ("fig6a", "benchmarks.fig6a_multicluster"),
+        ("fig6b", "benchmarks.fig6b_qos"),
+        ("table1", "benchmarks.table1_efficiency"),
+        ("table2", "benchmarks.table2_networks"),
+        ("kernels", "benchmarks.kernel_bench"),
+    ]:
+        try:
+            m = importlib.import_module(mod)
+            m.main(csv=True)
+        except AssertionError as e:
+            failures += 1
+            print(f"{label}_CLAIM_FAILED,0.0,{e}")
+            traceback.print_exc(file=sys.stderr, limit=2)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{label}_ERROR,0.0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr, limit=3)
+    if failures:
+        print(f"FAILURES,{failures},see stderr")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

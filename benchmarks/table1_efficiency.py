@@ -1,0 +1,59 @@
+"""Table I / Fig. 7 / Fig. 8b reproduction: peak performance & efficiency.
+
+From the calibrated TAC + energy model:
+  * MATMUL/attention from L1 @ (0.6 V, 200 MHz): ≈3.1 TOPS/W peak;
+  * same workload from L2: ≈7 % lower efficiency;
+  * (0.88 V, 550 MHz): ≈896 GOPS at ≈600 mW;
+  * area efficiency vs the 3.19 mm² silicon area: ≈281 GOPS/mm²;
+  * voltage/frequency shmoo of the 128×512×64 MATMUL (Fig. 8b).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import energy, tac
+
+DIE_AREA_MM2 = 3.19
+SHMOO_MATMUL = (128, 512, 64)
+
+
+def main(csv: bool = True, shmoo: bool = False):
+    rows = []
+    t0 = time.perf_counter()
+    mm_l1 = tac.matmul_report(*SHMOO_MATMUL, source="L1")
+    mm_l2 = tac.matmul_report(*SHMOO_MATMUL, source="L2")
+    att = tac.attention_report(128, 64, 1, source="L1")
+    e_l1 = energy.energy(mm_l1, tac.EFFICIENCY_CORNER)
+    e_l2 = energy.energy(mm_l2, tac.EFFICIENCY_CORNER)
+    e_att = energy.energy(att, tac.EFFICIENCY_CORNER)
+    e_perf = energy.energy(mm_l1, tac.PERFORMANCE_CORNER)
+    us = (time.perf_counter() - t0) * 1e6
+
+    l2_penalty = 100 * (1 - e_l2.tops_per_w / e_l1.tops_per_w)
+    area_eff = e_perf.gops / DIE_AREA_MM2
+    rows += [
+        ("table1_matmul_L1_tops_per_w", us, f"{e_l1.tops_per_w:.2f} (paper 3.1)"),
+        ("table1_matmul_L2_penalty_pct", 0.0, f"{l2_penalty:.1f}% (paper 7%)"),
+        ("table1_attention_L1_tops_per_w", 0.0, f"{e_att.tops_per_w:.2f}"),
+        ("table1_peak_gops", 0.0, f"{e_perf.gops:.0f} (paper 896)"),
+        ("table1_peak_power_mw", 0.0, f"{e_perf.power_w*1e3:.0f} (paper 600)"),
+        ("table1_area_eff_gops_mm2", 0.0, f"{area_eff:.0f} (paper 281)"),
+    ]
+    if shmoo:
+        for v, f, gops, tpw, feas in energy.shmoo(SHMOO_MATMUL):
+            rows.append((f"shmoo_{v:.2f}V_{f}MHz", 0.0,
+                         f"{gops:.0f}GOPS|{tpw:.2f}TOPS/W|{'PASS' if feas else 'FAIL'}"))
+    if csv:
+        for r in rows:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    assert abs(e_l1.tops_per_w - 3.1) < 0.15, e_l1.tops_per_w
+    assert abs(l2_penalty - 7.0) < 2.0, l2_penalty
+    assert abs(e_perf.gops - 896) < 45, e_perf.gops
+    assert abs(e_perf.power_w - 0.600) < 0.06, e_perf.power_w
+    assert abs(area_eff - 281) < 30, area_eff
+    return rows
+
+
+if __name__ == "__main__":
+    main(shmoo=True)

@@ -1,0 +1,30 @@
+"""Interactive view of the L2 memory-island QoS experiments (Fig. 6a/6b).
+
+Run:  PYTHONPATH=src python examples/qos_sim.py
+"""
+
+from repro.core import memory_island as mi
+
+
+def main():
+    print("Fig. 6b — blocking host reads under DMA bursts (cycles):")
+    print(f"{'burst':>6} | {'baseline avg':>12} | {'QoS avg':>8} | "
+          f"{'QoS max':>8} | {'reduction':>9}")
+    for bl in (1, 4, 16, 64, 128, 256):
+        base = mi.qos_latency_experiment(bl, "rr", n_narrow=2000)
+        q = mi.qos_latency_experiment(bl, "bounded", n_narrow=2000)
+        print(f"{bl:6d} | {base.narrow_avg:12.1f} | {q.narrow_avg:8.1f} | "
+              f"{q.narrow_max:8d} | {base.narrow_avg/q.narrow_avg:8.1f}x")
+
+    print("\nFig. 6a — delivered L2 bandwidth (B/cycle) vs active clusters:")
+    print(f"{'clusters':>8} | {'contiguous':>10} | {'interleaved':>11}")
+    for c in (1, 2, 3, 4, 5):
+        r1 = mi.multicluster_bandwidth_experiment(c, False)
+        r2 = mi.multicluster_bandwidth_experiment(c, True)
+        print(f"{c:8d} | {r1.wide_bw_bytes_per_cycle:10.1f} | "
+              f"{r2.wide_bw_bytes_per_cycle:11.1f}")
+    print("\n(Fig. 6a GOPS view: python -m benchmarks.fig6a_multicluster)")
+
+
+if __name__ == "__main__":
+    main()

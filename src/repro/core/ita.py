@@ -1,0 +1,223 @@
+"""Integer-only softmax + GELU — the arithmetic of CHIMERA's TAC engines.
+
+The TAC integrates (i) a softmax engine that runs *concurrently* with the PE
+array during attention (64 softmax/cycle) and (ii) a per-PE activation unit
+(ReLU/GeLU). Both are integer-only (ITA, Islamoglu et al., ISLPED'23 — the
+paper's ref [9]). As in ITA, the QKᵀ int32 accumulators are requantized to
+**int8 logits** before entering the softmax engine, which bounds every
+intermediate to int32 (the chip has no 64-bit datapath; neither do we —
+JAX x64 stays off).
+
+Base-2 softmax
+--------------
+The engine computes softmax in base 2 so that *rescaling by a new running
+maximum is (almost) a pure arithmetic shift* — this is what makes the
+on-the-fly (streaming) evaluation cheap in hardware, and it is exactly the
+property the Pallas attention kernel exploits on TPU: unnormalized partial
+sums are rescaled with shifts as K/V tiles stream through VMEM.
+
+    softmax(x)_i = 2^((x_i − max)·α) / Σ_j 2^((x_j − max)·α),
+    α = s_logit · log2(e)
+
+Fixed point: α is encoded as a (mult, rshift) pair with ``mult ∈ [2⁶, 2¹⁴)``
+so small logit scales keep ≥7 bits of precision. For an int8 logit q::
+
+    t  = (q − max) · mult  >>  rshift      # Q(FB) fixed point, t ≤ 0
+    ip = t >> FB                           # integer part
+    fp = t − (ip << FB)                    # fractional part ∈ [0, 2^FB)
+    2^(t/2^FB) ≈ (2^FB + fp) >> (−ip)      # linear mantissa: 2^f ≈ 1+f
+
+The ``1+f`` mantissa is the softermax/ITA low-cost approximation; its error
+largely cancels in the ratio (bounds asserted in tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+# Fixed-point fraction bits of the exponent domain.
+FB = 8
+ONE = 1 << FB
+LOG2E = math.log2(math.e)
+PROB_BITS = 8  # probabilities re-emitted as uint8 (0..255) into the AV GEMM
+PROB_MAX = (1 << PROB_BITS) - 1
+
+
+def _alpha_fixed(logit_scale: float):
+    """Encode α = s·log2e as (mult, rshift) with mult ∈ [2⁶, 2¹⁴)."""
+    alpha = logit_scale * LOG2E
+    if alpha <= 0:
+        raise ValueError("logit_scale must be positive")
+    k = 0
+    while round(alpha * ONE * (1 << k)) < (1 << 6) and k < 24:
+        k += 1
+    mult = int(round(alpha * ONE * (1 << k)))
+    while mult >= (1 << 14):  # keep the int8·mult product within int32
+        mult >>= 1
+        k -= 1
+    return max(mult, 1), k
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftmaxSpec:
+    """Static metadata tying the int8 logit scale to fixed-point constants."""
+
+    logit_scale: float  # scale of the int8 logits entering the engine
+
+    @property
+    def alpha_mult(self) -> int:
+        return _alpha_fixed(self.logit_scale)[0]
+
+    @property
+    def alpha_rshift(self) -> int:
+        return _alpha_fixed(self.logit_scale)[1]
+
+
+def to_exponent_domain(dlogits: jax.Array, spec: SoftmaxSpec) -> jax.Array:
+    """(q − max) int values → Q(FB) base-2 exponents t ≤ 0 (int32-safe)."""
+    mult = jnp.int32(spec.alpha_mult)
+    t = dlogits.astype(jnp.int32) * mult
+    t = t >> spec.alpha_rshift  # floor keeps t ≤ 0 conservative
+    return jnp.maximum(t, -(31 << FB))
+
+
+def exp2_fixed(t: jax.Array) -> jax.Array:
+    """2^(t / 2^FB) in Q(FB), for t ≤ 0 (int32). Returns int32 in [0, 2^FB]."""
+    ip = t >> FB  # arithmetic shift → floor
+    fp = t - (ip << FB)
+    mant = ONE + fp  # 2^f ≈ 1 + f, f ∈ [0,1)
+    shift = jnp.clip(-ip, 0, 31)
+    return (mant >> shift).astype(jnp.int32)
+
+
+def int_softmax(logits_q: jax.Array, spec: SoftmaxSpec, axis: int = -1):
+    """Two-pass integer softmax over int8 logits (the non-streaming oracle).
+
+    Returns:
+      (probs_u8, denom): uint8 probabilities with implicit scale
+      ``1/PROB_MAX`` (p ≈ q_p / 255) and the int32 denominator.
+
+    int32 headroom: e ≤ 2^(FB+1) = 512 per element → rows up to 2²² elements
+    sum below 2³¹; e·PROB_MAX ≤ 2¹⁷.
+    """
+    x = logits_q.astype(jnp.int32)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    t = to_exponent_domain(x - m, spec)
+    e = exp2_fixed(t)
+    denom = jnp.sum(e, axis=axis, keepdims=True)
+    d = jnp.maximum(denom, 1)
+    probs = (e * PROB_MAX + (d >> 1)) // d  # round-half-up division
+    return probs.astype(jnp.uint8), denom
+
+
+def int_softmax_float_view(logits_q: jax.Array, spec: SoftmaxSpec, axis: int = -1):
+    """Integer softmax dequantized to float (for error measurement)."""
+    probs, _ = int_softmax(logits_q, spec, axis=axis)
+    return probs.astype(jnp.float32) / PROB_MAX
+
+
+# ---------------------------------------------------------------------------
+# Streaming (on-the-fly) softmax primitives — shared by ref oracle & kernel
+# ---------------------------------------------------------------------------
+
+
+def streaming_init(num_rows: int):
+    """Running state: (block_exp:int32[rows], denom:int32[rows]).
+
+    ``block_exp`` is the running maximum *rounded up to an integer exponent*
+    (units of whole powers of two). Keeping the reference point on integer
+    exponents makes every rescale an **exact** arithmetic shift — the
+    hardware trick that lets the softmax engine run with no multiplier in
+    the rescale path, and what the Pallas kernel mirrors on TPU.
+    """
+    return (
+        jnp.full((num_rows,), -31, jnp.int32),
+        jnp.zeros((num_rows,), jnp.int32),
+    )
+
+
+def _block_exp(t_max: jax.Array) -> jax.Array:
+    """ceil(t/2^FB): smallest integer exponent ≥ a Q(FB) exponent value."""
+    return -((-t_max) >> FB)
+
+
+def streaming_tile_update(state, tile_t: jax.Array):
+    """Fold one tile of exponent-domain logits ``t`` into the running state.
+
+    ``tile_t``: int32 [rows, tile] — q·α in Q(FB), *not* max-subtracted.
+    Returns (new_state, e_tile, carry_shift): e_tile are the tile's
+    exponentials relative to the new block exponent; ``carry_shift`` is what
+    the caller must right-shift any companion accumulator (partial AV sums)
+    by. Because block exponents are integers the shift is exact — streaming
+    and two-pass evaluation agree to the exp2 approximation error only.
+
+    int32 headroom: e ≤ 2^FB per element; a row of ≤2¹⁵ elements sums below
+    2²³; companion AV accumulators stay ≤ 2^FB·127·2¹⁵ < 2³⁰.
+    """
+    be, denom = state
+    be_tile = _block_exp(jnp.max(tile_t, axis=-1))
+    be_new = jnp.maximum(be, be_tile)
+    sh = jnp.clip(be_new - be, 0, 31)
+    e = exp2_fixed(jnp.maximum(tile_t - (be_new[..., None] << FB), -(31 << FB)))
+    denom_new = (denom >> sh) + jnp.sum(e, axis=-1)
+    return (be_new, denom_new), e, sh
+
+
+# ---------------------------------------------------------------------------
+# Integer GELU / ReLU — the per-PE activation unit (I-BERT-style i-GELU)
+# ---------------------------------------------------------------------------
+
+_ERF_A = -0.2888
+_ERF_B = -1.769
+_ERF_C = 1.0
+# int32 safety: qc = c/(a·s²) and the q·(q_erf+one) product must stay <2³¹.
+MIN_GELU_SCALE = 0.008
+
+
+def int_erf(q: jax.Array, scale: float):
+    """I-BERT integer erf: sgn(q)·[a·(clip(|q|)+b)² + c] in int32 arith."""
+    scale = max(scale, MIN_GELU_SCALE / math.sqrt(2.0))
+    qb = jnp.int32(int(math.floor(_ERF_B / scale)))  # b/s (negative)
+    qc = jnp.int32(int(math.floor(_ERF_C / (_ERF_A * scale * scale))))
+    sgn = jnp.sign(q).astype(jnp.int32)
+    q_abs = jnp.minimum(jnp.abs(q).astype(jnp.int32), -qb)
+    l = (q_abs + qb).astype(jnp.int32)
+    out = sgn * (l * l + qc)
+    return out, _ERF_A * scale * scale  # int value, its scale
+
+
+def int_gelu(q: jax.Array, scale: float):
+    """i-GELU: q/2 · (1 + i_erf(q/√2)). Returns (int32 value, out scale).
+
+    Valid for int8 inputs ``q`` and ``scale ≥ MIN_GELU_SCALE`` (asserted):
+    |q·(q_erf+one)| ≤ 127 · 2·(1/(0.2888·s²)) < 2³¹ for s ≥ 0.008.
+    """
+    if scale < MIN_GELU_SCALE:
+        raise ValueError(f"int_gelu requires scale ≥ {MIN_GELU_SCALE}")
+    q_erf, s_erf = int_erf(q, scale / math.sqrt(2.0))
+    one = jnp.int32(int(math.floor(1.0 / s_erf)))
+    out = q.astype(jnp.int32) * (q_erf + one)
+    return out, scale * s_erf / 2.0
+
+
+def int_gelu_i8(q: jax.Array, scale: float, out_scale: float) -> jax.Array:
+    """i-GELU requantized back to int8 with the given output scale."""
+    from repro.core.quant import quantize_to_fixed_point, requantize
+
+    val, s = int_gelu(q, scale)
+    m, shift = quantize_to_fixed_point(jnp.float32(abs(s) / out_scale))
+    # s is negative (a < 0): negate the integer value, fold sign into scale
+    return requantize(-val, m, shift)
+
+
+def int_relu(q: jax.Array) -> jax.Array:
+    return jnp.maximum(q, 0)
+
+
+def gelu_float(x: jax.Array) -> jax.Array:
+    """Float oracle for i-GELU error bounds."""
+    return 0.5 * x * (1.0 + jax.scipy.special.erf(x / math.sqrt(2.0)))

@@ -1,0 +1,295 @@
+"""Cycle-approximate simulator of the CHIMERA shared-L2 memory island.
+
+Models the subsystem of Fig. 4: up to five 512-bit wide AXI4 initiator ports
+(one per cluster DMA, 64-B beats, bursty), one 32-bit narrow port
+(latency-critical host/inter-cluster messages), and a 256 KiB L2 organized
+as two wide banks served one beat per bank per cycle (128 B/cycle aggregate
+→ 563 Gb/s at 550 MHz).
+
+Two address mappings:
+  * ``interleaved=True``  — word-interleaved: bank = (addr // 64) % 2.
+    Concurrent streams statistically spread over both banks (the paper's
+    scheme, Fig. 6a "w/ interleaving").
+  * ``interleaved=False`` — contiguous split: bank = addr // 128 KiB.
+    Clusters streaming the same tensor region serialize on one bank
+    (the baseline).
+
+Arbitration policies live in ``repro.core.qos``. The simulator is a plain
+discrete-time Python loop — it models silicon, not a TPU workload, and is
+deliberately dependency-free and deterministic (seeded traffic generators).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import List, Optional
+
+from repro.core import qos
+
+BEAT_BYTES = 64           # 512-bit wide beat
+N_BANKS = 2
+BANK_BYTES = 128 * 1024
+BASE_LATENCY = 6          # AXI xbar + CDC pipeline cycles (request + resp)
+
+
+@dataclasses.dataclass
+class IslandConfig:
+    n_wide_ports: int = 1
+    interleaved: bool = True
+    policy: str = "bounded"        # rr | fixed | bounded
+    bounded_window: int = 8
+    base_latency: int = BASE_LATENCY
+
+
+@dataclasses.dataclass
+class WideBurst:
+    port: int
+    addr: int
+    beats: int
+    issue_cycle: int
+    served: int = 0
+    done_cycle: int = -1
+
+
+@dataclasses.dataclass
+class NarrowRead:
+    addr: int
+    issue_cycle: int
+    done_cycle: int = -1
+
+
+@dataclasses.dataclass
+class SimResult:
+    cycles: int
+    narrow_latencies: List[int]
+    wide_beats_served: int
+    bank_busy: List[int]
+
+    @property
+    def narrow_avg(self) -> float:
+        ls = self.narrow_latencies
+        return sum(ls) / len(ls) if ls else 0.0
+
+    @property
+    def narrow_max(self) -> int:
+        return max(self.narrow_latencies) if self.narrow_latencies else 0
+
+    @property
+    def wide_bw_bytes_per_cycle(self) -> float:
+        return self.wide_beats_served * BEAT_BYTES / self.cycles if self.cycles else 0.0
+
+
+class MemoryIsland:
+    """Beat-accurate model of the two-bank L2 island."""
+
+    def __init__(self, cfg: IslandConfig):
+        self.cfg = cfg
+        self.arbiters = [
+            qos.make_arbiter(cfg.policy, cfg.bounded_window) for _ in range(N_BANKS)
+        ]
+
+    def bank_of(self, addr: int) -> int:
+        if self.cfg.interleaved:
+            return (addr // BEAT_BYTES) % N_BANKS
+        return min(addr // BANK_BYTES, N_BANKS - 1)
+
+    def simulate(
+        self,
+        wide_bursts: List[WideBurst],
+        narrow_reads: Optional[List[NarrowRead]] = None,
+        closed_loop_narrow: Optional[tuple] = None,
+        max_cycles: int = 5_000_000,
+    ) -> SimResult:
+        """Run the island until all traffic drains (or ``max_cycles``).
+
+        Narrow traffic is either an open-loop list of ``NarrowRead``s or —
+        matching the paper's measurement, where the RV32IMC host issues
+        *blocking* 32-bit loads — a closed-loop spec
+        ``(n_reads, gap_cycles, region_bytes, seed)`` with exactly one
+        outstanding read: the next is issued ``gap_cycles`` after the
+        previous response returns.
+        """
+        cfg = self.cfg
+        narrow_port_id = cfg.n_wide_ports  # one past the wide ports
+        # Per-port FIFO queues of outstanding bursts (in-order per AXI port).
+        wide_q: List[List[WideBurst]] = [[] for _ in range(cfg.n_wide_ports)]
+        narrow_q: List[NarrowRead] = []
+        narrow_reads = sorted(narrow_reads or [], key=lambda r: r.issue_cycle)
+        wi = ni = 0  # next-to-arrive indices
+        wide_bursts = sorted(wide_bursts, key=lambda b: b.issue_cycle)
+
+        cl_left, cl_gap, cl_region, cl_rng = 0, 0, 2 * BANK_BYTES, None
+        cl_next_issue = 0
+        cl_pending: Optional[NarrowRead] = None
+        if closed_loop_narrow is not None:
+            cl_left, cl_gap, cl_region, seed = closed_loop_narrow
+            cl_rng = random.Random(seed)
+
+        served_beats = 0
+        bank_busy = [0] * N_BANKS
+        done_narrow: List[int] = []
+        narrow_total = len(narrow_reads) + cl_left
+        remaining = len(wide_bursts) + narrow_total
+        cycle = 0
+        while remaining and cycle < max_cycles:
+            # measurement ends with the narrow stream: the surviving DMA
+            # backlog is irrelevant to the latency experiment
+            if narrow_total and len(done_narrow) == narrow_total:
+                break
+            while wi < len(wide_bursts) and wide_bursts[wi].issue_cycle <= cycle:
+                wide_q[wide_bursts[wi].port].append(wide_bursts[wi])
+                wi += 1
+            while ni < len(narrow_reads) and narrow_reads[ni].issue_cycle <= cycle:
+                narrow_q.append(narrow_reads[ni])
+                ni += 1
+            if (cl_pending is None and cl_left > 0 and cycle >= cl_next_issue):
+                cl_pending = NarrowRead(
+                    addr=cl_rng.randrange(0, cl_region // 4) * 4, issue_cycle=cycle
+                )
+                narrow_q.append(cl_pending)
+                cl_left -= 1
+
+            for bank, arb in enumerate(self.arbiters):
+                # head-of-line requests targeting this bank
+                wide_ready = []
+                for p in range(cfg.n_wide_ports):
+                    if wide_q[p]:
+                        b = wide_q[p][0]
+                        beat_addr = b.addr + b.served * BEAT_BYTES
+                        if self.bank_of(beat_addr) == bank:
+                            wide_ready.append(p)
+                narrow_ready = bool(narrow_q) and self.bank_of(narrow_q[0].addr) == bank
+                grant = arb.pick(wide_ready, narrow_ready, narrow_port_id)
+                if grant is None:
+                    continue
+                bank_busy[bank] += 1
+                if grant.is_narrow:
+                    req = narrow_q.pop(0)
+                    req.done_cycle = cycle + cfg.base_latency
+                    done_narrow.append(req.done_cycle - req.issue_cycle)
+                    remaining -= 1
+                    if req is cl_pending:
+                        cl_next_issue = req.done_cycle + cl_gap
+                        cl_pending = None
+                else:
+                    b = wide_q[grant.initiator][0]
+                    b.served += 1
+                    served_beats += 1
+                    if b.served == b.beats:
+                        b.done_cycle = cycle + cfg.base_latency
+                        wide_q[grant.initiator].pop(0)
+                        # release burst locks on every bank this burst touched
+                        for a in self.arbiters:
+                            if a.locked_initiator == grant.initiator:
+                                a.burst_done()
+                        remaining -= 1
+            cycle += 1
+
+        return SimResult(
+            cycles=cycle,
+            narrow_latencies=done_narrow,
+            wide_beats_served=served_beats,
+            bank_busy=bank_busy,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Traffic generators (deterministic, seeded)
+# ---------------------------------------------------------------------------
+
+
+def dma_stream_traffic(
+    n_ports: int,
+    burst_beats: int,
+    n_bursts_per_port: int,
+    region_bytes: int = BANK_BYTES,
+    back_to_back: bool = True,
+    seed: int = 0,
+) -> List[WideBurst]:
+    """Each cluster DMA streams sequential bursts over a shared tensor region.
+
+    ``region_bytes ≤ BANK_BYTES`` means the whole region lives in one bank
+    under the contiguous (non-interleaved) mapping — the Fig. 6a worst case.
+    """
+    rng = random.Random(seed)
+    bursts = []
+    for p in range(n_ports):
+        addr = rng.randrange(0, max(1, region_bytes // 4)) * 4
+        for i in range(n_bursts_per_port):
+            issue = 0 if back_to_back else i * burst_beats * 2
+            bursts.append(
+                WideBurst(port=p, addr=addr % region_bytes, beats=burst_beats,
+                          issue_cycle=issue)
+            )
+            addr += burst_beats * BEAT_BYTES
+    return bursts
+
+
+def host_narrow_traffic(
+    n_reads: int, gap_cycles: int = 4, region_bytes: int = 2 * BANK_BYTES, seed: int = 1
+) -> List[NarrowRead]:
+    """Host issues ``n_reads`` 32-bit loads, one every ``gap_cycles`` cycles.
+
+    Matches the paper's QoS experiment: 20,000 L2-to-L1 narrow reads from the
+    RV32IMC host while cluster DMAs generate concurrent bursts.
+    """
+    rng = random.Random(seed)
+    return [
+        NarrowRead(addr=rng.randrange(0, region_bytes // 4) * 4,
+                   issue_cycle=i * gap_cycles)
+        for i in range(n_reads)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Experiment drivers (used by benchmarks + tests)
+# ---------------------------------------------------------------------------
+
+
+def qos_latency_experiment(
+    burst_beats: int,
+    policy: str,
+    n_narrow: int = 20_000,
+    n_wide_ports: int = 1,
+    interleaved: Optional[bool] = None,
+    narrow_gap: int = 4,
+) -> SimResult:
+    """Fig. 6b: blocking host reads under concurrent DMA bursts.
+
+    Matches the paper's measurement: 20,000 32-bit L2-to-L1 reads from the
+    host (closed loop — a blocking CPU load) while the cluster DMA streams
+    AXI bursts of the given length **into the same memory region** the host
+    reads from. ``policy='rr'`` is the conventional baseline (contiguous
+    banks, transaction-granular arbitration); ``fixed``/``bounded`` are the
+    Chimera island (interleaved banks, per-beat QoS arbitration).
+    """
+    if interleaved is None:
+        interleaved = policy != "rr"
+    cfg = IslandConfig(n_wide_ports=n_wide_ports, interleaved=interleaved,
+                       policy=policy)
+    island = MemoryIsland(cfg)
+    region = BANK_BYTES  # shared 128 KiB region → all conflicts visible
+    # Enough back-to-back bursts to outlast the narrow stream in any policy.
+    worst_lat = BASE_LATENCY + 2 * burst_beats + 8
+    n_bursts = max(8, (n_narrow * (narrow_gap + worst_lat)) // max(1, burst_beats) + 8)
+    wide = dma_stream_traffic(n_wide_ports, burst_beats, n_bursts,
+                              region_bytes=region)
+    return island.simulate(
+        wide, closed_loop_narrow=(n_narrow, narrow_gap, region, 1),
+        max_cycles=50_000_000,
+    )
+
+
+def multicluster_bandwidth_experiment(
+    n_clusters: int,
+    interleaved: bool,
+    burst_beats: int = 16,
+    n_bursts: int = 400,
+) -> SimResult:
+    """Fig. 6a substrate: delivered L2 bandwidth vs #concurrent clusters."""
+    cfg = IslandConfig(n_wide_ports=n_clusters, interleaved=interleaved,
+                       policy="rr")
+    island = MemoryIsland(cfg)
+    wide = dma_stream_traffic(n_clusters, burst_beats, n_bursts)
+    return island.simulate(wide, [])

@@ -1,0 +1,123 @@
+"""Arbitration policies for the L2 memory island (paper §II, Fig. 4).
+
+Three policies, arbitrated per bank:
+
+  * ``rr``      — round-robin over initiators; bursts are NON-interruptible
+                  (once a wide burst wins a bank it holds it until its beats
+                  on that bank drain). This is the conventional baseline whose
+                  narrow latency inflates with burst length (Fig. 6b).
+  * ``fixed``   — narrow (latency-critical) beats always preempt wide beats;
+                  arbitration happens per beat, so a narrow read slips in
+                  between burst beats. Effective when narrow traffic is
+                  regulated at system level.
+  * ``bounded`` — fixed priority for narrow, but after ``window`` consecutive
+                  narrow grants on a bank a wide beat is guaranteed —
+                  prevents starvation of wide traffic under continuous
+                  narrow contention (the paper's bounded-priority scheme).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class Grant:
+    initiator: int          # index into the island's port list
+    is_narrow: bool
+
+
+class Arbiter:
+    """Per-bank arbiter. Subclasses implement ``pick``."""
+
+    def __init__(self) -> None:
+        self.rr_ptr = 0
+        self.locked_initiator: Optional[int] = None  # burst lock (rr only)
+        self.consecutive_narrow = 0
+
+    def pick(self, wide_ready: List[int], narrow_ready: bool,
+             narrow_port: int) -> Optional[Grant]:
+        raise NotImplementedError
+
+    def burst_done(self) -> None:
+        self.locked_initiator = None
+
+    def _rr(self, ready: List[int]) -> int:
+        # lowest index ≥ rr_ptr, wrapping
+        for off in range(len(ready)):
+            cand = ready[(self.rr_ptr + off) % len(ready)]
+            if cand is not None:
+                return cand
+        return ready[0]
+
+
+class RoundRobinArbiter(Arbiter):
+    """Baseline: RR over initiators, bursts lock the bank (non-preemptive).
+
+    A narrow request must wait for the *in-flight* burst to drain before it
+    can win arbitration — this is what makes the conventional design's
+    narrow latency grow with AXI burst length (Fig. 6b baseline). Between
+    bursts, arbitration is round-robin over whoever is waiting.
+    """
+
+    def pick(self, wide_ready, narrow_ready, narrow_port):
+        if self.locked_initiator is not None and self.locked_initiator in wide_ready:
+            return Grant(self.locked_initiator, False)  # burst continues
+        everyone = list(wide_ready) + ([narrow_port] if narrow_ready else [])
+        if not everyone:
+            return None
+        choice = everyone[self.rr_ptr % len(everyone)]
+        self.rr_ptr += 1
+        if choice == narrow_port and narrow_ready:
+            return Grant(narrow_port, True)
+        self.locked_initiator = choice  # burst is non-interruptible
+        return Grant(choice, False)
+
+
+class FixedPriorityArbiter(Arbiter):
+    """Narrow always wins; per-beat arbitration (no burst lock)."""
+
+    def pick(self, wide_ready, narrow_ready, narrow_port):
+        if narrow_ready:
+            return Grant(narrow_port, True)
+        if not wide_ready:
+            return None
+        choice = wide_ready[self.rr_ptr % len(wide_ready)]
+        self.rr_ptr += 1
+        return Grant(choice, False)
+
+
+class BoundedPriorityArbiter(Arbiter):
+    """Narrow priority bounded to ``window`` consecutive grants per bank."""
+
+    def __init__(self, window: int = 8) -> None:
+        super().__init__()
+        self.window = window
+
+    def pick(self, wide_ready, narrow_ready, narrow_port):
+        narrow_allowed = narrow_ready and (
+            self.consecutive_narrow < self.window or not wide_ready
+        )
+        if narrow_allowed:
+            self.consecutive_narrow += 1
+            return Grant(narrow_port, True)
+        if wide_ready:
+            self.consecutive_narrow = 0
+            choice = wide_ready[self.rr_ptr % len(wide_ready)]
+            self.rr_ptr += 1
+            return Grant(choice, False)
+        if narrow_ready:  # no wide contender — serve narrow anyway
+            self.consecutive_narrow += 1
+            return Grant(narrow_port, True)
+        return None
+
+
+def make_arbiter(policy: str, window: int = 8) -> Arbiter:
+    if policy == "rr":
+        return RoundRobinArbiter()
+    if policy == "fixed":
+        return FixedPriorityArbiter()
+    if policy == "bounded":
+        return BoundedPriorityArbiter(window)
+    raise ValueError(f"unknown arbitration policy: {policy!r}")

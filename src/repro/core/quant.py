@@ -1,0 +1,176 @@
+"""INT8 symmetric quantization with fixed-point requantization.
+
+This is the arithmetic contract of the CHIMERA TAC: 8-bit weights and
+activations, 32-bit accumulation, and a requantization step realized as an
+integer multiply + arithmetic shift (no float, no 64-bit datapath). We
+mirror that contract exactly so the Pallas kernels and the pure-jnp oracles
+are bit-identical — everything below is int32-safe (JAX x64 is off, as on
+the chip).
+
+Quantization scheme
+-------------------
+Symmetric (zero-point = 0) affine quantization::
+
+    q = clip(round(x / scale), -127, 127)        # int8 (−128 reserved)
+    x̂ = q * scale
+
+Weights use per-output-channel scales; activations per-tensor. The GEMM
+accumulates in int32 and requantizes with a 15-bit fixed-point multiplier::
+
+    M = s_in * s_w / s_out               # real multiplier
+    M ≈ m * 2**(-shift),  m ∈ [2**14, 2**15)
+
+Requantization uses a *normalize-then-multiply* scheme so the int32 range is
+never exceeded (exactly what a barrel-shifter + 16×16 multiplier RTL block
+does): accumulators ≥ 2¹⁶ are pre-shifted right by 15 (with rounding) before
+the multiply; small accumulators take the exact path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN = -127  # symmetric: -128 is never produced
+INT8_MAX = 127
+ACC_DTYPE = jnp.int32
+MULT_BITS = 15  # fixed-point multiplier width (16×16 signed multiplier)
+_PRE_SHIFT = 15
+_SMALL_ACC = 1 << 16
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Static quantization metadata for one tensor."""
+
+    bits: int = 8
+    per_channel_axis: Optional[int] = None  # None → per-tensor
+
+
+def compute_scale(x: jax.Array, axis=None, eps: float = 1e-8) -> jax.Array:
+    """amax-based symmetric scale. ``axis=None`` → per-tensor scalar scale."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, eps) / INT8_MAX
+
+
+def quantize(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Symmetric quantize to int8 (round-half-away-from-zero like the RTL)."""
+    q = _round_half_away(x / scale)
+    return jnp.clip(q, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _round_half_away(x: jax.Array) -> jax.Array:
+    """Round half away from zero — matches the TAC requant rounding mode."""
+    return jnp.trunc(x + jnp.where(x >= 0, 0.5, -0.5))
+
+
+def round_shift(v: jax.Array, s) -> jax.Array:
+    """Arithmetic right shift by ``s`` with round-half-away (int32-safe).
+
+    Negative ``s`` left-shifts. ``s`` may be a per-channel array.
+    """
+    v = v.astype(jnp.int32)
+    s = jnp.asarray(s, jnp.int32)
+    pos = jnp.maximum(s, 1)
+    rounded = (v + jnp.where(v >= 0, 1, -1) * (1 << (pos - 1))) >> pos
+    shifted_left = v << jnp.maximum(-s, 0)
+    return jnp.where(s > 0, rounded, jnp.where(s == 0, v, shifted_left))
+
+
+def quantize_to_fixed_point(multiplier: jax.Array, bits: int = MULT_BITS):
+    """Decompose a real multiplier M as ``m * 2**(-shift)``.
+
+    Returns (m:int32 ∈ [2**(bits-1), 2**bits), shift:int32). Pure-jnp so it
+    can run under jit; shapes follow ``multiplier``.
+    """
+    multiplier = jnp.asarray(multiplier, jnp.float32)
+    frac, exp = jnp.frexp(multiplier)  # multiplier = frac * 2**exp, frac∈[.5,1)
+    m = _round_half_away(frac * float(1 << bits)).astype(jnp.int32)
+    overflow = m == (1 << bits)
+    m = jnp.where(overflow, m >> 1, m)
+    exp = jnp.where(overflow, exp + 1, exp)
+    shift = bits - exp  # y = acc * m >> shift
+    return m, shift.astype(jnp.int32)
+
+
+def quantize_to_fixed_point_py(multiplier: float, bits: int = MULT_BITS):
+    """Python-level twin of ``quantize_to_fixed_point`` for static scales."""
+    import math
+
+    frac, exp = math.frexp(float(multiplier))
+    m = int(round(frac * (1 << bits)))
+    if m == (1 << bits):
+        m >>= 1
+        exp += 1
+    return m, bits - exp
+
+
+def requantize(acc: jax.Array, m: jax.Array, shift: jax.Array) -> jax.Array:
+    """Fixed-point requantization of an int32 accumulator to int8.
+
+    ``y ≈ clip(round(acc * m / 2**shift))`` using only int32 arithmetic:
+
+      * |acc| < 2¹⁶ : exact product (fits: 2¹⁶·2¹⁵ = 2³¹).
+      * otherwise   : pre-normalize ``acc`` right by 15 (rounded), multiply,
+        shift by the remainder — ≤ 2⁻¹⁶ relative pre-shift error, far below
+        the int8 output quantum.
+    """
+    acc = acc.astype(jnp.int32)
+    m = jnp.asarray(m, jnp.int32)
+    shift = jnp.asarray(shift, jnp.int32)
+    y_small = round_shift(acc * m, shift)
+    # Variable pre-shift: normalize |acc| into ~[2¹⁴, 2¹⁵]. The magnitude
+    # exponent comes from the float32 bit pattern (Mosaic-lowerable bitcast;
+    # jnp.frexp does not lower in Pallas TPU kernels). A rounding-induced
+    # exponent bump at 2^e boundaries costs at most one extra pre-shift bit —
+    # still ≥13 bits of headroom above the int8 output quantum.
+    bits = jax.lax.bitcast_convert_type(
+        jnp.abs(acc).astype(jnp.float32), jnp.int32
+    )
+    e = ((bits >> 23) & 0xFF) - 126  # |acc| ∈ [2^(e−1), 2^e)
+    pre = jnp.maximum(e - _PRE_SHIFT, 0).astype(jnp.int32)
+    acc_n = round_shift(acc, pre)
+    # shift < pre means |acc·M| ≥ 2²⁹ ≫ 127: mathematically saturated — clamp
+    # directly instead of left-shifting into int32 overflow.
+    sat = jnp.where(acc >= 0, INT8_MAX, INT8_MIN).astype(jnp.int32)
+    y_big = jnp.where(shift - pre < 0, sat,
+                      round_shift(acc_n * m, jnp.maximum(shift - pre, 0)))
+    y = jnp.where(jnp.abs(acc) < _SMALL_ACC, y_small, y_big)
+    return jnp.clip(y, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Layer-level helpers (used by models when running the INT8 serving path)
+# ---------------------------------------------------------------------------
+
+
+def quantize_weights(w: jax.Array, per_channel: bool = True):
+    """Quantize a [in, out] weight matrix. Returns (w_q:int8, scale:[out])."""
+    axis = 0 if per_channel else None
+    scale = compute_scale(w, axis=axis)
+    wq = quantize(w, scale)
+    return wq, (jnp.squeeze(scale, axis=0) if per_channel else scale)
+
+
+def fake_quant(x: jax.Array, axis=None) -> jax.Array:
+    """Quantize→dequantize (QAT-style straight-through helper)."""
+    scale = compute_scale(jax.lax.stop_gradient(x), axis=axis)
+    q = quantize(jax.lax.stop_gradient(x), scale)
+    return x + jax.lax.stop_gradient(dequantize(q, scale) - x)
+
+
+def int8_matmul_ref(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """int8 × int8 → int32 exact accumulation (the PE-array contract)."""
+    return jax.lax.dot_general(
+        x_q,
+        w_q,
+        (((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=ACC_DTYPE,
+    )

@@ -1,0 +1,190 @@
+"""TAC (Transformer Acceleration Cluster) performance model.
+
+A cycle-level analytical model of the CHIMERA TAC, used to reproduce the
+paper's silicon numbers (Fig. 6a/7, Tables I/II):
+
+  * 16 PEs × 64-way INT8 dot product  → 1024 MAC/cycle = 2048 op/cycle
+  * 2 KiB double-buffered weight memory (one 16×64 int8 tile = 1 KiB per
+    buffer) → weight streaming overlaps compute whenever the tile keeps the
+    PEs busy ≥ 8 cycles
+  * 4 streamers (I/W/B/O), each ≤128 B/cycle, fed by 16×64-bit TCDM ports
+  * softmax engine: 64 softmax/cycle, concurrent with the PE array
+  * 8 GP RV32IMA cores handle reductions / normalization (Fig. 3)
+
+The same tiling logic informs the Pallas kernels' block-shape choices — the
+TAC's (16-out × 64-in) weight-stationary tile maps to MXU-aligned
+(128×128-multiples) blocks with double-buffered HBM→VMEM streaming.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+# --- architectural constants (from the paper) ------------------------------
+N_PE = 16                 # output elements per cycle
+DOT_WIDTH = 64            # dot-product width per PE per cycle
+MACS_PER_CYCLE = N_PE * DOT_WIDTH          # 1024
+OPS_PER_CYCLE = 2 * MACS_PER_CYCLE         # 2048 (paper: peak op/cycle)
+WEIGHT_TILE_BYTES = N_PE * DOT_WIDTH       # 1 KiB int8 tile
+WEIGHT_BUF_BYTES = 2 * WEIGHT_TILE_BYTES   # 2 KiB double-buffered
+STREAMER_BW = 128         # B/cycle per streamer (I, W, B, O)
+TCDM_BYTES = 128 * 1024
+L2_BYTES = 256 * 1024
+L2_WIDE_PORT_BW = 128     # B/cycle per cluster wide port (r+w combined)
+L2_BANKS = 2
+L2_BANK_BW = 64           # B/cycle per bank → 128 B/cycle aggregate
+SOFTMAX_PER_CYCLE = 64
+GP_CORES = 8
+GP_OPS_PER_CYCLE = GP_CORES  # 1 int op / core / cycle (RV32IMA, simple model)
+
+# Per-tile L2 round-trip overhead (burst setup + CDC), calibrated so the
+# measured from-L2 efficiency penalty on the Fig. 7 workloads is ≈7%.
+L2_TILE_OVERHEAD_CYCLES = 10
+
+# Accumulator drain + pipeline refill when switching weight tiles. Calibrated
+# to the silicon: 896 GOPS @ 550 MHz = 79.5% of the 1126 GOPS array peak on
+# the Fig. 8b MATMUL (128×512×64 → 128-row tiles: 128/(128+32) = 0.80).
+TILE_SWITCH_OVERHEAD = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class Corner:
+    name: str
+    voltage: float
+    freq_hz: float
+
+
+EFFICIENCY_CORNER = Corner("efficiency", 0.60, 200e6)
+PERFORMANCE_CORNER = Corner("performance", 0.88, 550e6)
+
+
+@dataclasses.dataclass
+class KernelReport:
+    """Cycles + traffic for one operator on one TAC."""
+
+    cycles: float
+    macs: int
+    bytes_l1: float      # TCDM traffic (streamers)
+    bytes_l2: float      # L2 island traffic (0 when operating from L1)
+    bytes_l3: float = 0.0
+    gp_cycles: float = 0.0
+
+    @property
+    def ops(self) -> int:
+        return 2 * self.macs
+
+    @property
+    def utilization(self) -> float:
+        return self.ops / (self.cycles * OPS_PER_CYCLE) if self.cycles else 0.0
+
+    def __add__(self, other: "KernelReport") -> "KernelReport":
+        return KernelReport(
+            cycles=self.cycles + other.cycles,
+            macs=self.macs + other.macs,
+            bytes_l1=self.bytes_l1 + other.bytes_l1,
+            bytes_l2=self.bytes_l2 + other.bytes_l2,
+            bytes_l3=self.bytes_l3 + other.bytes_l3,
+            gp_cycles=self.gp_cycles + other.gp_cycles,
+        )
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def matmul_report(
+    m: int,
+    k: int,
+    n: int,
+    source: Literal["L1", "L2"] = "L1",
+    fused_activation: bool = True,
+) -> KernelReport:
+    """Cycles/traffic for an (m×k)·(k×n) INT8 GEMM on one TAC.
+
+    Weight-stationary schedule: for each (16-out × 64-in) weight tile, m
+    input rows stream through (one 64-B activation vector per cycle). The
+    next weight tile loads into the shadow buffer concurrently (8 cycles at
+    128 B/cycle) — compute-bound whenever m ≥ 8 (double-buffering win).
+    """
+    n_tiles = _ceil(n, N_PE)
+    k_tiles = _ceil(k, DOT_WIDTH)
+    w_load = WEIGHT_TILE_BYTES / STREAMER_BW  # 8 cycles, overlapped
+    # double buffer hides w_load if m ≥ 8; accumulator drain/refill costs
+    # TILE_SWITCH_OVERHEAD per weight-tile switch (silicon-calibrated).
+    tile_cycles = max(m, w_load) + TILE_SWITCH_OVERHEAD
+    cycles = n_tiles * k_tiles * tile_cycles + w_load  # +prologue fill
+
+    bytes_i = m * k               # each input byte read once per n-tile pass…
+    bytes_i_total = n_tiles * bytes_i  # …re-streamed per output tile column
+    bytes_w = n_tiles * k_tiles * WEIGHT_TILE_BYTES
+    bytes_b = n * 4               # int32 bias
+    bytes_o = m * n               # int8 outputs after requant
+    bytes_l1 = bytes_i_total + bytes_w + bytes_b + bytes_o
+
+    bytes_l2 = 0.0
+    if source == "L2":
+        # DMA stages I/W tiles L2→TCDM and O back; each unique byte crosses
+        # the wide port once (blocking reuses within TCDM).
+        bytes_l2 = m * k + k * n + bytes_b + bytes_o
+        dma_cycles = bytes_l2 / L2_WIDE_PORT_BW
+        n_l2_tiles = _ceil(bytes_l2, TCDM_BYTES // 4)  # double-buffer quanta
+        overhead = n_l2_tiles * L2_TILE_OVERHEAD_CYCLES
+        cycles = max(cycles, dma_cycles) + overhead
+
+    gp = (m * n) / GP_OPS_PER_CYCLE * (0 if fused_activation else 1)
+    return KernelReport(
+        cycles=cycles, macs=m * k * n, bytes_l1=bytes_l1, bytes_l2=bytes_l2,
+        gp_cycles=gp,
+    )
+
+
+def attention_report(
+    seq: int,
+    d_head: int,
+    n_heads: int,
+    source: Literal["L1", "L2"] = "L1",
+    causal: bool = False,
+) -> KernelReport:
+    """Single/multi-head attention on one TAC (Fig. 3 schedule).
+
+    QKᵀ and AV run on the PE array; the softmax engine (64/cycle) processes
+    score rows *concurrently* (on-the-fly), so softmax cycles are hidden
+    unless seq is tiny. GP cores handle head reduction (Fig. 3).
+    """
+    work_frac = 0.5 if causal else 1.0
+    total = KernelReport(0, 0, 0, 0)
+    for _ in range(n_heads):
+        qk = matmul_report(seq, d_head, seq, source)
+        av = matmul_report(seq, seq, d_head, source)
+        qk.macs = int(qk.macs * work_frac)
+        av.macs = int(av.macs * work_frac)
+        qk.cycles *= work_frac
+        av.cycles *= work_frac
+        softmax_cycles = seq * seq * work_frac / SOFTMAX_PER_CYCLE
+        hidden = qk.cycles + av.cycles
+        stall = max(0.0, softmax_cycles - hidden)  # engine concurrent w/ PEs
+        head = qk + av
+        head.cycles += stall
+        head.gp_cycles += seq * d_head / GP_OPS_PER_CYCLE  # head reduction
+        total = total + head
+    return total
+
+
+def gp_elementwise_report(n_elems: int, ops_per_elem: int = 4) -> KernelReport:
+    """Non-accelerated ops (LayerNorm, residual, requant) on the 8 GP cores."""
+    cycles = n_elems * ops_per_elem / GP_OPS_PER_CYCLE
+    return KernelReport(
+        cycles=cycles, macs=0, bytes_l1=2 * n_elems, bytes_l2=0.0,
+        gp_cycles=cycles,
+    )
+
+
+def achieved_gops(report: KernelReport, corner: Corner = PERFORMANCE_CORNER) -> float:
+    wall_cycles = report.cycles + report.gp_cycles
+    return report.ops / (wall_cycles / corner.freq_hz) / 1e9 if wall_cycles else 0.0
+
+
+def peak_gops(corner: Corner = PERFORMANCE_CORNER) -> float:
+    return OPS_PER_CYCLE * corner.freq_hz / 1e9

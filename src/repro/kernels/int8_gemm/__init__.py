@@ -1,0 +1,1 @@
+from repro.kernels.int8_gemm.ops import *  # noqa: F401,F403

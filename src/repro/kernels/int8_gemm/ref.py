@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the int8 GEMM kernel — bit-exact contract."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import ita, quant
+
+
+def int8_gemm_ref(
+    x_q,
+    w_q,
+    bias,
+    mult,
+    shift,
+    activation: str = "none",
+    act_scales: Optional[tuple] = None,
+):
+    """Reference: int8×int8→int32 + bias + activation + requant → int8."""
+    acc = quant.int8_matmul_ref(x_q, w_q) + bias.astype(jnp.int32)
+    if activation == "relu":
+        acc = ita.int_relu(acc)
+    y = quant.requantize(acc, mult, shift)
+    if activation == "gelu":
+        in_scale, out_scale = act_scales
+        y = ita.int_gelu_i8(y.astype(jnp.int32), in_scale, out_scale)
+    return y
+
+
+def gemm_float_ref(x, w, bias_f, activation: str = "none"):
+    """Float reference for end-to-end quantization-error bounds."""
+    y = x @ w + bias_f
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "gelu":
+        y = ita.gelu_float(y)
+    return y

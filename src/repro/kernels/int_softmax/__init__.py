@@ -1,0 +1,1 @@
+from repro.kernels.int_softmax.ops import *  # noqa: F401,F403

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: standalone ITA integer softmax (the softmax engine).
+
+Row-tiled two-pass integer softmax over int8 logits → uint8 probabilities.
+Used where attention is computed unfused (e.g. the paper-faithful TAC
+schedule benchmarks) and as the reference implementation of the 64-softmax/
+cycle engine. Rows must fit in one VMEM block (fine up to ~32k columns of
+int8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import ita
+
+
+def _softmax_kernel(x_ref, o_ref, *, alpha_mult: int, alpha_rshift: int):
+    x = x_ref[...].astype(jnp.int32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    t = ((x - m) * alpha_mult) >> alpha_rshift
+    t = jnp.maximum(t, -(31 << ita.FB))
+    e = ita.exp2_fixed(t)
+    denom = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1)
+    probs = (e * ita.PROB_MAX + (denom >> 1)) // denom
+    o_ref[...] = probs.astype(jnp.uint8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("logit_scale", "block_rows", "interpret")
+)
+def int_softmax_pallas(
+    logits_q: jax.Array,  # [R, C] int8
+    *,
+    logit_scale: float,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    r, c = logits_q.shape
+    br = min(block_rows, r)
+    if r % br:
+        raise ValueError(f"rows {r} not divisible by block {br}")
+    spec = ita.SoftmaxSpec(logit_scale)
+    kernel = functools.partial(
+        _softmax_kernel, alpha_mult=spec.alpha_mult,
+        alpha_rshift=spec.alpha_rshift,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.uint8),
+        interpret=interpret,
+    )(logits_q)

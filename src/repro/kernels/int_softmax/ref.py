@@ -1,0 +1,19 @@
+"""Oracle for the standalone integer softmax kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import ita
+
+
+def int_softmax_ref(logits_q: jax.Array, *, logit_scale: float) -> jax.Array:
+    """Pure-jnp twin of the kernel (bit-exact)."""
+    probs, _ = ita.int_softmax(logits_q, ita.SoftmaxSpec(logit_scale), axis=-1)
+    return probs
+
+
+def softmax_float_ref(logits_q: jax.Array, *, logit_scale: float) -> jax.Array:
+    import jax.numpy as jnp
+
+    return jax.nn.softmax(logits_q.astype(jnp.float32) * logit_scale, axis=-1)

@@ -1,0 +1,1 @@
+from repro.kernels.ita_attention.ops import *  # noqa: F401,F403

@@ -1,0 +1,160 @@
+"""Pallas TPU kernel: fused INT8 attention with on-the-fly integer softmax.
+
+This is the TPU-native adaptation of the CHIMERA TAC attention datapath
+(ITA, the paper's ref [9]): the softmax engine runs *concurrently* with the
+PE array, consuming QKᵀ score tiles as they are produced and emitting int8
+probabilities into the A·V GEMM — never materializing the S×S score matrix.
+
+On TPU this becomes a flash-style kernel whose streaming statistics are
+*integer*: scores are requantized to int8 logits (exactly as ITA does
+between its QK array and softmax engine), mapped to a base-2 fixed-point
+exponent domain, and the running maximum is kept as an **integer block
+exponent** so every rescale of the partial A·V accumulator and denominator
+is an exact arithmetic shift — the hardware trick that removes the
+multiplier from the rescale path (see repro/core/ita.py).
+
+Dataflow per (batch·head, q-tile):
+    for each kv-tile:                          # innermost grid dim
+        S32  = Q_tile · K_tileᵀ                # MXU, int8→int32
+        S8   = requant(S32)                    # static scale, like ITA
+        t    = S8 · α                          # Q(FB) exponent domain
+        be'  = max(be, ceil(max(t)/2^FB))      # integer block exponent
+        P8   = min(2^(t − be'·2^FB) >> 1, 127) # int8 probabilities
+        AV   = (AV >> (be'−be)) + P8 · V_tile  # MXU, int8→int32
+        den  = (den >> (be'−be)) + Σ P8
+    out = round(AV / den · C)                  # C = s_v/s_out, f32 divide
+
+Contract: bit-exact against ``ref.ita_attention_ref`` (the jnp oracle runs
+the identical integer schedule; the final f32 divide is the only float op).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import ita, quant
+
+NEG_T = -(31 << ita.FB)  # exponent-domain −∞ (exp2 underflows to exactly 0)
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, den_ref, be_ref,
+    *, nkv: int, bq: int, bkv: int, causal: bool,
+    qk_mult: int, qk_shift: int, alpha_mult: int, alpha_rshift: int,
+    out_mult: float,
+):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+        be_ref[...] = jnp.full_like(be_ref, -31)
+
+    # causal: skip tiles fully above the diagonal
+    tile_needed = True
+    if causal:
+        tile_needed = ki * bkv <= qi * bq + bq - 1
+
+    @pl.when(tile_needed)
+    def _tile():
+        q = q_ref[0]  # [bq, d] int8
+        k = k_ref[0]  # [bkv, d] int8
+        v = v_ref[0]  # [bkv, d] int8
+        s32 = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+        )  # [bq, bkv]
+        s8 = quant.requantize(s32, jnp.int32(qk_mult), jnp.int32(qk_shift))
+        t = (s8.astype(jnp.int32) * alpha_mult) >> alpha_rshift
+        t = jnp.maximum(t, NEG_T)
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            cols = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            t = jnp.where(cols > rows, NEG_T, t)
+
+        be_old = be_ref[...]                        # [bq, 1]
+        be_tile = -((-jnp.max(t, -1, keepdims=True)) >> ita.FB)  # ceil
+        be_new = jnp.maximum(be_old, be_tile)
+        sh = jnp.clip(be_new - be_old, 0, 31)
+        e = ita.exp2_fixed(jnp.maximum(t - (be_new << ita.FB), NEG_T))
+        p8 = jnp.minimum(e >> 1, 127).astype(jnp.int8)  # [bq, bkv]
+
+        acc_ref[...] = (acc_ref[...] >> sh) + jax.lax.dot_general(
+            p8, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        )
+        den_ref[...] = (den_ref[...] >> sh) + jnp.sum(
+            p8.astype(jnp.int32), -1, keepdims=True
+        )
+        be_ref[...] = be_new
+
+    @pl.when(ki == nkv - 1)
+    def _emit():
+        den = jnp.maximum(den_ref[...], 1).astype(jnp.float32)
+        y = acc_ref[...].astype(jnp.float32) / den * out_mult
+        y = jnp.trunc(y + jnp.where(y >= 0, 0.5, -0.5))  # round half away
+        o_ref[0] = jnp.clip(y, -127, 127).astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "qk_scale", "v_scale", "out_scale", "logit_amax",
+        "block_q", "block_kv", "interpret",
+    ),
+)
+def ita_attention_pallas(
+    q: jax.Array,  # [BH, Sq, D] int8
+    k: jax.Array,  # [BH, Skv, D] int8
+    v: jax.Array,  # [BH, Skv, D] int8
+    *,
+    qk_scale: float,          # s_q·s_k·(1/√d if folded) — int32 score scale
+    v_scale: float,
+    out_scale: float,
+    causal: bool = False,
+    logit_amax: float = 10.0,  # static logit clip range (ITA calibration)
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    bq, bkv = min(block_q, sq), min(block_kv, skv)
+    if sq % bq or skv % bkv:
+        raise ValueError(f"seq lengths {(sq, skv)} not divisible by {(bq, bkv)}")
+    nkv = skv // bkv
+    grid = (bh, sq // bq, nkv)
+
+    s_logit = logit_amax / 127.0
+    qk_mult, qk_shift = quant.quantize_to_fixed_point_py(qk_scale / s_logit)
+    spec = ita.SoftmaxSpec(s_logit)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        nkv=nkv, bq=bq, bkv=bkv, causal=causal,
+        qk_mult=qk_mult, qk_shift=qk_shift,
+        alpha_mult=spec.alpha_mult, alpha_rshift=spec.alpha_rshift,
+        out_mult=v_scale / out_scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), jnp.int8),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.int32),   # AV accumulator
+            pltpu.VMEM((bq, 1), jnp.int32),   # denominator
+            pltpu.VMEM((bq, 1), jnp.int32),   # block exponent
+        ],
+        interpret=interpret,
+    )(q, k, v)

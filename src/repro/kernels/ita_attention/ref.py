@@ -1,0 +1,100 @@
+"""Oracles for the ITA attention kernel.
+
+``ita_attention_ref`` runs the *identical* integer schedule as the Pallas
+kernel (same tile loop, same block-exponent streaming softmax, same final
+f32 divide) in pure jnp — the bit-exactness contract. ``attention_float_ref``
+is the ordinary float attention used for end-to-end quantization-error
+bounds.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ita, quant
+
+NEG_T = -(31 << ita.FB)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "qk_scale", "v_scale", "out_scale", "logit_amax", "block_kv",
+    ),
+)
+def ita_attention_ref(
+    q: jax.Array,  # [BH, Sq, D] int8
+    k: jax.Array,  # [BH, Skv, D] int8
+    v: jax.Array,  # [BH, Skv, D] int8
+    *,
+    qk_scale: float,
+    v_scale: float,
+    out_scale: float,
+    causal: bool = False,
+    logit_amax: float = 10.0,
+    block_kv: int = 128,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    bkv = min(block_kv, skv)
+    nkv = skv // bkv
+
+    s_logit = logit_amax / 127.0
+    qk_mult, qk_shift = quant.quantize_to_fixed_point_py(qk_scale / s_logit)
+    spec = ita.SoftmaxSpec(s_logit)
+    am, ar = spec.alpha_mult, spec.alpha_rshift
+    out_mult = v_scale / out_scale
+
+    rows = jnp.arange(sq)[None, :, None]  # [1, Sq, 1]
+
+    def body(ki, state):
+        acc, den, be = state
+        k_tile = jax.lax.dynamic_slice_in_dim(k, ki * bkv, bkv, 1)
+        v_tile = jax.lax.dynamic_slice_in_dim(v, ki * bkv, bkv, 1)
+        s32 = jax.lax.dot_general(
+            q, k_tile, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32,
+        )  # [BH, Sq, bkv]
+        s8 = quant.requantize(s32, jnp.int32(qk_mult), jnp.int32(qk_shift))
+        t = (s8.astype(jnp.int32) * am) >> ar
+        t = jnp.maximum(t, NEG_T)
+        if causal:
+            cols = ki * bkv + jnp.arange(bkv)[None, None, :]
+            t = jnp.where(cols > rows, NEG_T, t)
+        be_tile = -((-jnp.max(t, -1, keepdims=True)) >> ita.FB)
+        be_new = jnp.maximum(be, be_tile)
+        sh = jnp.clip(be_new - be, 0, 31)
+        e = ita.exp2_fixed(jnp.maximum(t - (be_new << ita.FB), NEG_T))
+        p8 = jnp.minimum(e >> 1, 127).astype(jnp.int8)
+        acc = (acc >> sh) + jax.lax.dot_general(
+            p8, v_tile, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32,
+        )
+        den = (den >> sh) + jnp.sum(p8.astype(jnp.int32), -1, keepdims=True)
+        return acc, den, be_new
+
+    acc0 = jnp.zeros((bh, sq, d), jnp.int32)
+    den0 = jnp.zeros((bh, sq, 1), jnp.int32)
+    be0 = jnp.full((bh, sq, 1), -31, jnp.int32)
+    acc, den, _ = jax.lax.fori_loop(0, nkv, body, (acc0, den0, be0))
+
+    den_f = jnp.maximum(den, 1).astype(jnp.float32)
+    y = acc.astype(jnp.float32) / den_f * out_mult
+    y = jnp.trunc(y + jnp.where(y >= 0, 0.5, -0.5))
+    return jnp.clip(y, -127, 127).astype(jnp.int8)
+
+
+def attention_float_ref(
+    q_f: jax.Array, k_f: jax.Array, v_f: jax.Array, *,
+    scale: float, causal: bool = False,
+) -> jax.Array:
+    """Float attention oracle: softmax(q·kᵀ·scale)·v."""
+    logits = jnp.einsum("bqd,bkd->bqk", q_f, k_f) * scale
+    if causal:
+        sq, skv = logits.shape[-2:]
+        mask = jnp.arange(skv)[None, :] > jnp.arange(sq)[:, None]
+        logits = jnp.where(mask, -jnp.inf, logits)
+    return jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(logits, -1), v_f)

@@ -1,0 +1,1 @@
+from repro.kernels.rglru.ops import *  # noqa: F401,F403

@@ -1,0 +1,31 @@
+"""Oracle for the RG-LRU kernel: sequential lax.scan recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(log_a: jax.Array, u: jax.Array) -> jax.Array:
+    """h_t = a_t·h_{t−1} + √(1−a_t²)·u_t, scanned over time. [B,S,D]."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a.astype(jnp.float32)))
+    bu = beta * u.astype(jnp.float32)
+
+    def step(h, inp):
+        a_t, bu_t = inp
+        h = a_t * h + bu_t
+        return h, h
+
+    bsz, s, d = u.shape
+    h0 = jnp.zeros((bsz, d), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(bu, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(u.dtype)
+
+
+def rglru_decode_step(h, log_a_t, u_t):
+    """One-token decode update. h [B,D]; log_a_t/u_t [B,D]."""
+    a = jnp.exp(log_a_t.astype(jnp.float32))
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a_t.astype(jnp.float32)))
+    h = a * h + beta * u_t.astype(jnp.float32)
+    return h, h.astype(u_t.dtype)

@@ -1,0 +1,52 @@
+"""Oracle for the SSD chunked-scan kernel: naive sequential recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(dta, x, b_mat, c_mat):
+    """Step-by-step SSD recurrence (float32, lax.scan over time).
+
+    Args match ``ssd_scan_pallas``: dta [B,H,S], x [B,H,S,P] (Δ folded),
+    b_mat/c_mat [B,G,S,N]. Returns y [B,H,S,P].
+    """
+    bsz, h, s, p = x.shape
+    _, g, _, n = b_mat.shape
+    hpg = h // g
+    bh_b = jnp.repeat(b_mat, hpg, axis=1)  # [B,H,S,N]
+    bh_c = jnp.repeat(c_mat, hpg, axis=1)
+
+    def step(state, inp):
+        dta_t, x_t, b_t, c_t = inp  # [B,H], [B,H,P], [B,H,N], [B,H,N]
+        a = jnp.exp(dta_t.astype(jnp.float32))[..., None, None]  # [B,H,1,1]
+        state = a * state + jnp.einsum(
+            "bhn,bhp->bhnp", b_t.astype(jnp.float32), x_t.astype(jnp.float32)
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", c_t.astype(jnp.float32), state)
+        return state, y
+
+    state0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    xs = (
+        jnp.moveaxis(dta, -1, 0),
+        jnp.moveaxis(x, 2, 0),
+        jnp.moveaxis(bh_b, 2, 0),
+        jnp.moveaxis(bh_c, 2, 0),
+    )
+    _, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype)  # [B,H,S,P]
+
+
+def ssd_decode_step(state, dta_t, x_t, b_t, c_t):
+    """Single-token decode update (used by serve_step for mamba archs).
+
+    state [B,H,N,P]; dta_t [B,H]; x_t [B,H,P]; b_t/c_t [B,H,N].
+    Returns (new_state, y [B,H,P]).
+    """
+    a = jnp.exp(dta_t.astype(jnp.float32))[..., None, None]
+    state = a * state + jnp.einsum(
+        "bhn,bhp->bhnp", b_t.astype(jnp.float32), x_t.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", c_t.astype(jnp.float32), state)
+    return state, y.astype(x_t.dtype)

@@ -1,0 +1,357 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. constructs ShapeDtypeStruct stand-ins for params, optimizer state,
+     batches and KV caches — **no allocation ever happens**,
+  3. ``jax.jit(step, in_shardings=…).lower(…).compile()`` under GSPMD,
+  4. prints ``memory_analysis()`` (fits-in-HBM proof) and
+     ``cost_analysis()``, and runs the loop-aware HLO roofline analyzer
+     (repro/roofline/analysis.py) on the post-SPMD module,
+  5. writes one JSON per cell to ``results/dryrun/``.
+
+Usage:
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import math
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs import SHAPES, cell_applicable
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry, schema as schema_lib
+from repro.models.config import ModelConfig
+from repro.optim import optimizer as opt_lib
+from repro.parallel import context as pctx
+from repro.parallel import sharding as sh
+from repro.roofline import analysis as ra
+
+RESULTS_DIR = Path("results/dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Parameter accounting (MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+
+def param_counts(cfg: ModelConfig, schema):
+    """(total, active, embed_only) parameter counts from the schema."""
+    total = active = embed = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        schema, is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "shape"))
+    for path, spec in flat:
+        n = math.prod(spec.shape)
+        keys = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+        total += n
+        is_embed_table = keys and keys[0] == "embed"
+        if is_embed_table:
+            embed += n
+            continue
+        if "experts" in (spec.axes or ()):
+            active += n * cfg.topk / max(cfg.n_experts, 1)
+        else:
+            active += n
+    return total, active, embed
+
+
+def model_flops_per_chip(cfg: ModelConfig, cell, n_chips: int, schema) -> float:
+    total, active, _ = param_counts(cfg, schema)
+    mult = 6.0 if cell.kind == "train" else 2.0
+    if cfg.family == "encdec":
+        # encoder runs on enc_seq frames; decoder on text tokens
+        enc_frac = cfg.n_enc_layers / max(cfg.n_enc_layers + cfg.n_layers, 1)
+        dec_tokens = cell.global_batch * (
+            cell.seq_len if cell.kind != "decode" else 1)
+        enc_tokens = cell.global_batch * cfg.enc_seq
+        if cell.kind == "decode":
+            enc_tokens = 0  # encoder already ran at prefill
+        return mult * active * (
+            enc_frac * enc_tokens + (1 - enc_frac) * dec_tokens) / n_chips
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    return mult * active * tokens / n_chips
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+
+def _opt_config(cfg: ModelConfig, total_params: float) -> opt_lib.OptConfig:
+    name = "adafactor" if total_params > 1e11 else "adamw"
+    return opt_lib.OptConfig(name=name)
+
+
+def _microbatches(cfg: ModelConfig) -> int:
+    return 8 if cfg.family == "moe" else 4
+
+
+def lower_train(arch, cell, mesh):
+    from repro.train.trainer import TrainConfig, make_train_step
+
+    cfg = arch.cfg
+    schema = arch.schema()
+    total, _, _ = param_counts(cfg, schema)
+    variant = os.environ.get("REPRO_TRAIN_VARIANT", "auto")
+    if variant == "auto":
+        # §Perf-derived policy: dense-family models whose layers fit a chip
+        # train best as pure DP+ZeRO-3 (no TP psums); MoE keeps the 2D mesh
+        # (expert sharding conflicts with batch-over-model — measured), and
+        # pure DP needs the global batch to cover the mesh (multi-pod at
+        # batch 256 < 512 chips keeps TP so no chip idles).
+        fits_dp = cell.global_batch % mesh.devices.size == 0
+        variant = ("opt" if (cfg.n_experts == 0 and total <= 4e10 and fits_dp)
+                   else "baseline")
+    if variant == "opt":
+        tc = TrainConfig(
+            model=cfg, opt=_opt_config(cfg, total),
+            global_batch=cell.global_batch, seq_len=cell.seq_len,
+            microbatches=1, fsdp=True)
+        rules = sh.prune_batch_axes(
+            sh.train_rules_fsdp_only(), mesh, cell.global_batch)
+    elif variant == "bf16":  # keep the 2D mesh; bf16 storage only
+        tc = TrainConfig(
+            model=cfg, opt=_opt_config(cfg, total),
+            global_batch=cell.global_batch, seq_len=cell.seq_len,
+            microbatches=_microbatches(cfg), fsdp=True)
+        rules = sh.train_rules(fsdp=True)
+    else:
+        tc = TrainConfig(
+            model=cfg, opt=_opt_config(cfg, total),
+            global_batch=cell.global_batch, seq_len=cell.seq_len,
+            microbatches=_microbatches(cfg), fsdp=True)
+        rules = sh.train_rules(fsdp=True)
+    p_axes = schema_lib.logical_axes(schema)
+    # §Perf opt variant: params natively bf16 (f32 Adam moments) — FSDP
+    # all-gathers and grad reduce-scatters move half the bytes. GSPMD will
+    # not cast-before-gather on its own (verified on a minimal scan repro),
+    # so the storage dtype must be bf16.
+    p_dtype = jnp.bfloat16 if variant in ("opt", "bf16") else None
+    p_abs = schema_lib.abstract_params(schema, dtype=p_dtype)
+    p_shard = rules.tree_sharding(p_axes, mesh, like=p_abs)
+    o_axes = opt_lib.state_axes(tc.opt, p_axes)
+    o_abs = jax.eval_shape(lambda p: opt_lib.init(tc.opt, p), p_abs)
+    o_shard = rules.tree_sharding(o_axes, mesh, like=o_abs)
+    batch_sh = NamedSharding(mesh, P(rules.mesh_axes("batch", mesh)))
+
+    tok_specs = specs_lib.token_specs(cfg, cell)
+    step = make_train_step(arch, tc, batch_sh, param_sharding=p_shard)
+    in_sh = [p_shard, o_shard, batch_sh]
+    args = [p_abs, o_abs, tok_specs["tokens"]]
+    if "embeds" in tok_specs:
+        in_sh.append(NamedSharding(
+            mesh, P(rules.mesh_axes("batch", mesh), None, None)))
+        args.append(tok_specs["embeds"])
+    with mesh, pctx.activation_sharding(mesh, sh.activation_rules(rules)):
+        lowered = jax.jit(
+            step, in_shardings=tuple(in_sh),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        ).lower(*args)
+    return lowered
+
+
+def lower_prefill(arch, cell, mesh):
+    cfg = arch.cfg
+    schema = arch.schema()
+    rules = sh.pick_serve_rules(cfg, mesh, long_context=False)
+    p_axes = schema_lib.logical_axes(schema)
+    p_abs = schema_lib.abstract_params(schema)
+    p_shard = rules.tree_sharding(p_axes, mesh, like=p_abs)
+    batch_ax = rules.mesh_axes("batch", mesh)
+    tok_specs = specs_lib.token_specs(cfg, cell)
+
+    def prefill_fn(params, tokens, embeds=None):
+        kw = {"embeds": embeds} if embeds is not None else {}
+        return arch.prefill(params, tokens, cell.seq_len, **kw)
+
+    in_sh = [p_shard, NamedSharding(mesh, P(batch_ax, None))]
+    args = [p_abs, tok_specs["tokens"]]
+    if "embeds" in tok_specs:
+        in_sh.append(NamedSharding(mesh, P(batch_ax, None, None)))
+        args.append(tok_specs["embeds"])
+    with mesh, pctx.activation_sharding(mesh, sh.activation_rules(rules)):
+        lowered = jax.jit(
+            prefill_fn, in_shardings=tuple(in_sh)).lower(*args)
+    return lowered
+
+
+def lower_decode(arch, cell, mesh):
+    cfg = arch.cfg
+    long_ctx = cell.seq_len > cfg.local_window * 64 and cell.name == "long_500k"
+    rules = sh.pick_serve_rules(cfg, mesh, long_context=long_ctx)
+    schema = arch.schema()
+    p_axes = schema_lib.logical_axes(schema)
+    p_abs = schema_lib.abstract_params(schema)
+    p_shard = rules.tree_sharding(p_axes, mesh, like=p_abs)
+    batch_ax = rules.mesh_axes("batch", mesh)
+
+    cache_abs = jax.eval_shape(
+        lambda: arch.init_cache(cell.global_batch, cell.seq_len))
+    c_axes = sh.cache_axes(cfg, cache_abs)
+    c_shard = rules.tree_sharding(c_axes, mesh, like=cache_abs)
+
+    use_q = (cfg.serve_quant and arch.quantize_params is not None
+             and cfg.family in ("dense", "vlm-dense"))
+    tok_abs = jax.ShapeDtypeStruct((cell.global_batch,), jnp.int32)
+    tok_spec = rules.spec_for(("batch",), mesh, dims=tok_abs.shape)
+    args = [p_abs, cache_abs, tok_abs]
+    in_sh = [p_shard, c_shard, NamedSharding(mesh, tok_spec)]
+
+    if use_q:
+        from repro.models import transformer as dense_mod
+
+        q_abs = jax.eval_shape(arch.quantize_params, p_abs)
+        q_axes = dense_mod.quantized_axes(cfg)
+        q_shard = rules.tree_sharding(q_axes, mesh, like=q_abs)
+        step = lambda p, c, t, qp: arch.decode_step(p, c, t, qparams=qp)
+        args.append(q_abs)
+        in_sh.append(q_shard)
+    else:
+        step = lambda p, c, t: arch.decode_step(p, c, t)
+
+    if cfg.embeds_input and cfg.family != "encdec":
+        # vlm decode: single-token text decode (embeds only in prefill)
+        pass
+    with mesh, pctx.activation_sharding(mesh, sh.activation_rules(rules)):
+        lowered = jax.jit(
+            step, in_shardings=tuple(in_sh)).lower(*args)
+    return lowered
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: Path = RESULTS_DIR) -> dict:
+    cfg = configs.get_config(arch_name)
+    cell = SHAPES[shape_name]
+    ok, note = cell_applicable(arch_name, shape_name)
+    mesh_name = "multi" if multi_pod else "single"
+    result = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "note": note,
+    }
+    if not ok:
+        result["status"] = "SKIP"
+        _dump(result, out_dir)
+        return result
+
+    arch = registry.build(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        if cell.kind == "train":
+            lowered = lower_train(arch, cell, mesh)
+        elif cell.kind == "prefill":
+            lowered = lower_prefill(arch, cell, mesh)
+        else:
+            lowered = lower_decode(arch, cell, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_fields = {}
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            mem_fields[f] = getattr(mem, f, None)
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else (ca or {})
+
+        hlo = compiled.as_text()
+        costs = ra.analyze_hlo_text(hlo)
+        schema = arch.schema()
+        mf = model_flops_per_chip(cfg, cell, n_chips, schema)
+        total, active, embed = param_counts(cfg, schema)
+        roof = ra.Roofline(
+            flops=costs.flops, bytes=costs.bytes,
+            collective_bytes=costs.collective_bytes,
+            model_flops=mf, collective_ops=costs.collective_ops,
+            bytes_upper=costs.bytes_upper)
+        result.update({
+            "status": "OK",
+            "n_chips": n_chips,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "params_total": total,
+            "params_active": active,
+            "memory_analysis": mem_fields,
+            "memory_analysis_str": str(mem)[:2000],
+            "xla_cost_analysis": {
+                k: ca.get(k) for k in ("flops", "bytes accessed") if k in ca},
+            "roofline": roof.row(),
+        })
+        print(f"[{arch_name} × {shape_name} × {mesh_name}] OK "
+              f"compile={t_compile:.0f}s bound={roof.bound} "
+              f"frac={roof.roofline_fraction:.3f} "
+              f"temp={mem_fields.get('temp_size_in_bytes')}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        result["status"] = "FAIL"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{arch_name} × {shape_name} × {mesh_name}] FAIL: "
+              f"{type(e).__name__}: {str(e)[:200]}")
+    _dump(result, out_dir)
+    return result
+
+
+def _dump(result: dict, out_dir: Path):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}.json"
+    (out_dir / name).write_text(json.dumps(result, indent=1, default=str))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    out = Path(args.out)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for a in configs.ASSIGNED:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch/--shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for a, s in cells:
+        for mp in meshes:
+            mesh_name = "multi" if mp else "single"
+            path = out / f"{a}__{s}__{mesh_name}.json"
+            if args.skip_existing and path.exists():
+                prev = json.loads(path.read_text())
+                if prev.get("status") in ("OK", "SKIP"):
+                    continue
+            r = run_cell(a, s, mp, out)
+            failures += r["status"] == "FAIL"
+    print(f"done; failures={failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never module-level state) so
+importing this module touches no jax device machinery — critical because
+the dry-run must set XLA_FLAGS before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    if len(jax.devices()) == n:
+        return jax.make_mesh(shape, axes)
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"need {n} devices for {shape} mesh, have {len(jax.devices())} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests/examples on CPU)."""
+    import jax
+
+    n = len(jax.devices())
+    data = n // model
+    devs = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(devs, ("data", "model"))

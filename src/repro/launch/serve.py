@@ -1,0 +1,44 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> …``."""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro import configs
+    from repro.models import registry, schema as schema_lib
+    from repro.serve.engine import EngineConfig, Request, ServeEngine, metrics
+
+    model = (configs.smoke_config(args.arch) if args.smoke
+             else configs.get_config(args.arch))
+    arch = registry.build(model)
+    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+    engine = ServeEngine(arch, params,
+                         EngineConfig(slots=args.slots, max_len=args.max_len))
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        engine.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, model.vocab,
+                                size=rng.integers(4, 32)).astype(np.int32),
+            max_new_tokens=args.max_new))
+    done = engine.run_until_drained()
+    print(metrics(done))
+
+
+if __name__ == "__main__":
+    main()

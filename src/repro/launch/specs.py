@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) dry-run cell.
+
+No device allocation ever happens here: params come from
+``schema.abstract_params``; batches/caches from ``jax.eval_shape``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCell
+from repro.models import registry
+from repro.models.config import ModelConfig
+
+
+def token_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """Training/prefill token inputs (+ frontend-stub embeddings)."""
+    b, s = cell.global_batch, cell.seq_len
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)
+    }
+    if cfg.embeds_input:
+        if cfg.family == "encdec":
+            # [audio]: precomputed mel-frame embeddings (conv frontend stub)
+            specs["embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), cfg.compute_dtype)
+        else:
+            # [vlm]: precomputed patch embeddings interleaved to seq length
+            specs["embeds"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), cfg.compute_dtype)
+    return specs
+
+
+def decode_specs(arch: registry.Arch, cell: ShapeCell) -> Dict[str, Any]:
+    """Decode inputs: one new token + a seq_len-deep cache."""
+    cfg = arch.cfg
+    b = cell.global_batch
+    cache = jax.eval_shape(
+        lambda: arch.init_cache(b, cell.seq_len))
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "cache": cache,
+    }
+    return specs
+
+
+def abstract_params(arch: registry.Arch):
+    from repro.models import schema as schema_lib
+
+    return schema_lib.abstract_params(arch.schema())

@@ -1,0 +1,199 @@
+"""Whisper-style encoder-decoder family (``whisper-small``).
+
+Encoder: bidirectional self-attention over precomputed mel-frame embeddings
+(the conv frontend is a STUB per the assignment — ``input_specs`` supplies
+[B, enc_seq, d] frame embeddings). Decoder: causal self-attention +
+cross-attention to encoder states + MLP.
+
+Positions use RoPE as the structural stand-in for Whisper's sinusoidal
+absolute embeddings (identical FLOPs/memory; noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as nn
+from repro.models import transformer as dense
+from repro.models.config import ModelConfig
+from repro.models.schema import TensorSpec
+
+
+def _xattn_layer_schema(cfg: ModelConfig, n_stack: int) -> Dict[str, TensorSpec]:
+    """Decoder layer: self-attn + cross-attn + MLP."""
+    base = dense._layer_schema(cfg, n_stack)
+    d, hd, nq, nkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    L = ("layers",)
+
+    def t(shape, axes, **kw):
+        return TensorSpec((n_stack, *shape), L + axes, **kw)
+
+    base.update({
+        "lnx": t((d,), ("embed",), init="zeros"),
+        "xwq": t((d, nq * hd), ("embed", "heads")),
+        "xwk": t((d, nkv * hd), ("embed", "kv")),
+        "xwv": t((d, nkv * hd), ("embed", "kv")),
+        "xwo": t((nq * hd, d), ("heads", "embed")),
+    })
+    return base
+
+
+def schema(cfg: ModelConfig):
+    return {
+        "embed": TensorSpec((cfg.vocab, cfg.d_model), ("vocab", "embed_io"),
+                            init="embed"),
+        "enc_stack": dense._layer_schema(cfg, cfg.n_enc_layers),
+        "enc_norm": TensorSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "dec_stack": _xattn_layer_schema(cfg, cfg.n_layers),
+        "final_norm": TensorSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "unembed": TensorSpec((cfg.vocab, cfg.d_model), ("vocab", "embed_io")),
+    }
+
+
+def encode(params, frame_embeds, cfg: ModelConfig):
+    """[B, S_enc, D] frame embeddings → encoder states."""
+    x = frame_embeds.astype(cfg.compute_dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def apply_layer(xc, p):
+        return dense._layer(xc, p, "B", cfg, positions)
+
+    if cfg.remat:
+        apply_layer = jax.checkpoint(apply_layer)
+
+    def body(xc, p):
+        return apply_layer(xc, p), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_stack"])
+    return nn.rms_norm(x, params["enc_norm"])
+
+
+def _cross_attn(x, p, enc_kv, cfg):
+    """Cross-attention using precomputed encoder K/V."""
+    b, s, _ = x.shape
+    hd = cfg.hd
+    h = nn.rms_norm(x, p["lnx"])
+    q = nn.dense(h, p["xwq"]).reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k, v = enc_kv
+    o = attn.chunked_attention(q, k, v, causal=False,
+                               chunk_q=min(cfg.attn_chunk_q, s))
+    return x + nn.dense(dense._merge_heads(o), p["xwo"])
+
+
+def _enc_kv(p, enc, cfg):
+    b, se, _ = enc.shape
+    hd = cfg.hd
+    k = nn.dense(enc, p["xwk"]).reshape(b, se, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = nn.dense(enc, p["xwv"]).reshape(b, se, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def forward(params, tokens, cfg: ModelConfig, *, embeds=None):
+    """Teacher forcing: ``embeds`` = encoder frame embeddings (stub input)."""
+    if embeds is None:
+        raise ValueError("encdec forward needs frame embeddings (stub input)")
+    enc = encode(params, embeds, cfg)
+    x = nn.embed(tokens, params["embed"], cfg.compute_dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def apply_layer(xc, p):
+        h = nn.rms_norm(xc, p["ln1"])
+        q, k, v = dense._project_qkv(h, p, cfg, positions)
+        o = attn.chunked_attention(q, k, v, causal=True,
+                                   chunk_q=min(cfg.attn_chunk_q, xc.shape[1]))
+        xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
+        xc = _cross_attn(xc, p, _enc_kv(p, enc, cfg), cfg)
+        xc = xc + dense._mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
+        return xc
+
+    if cfg.remat:
+        apply_layer = jax.checkpoint(apply_layer)
+
+    def body(xc, p):
+        return apply_layer(xc, p), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_stack"])
+    x = nn.rms_norm(x, params["final_norm"])
+    return nn.unembed(x, params["unembed"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, quantized=None):
+    hd, nkv = cfg.hd, cfg.n_kv_heads
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch, nkv, max_len, hd), cfg.compute_dtype),
+        "v": jnp.zeros((L, batch, nkv, max_len, hd), cfg.compute_dtype),
+        "xk": jnp.zeros((L, batch, nkv, cfg.enc_seq, hd), cfg.compute_dtype),
+        "xv": jnp.zeros((L, batch, nkv, cfg.enc_seq, hd), cfg.compute_dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
+    """Encode audio + ingest decoder prompt; cache cross-K/V per layer."""
+    if embeds is None:
+        raise ValueError("encdec prefill needs frame embeddings (stub input)")
+    enc = encode(params, embeds, cfg)
+    x = nn.embed(tokens, params["embed"], cfg.compute_dtype)
+    b, s = x.shape[:2]
+    positions = jnp.arange(s)
+    cache = init_cache(cfg, b, max_len)
+
+    def body(xc, p):
+        h = nn.rms_norm(xc, p["ln1"])
+        q, k, v = dense._project_qkv(h, p, cfg, positions)
+        o = attn.chunked_attention(q, k, v, causal=True,
+                                   chunk_q=min(cfg.attn_chunk_q, s))
+        xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
+        xk, xv = _enc_kv(p, enc, cfg)
+        xc = _cross_attn(xc, p, (xk, xv), cfg)
+        xc = xc + dense._mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
+        kw = jnp.pad(k, ((0, 0), (0, 0), (0, max_len - s), (0, 0)))
+        vw = jnp.pad(v, ((0, 0), (0, 0), (0, max_len - s), (0, 0)))
+        return xc, (kw.astype(cfg.compute_dtype), vw.astype(cfg.compute_dtype),
+                    xk.astype(cfg.compute_dtype), xv.astype(cfg.compute_dtype))
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["dec_stack"])
+    x = nn.rms_norm(x, params["final_norm"])
+    logits = nn.unembed(x[:, -1:], params["unembed"])
+    return logits[:, 0], {"k": ks, "v": vs, "xk": xks, "xv": xvs,
+                          "len": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
+                embeds=None):
+    x = nn.embed(tokens[:, None], params["embed"], cfg.compute_dtype)
+    pos = cache["len"]
+    b = x.shape[0]
+    hd = cfg.hd
+
+    def body(xc, slices):
+        p, kc, vc, xkc, xvc = slices
+        h = nn.rms_norm(xc, p["ln1"])
+        q = nn.dense(h, p["wq"]).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        k = nn.dense(h, p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        v = nn.dense(h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        q = nn.rope(q, pos[None], cfg.rope_theta)
+        k = nn.rope(k, pos[None], cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, 2)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, 2)
+        o = attn.decode_attention(q, kc, vc, pos + 1)
+        xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
+        # cross attention against cached encoder K/V (always full enc_seq)
+        hx = nn.rms_norm(xc, p["lnx"])
+        xq = nn.dense(hx, p["xwq"]).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        xo = attn.decode_attention(xq, xkc, xvc, jnp.asarray(cfg.enc_seq, jnp.int32))
+        xc = xc + nn.dense(dense._merge_heads(xo), p["xwo"])
+        xc = xc + dense._mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
+        return xc, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_stack"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = nn.rms_norm(x, params["final_norm"])
+    logits = nn.unembed(x, params["unembed"])
+    return logits[:, 0], dict(cache, k=ks, v=vs, len=cache["len"] + 1)

@@ -1,0 +1,306 @@
+"""Griffin / RecurrentGemma family — RG-LRU + local-attention hybrid.
+
+Pattern ``"RRL"`` (two recurrent blocks : one local-attention block, the
+paper's 1:2 attention:recurrence ratio). Each block is a temporal-mixing
+residual followed by a GeGLU MLP residual.
+
+Recurrent block: x → [linear → conv1d(4) → gates → RG-LRU scan] ⊙ gelu(gate
+branch) → out-projection (Griffin, arXiv:2402.19427). The RG-LRU recurrence
+runs through ``kernels/rglru`` (fp32 state — precision-sensitive, DESIGN.md
+§5). Local attention is MQA (kv=1) with a 2048 window.
+
+Decode state is O(1) per recurrent block (h ∈ R^W) + ring KV for local
+attention — hence this arch runs ``long_500k``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru.ops import rglru
+from repro.kernels.rglru.ref import rglru_decode_step
+from repro.models import attention as attn
+from repro.models import layers as nn
+from repro.models import transformer as dense
+from repro.models.config import ModelConfig
+from repro.models.schema import TensorSpec
+from repro.parallel import context as pctx
+
+RG_C = 8.0  # Griffin's recurrence-gate sharpness constant
+
+
+def _lru_w(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def _rec_schema(cfg: ModelConfig, n_stack: int) -> Dict[str, TensorSpec]:
+    d, w, f = cfg.d_model, _lru_w(cfg), cfg.d_ff
+    L = ("layers",)
+
+    def t(shape, axes, **kw):
+        return TensorSpec((n_stack, *shape), L + axes, **kw)
+
+    return {
+        "ln1": t((d,), ("embed",), init="zeros"),
+        "w_x": t((d, w), ("embed", "mlp")),
+        "w_gate": t((d, w), ("embed", "mlp")),
+        "conv_w": t((cfg.d_conv, w), (None, "mlp"), scale=0.5),
+        "conv_b": t((w,), ("mlp",), init="zeros"),
+        "w_r": t((w, w), ("mlp", "mlp")),
+        "w_i": t((w, w), ("mlp", "mlp")),
+        "lam": t((w,), ("mlp",), init="ones"),
+        "w_out": t((w, d), ("mlp", "embed")),
+        "ln2": t((d,), ("embed",), init="zeros"),
+        "wg": t((d, f), ("embed", "mlp")),
+        "wu": t((d, f), ("embed", "mlp")),
+        "wd": t((f, d), ("mlp", "embed")),
+    }
+
+
+def schema(cfg: ModelConfig):
+    pattern, n_groups, tail = cfg.layer_layout()
+    stacks = []
+    for kind in pattern:
+        stacks.append(
+            _rec_schema(cfg, n_groups) if kind == "R"
+            else dense._layer_schema(cfg, n_groups)
+        )
+    s: Dict[str, Any] = {
+        "embed": TensorSpec((cfg.vocab, cfg.d_model), ("vocab", "embed_io"),
+                            init="embed"),
+        "final_norm": TensorSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "stacks": stacks,
+    }
+    if tail:
+        s["tail"] = [
+            _rec_schema(cfg, 1) if kind == "R" else dense._layer_schema(cfg, 1)
+            for kind in tail
+        ]
+    s["unembed"] = TensorSpec((cfg.vocab, cfg.d_model), ("vocab", "embed_io"))
+    return s
+
+
+def _gates(x_c, p):
+    """Recurrence/input gates + log decay. x_c [..., W] (post-conv)."""
+    r = jax.nn.sigmoid(nn.dense(x_c, p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(nn.dense(x_c, p["w_i"]).astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    return log_a, i
+
+
+def _rec_block(x, p, cfg: ModelConfig, return_state: bool = False):
+    """Griffin recurrent temporal-mixing block, [B, S, D] → [B, S, D]."""
+    from repro.models.ssm import _conv1d
+
+    h = nn.rms_norm(x, p["ln1"])
+    xb = pctx.constrain(nn.dense(h, p["w_x"]), ("batch", None, "mlp"))
+    gate = pctx.constrain(nn.dense(h, p["w_gate"]), ("batch", None, "mlp"))
+    k = cfg.d_conv - 1
+    x_raw = xb
+    x_c = _conv1d(xb, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    log_a, i = _gates(x_c, p)
+    u = (i * x_c.astype(jnp.float32)).astype(x.dtype)
+    hseq = rglru(log_a.astype(jnp.float32), u)
+    y = hseq * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = pctx.constrain(nn.dense(y, p["w_out"]), ("batch", None, None))
+    if return_state:
+        hr = hseq[:, -1].astype(jnp.float32)          # [B, W]
+        conv_tail = x_raw[:, -k:].astype(cfg.compute_dtype)
+        return out, (conv_tail, hr)
+    return out
+
+
+def _rec_block_decode(x, p, state, cfg: ModelConfig):
+    conv_c, h_rec = state  # [B, K-1, W], [B, W]
+    hx = nn.rms_norm(x, p["ln1"])
+    xb = nn.dense(hx, p["w_x"])               # [B, 1, W]
+    gate = nn.dense(hx, p["w_gate"])
+    hist = jnp.concatenate([conv_c, xb], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    x_c = jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(x.dtype)
+    log_a, i = _gates(x_c, p)
+    u = (i * x_c.astype(jnp.float32))
+    h_new, h_out = rglru_decode_step(h_rec, log_a, u)
+    y = h_out[:, None].astype(x.dtype) * jax.nn.gelu(
+        gate.astype(jnp.float32)).astype(x.dtype)
+    out = nn.dense(y, p["w_out"])
+    return out, (hist[:, 1:], h_new)
+
+
+def _mlp_res(x, p, cfg):
+    h = nn.rms_norm(x, p["ln2"])
+    return x + nn.dense(nn.geglu(nn.dense(h, p["wg"]), nn.dense(h, p["wu"])),
+                        p["wd"])
+
+
+def forward(params, tokens, cfg: ModelConfig, *, embeds=None):
+    pattern, n_groups, tail = cfg.layer_layout()
+    x = embeds if embeds is not None else nn.embed(
+        tokens, params["embed"], cfg.compute_dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def apply(xc, p, kind):
+        if kind == "R":
+            xc = xc + _rec_block(xc, p, cfg)
+        else:
+            h = nn.rms_norm(xc, p["ln1"])
+            q, k, v = dense._project_qkv(h, p, cfg, positions)
+            o = attn.chunked_attention(
+                q, k, v, causal=True, window=cfg.local_window,
+                chunk_q=min(cfg.attn_chunk_q, xc.shape[1]))
+            xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
+        return _mlp_res(xc, p, cfg)
+
+    def apply_group(xc, stacks_slice):
+        for kind, p in zip(pattern, stacks_slice):
+            xc = apply(xc, p, kind)
+        return xc
+
+    if cfg.remat:
+        apply_group = jax.checkpoint(apply_group)
+
+    def group_body(xc, stacks_slice):
+        return apply_group(xc, stacks_slice), None
+
+    if n_groups > 0:
+        x, _ = jax.lax.scan(group_body, x, tuple(params["stacks"]))
+    for kind, p in zip(tail, params.get("tail", [])):
+        x = apply(x, jax.tree.map(lambda a: a[0], p), kind)
+    x = nn.rms_norm(x, params["final_norm"])
+    return nn.unembed(x, params["unembed"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, quantized=None):
+    pattern, n_groups, tail = cfg.layer_layout()
+    w = _lru_w(cfg)
+    hd, nkv = cfg.hd, cfg.n_kv_heads
+    win = min(cfg.local_window, max_len)
+
+    def one(kind, n_stack):
+        if kind == "R":
+            return {
+                "conv": jnp.zeros((n_stack, batch, cfg.d_conv - 1, w),
+                                  cfg.compute_dtype),
+                "h": jnp.zeros((n_stack, batch, w), jnp.float32),
+            }
+        return {
+            "k": jnp.zeros((n_stack, batch, nkv, win, hd), cfg.compute_dtype),
+            "v": jnp.zeros((n_stack, batch, nkv, win, hd), cfg.compute_dtype),
+        }
+
+    cache: Dict[str, Any] = {
+        "stacks": [one(kind, n_groups) for kind in pattern],
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if tail:
+        cache["tail"] = [one(kind, 1) for kind in tail]
+    return cache
+
+
+def _attn_block_decode(x, p, c, cfg, pos):
+    h = nn.rms_norm(x, p["ln1"])
+    b = x.shape[0]
+    hd = cfg.hd
+    q = nn.dense(h, p["wq"]).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = nn.dense(h, p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = nn.dense(h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    q = nn.rope(q, pos[None], cfg.rope_theta)
+    k = nn.rope(k, pos[None], cfg.rope_theta)
+    c = dense._cache_write(c, k, v, pos, "L", cfg)
+    o = attn.decode_attention(q, c["k"], c["v"], pos + 1, ring=True)
+    return x + nn.dense(dense._merge_heads(o), p["wo"]), c
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
+                embeds=None):
+    pattern, n_groups, tail = cfg.layer_layout()
+    x = embeds if embeds is not None else nn.embed(
+        tokens[:, None], params["embed"], cfg.compute_dtype)
+    pos = cache["len"]
+
+    def apply(xc, p, c, kind):
+        if kind == "R":
+            out, state = _rec_block_decode(xc, p, (c["conv"], c["h"]), cfg)
+            xc = xc + out
+            c = {"conv": state[0], "h": state[1]}
+        else:
+            xc, c = _attn_block_decode(xc, p, c, cfg, pos)
+        return _mlp_res(xc, p, cfg), c
+
+    def group_body(xc, slices):
+        stacks_slice, cache_slice = slices
+        new = []
+        for i, kind in enumerate(pattern):
+            xc, c = apply(xc, stacks_slice[i], cache_slice[i], kind)
+            new.append(c)
+        return xc, tuple(new)
+
+    if n_groups > 0:
+        x, new_caches = jax.lax.scan(
+            group_body, x, (tuple(params["stacks"]), tuple(cache["stacks"])))
+        cache = dict(cache, stacks=list(new_caches))
+    for i, kind in enumerate(tail):
+        p = jax.tree.map(lambda a: a[0], params["tail"][i])
+        c_in = jax.tree.map(lambda a: a[0], cache["tail"][i])
+        x, c = apply(x, p, c_in, kind)
+        cache["tail"][i] = jax.tree.map(lambda a: a[None], c)
+    x = nn.rms_norm(x, params["final_norm"])
+    logits = nn.unembed(x, params["unembed"])
+    return logits[:, 0], dict(cache, len=cache["len"] + 1)
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
+    """Forward + exact state capture (recurrent h, conv tails, ring KV)."""
+    pattern, n_groups, tail = cfg.layer_layout()
+    x = embeds if embeds is not None else nn.embed(
+        tokens, params["embed"], cfg.compute_dtype)
+    b, s = x.shape[:2]
+    positions = jnp.arange(s)
+    win = min(cfg.local_window, max_len)
+
+    def apply(xc, p, kind):
+        if kind == "R":
+            out, state = _rec_block(xc, p, cfg, return_state=True)
+            xc = xc + out
+            c = {"conv": state[0], "h": state[1]}
+        else:
+            h = nn.rms_norm(xc, p["ln1"])
+            q, k, v = dense._project_qkv(h, p, cfg, positions)
+            o = attn.chunked_attention(
+                q, k, v, causal=True, window=cfg.local_window,
+                chunk_q=min(cfg.attn_chunk_q, s))
+            xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
+            if s >= win:  # ring semantics: position p lives at slot p % win
+                kw = jnp.roll(k[:, :, -win:], s % win, axis=2)
+                vw = jnp.roll(v[:, :, -win:], s % win, axis=2)
+            else:
+                kw = jnp.pad(k, ((0, 0), (0, 0), (0, win - s), (0, 0)))
+                vw = jnp.pad(v, ((0, 0), (0, 0), (0, win - s), (0, 0)))
+            c = {"k": kw.astype(cfg.compute_dtype),
+                 "v": vw.astype(cfg.compute_dtype)}
+        return _mlp_res(xc, p, cfg), c
+
+    def group_body(xc, stacks_slice):
+        new = []
+        for i, kind in enumerate(pattern):
+            xc, c = apply(xc, stacks_slice[i], kind)
+            new.append(c)
+        return xc, tuple(new)
+
+    cache: Dict[str, Any] = {"len": jnp.asarray(s, jnp.int32)}
+    if n_groups > 0:
+        x, stack_caches = jax.lax.scan(group_body, x, tuple(params["stacks"]))
+        cache["stacks"] = list(stack_caches)
+    tail_caches = []
+    for i, kind in enumerate(tail):
+        p = jax.tree.map(lambda a: a[0], params["tail"][i])
+        x, c = apply(x, p, kind)
+        tail_caches.append(jax.tree.map(lambda a: a[None], c))
+    if tail_caches:
+        cache["tail"] = tail_caches
+    x = nn.rms_norm(x, params["final_norm"])
+    logits = nn.unembed(x[:, -1:], params["unembed"])
+    return logits[:, 0], cache

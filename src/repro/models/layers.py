@@ -1,0 +1,63 @@
+"""Shared neural-net layers (pure functions, bf16-compute friendly)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: [..., S, D] (D even); positions: [..., S]."""
+    d = x.shape[-1]
+    dt = x.dtype
+    freqs = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    # rotate-half convention (matches HF Llama/Gemma/Phi)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(dt)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def geglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.gelu(gate.astype(jnp.float32), approximate=True).astype(gate.dtype) * up
+
+
+ACTIVATIONS = {"swiglu": swiglu, "geglu": geglu}
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """[..., K] @ [K, N] in the compute dtype of x."""
+    return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+
+
+def embed(tokens: jax.Array, table: jax.Array, compute_dtype=jnp.bfloat16):
+    return table.astype(compute_dtype)[tokens]
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Logits in f32 (stable softmax/loss)."""
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32)
+    )

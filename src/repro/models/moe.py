@@ -1,0 +1,440 @@
+"""Mixture-of-Experts transformer family (qwen3-moe-30b-a3b, kimi-k2-1t).
+
+Dense GQA attention (shared with the dense family) + top-k routed expert
+FFNs. Routing is token-choice with per-batch-row capacity (the switch/t5x
+discipline: each batch row is a routing group, so capacity bookkeeping
+never crosses data shards — no cross-device prefix sums).
+
+Expert parallelism: expert-stacked weights carry the ``experts`` logical
+axis, which the sharding rules map to the ``model`` mesh axis; the
+scatter/gather dispatch then induces the all-to-all traffic visible in the
+dry-run collective analysis.
+
+Deviation note (DESIGN.md §5): the router runs in f32 softmax for both
+archs (kimi-k2's sigmoid+bias routing is approximated by softmax; routing
+arithmetic is accuracy-, not performance-relevant here).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as nn
+from repro.models import transformer as dense
+from repro.models.config import ModelConfig
+from repro.models.schema import TensorSpec
+from repro.parallel import context as pctx
+
+
+def _capacity(cfg: ModelConfig, seq: int) -> int:
+    c = int(seq * cfg.topk * cfg.moe_capacity / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def _moe_layer_schema(cfg: ModelConfig, n_stack: int) -> Dict[str, TensorSpec]:
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv, f, e = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.n_experts
+    L = ("layers",)
+
+    def t(shape, axes, **kw):
+        return TensorSpec((n_stack, *shape), L + axes, **kw)
+
+    return {
+        "ln1": t((d,), ("embed",), init="zeros"),
+        "wq": t((d, nq * hd), ("embed", "heads")),
+        "wk": t((d, nkv * hd), ("embed", "kv")),
+        "wv": t((d, nkv * hd), ("embed", "kv")),
+        "wo": t((nq * hd, d), ("heads", "embed")),
+        "ln2": t((d,), ("embed",), init="zeros"),
+        "router": t((d, e), ("embed", "experts")),
+        "we_gate": t((e, d, f), ("experts", "embed", "mlp")),
+        "we_up": t((e, d, f), ("experts", "embed", "mlp")),
+        "we_down": t((e, f, d), ("experts", "mlp", "embed")),
+    }
+
+
+def schema(cfg: ModelConfig):
+    pattern, n_groups, tail = cfg.layer_layout()
+    s: Dict[str, Any] = {
+        "embed": TensorSpec((cfg.vocab, cfg.d_model), ("vocab", "embed_io"),
+                            init="embed"),
+        "final_norm": TensorSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "stacks": [_moe_layer_schema(cfg, n_groups) for _ in pattern],
+    }
+    if tail:
+        s["tail"] = [_moe_layer_schema(cfg, 1) for _ in tail]
+    if not cfg.tie_embeddings:
+        s["unembed"] = TensorSpec((cfg.vocab, cfg.d_model), ("vocab", "embed_io"))
+    return s
+
+
+import os
+
+_BASELINE_MOE = os.environ.get("REPRO_BASELINE_MOE") == "1"
+
+
+def moe_mlp(x: jax.Array, p, cfg: ModelConfig) -> jax.Array:
+    """Token-choice top-k expert FFN with per-batch-row capacity.
+
+    Dispatch (§Perf iteration, qwen3-moe/kimi-k2): the activation
+    scatter-add (``buf.at[...].add(x)`` onto an expert-sharded buffer)
+    makes GSPMD replicate the [B,E,C,D] buffer across the model axis —
+    catastrophic collectives. Instead we scatter only **int32 slot
+    indices** (B·E·C·4 bytes) and GATHER activations into expert order;
+    gathers partition cleanly. ``REPRO_BASELINE_MOE=1`` restores the
+    scatter path for before/after measurement.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.topk
+    cap = _capacity(cfg, s)
+    act = nn.ACTIVATIONS[cfg.act]
+
+    # shard_map EP path: active when a mesh context exists with a model
+    # axis that divides the expert count (REPRO_MOE_EP=0 disables)
+    ctx = pctx.current()
+    if (not _BASELINE_MOE and ctx is not None
+            and os.environ.get("REPRO_MOE_EP", "1") == "1"):
+        mesh, rules = ctx
+        m_sz = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+        if m_sz > 1 and e % m_sz == 0:
+            return _moe_shard_map(x, p, cfg, mesh, rules)
+
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)
+    gate, idx = jax.lax.top_k(probs, k)           # [B, S, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = idx.reshape(b, s * k)                 # expert of each slot
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # [B, S·k, E]
+    pos = jnp.einsum("bte,bte->bt", jnp.cumsum(onehot, 1) - 1, onehot)
+    keep = (pos < cap) & (pos >= 0)
+    pos_c = jnp.clip(pos, 0, cap - 1)
+    bidx = jnp.arange(b)[:, None]
+
+    if _BASELINE_MOE:
+        x_rep = jnp.repeat(x, k, axis=1)           # [B, S·k, D]
+        contrib = jnp.where(keep[..., None], x_rep, 0)
+        buf = jnp.zeros((b, e, cap, d), x.dtype)
+        buf = buf.at[bidx, flat_e, pos_c].add(contrib)  # [B, E, C, D]
+        buf = pctx.constrain(buf, ("batch", "experts", None, None))
+        h = act(
+            jnp.einsum("becd,edf->becf", buf, p["we_gate"].astype(x.dtype)),
+            jnp.einsum("becd,edf->becf", buf, p["we_up"].astype(x.dtype)),
+        )
+        out_buf = jnp.einsum("becf,efd->becd", h, p["we_down"].astype(x.dtype))
+        y = out_buf[bidx, flat_e, pos_c]           # [B, S·k, D]
+        y = jnp.where(keep[..., None], y, 0)
+        y = y * gate.reshape(b, s * k, 1).astype(y.dtype)
+        return pctx.constrain(y.reshape(b, s, k, d).sum(2),
+                              ("batch", None, None))
+
+    # Gather-only permutations (§Perf): invert the slot map once with an
+    # int32 scatter (tiny); BOTH directions and both backward passes are
+    # gathers (custom_vjp uses the inverse map) — GSPMD partitions gathers
+    # cleanly while activation scatters onto expert-sharded buffers
+    # replicate across the model axis. Dropped slots scatter out of bounds
+    # (mode="drop").
+    slot_id = jnp.full((b, e, cap), s * k, jnp.int32)  # s·k = OOB sentinel
+    slot_id = slot_id.at[
+        bidx, flat_e, jnp.where(keep, pos_c, cap)
+    ].set(jnp.arange(s * k)[None, :], mode="drop")
+    empty = slot_id >= s * k
+    slot_id_c = jnp.minimum(slot_id, s * k - 1)
+    token_of_slot = slot_id_c // k                     # [B, E, C]
+
+    buf = _permute_in(x, token_of_slot, empty, flat_e, pos_c, keep)
+    # two-step layout plan: the permutation is LOCAL under batch sharding
+    # (routing never crosses batch rows), then one explicit reshard to the
+    # expert layout — GSPMD lowers the reshard to an all-to-all instead of
+    # replicating the buffer.
+    buf = pctx.constrain(buf, ("batch", None, None, None))
+    buf = pctx.constrain(buf, ("batch", "experts", None, None))
+    h = act(
+        jnp.einsum("becd,edf->becf", buf, p["we_gate"].astype(x.dtype)),
+        jnp.einsum("becd,edf->becf", buf, p["we_up"].astype(x.dtype)),
+    )
+    out_buf = jnp.einsum("becf,efd->becd", h, p["we_down"].astype(x.dtype))
+    out_buf = pctx.constrain(out_buf, ("batch", None, None, None))  # reshard
+    y = _permute_out(out_buf, flat_e, pos_c, keep, slot_id_c, empty)
+    y = y * gate.reshape(b, s * k, 1).astype(y.dtype)
+    return pctx.constrain(y.reshape(b, s, k, d).sum(2), ("batch", None, None))
+
+
+# -- gather-only token↔slot permutations (see moe_mlp docstring) -----------
+
+
+@jax.custom_vjp
+def _permute_in(x, token_of_slot, empty, flat_e, pos_c, keep):
+    """[B,S,D] tokens → [B,E,C,D] expert slots (gather)."""
+    b, s, d = x.shape
+    _, e, cap = token_of_slot.shape
+    buf = jnp.take_along_axis(
+        x, token_of_slot.reshape(b, e * cap)[..., None], axis=1
+    ).reshape(b, e, cap, d)
+    return jnp.where(empty[..., None], 0, buf)
+
+
+def _permute_in_fwd(x, token_of_slot, empty, flat_e, pos_c, keep):
+    out = _permute_in(x, token_of_slot, empty, flat_e, pos_c, keep)
+    return out, (x.shape, flat_e, pos_c, keep)
+
+
+def _permute_in_bwd(res, dbuf):
+    (b, s, d), flat_e, pos_c, keep = res
+    k = flat_e.shape[1] // s
+    bidx = jnp.arange(b)[:, None]
+    dx_slots = dbuf[bidx, flat_e, pos_c]           # gather, not scatter
+    dx_slots = jnp.where(keep[..., None], dx_slots, 0)
+    dx = dx_slots.reshape(b, s, k, d).sum(2)
+    return dx, None, None, None, None, None
+
+
+_permute_in.defvjp(_permute_in_fwd, _permute_in_bwd)
+
+
+@jax.custom_vjp
+def _permute_out(out_buf, flat_e, pos_c, keep, slot_id_c, empty):
+    """[B,E,C,D] expert slots → [B,S·k,D] token slots (gather)."""
+    b = out_buf.shape[0]
+    bidx = jnp.arange(b)[:, None]
+    y = out_buf[bidx, flat_e, pos_c]
+    return jnp.where(keep[..., None], y, 0)
+
+
+def _permute_out_fwd(out_buf, flat_e, pos_c, keep, slot_id_c, empty):
+    y = _permute_out(out_buf, flat_e, pos_c, keep, slot_id_c, empty)
+    return y, (out_buf.shape, slot_id_c, empty)
+
+
+def _permute_out_bwd(res, dy):
+    (b, e, cap, d), slot_id_c, empty = res
+    dbuf = jnp.take_along_axis(
+        dy, slot_id_c.reshape(b, e * cap)[..., None], axis=1
+    ).reshape(b, e, cap, d)
+    dbuf = jnp.where(empty[..., None], 0, dbuf)
+    return dbuf, None, None, None, None, None
+
+
+_permute_out.defvjp(_permute_out_fwd, _permute_out_bwd)
+
+
+def _layer(x, p, kind, cfg: ModelConfig, positions):
+    h = nn.rms_norm(x, p["ln1"])
+    q, k, v = dense._project_qkv(h, p, cfg, positions)
+    o = attn.chunked_attention(
+        q, k, v, causal=kind != "B",
+        window=cfg.local_window if kind == "L" else None,
+        chunk_q=min(cfg.attn_chunk_q, x.shape[1]),
+    )
+    x = x + nn.dense(dense._merge_heads(o), p["wo"])
+    x = x + moe_mlp(nn.rms_norm(x, p["ln2"]), p, cfg)
+    return pctx.constrain(x, ("batch", None, None))
+
+
+def forward(params, tokens, cfg: ModelConfig, *, embeds=None):
+    pattern, n_groups, tail = cfg.layer_layout()
+    x = embeds if embeds is not None else nn.embed(
+        tokens, params["embed"], cfg.compute_dtype)
+    x = pctx.constrain(x, ("batch", None, None))
+    positions = jnp.arange(x.shape[1])
+
+    def apply_group(xc, stacks_slice):
+        for kind, p in zip(pattern, stacks_slice):
+            xc = _layer(xc, p, kind, cfg, positions)
+        return xc
+
+    if cfg.remat:
+        apply_group = jax.checkpoint(apply_group)
+
+    def group_body(xc, stacks_slice):
+        return apply_group(xc, stacks_slice), None
+
+    if n_groups > 0:
+        x, _ = jax.lax.scan(group_body, x, tuple(params["stacks"]))
+    for kind, p in zip(tail, params.get("tail", [])):
+        x = _layer(x, jax.tree.map(lambda a: a[0], p), kind, cfg, positions)
+    x = nn.rms_norm(x, params["final_norm"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return nn.unembed(x, table)
+
+
+init_cache = dense.init_cache  # same KV cache layout as the dense family
+
+
+def _decode_layer(x, p, c, kind, cfg, pos):
+    h = nn.rms_norm(x, p["ln1"])
+    b = x.shape[0]
+    hd = cfg.hd
+    q = nn.dense(h, p["wq"]).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = nn.dense(h, p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = nn.dense(h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    q = nn.rope(q, pos[None], cfg.rope_theta)
+    k = nn.rope(k, pos[None], cfg.rope_theta)
+    c = dense._cache_write(c, k, v, pos, kind, cfg)
+    o = attn.decode_attention(q, c["k"], c["v"], pos + 1, ring=kind == "L")
+    x = x + nn.dense(dense._merge_heads(o), p["wo"])
+    x = x + moe_mlp(nn.rms_norm(x, p["ln2"]), p, cfg)
+    return x, c
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
+                embeds=None):
+    pattern, n_groups, tail = cfg.layer_layout()
+    x = embeds if embeds is not None else nn.embed(
+        tokens[:, None], params["embed"], cfg.compute_dtype)
+    pos = cache["len"]
+
+    def group_body(xc, slices):
+        stacks_slice, cache_slice = slices
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            xc, c = _decode_layer(xc, stacks_slice[i], cache_slice[i], kind,
+                                  cfg, pos)
+            new_caches.append(c)
+        return xc, tuple(new_caches)
+
+    if n_groups > 0:
+        x, new_caches = jax.lax.scan(
+            group_body, x, (tuple(params["stacks"]), tuple(cache["stacks"])))
+        cache = dict(cache, stacks=list(new_caches))
+    for i, kind in enumerate(tail):
+        p = jax.tree.map(lambda a: a[0], params["tail"][i])
+        c_in = jax.tree.map(lambda a: a[0], cache["tail"][i])
+        x, c = _decode_layer(x, p, c_in, kind, cfg, pos)
+        cache["tail"][i] = jax.tree.map(lambda a: a[None], c)
+    x = nn.rms_norm(x, params["final_norm"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = nn.unembed(x, table)
+    return logits[:, 0], dict(cache, len=cache["len"] + 1)
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
+    """MoE prefill: forward + cache (float path)."""
+    pattern, n_groups, tail = cfg.layer_layout()
+    x = embeds if embeds is not None else nn.embed(
+        tokens, params["embed"], cfg.compute_dtype)
+    b, s = x.shape[:2]
+    positions = jnp.arange(s)
+    cache = init_cache(cfg, b, max_len, quantized=False)
+
+    def group_body(xc, slices):
+        stacks_slice, cache_slice = slices
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            p = stacks_slice[i]
+            h = nn.rms_norm(xc, p["ln1"])
+            q, k, v = dense._project_qkv(h, p, cfg, positions)
+            o = attn.chunked_attention(
+                q, k, v, causal=kind != "B",
+                window=cfg.local_window if kind == "L" else None,
+                chunk_q=min(cfg.attn_chunk_q, s))
+            xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
+            xc = xc + moe_mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
+            s_len = cache_slice[i]["k"].shape[2]
+            kw = k[:, :, -s_len:] if s >= s_len else jnp.pad(
+                k, ((0, 0), (0, 0), (0, s_len - s), (0, 0)))
+            vw = v[:, :, -s_len:] if s >= s_len else jnp.pad(
+                v, ((0, 0), (0, 0), (0, s_len - s), (0, 0)))
+            new_caches.append({"k": kw.astype(cache_slice[i]["k"].dtype),
+                               "v": vw.astype(cache_slice[i]["v"].dtype)})
+        return xc, tuple(new_caches)
+
+    if n_groups > 0:
+        x, new_caches = jax.lax.scan(
+            group_body, x, (tuple(params["stacks"]), tuple(cache["stacks"])))
+        cache = dict(cache, stacks=list(new_caches))
+    x = nn.rms_norm(x, params["final_norm"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = nn.unembed(x[:, -1:], table)
+    return logits[:, 0], dict(cache, len=jnp.asarray(s, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# shard_map expert parallelism (§Perf beyond-paper, qwen3/kimi)
+# ---------------------------------------------------------------------------
+#
+# In the 2D (data, model) mesh, activations are REPLICATED across the model
+# axis — so each model-rank can gather the tokens routed to its local
+# experts with purely LOCAL index ops, run its expert FFNs, and contribute a
+# partial output; one psum over 'model' combines. The only cross-chip
+# traffic is that psum (2·B·S·D per layer) — no all-to-all, no replicated
+# dispatch buffers. Grads flow through shard_map natively (psum^T = id).
+
+
+def _moe_shard_map(x, p, cfg: ModelConfig, mesh, rules):
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    batch_ax = rules.mesh_axes("batch", mesh)
+    e, k = cfg.n_experts, cfg.topk
+    m = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    cap = _capacity(cfg, x.shape[1])
+    act = nn.ACTIVATIONS[cfg.act]
+
+    def body(x_b, router_b, wg_b, wu_b, wd_b):
+        b, s, d = x_b.shape
+        e_loc = wg_b.shape[0]
+        rank = jax.lax.axis_index("model")
+        # declare x varying over 'model': each rank contributes a partial
+        # dx, and pvary's transpose is the psum that sums them
+        x_b = jax.lax.pvary(x_b, ("model",))
+        router_b = jax.lax.pvary(router_b, ("model",))
+        logits = jnp.einsum("bsd,de->bse", x_b.astype(jnp.float32),
+                            router_b.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, -1)
+        gate, idx = jax.lax.top_k(probs, k)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+        flat_e = idx.reshape(b, s * k)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        pos = jnp.einsum("bte,bte->bt", jnp.cumsum(onehot, 1) - 1, onehot)
+        keep = (pos < cap) & (pos >= 0)
+        pos_c = jnp.clip(pos, 0, cap - 1)
+        bidx = jnp.arange(b)[:, None]
+
+        # local slot inversion. NOTE: negative indices WRAP in jnp .at[]
+        # before the OOB check, so foreign experts must be redirected to a
+        # positive out-of-range index for mode="drop" to discard them.
+        loc_e = flat_e - rank * e_loc
+        mine_e = (loc_e >= 0) & (loc_e < e_loc)
+        loc_e_safe = jnp.where(mine_e, loc_e, e_loc)
+        slot_id = jnp.full((b, e_loc, cap), s * k, jnp.int32)
+        slot_id = slot_id.at[
+            bidx, loc_e_safe, jnp.where(keep, pos_c, cap)
+        ].set(jnp.arange(s * k)[None, :], mode="drop")
+        empty = slot_id >= s * k
+        slot_id_c = jnp.minimum(slot_id, s * k - 1)
+        token_of_slot = slot_id_c // k
+
+        # bwd of _permute_in gathers dbuf at (expert, pos): restrict to
+        # slots this rank OWNS (foreign contributions arrive via the psum
+        # from their owning ranks)
+        buf = _permute_in(x_b, token_of_slot, empty,
+                          jnp.clip(loc_e, 0, e_loc - 1), pos_c,
+                          keep & mine_e)
+        h = act(
+            jnp.einsum("becd,edf->becf", buf, wg_b.astype(x_b.dtype)),
+            jnp.einsum("becd,edf->becf", buf, wu_b.astype(x_b.dtype)),
+        )
+        out_buf = jnp.einsum("becf,efd->becd", h, wd_b.astype(x_b.dtype))
+        # combine locally: slots owned by other ranks read garbage — zero
+        # them via the ownership mask before the cross-rank psum
+        mine = mine_e & keep
+        y = out_buf[bidx, jnp.clip(loc_e, 0, e_loc - 1), pos_c]
+        y = jnp.where(mine[..., None], y, 0)
+        y = y * gate.reshape(b, s * k, 1).astype(y.dtype)
+        y = y.reshape(b, s, k, d).sum(2)
+        return jax.lax.psum(y, "model")
+
+    fm = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(batch_ax, None, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=P(batch_ax, None, None),
+    )
+    return fm(x, p["router"], p["we_gate"], p["we_up"], p["we_down"])

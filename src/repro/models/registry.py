@@ -1,0 +1,64 @@
+"""Architecture registry: family modules + ``--arch`` config lookup."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Optional
+
+from repro.models.config import ModelConfig
+
+_FAMILY_MODULES = {
+    "dense": "repro.models.transformer",
+    "vlm-dense": "repro.models.transformer",  # frontend stubbed (embeds in)
+    "moe": "repro.models.moe",
+    "ssm": "repro.models.ssm",
+    "hybrid": "repro.models.griffin",
+    "encdec": "repro.models.encdec",
+}
+
+
+def get_family(family: str):
+    return importlib.import_module(_FAMILY_MODULES[family])
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    """Bound architecture: config + family entry points."""
+
+    cfg: ModelConfig
+    schema: Callable
+    forward: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+    quantize_params: Optional[Callable] = None
+
+    @property
+    def name(self) -> str:
+        return self.cfg.name
+
+
+def build(cfg: ModelConfig) -> Arch:
+    mod = get_family(cfg.family)
+    return Arch(
+        cfg=cfg,
+        schema=lambda: mod.schema(cfg),
+        forward=lambda params, tokens, **kw: mod.forward(params, tokens, cfg, **kw),
+        prefill=lambda params, tokens, max_len, **kw: mod.prefill(
+            params, tokens, cfg, max_len, **kw),
+        decode_step=lambda params, cache, tokens, **kw: mod.decode_step(
+            params, cache, tokens, cfg, **kw),
+        init_cache=lambda batch, max_len, **kw: mod.init_cache(
+            cfg, batch, max_len, **kw),
+        quantize_params=(
+            (lambda params: mod.quantize_params(params, cfg))
+            if hasattr(mod, "quantize_params") else None
+        ),
+    )
+
+
+def build_by_name(name: str) -> Arch:
+    from repro.configs import get_config
+
+    return build(get_config(name))

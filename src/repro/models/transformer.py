@@ -1,0 +1,394 @@
+"""Dense decoder-only transformer family (phi3 ×2, glm4, gemma3, llava-LM).
+
+Execution structure: layers are grouped by the config's repeating pattern
+(e.g. gemma3 ``"LLLLLG"`` = 5 local : 1 global) and the stack is evaluated
+as ``lax.scan`` over groups — one group body in the HLO regardless of depth,
+which keeps 14B-parameter graphs compilable on this container's single CPU
+core and is the layout production frameworks use for fast compiles.
+
+Parameters live in per-pattern-position stacks of shape [n_groups, ...];
+tail layers (n_layers % period) are applied unscanned.
+
+Serving: the INT8 path (``serve_quant=True``) runs the paper's technique —
+W8A8 projections via ``kernels.int8_gemm``, KV cache stored int8 (static
+scales), attention through the ITA integer pipeline. Norms, RoPE and the
+LM head stay in float (see DESIGN.md §2 assumption 3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.models import attention as attn
+from repro.models import layers as nn
+from repro.models.config import ModelConfig
+from repro.models.schema import TensorSpec
+from repro.parallel import context as pctx
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+
+def _layer_schema(cfg: ModelConfig, n_stack: int) -> Dict[str, TensorSpec]:
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    L = ("layers",)
+
+    def t(shape, axes, **kw):
+        return TensorSpec((n_stack, *shape), L + axes, **kw)
+
+    return {
+        "ln1": t((d,), ("embed",), init="zeros"),
+        "wq": t((d, nq * hd), ("embed", "heads")),
+        "wk": t((d, nkv * hd), ("embed", "kv")),
+        "wv": t((d, nkv * hd), ("embed", "kv")),
+        "wo": t((nq * hd, d), ("heads", "embed")),
+        "ln2": t((d,), ("embed",), init="zeros"),
+        "wg": t((d, f), ("embed", "mlp")),
+        "wu": t((d, f), ("embed", "mlp")),
+        "wd": t((f, d), ("mlp", "embed")),
+    }
+
+
+def schema(cfg: ModelConfig):
+    pattern, n_groups, tail = cfg.layer_layout()
+    s: Dict[str, Any] = {
+        "embed": TensorSpec((cfg.vocab, cfg.d_model), ("vocab", "embed_io"),
+                            init="embed"),
+        "final_norm": TensorSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "stacks": [_layer_schema(cfg, n_groups) for _ in pattern],
+    }
+    if tail:
+        s["tail"] = [_layer_schema(cfg, 1) for _ in tail]
+    if not cfg.tie_embeddings:
+        s["unembed"] = TensorSpec((cfg.vocab, cfg.d_model), ("vocab", "embed_io"))
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Float (training / prefill) path
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(x, p, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = nn.dense(x, p["wq"]).reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = nn.dense(x, p["wk"]).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = nn.dense(x, p["wv"]).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    q = pctx.constrain(nn.rope(q, positions, cfg.rope_theta),
+                       ("batch", "heads", None, None))
+    k = pctx.constrain(nn.rope(k, positions, cfg.rope_theta),
+                       ("batch", "kv", None, None))
+    v = pctx.constrain(v, ("batch", "kv", None, None))
+    return q, k, v
+
+
+def _merge_heads(o):
+    b, h, s, hd = o.shape
+    return o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def _mlp(x, p, cfg: ModelConfig):
+    act = nn.ACTIVATIONS[cfg.act]
+    h = act(nn.dense(x, p["wg"]), nn.dense(x, p["wu"]))
+    return nn.dense(pctx.constrain(h, ("batch", None, "mlp")), p["wd"])
+
+
+def _layer(x, p, kind: str, cfg: ModelConfig, positions):
+    h = nn.rms_norm(x, p["ln1"])
+    q, k, v = _project_qkv(h, p, cfg, positions)
+    o = attn.chunked_attention(
+        q, k, v,
+        causal=kind != "B",
+        window=cfg.local_window if kind == "L" else None,
+        chunk_q=min(cfg.attn_chunk_q, x.shape[1]),
+    )
+    x = x + nn.dense(_merge_heads(o), p["wo"])
+    x = x + _mlp(nn.rms_norm(x, p["ln2"]), p, cfg)
+    return pctx.constrain(x, ("batch", None, None))
+
+
+def forward(params, tokens, cfg: ModelConfig, *, embeds=None):
+    """Teacher-forcing logits [B, S, V]. ``embeds`` overrides token embedding
+    (vlm/audio frontend stubs)."""
+    pattern, n_groups, tail = cfg.layer_layout()
+    x = embeds if embeds is not None else nn.embed(
+        tokens, params["embed"], cfg.compute_dtype)
+    x = pctx.constrain(x, ("batch", None, None))
+    positions = jnp.arange(x.shape[1])
+
+    def apply_group(xc, stacks_slice):
+        for kind, p in zip(pattern, stacks_slice):
+            xc = _layer(xc, p, kind, cfg, positions)
+        return xc
+
+    if cfg.remat:  # save only per-group carries; recompute internals in bwd
+        apply_group = jax.checkpoint(apply_group)
+
+    def group_body(xc, stacks_slice):
+        return apply_group(xc, stacks_slice), None
+
+    if n_groups > 0:
+        x, _ = jax.lax.scan(group_body, x, tuple(params["stacks"]))
+    for kind, p in zip(tail, params.get("tail", [])):
+        x = _layer(x, jax.tree.map(lambda a: a[0], p), kind, cfg, positions)
+
+    x = nn.rms_norm(x, params["final_norm"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return nn.unembed(x, table)
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_len_for(kind: str, cfg: ModelConfig, max_len: int) -> int:
+    return min(cfg.local_window, max_len) if kind == "L" else max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               quantized: Optional[bool] = None):
+    """Abstract-able KV cache pytree (stacked per pattern position)."""
+    if quantized is None:
+        quantized = cfg.serve_quant
+    dt = jnp.int8 if quantized else cfg.compute_dtype
+    pattern, n_groups, tail = cfg.layer_layout()
+    hd, nkv = cfg.hd, cfg.n_kv_heads
+
+    def kv(n_stack, kind):
+        s_len = _cache_len_for(kind, cfg, max_len)
+        return {
+            "k": jnp.zeros((n_stack, batch, nkv, s_len, hd), dt),
+            "v": jnp.zeros((n_stack, batch, nkv, s_len, hd), dt),
+        }
+
+    cache: Dict[str, Any] = {
+        "stacks": [kv(n_groups, kind) for kind in pattern],
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if tail:
+        cache["tail"] = [kv(1, kind) for kind in tail]
+    return cache
+
+
+def _cache_write(c, k_new, v_new, pos, kind, cfg):
+    """Write one token's k/v at position ``pos`` (ring for local layers)."""
+    s_len = c["k"].shape[2]
+    idx = pos % jnp.int32(s_len) if kind == "L" else jnp.minimum(pos, s_len - 1)
+    k = jax.lax.dynamic_update_slice_in_dim(c["k"], k_new.astype(c["k"].dtype), idx, 2)
+    v = jax.lax.dynamic_update_slice_in_dim(c["v"], v_new.astype(c["v"].dtype), idx, 2)
+    return {"k": k, "v": v}
+
+
+def _decode_layer(x, p, c, kind, cfg: ModelConfig, pos, *, qparams=None):
+    """One-token decode through one layer; returns (x, updated cache)."""
+    int8 = qparams is not None
+    h = nn.rms_norm(x, p["ln1"])
+    b = x.shape[0]
+    hd = cfg.hd
+    lin = functools.partial(_qlin, qparams) if int8 else (
+        lambda name, y: nn.dense(y, p[name]))
+    q = lin("wq", h).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = lin("wk", h).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = lin("wv", h).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    q = nn.rope(q, pos[None], cfg.rope_theta)
+    k = nn.rope(k, pos[None], cfg.rope_theta)
+
+    if int8:
+        kq = attn.KV_SCALE
+        k_store = jnp.clip(jnp.round(k.astype(jnp.float32) / kq), -127, 127)
+        v_store = jnp.clip(jnp.round(v.astype(jnp.float32) / kq), -127, 127)
+        c = _cache_write(c, k_store, v_store, pos, kind, cfg)
+        o = attn.decode_attention_int8(q, c["k"], c["v"], pos + 1, cfg)
+    else:
+        c = _cache_write(c, k, v, pos, kind, cfg)
+        o = attn.decode_attention(
+            q, c["k"], c["v"], pos + 1, ring=kind == "L")
+    x = x + lin("wo", _merge_heads(o))
+    h = nn.rms_norm(x, p["ln2"])
+    act = nn.ACTIVATIONS[cfg.act]
+    x = x + lin("wd", act(lin("wg", h), lin("wu", h)))
+    return x, c
+
+
+def _qlin(qp_slice, name, y):
+    """Quantized linear for the int8 serving path (static activation scale)."""
+    from repro.kernels.int8_gemm.ops import int8_gemm
+
+    s_in = attn.ACT_SCALE
+    y8 = jnp.clip(jnp.round(y.astype(jnp.float32) / s_in), -127, 127).astype(jnp.int8)
+    out8 = int8_gemm(y8, qp_slice[name], backend="xla")
+    return (out8.astype(jnp.float32) * attn.ACT_SCALE).astype(y.dtype)
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
+                embeds=None):
+    """One decode step. tokens [B] (or embeds [B, 1, D]); returns (logits, cache)."""
+    pattern, n_groups, tail = cfg.layer_layout()
+    x = embeds if embeds is not None else nn.embed(
+        tokens[:, None], params["embed"], cfg.compute_dtype)
+    pos = cache["len"]
+
+    def group_body(xc, slices):
+        stacks_slice, cache_slice, q_slice = slices
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            xc, c = _decode_layer(
+                xc, stacks_slice[i], cache_slice[i], kind, cfg, pos,
+                qparams=None if q_slice is None else q_slice[i],
+            )
+            new_caches.append(c)
+        return xc, tuple(new_caches)
+
+    if n_groups > 0:
+        qstacks = None if qparams is None else tuple(qparams["stacks"])
+        x, new_stack_caches = jax.lax.scan(
+            group_body, x,
+            (tuple(params["stacks"]), tuple(cache["stacks"]),
+             qstacks),
+        )
+        cache = dict(cache, stacks=list(new_stack_caches))
+    for i, kind in enumerate(tail):
+        p = jax.tree.map(lambda a: a[0], params["tail"][i])
+        qp = None
+        if qparams is not None:
+            qp = jax.tree.map(lambda a: a[0], qparams["tail"][i])
+        c_in = jax.tree.map(lambda a: a[0], cache["tail"][i])
+        x, c = _decode_layer(x, p, c_in, kind, cfg, pos, qparams=qp)
+        cache["tail"][i] = jax.tree.map(lambda a: a[None], c)
+
+    x = nn.rms_norm(x, params["final_norm"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = nn.unembed(x, table)
+    cache = dict(cache, len=cache["len"] + 1)
+    return logits[:, 0], cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
+    """Prefill: forward pass + populated float cache; returns (logits, cache).
+
+    Used for the ``prefill_32k`` cells: computes full-sequence logits while
+    writing the KV cache (float; quantized serving re-quantizes at decode).
+    """
+    pattern, n_groups, tail = cfg.layer_layout()
+    x = embeds if embeds is not None else nn.embed(
+        tokens, params["embed"], cfg.compute_dtype)
+    b, s = x.shape[:2]
+    positions = jnp.arange(s)
+    cache = init_cache(cfg, b, max_len, quantized=False)
+
+    def fill(c_kv, k, v, kind):
+        s_len = c_kv["k"].shape[2]
+        if s <= s_len:
+            pad = s_len - s
+            kw = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            vw = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        else:
+            # ring semantics: absolute position p lives at slot p % s_len
+            kw = jnp.roll(k[:, :, -s_len:], s % s_len, axis=2)
+            vw = jnp.roll(v[:, :, -s_len:], s % s_len, axis=2)
+        return {"k": kw.astype(c_kv["k"].dtype), "v": vw.astype(c_kv["v"].dtype)}
+
+    def group_body(xc, slices):
+        stacks_slice, cache_slice = slices
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            p = stacks_slice[i]
+            h = nn.rms_norm(xc, p["ln1"])
+            q, k, v = _project_qkv(h, p, cfg, positions)
+            o = attn.chunked_attention(
+                q, k, v, causal=kind != "B",
+                window=cfg.local_window if kind == "L" else None,
+                chunk_q=min(cfg.attn_chunk_q, s),
+            )
+            xc = xc + nn.dense(_merge_heads(o), p["wo"])
+            xc = xc + _mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
+            new_caches.append(fill(cache_slice[i], k, v, kind))
+        return xc, tuple(new_caches)
+
+    if n_groups > 0:
+        x, new_stack_caches = jax.lax.scan(
+            group_body, x, (tuple(params["stacks"]), tuple(cache["stacks"])))
+        cache = dict(cache, stacks=list(new_stack_caches))
+    for i, kind in enumerate(tail):
+        p = jax.tree.map(lambda a: a[0], params["tail"][i])
+        h = nn.rms_norm(x, p["ln1"])
+        q, k, v = _project_qkv(h, p, cfg, positions)
+        o = attn.chunked_attention(
+            q, k, v, causal=kind != "B",
+            window=cfg.local_window if kind == "L" else None,
+            chunk_q=min(cfg.attn_chunk_q, s))
+        x = x + nn.dense(_merge_heads(o), p["wo"])
+        x = x + _mlp(nn.rms_norm(x, p["ln2"]), p, cfg)
+        cache["tail"][i] = fill(cache["tail"][i], k, v, kind)
+
+    x = nn.rms_norm(x, params["final_norm"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = nn.unembed(x[:, -1:], table)
+    cache = dict(cache, len=jnp.asarray(s, jnp.int32))
+    return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# INT8 serving parameter conversion (the paper's deployment flow)
+# ---------------------------------------------------------------------------
+
+
+def quantize_params(params, cfg: ModelConfig):
+    """Float params → QuantizedLinearParams tree for the W8A8 serving path."""
+    from repro.kernels.int8_gemm.ops import QuantizedLinearParams
+
+    s = attn.ACT_SCALE
+
+    def qlayer(p):
+        out = {}
+        for name in ("wq", "wk", "wv", "wo", "wg", "wu", "wd"):
+            w = p[name]
+
+            def quantize_one(wi):
+                zero_bias = jnp.zeros((wi.shape[-1],), jnp.float32)
+                return QuantizedLinearParams.from_float(wi, zero_bias, s, s)
+
+            out[name] = jax.vmap(quantize_one)(w.astype(jnp.float32))
+        return out
+
+    q = {"stacks": [qlayer(st) for st in params["stacks"]]}
+    if "tail" in params:
+        q["tail"] = [qlayer(t) for t in params["tail"]]
+    return q
+
+
+_QAXES = {
+    "wq": ("embed", "heads"), "wk": ("embed", "kv"), "wv": ("embed", "kv"),
+    "wo": ("heads", "embed"), "wg": ("embed", "mlp"), "wu": ("embed", "mlp"),
+    "wd": ("mlp", "embed"),
+}
+
+
+def quantized_axes(cfg: ModelConfig):
+    """Logical axes tree matching ``quantize_params`` output."""
+    from repro.kernels.int8_gemm.ops import QuantizedLinearParams
+
+    pattern, n_groups, tail = cfg.layer_layout()
+
+    def qlayer():
+        out = {}
+        for name, (ain, aout) in _QAXES.items():
+            out[name] = QuantizedLinearParams(
+                w_q=("layers", ain, aout), bias=("layers", aout),
+                mult=("layers", aout), shift=("layers", aout))
+        return out
+
+    q = {"stacks": [qlayer() for _ in pattern]}
+    if tail:
+        q["tail"] = [qlayer() for _ in tail]
+    return q

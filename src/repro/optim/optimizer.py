@@ -1,0 +1,183 @@
+"""Optimizers (pytree-native, dependency-free): AdamW and Adafactor.
+
+Adafactor (factored second moments) exists for the trillion-parameter
+configs (kimi-k2) where Adam's 2×f32 moments would not fit even fully
+sharded; see EXPERIMENTS.md §Dry-run memory analysis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: Optional[float] = 1.0
+    schedule: str = "cosine"       # cosine | linear | const
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - t
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), norm
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any  # row second moments (or full moments for rank<2)
+    vc: Any  # col second moments
+
+
+def init(cfg: OptConfig, params):
+    if cfg.name == "adamw":
+        zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros(), zeros())
+    if cfg.name == "adafactor":
+        def vr_like(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2 else (
+                jnp.zeros(p.shape, jnp.float32))
+
+        def vc_like(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) if (
+                p.ndim >= 2) else jnp.zeros((), jnp.float32)
+
+        return AdafactorState(
+            jnp.zeros((), jnp.int32),
+            jax.tree.map(vr_like, params),
+            jax.tree.map(vc_like, params),
+        )
+    raise ValueError(cfg.name)
+
+
+def abstract_state(cfg: OptConfig, params_abstract):
+    """ShapeDtypeStruct view of the optimizer state (dry-run)."""
+    return jax.eval_shape(lambda p: init(cfg, p), params_abstract)
+
+
+def state_axes(cfg: OptConfig, params_axes):
+    """Logical axes for the optimizer state, mirroring the param axes."""
+    if cfg.name == "adamw":
+        return AdamWState((), params_axes, params_axes)
+    def drop_last(a):
+        return a[:-1] if len(a) >= 2 else a
+
+    def drop_second_last(a):
+        return a[:-2] + a[-1:] if len(a) >= 2 else ()
+
+    leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(i, (str, type(None))) for i in x)
+    return AdafactorState(
+        (),
+        jax.tree.map(drop_last, params_axes, is_leaf=leaf),
+        jax.tree.map(drop_second_last, params_axes, is_leaf=leaf),
+    )
+
+
+def update(cfg: OptConfig, state, params, grads):
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+
+    if cfg.name == "adamw":
+        m = jax.tree.map(lambda m_, g: cfg.b1 * m_ + (1 - cfg.b1) * g,
+                         state.m, grads)
+        v = jax.tree.map(lambda v_, g: cfg.b2 * v_ + (1 - cfg.b2) * g * g,
+                         state.v, grads)
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + (
+                cfg.weight_decay * p.astype(jnp.float32))
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step, m, v), {"lr": lr, "grad_norm": gnorm}
+
+    if cfg.name == "adafactor":
+        d = 1e-30
+
+        def moments(vr, vc, g):
+            if g.ndim >= 2:
+                vr2 = cfg.b2 * vr + (1 - cfg.b2) * jnp.mean(g * g, -1)
+                vc2 = cfg.b2 * vc + (1 - cfg.b2) * jnp.mean(g * g, -2)
+                denom = (
+                    vr2[..., None] * vc2[..., None, :]
+                    / (jnp.mean(vr2, -1, keepdims=True)[..., None] + d)
+                )
+                return vr2, vc2, jnp.sqrt(denom + d)
+            vr2 = cfg.b2 * vr + (1 - cfg.b2) * g * g
+            return vr2, vc, jnp.sqrt(vr2 + d)
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_vr = jax.tree.leaves(state.vr)
+        flat_vc = jax.tree.leaves(state.vc)
+        new_vr, new_vc, denoms = [], [], []
+        for g, vr, vc in zip(flat_g, flat_vr, flat_vc):
+            a, b, c = moments(vr, vc, g)
+            new_vr.append(a)
+            new_vc.append(b)
+            denoms.append(c)
+
+        flat_p = jax.tree.leaves(params)
+        new_p = [
+            (p.astype(jnp.float32)
+             - lr * (g / (dn + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32))
+             ).astype(p.dtype)
+            for p, g, dn in zip(flat_p, flat_g, denoms)
+        ]
+        return (
+            jax.tree.unflatten(tdef, new_p),
+            AdafactorState(step, jax.tree.unflatten(tdef, new_vr),
+                           jax.tree.unflatten(tdef, new_vc)),
+            {"lr": lr, "grad_norm": gnorm},
+        )
+    raise ValueError(cfg.name)

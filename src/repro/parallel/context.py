@@ -1,0 +1,57 @@
+"""Trace-time activation-sharding context.
+
+Models are mesh-agnostic; the launcher/trainer activates this context while
+tracing so that ``constrain(x, logical_axes)`` pins activation shardings at
+the few places GSPMD propagation is known to go wrong (loop carries,
+attention head layouts, MoE dispatch buffers). When no context is active it
+is a no-op — CPU unit tests and kernels never see it.
+
+Activation logical axes are the same vocabulary as parameter axes plus
+``batch``; the active ``Rules`` maps them to mesh axes.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+_CTX: contextvars.ContextVar[Optional[tuple]] = contextvars.ContextVar(
+    "repro_act_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules):
+    token = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current():
+    """(mesh, rules) if an activation-sharding context is active, else None."""
+    return _CTX.get()
+
+
+def constrain(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(axes) != x.ndim:
+        raise ValueError(f"axes {axes} rank != array rank {x.ndim}")
+    spec = rules.spec_for(axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_constrain(tree, axes_tree):
+    ctx = _CTX.get()
+    if ctx is None:
+        return tree
+    return jax.tree.map(
+        lambda x, a: constrain(x, a), tree, axes_tree,
+        is_leaf=lambda v: not isinstance(v, (dict, list, tuple)))

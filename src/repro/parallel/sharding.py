@@ -1,0 +1,215 @@
+"""Logical-axis sharding (t5x-style rules) for DP / FSDP / TP / EP / SP.
+
+Every parameter/cache/activation carries logical axis names (from the model
+schemas); a rules table maps logical → mesh axes. Checkpoints store logical
+axes, so elastic restarts re-shard to whatever mesh the job comes back on.
+
+Mesh axes: ``("pod", "data", "model")`` multi-pod or ``("data", "model")``
+single-pod. The same rules work for both — "pod" simply composes with
+"data" for batch/FSDP sharding when present.
+
+Key rule sets:
+  * ``train_rules``  — batch over (pod,data); TP over model for heads/mlp/
+    vocab/experts; FSDP: embed-dim params sharded over data as well.
+  * ``serve_rules``  — TP only (no FSDP gather latency in the decode path);
+    KV cache heads over model where head count allows, else sequence (SP).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    table: Tuple[Tuple[str, Optional[Tuple[str, ...]]], ...]
+
+    def mesh_axes(self, logical: Optional[str], mesh: Mesh):
+        if logical is None:
+            return None
+        for name, target in self.table:
+            if name == logical:
+                if target is None:
+                    return None
+                present = tuple(a for a in target if a in mesh.axis_names)
+                if not present:
+                    return None
+                return present if len(present) > 1 else present[0]
+        return None
+
+    def spec_for(self, axes: Sequence[Optional[str]], mesh: Mesh,
+                 dims: Optional[Sequence[int]] = None) -> P:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        used: set = set()
+        out = []
+        for i, ax in enumerate(axes):
+            target = self.mesh_axes(ax, mesh)
+            if target is not None:
+                flat = (target,) if isinstance(target, str) else tuple(target)
+                # a mesh axis may appear only once per PartitionSpec
+                if any(t in used for t in flat):
+                    target = None
+                # dimension must divide the mesh extent (batch=1 decode,
+                # unpadded vocabularies, …)
+                elif dims is not None:
+                    n = 1
+                    for t in flat:
+                        n *= sizes[t]
+                    if dims[i] % n:
+                        target = None
+                if target is not None:
+                    used.update(flat)
+            out.append(target)
+        return P(*out)
+
+    def tree_spec(self, axes_tree, mesh: Mesh, like=None):
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x)
+        if like is None:
+            return jax.tree.map(
+                lambda axes: self.spec_for(axes, mesh), axes_tree,
+                is_leaf=is_axes)
+        return jax.tree.map(
+            lambda axes, arr: self.spec_for(axes, mesh, dims=arr.shape),
+            axes_tree, like, is_leaf=is_axes)
+
+    def tree_sharding(self, axes_tree, mesh: Mesh, like=None):
+        return jax.tree.map(
+            lambda spec: NamedSharding(mesh, spec),
+            self.tree_spec(axes_tree, mesh, like=like),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+
+def train_rules(fsdp: bool = True) -> Rules:
+    """DP(+pod) batch, TP model, FSDP over data on the embed dimension."""
+    return Rules((
+        ("batch", ("pod", "data")),
+        ("seq", None),
+        ("vocab", ("model",)),
+        ("embed", ("data",) if fsdp else None),
+        ("embed_io", None),  # embedding tables: never FSDP the gathered dim
+        ("heads", ("model",)),
+        ("kv", ("model",)),
+        ("qkv", ("model",)),
+        ("mlp", ("model",)),
+        ("experts", ("model",)),
+        ("layers", None),
+        ("state", None),
+    ))
+
+
+def serve_rules(kv_shardable: bool = True, seq_sharded: bool = False) -> Rules:
+    """TP serving. ``seq_sharded`` turns on SP for long-context KV caches."""
+    return Rules((
+        ("batch", ("pod", "data")),
+        ("seq", ("model",) if seq_sharded else None),
+        ("vocab", ("model",)),
+        ("embed", None),
+        ("embed_io", None),
+        ("heads", ("model",)),
+        ("kv", ("model",) if kv_shardable else None),
+        ("qkv", ("model",)),
+        ("mlp", ("model",)),
+        ("experts", ("model",)),
+        ("layers", None),
+        ("state", ("model",)),
+    ))
+
+
+def train_rules_fsdp_only() -> Rules:
+    """§Perf optimized dense-train mapping: pure DP over the whole mesh,
+    weights fully sharded (ZeRO-3) over (data×model); no tensor parallelism
+    → no per-layer activation psums. Right for models whose layer weights
+    fit one chip (≤~30B at bf16)."""
+    return Rules((
+        ("batch", ("pod", "data", "model")),
+        ("seq", None),
+        ("vocab", None),
+        ("embed", ("data", "model")),
+        ("embed_io", None),
+        ("heads", None),
+        ("kv", None),
+        ("qkv", None),
+        ("mlp", None),
+        ("experts", ("model",)),
+        ("layers", None),
+        ("state", None),
+    ))
+
+
+def prune_batch_axes(rules: Rules, mesh: Mesh, batch_size: int) -> Rules:
+    """Drop trailing mesh axes from the 'batch' mapping until the global
+    batch divides the product (e.g. batch 256 on a 512-chip pure-DP mesh
+    falls back to 32-way batch sharding over (pod, data))."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    target = rules.mesh_axes("batch", mesh)
+    if target is None:
+        return rules
+    axes = (target,) if isinstance(target, str) else tuple(target)
+    while axes:
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        if batch_size % n == 0:
+            break
+        axes = axes[:-1]
+    table = tuple(
+        (name, axes if name == "batch" else t) for name, t in rules.table)
+    return Rules(table)
+
+
+def activation_rules(base: Rules) -> Rules:
+    """Activation view of a rule set: parameter-only axes (embed/FSDP) are
+    dropped — activations shard on batch and TP axes only."""
+    keep = {"batch", "heads", "kv", "mlp", "experts", "vocab", "seq", "state"}
+    return Rules(tuple((n, t if n in keep else None) for n, t in base.table))
+
+
+def pick_serve_rules(cfg, mesh: Mesh, long_context: bool) -> Rules:
+    """Decode KV layout: head-sharded when kv heads divide the model axis;
+    otherwise sequence-sharded (SP) — replicating a 32k cache across model
+    ranks costs 16× storage AND reads (§Perf iteration 2)."""
+    import os
+
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    kv_ok = cfg.n_kv_heads % model_size == 0 and not long_context
+    if os.environ.get("REPRO_BASELINE_KV") == "1":
+        return serve_rules(kv_shardable=kv_ok, seq_sharded=long_context)
+    return serve_rules(kv_shardable=kv_ok, seq_sharded=long_context or not kv_ok)
+
+
+# ---------------------------------------------------------------------------
+# Cache logical axes per family (mirrors each family's init_cache structure)
+# ---------------------------------------------------------------------------
+
+
+def cache_axes(cfg, cache):
+    """Logical axes tree matching a cache pytree (rank-pattern based)."""
+
+    def leaf_axes(path, leaf):
+        names = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+        key = names[-1] if names else None
+        if key == "len":
+            return ()
+        if key in ("k", "v", "xk", "xv"):
+            return ("layers", "batch", "kv", "seq", None)
+        if key == "conv":
+            return ("layers", "batch", None, "mlp")
+        if key == "ssd":
+            return ("layers", "batch", "heads", "state", None)
+        if key == "h":
+            return ("layers", "batch", "mlp")
+        return tuple([None] * leaf.ndim)
+
+    return jax.tree_util.tree_map_with_path(leaf_axes, cache)
+
+
+def batch_specs(mesh: Mesh, rules: Rules, *ranks):
+    """PartitionSpec for token-like inputs: first axis batch, rest replicated."""
+    batch = rules.mesh_axes("batch", mesh)
+    return tuple(P(batch, *([None] * (r - 1))) for r in ranks)

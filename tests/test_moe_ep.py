@@ -1,0 +1,45 @@
+"""shard_map expert parallelism: numerical equivalence vs the GSPMD path
+(subprocess — needs an 8-device host mesh)."""
+
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro import configs
+    from repro.models import registry, schema as schema_lib
+    from repro.parallel import context as pctx, sharding as sh
+
+    cfg = dataclasses.replace(configs.smoke_config("qwen3-moe-30b-a3b"),
+                              dtype="float32")
+    arch = registry.build(cfg)
+    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab)
+    mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+    rules = sh.activation_rules(sh.train_rules())
+
+    def loss(p, t):
+        lg = arch.forward(p, t)
+        return jnp.mean(jax.nn.log_softmax(lg.astype(jnp.float32)) ** 2)
+
+    with mesh, pctx.activation_sharding(mesh, rules):
+        l_ep, g_ep = jax.jit(jax.value_and_grad(loss))(params, toks)
+    l_ref, g_ref = jax.jit(jax.value_and_grad(loss))(params, toks)
+    gd = max(float(jnp.abs(a - b).max())
+             for a, b in zip(jax.tree.leaves(g_ep), jax.tree.leaves(g_ref)))
+    assert abs(float(l_ep) - float(l_ref)) < 1e-5, (l_ep, l_ref)
+    assert gd < 1e-6, gd
+    print("OK")
+""")
+
+
+def test_shard_map_ep_equivalent_subprocess():
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}, timeout=560)
+    assert "OK" in r.stdout, f"stdout={r.stdout}\nstderr={r.stderr[-2000:]}"

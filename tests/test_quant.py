@@ -1,0 +1,64 @@
+"""Quantization contract: roundtrip, fixed-point requant, int32 safety."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((128, 64)).astype(np.float32)
+    s = quant.compute_scale(jnp.asarray(x))
+    q = quant.quantize(jnp.asarray(x), s)
+    err = np.abs(quant.dequantize(q, s) - x).max()
+    assert err <= float(s) / 2 + 1e-6
+
+
+def test_per_channel_scales_shape():
+    w = jnp.ones((32, 16))
+    wq, s = quant.quantize_weights(w)
+    assert wq.shape == (32, 16) and s.shape == (16,)
+    assert wq.dtype == jnp.int8
+
+
+@given(
+    m=st.floats(min_value=1e-6, max_value=4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_requantize_matches_float_reference(m, seed):
+    """Fixed-point requant is within 2 LSB of exact rounding for any scale."""
+    rng = np.random.default_rng(seed)
+    acc = rng.integers(-(2**30), 2**30, size=256).astype(np.int32)
+    mult, shift = quant.quantize_to_fixed_point(jnp.float32(m))
+    y = np.asarray(quant.requantize(jnp.asarray(acc), mult, shift))
+    ref = np.clip(np.round(acc.astype(np.float64) * m), -127, 127)
+    assert np.abs(y - ref).max() <= 2
+    # large-magnitude accumulators saturate identically
+    assert (y[np.abs(acc.astype(np.float64) * m) > 200]
+            == ref[np.abs(acc.astype(np.float64) * m) > 200]).all()
+
+
+def test_fixed_point_py_matches_jnp():
+    for m in (1e-5, 0.03, 0.5, 0.999, 1.5):
+        mj, sj = quant.quantize_to_fixed_point(jnp.float32(m))
+        mp, sp = quant.quantize_to_fixed_point_py(m)
+        assert int(mj) == mp and int(sj) == sp
+
+
+def test_round_shift_negative_is_left_shift():
+    v = jnp.asarray([3, -3], jnp.int32)
+    assert np.array_equal(np.asarray(quant.round_shift(v, -2)), [12, -12])
+
+
+def test_int8_matmul_exact():
+    rng = np.random.default_rng(1)
+    a = rng.integers(-127, 128, (16, 32)).astype(np.int8)
+    b = rng.integers(-127, 128, (32, 8)).astype(np.int8)
+    got = np.asarray(quant.int8_matmul_ref(jnp.asarray(a), jnp.asarray(b)))
+    ref = a.astype(np.int64) @ b.astype(np.int64)
+    assert (got == ref).all()
+    assert got.dtype == np.int32

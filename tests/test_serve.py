@@ -1,0 +1,59 @@
+"""Serving engine: continuous batching, drain, decode-priority dispatch."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro import configs
+from repro.models import registry, schema as schema_lib
+from repro.serve.engine import EngineConfig, Request, ServeEngine, metrics
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = configs.smoke_config("phi3-mini-3.8b")
+    arch = registry.build(cfg)
+    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+    return cfg, arch, params
+
+
+def test_drains_all_requests(engine_setup):
+    cfg, arch, params = engine_setup
+    eng = ServeEngine(arch, params, EngineConfig(slots=2, max_len=48))
+    rng = np.random.default_rng(0)
+    for rid in range(5):
+        eng.submit(Request(rid=rid,
+                           prompt=rng.integers(0, cfg.vocab, 6).astype(np.int32),
+                           max_new_tokens=4))
+    done = eng.run_until_drained()
+    assert len(done) == 5
+    assert all(len(r.output) == 4 for r in done)
+    m = metrics(done)
+    assert m["tokens_per_s"] > 0
+
+
+def test_decode_never_starved_by_admissions(engine_setup):
+    """At most one admission per iteration — active decodes advance every
+    step (the QoS-split property)."""
+    cfg, arch, params = engine_setup
+    eng = ServeEngine(arch, params, EngineConfig(slots=2, max_len=48))
+    rng = np.random.default_rng(1)
+    for rid in range(6):
+        eng.submit(Request(rid=rid,
+                           prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                           max_new_tokens=6))
+    # after two steps, at most 2 admissions happened; any active request
+    # must have gained one token per elapsed iteration
+    eng.step()
+    active = [r for r in eng.slots if r is not None]
+    n0 = {r.rid: len(r.output) for r in active}
+    eng.step()
+    for r in [r for r in eng.slots if r is not None]:
+        if r.rid in n0:
+            assert len(r.output) == n0[r.rid] + 1
+
+
+def test_int8_path_selected_for_dense(engine_setup):
+    cfg, arch, params = engine_setup
+    eng = ServeEngine(arch, params, EngineConfig(slots=1, max_len=32))
+    assert eng.qparams is not None  # serve_quant dense → paper path active

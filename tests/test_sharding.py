@@ -1,0 +1,71 @@
+"""Sharding rules: logical→mesh mapping, divisibility pruning, cache axes."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel import sharding as sh
+
+
+@pytest.fixture(scope="module")
+def mesh22():
+    devs = np.asarray(jax.devices()[:1] * 4).reshape(2, 2) if (
+        len(jax.devices()) < 4) else np.asarray(jax.devices()[:4]).reshape(2, 2)
+    return Mesh(devs, ("data", "model"))
+
+
+def test_train_rules_basic(mesh22):
+    r = sh.train_rules()
+    assert r.spec_for(("embed", "mlp"), mesh22) == P("data", "model")
+    assert r.spec_for(("vocab", "embed_io"), mesh22) == P("model", None)
+    assert r.spec_for(("layers", "embed", "heads"), mesh22) == P(
+        None, "data", "model")
+
+
+def test_mesh_axis_used_once(mesh22):
+    r = sh.train_rules()
+    # two logical axes both mapping to 'model': only the first wins
+    spec = r.spec_for(("heads", "mlp"), mesh22)
+    assert spec == P("model", None)
+
+
+def test_divisibility_pruning(mesh22):
+    r = sh.train_rules()
+    # batch=1 cannot shard over data=2
+    assert r.spec_for(("batch", None), mesh22, dims=(1, 8)) == P(None, None)
+    # odd vocab cannot shard over model=2
+    assert r.spec_for(("vocab", "embed_io"), mesh22, dims=(51865, 64)) == P(
+        None, None)
+    assert r.spec_for(("vocab", "embed_io"), mesh22, dims=(51904, 64)) == P(
+        "model", None)
+
+
+def test_activation_rules_drop_fsdp(mesh22):
+    act = sh.activation_rules(sh.train_rules())
+    assert act.spec_for(("batch", None, "embed"), mesh22) == P("data", None, None)
+    assert act.spec_for(("batch", None, "mlp"), mesh22) == P("data", None, "model")
+
+
+def test_serve_rules_sp_for_long_context(mesh22):
+    from repro.configs import get_config
+
+    cfg = get_config("gemma3-4b")
+    r = sh.pick_serve_rules(cfg, mesh22, long_context=True)
+    spec = r.spec_for(("layers", "batch", "kv", "seq", None), mesh22,
+                      dims=(5, 1, 4, 1024, 256))
+    assert spec == P(None, None, None, "model", None)  # SP on seq; batch=1 → None
+
+
+def test_cache_axes_structure():
+    import jax.numpy as jnp
+
+    from repro.configs import smoke_config
+    from repro.models import registry
+
+    cfg = smoke_config("glm4-9b")
+    arch = registry.build(cfg)
+    cache = jax.eval_shape(lambda: arch.init_cache(2, 16))
+    axes = sh.cache_axes(cfg, cache)
+    flat = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    assert ("layers", "batch", "kv", "seq", None) in flat
