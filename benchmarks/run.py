@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   table1  — peak perf/efficiency incl. Fig. 7 L1/L2 and Fig. 8b shmoo
   table2  — full-network energy/throughput (MobileBERT/Whisper/DINOv2)
   kernels — op-backend micro-benchmarks + bit-exactness
+  serve   — batched vs per-slot serve engines (also writes BENCH_serve.json)
 """
 
 from __future__ import annotations
@@ -24,6 +25,7 @@ def main() -> None:
         ("table1", "benchmarks.table1_efficiency"),
         ("table2", "benchmarks.table2_networks"),
         ("kernels", "benchmarks.kernel_bench"),
+        ("serve", "benchmarks.serve_bench"),
     ]:
         try:
             m = importlib.import_module(mod)

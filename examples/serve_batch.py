@@ -1,8 +1,11 @@
-"""Serve a small model with batched requests through the QoS-split engine.
+"""Serve a small model through the vectorized continuous-batching engine.
 
-Demonstrates continuous batching with decode-priority dispatch (the
-CHIMERA bounded-priority principle at the serving layer) and the INT8
-(paper-faithful) decode path.
+Demonstrates the CHIMERA bounded-priority principle at the serving layer:
+all decode slots advance through ONE jitted batched decode step per engine
+iteration (per-slot position vectors over a shared [slots, max_len, ...]
+KV arena), sampling happens on device, admissions are prefilled into pow2
+length buckets, and exactly one device→host token fetch happens per
+iteration — with the INT8 (paper-faithful) decode path when enabled.
 
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
@@ -12,14 +15,17 @@ import jax
 
 from repro import configs
 from repro.models import registry, schema as schema_lib
-from repro.serve.engine import EngineConfig, Request, ServeEngine, metrics
+from repro.serve.engine import (
+    BatchedServeEngine, EngineConfig, Request, metrics,
+)
 
 
 def main():
     cfg = configs.smoke_config("glm4-9b")
     arch = registry.build(cfg)
     params = schema_lib.init_params(arch.schema(), jax.random.key(0))
-    engine = ServeEngine(arch, params, EngineConfig(slots=4, max_len=96))
+    engine = BatchedServeEngine(arch, params,
+                                EngineConfig(slots=4, max_len=96))
     print(f"engine up: {cfg.name}, int8 path="
           f"{'on' if engine.qparams is not None else 'off'}")
 
@@ -34,7 +40,13 @@ def main():
           f"ttft {m['ttft_avg_s']*1e3:.1f} ms | "
           f"latency {m['latency_avg_s']*1e3:.1f} ms | "
           f"{m['tokens_per_s']:.1f} tok/s")
+    print(f"{engine.iterations} iterations: "
+          f"{engine.decode_dispatches} decode dispatches, "
+          f"{engine.transfers} device→host fetches, "
+          f"{engine.prefill_traces} prefill traces (pow2 buckets)")
     assert m["requests"] == 12
+    assert engine.decode_dispatches <= engine.iterations
+    assert engine.transfers <= engine.iterations
     sample = done[0]
     print(f"request {sample.rid}: {len(sample.output)} tokens -> "
           f"{sample.output[:8]}…")

@@ -1,4 +1,9 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch <id> …``."""
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> …``.
+
+Defaults to the vectorized continuous-batching engine (one batched decode
+dispatch + one device→host fetch per iteration); ``--engine reference``
+selects the sequential per-slot baseline for A/B comparison.
+"""
 
 from __future__ import annotations
 
@@ -11,24 +16,37 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", choices=("batched", "reference"),
+                    default="batched")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--admit-window", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 enables on-device sampling "
+                         "(batched engine only)")
     args = ap.parse_args()
 
     import jax
 
     from repro import configs
     from repro.models import registry, schema as schema_lib
-    from repro.serve.engine import EngineConfig, Request, ServeEngine, metrics
+    from repro.serve.engine import (
+        BatchedServeEngine, EngineConfig, Request, ServeEngine, metrics,
+    )
 
     model = (configs.smoke_config(args.arch) if args.smoke
              else configs.get_config(args.arch))
     arch = registry.build(model)
     params = schema_lib.init_params(arch.schema(), jax.random.key(0))
-    engine = ServeEngine(arch, params,
-                         EngineConfig(slots=args.slots, max_len=args.max_len))
+    ec = EngineConfig(slots=args.slots, max_len=args.max_len,
+                      admit_window=args.admit_window,
+                      greedy=args.temperature <= 0,
+                      temperature=max(args.temperature, 1e-6))
+    engine_cls = {"batched": BatchedServeEngine,
+                  "reference": ServeEngine}[args.engine]
+    engine = engine_cls(arch, params, ec)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         engine.submit(Request(
@@ -38,6 +56,10 @@ def main():
             max_new_tokens=args.max_new))
     done = engine.run_until_drained()
     print(metrics(done))
+    print(f"iters={engine.iterations} dispatches={engine.decode_dispatches} "
+          f"transfers={engine.transfers} "
+          f"traces(decode/prefill)={engine.decode_traces}/"
+          f"{engine.prefill_traces}")
 
 
 if __name__ == "__main__":

@@ -103,7 +103,7 @@ def decode_attention(
     q: jax.Array,        # [B, Hq, 1, D]
     k_cache: jax.Array,  # [B, Hkv, S_cache, D]
     v_cache: jax.Array,
-    cache_len: jax.Array,  # [] int32 — number of valid entries
+    cache_len: jax.Array,  # [] or [B] int32 — valid entries (per row)
     *,
     ring: bool = False,    # ring buffer (sliding-window cache)
     expand_kv: bool = None,  # baseline (pre-§Perf) head-materializing path
@@ -114,14 +114,18 @@ def decode_attention(
     _, hkv, s_cache, _ = k_cache.shape
     group = hq // hkv
     idx = jnp.arange(s_cache)
-    valid = idx < cache_len if not ring else idx < jnp.minimum(cache_len, s_cache)
+    # cache_len broadcasts: scalar (uniform) or [B] (per-slot positions)
+    cl = jnp.asarray(cache_len, jnp.int32).reshape(-1, 1)
+    if ring:
+        cl = jnp.minimum(cl, s_cache)
+    valid = idx[None, :] < cl  # [B or 1, S]
     if expand_kv:
         k = _expand_kv(k_cache, group)
         v = _expand_kv(v_cache, group)
         logits = jnp.einsum(
             "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
         ) * (d ** -0.5)
-        logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+        logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
         p = jax.nn.softmax(logits, axis=-1)
         out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
         return out.astype(q.dtype)
@@ -132,7 +136,7 @@ def decode_attention(
     logits = jnp.einsum(
         "bhgd,bhkd->bhgk", qg.astype(jnp.float32),
         k_cache.astype(jnp.float32)) * (d ** -0.5)
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, hq, 1, d).astype(q.dtype)
@@ -184,7 +188,9 @@ def decode_attention_int8(
     neg = -(31 << ita.FB)
     t = jnp.maximum(t, neg)
     idx = jnp.arange(s_cache)
-    t = jnp.where(idx[None, None, None, :] < cache_len, t, neg)
+    # cache_len: scalar or per-row [B] position vector
+    cl = jnp.asarray(cache_len, jnp.int32).reshape(-1, 1, 1, 1)
+    t = jnp.where(idx[None, None, None, :] < cl, t, neg)
     m = jnp.max(t, -1, keepdims=True)
     be = -((-m) >> ita.FB)
     e = ita.exp2_fixed(jnp.maximum(t - (be << ita.FB), neg))

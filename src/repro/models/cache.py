@@ -1,0 +1,63 @@
+"""Family-agnostic KV/state-cache slot operations for continuous batching.
+
+Every family's ``init_cache`` produces a pytree whose leaves follow one
+layout convention: rank-1 leaves are per-row bookkeeping (``len`` — the
+per-slot position vector), and every higher-rank leaf carries the batch
+(slot) dimension at axis 1 (axis 0 is the stacked-layer dimension). The
+helpers here exploit that convention so the serving engine can treat any
+family's cache as a fixed-shape ``[slots, ...]`` arena:
+
+  * ``cache_insert`` — overwrite one slot's rows with a freshly prefilled
+    single-request cache (``dynamic_update_slice`` per leaf; this is the
+    per-slot *reset+insert* primitive — the whole slot row, including its
+    position counter, is replaced).
+  * ``cache_reset`` — zero a slot's position counter so stale entries are
+    masked out of subsequent decode attention.
+  * ``bucket_for`` — power-of-two prompt-length buckets so admission
+    prefill traces once per bucket instead of once per distinct length.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def batch_axis(leaf: jax.Array) -> int:
+    """Axis carrying the slot/batch dimension under the cache convention."""
+    return 0 if leaf.ndim == 1 else 1
+
+
+def cache_insert(batched, single, slot):
+    """Insert a batch-1 cache into slot ``slot`` of a batched cache.
+
+    ``batched`` and ``single`` must share a treedef (same family/max_len);
+    ``slot`` may be a Python int or a traced int32 scalar, so the insert
+    jits once and serves every slot.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def ins(b, s):
+        return jax.lax.dynamic_update_slice_in_dim(
+            b, s.astype(b.dtype), slot, batch_axis(b))
+
+    return jax.tree.map(ins, batched, single)
+
+
+def cache_reset(cache, slot):
+    """Mark slot ``slot`` empty: position 0 masks every cached entry.
+
+    Utility for cache management outside the engine's hot loop — the
+    engine itself never resets freed slots (that would cost an extra
+    dispatch per finish); it simply overwrites them at the next
+    ``cache_insert`` and ignores the garbage rows in between.
+    """
+    return dict(cache, len=cache["len"].at[slot].set(0))
+
+
+def bucket_for(n: int, min_bucket: int = 8, cap: int | None = None) -> int:
+    """Smallest power-of-two bucket ≥ n (≥ min_bucket, clamped to cap)."""
+    b = max(min_bucket, 1 << max(0, n - 1).bit_length())
+    if cap is not None:
+        b = min(b, cap)
+    return max(b, n)

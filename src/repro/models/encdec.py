@@ -129,7 +129,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, quantized=None):
         "v": jnp.zeros((L, batch, nkv, max_len, hd), cfg.compute_dtype),
         "xk": jnp.zeros((L, batch, nkv, cfg.enc_seq, hd), cfg.compute_dtype),
         "xv": jnp.zeros((L, batch, nkv, cfg.enc_seq, hd), cfg.compute_dtype),
-        "len": jnp.zeros((), jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),  # per-row position vector
     }
 
 
@@ -161,14 +161,14 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
     x = nn.rms_norm(x, params["final_norm"])
     logits = nn.unembed(x[:, -1:], params["unembed"])
     return logits[:, 0], {"k": ks, "v": vs, "xk": xks, "xv": xvs,
-                          "len": jnp.asarray(s, jnp.int32)}
+                          "len": jnp.full((b,), s, jnp.int32)}
 
 
 def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
                 embeds=None):
     x = nn.embed(tokens[:, None], params["embed"], cfg.compute_dtype)
-    pos = cache["len"]
     b = x.shape[0]
+    pos = dense._as_positions(cache["len"], b)
     hd = cfg.hd
 
     def body(xc, slices):
@@ -177,10 +177,10 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
         q = nn.dense(h, p["wq"]).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
         k = nn.dense(h, p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
         v = nn.dense(h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
-        q = nn.rope(q, pos[None], cfg.rope_theta)
-        k = nn.rope(k, pos[None], cfg.rope_theta)
-        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, 2)
-        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, 2)
+        q = nn.rope(q, pos[:, None, None], cfg.rope_theta)  # per-row positions
+        k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
+        sc = dense._cache_write({"k": kc, "v": vc}, k, v, pos, "G", cfg)
+        kc, vc = sc["k"], sc["v"]
         o = attn.decode_attention(q, kc, vc, pos + 1)
         xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
         # cross attention against cached encoder K/V (always full enc_seq)

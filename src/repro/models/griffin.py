@@ -193,7 +193,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, quantized=None):
 
     cache: Dict[str, Any] = {
         "stacks": [one(kind, n_groups) for kind in pattern],
-        "len": jnp.zeros((), jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),  # per-row position vector
     }
     if tail:
         cache["tail"] = [one(kind, 1) for kind in tail]
@@ -207,8 +207,8 @@ def _attn_block_decode(x, p, c, cfg, pos):
     q = nn.dense(h, p["wq"]).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
     k = nn.dense(h, p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
     v = nn.dense(h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
-    q = nn.rope(q, pos[None], cfg.rope_theta)
-    k = nn.rope(k, pos[None], cfg.rope_theta)
+    q = nn.rope(q, pos[:, None, None], cfg.rope_theta)  # per-row positions
+    k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
     c = dense._cache_write(c, k, v, pos, "L", cfg)
     o = attn.decode_attention(q, c["k"], c["v"], pos + 1, ring=True)
     return x + nn.dense(dense._merge_heads(o), p["wo"]), c
@@ -219,7 +219,7 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
     pattern, n_groups, tail = cfg.layer_layout()
     x = embeds if embeds is not None else nn.embed(
         tokens[:, None], params["embed"], cfg.compute_dtype)
-    pos = cache["len"]
+    pos = dense._as_positions(cache["len"], x.shape[0])
 
     def apply(xc, p, c, kind):
         if kind == "R":
@@ -290,7 +290,7 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
             new.append(c)
         return xc, tuple(new)
 
-    cache: Dict[str, Any] = {"len": jnp.asarray(s, jnp.int32)}
+    cache: Dict[str, Any] = {"len": jnp.full((b,), s, jnp.int32)}
     if n_groups > 0:
         x, stack_caches = jax.lax.scan(group_body, x, tuple(params["stacks"]))
         cache["stacks"] = list(stack_caches)

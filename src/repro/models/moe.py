@@ -273,8 +273,8 @@ def _decode_layer(x, p, c, kind, cfg, pos):
     q = nn.dense(h, p["wq"]).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
     k = nn.dense(h, p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
     v = nn.dense(h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
-    q = nn.rope(q, pos[None], cfg.rope_theta)
-    k = nn.rope(k, pos[None], cfg.rope_theta)
+    q = nn.rope(q, pos[:, None, None], cfg.rope_theta)  # per-row positions
+    k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
     c = dense._cache_write(c, k, v, pos, kind, cfg)
     o = attn.decode_attention(q, c["k"], c["v"], pos + 1, ring=kind == "L")
     x = x + nn.dense(dense._merge_heads(o), p["wo"])
@@ -287,7 +287,7 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
     pattern, n_groups, tail = cfg.layer_layout()
     x = embeds if embeds is not None else nn.embed(
         tokens[:, None], params["embed"], cfg.compute_dtype)
-    pos = cache["len"]
+    pos = dense._as_positions(cache["len"], x.shape[0])
 
     def group_body(xc, slices):
         stacks_slice, cache_slice = slices
@@ -351,7 +351,7 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
     x = nn.rms_norm(x, params["final_norm"])
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
     logits = nn.unembed(x[:, -1:], table)
-    return logits[:, 0], dict(cache, len=jnp.asarray(s, jnp.int32))
+    return logits[:, 0], dict(cache, len=jnp.full((b,), s, jnp.int32))
 
 
 # ---------------------------------------------------------------------------

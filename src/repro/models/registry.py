@@ -33,6 +33,9 @@ class Arch:
     decode_step: Callable
     init_cache: Callable
     quantize_params: Optional[Callable] = None
+    # prefill accepts right-padded prompts + ``true_len`` (bucketed serving
+    # admission); exact only for causal-attention families
+    supports_padded_prefill: bool = False
 
     @property
     def name(self) -> str:
@@ -55,6 +58,7 @@ def build(cfg: ModelConfig) -> Arch:
             (lambda params: mod.quantize_params(params, cfg))
             if hasattr(mod, "quantize_params") else None
         ),
+        supports_padded_prefill=getattr(mod, "SUPPORTS_PADDED_PREFILL", False),
     )
 
 

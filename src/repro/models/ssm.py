@@ -144,7 +144,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
                           cfg.compute_dtype),
         "ssd": jnp.zeros((cfg.n_layers, batch, h, cfg.ssm_state,
                           cfg.ssm_headdim), jnp.float32),
-        "len": jnp.zeros((), jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),  # per-row position vector
     }
 
 
@@ -207,5 +207,5 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
     x = nn.rms_norm(x, params["final_norm"])
     logits = nn.unembed(x[:, -1:], params["unembed"])
     cache = {"conv": conv_states, "ssd": ssd_states,
-             "len": jnp.asarray(s, jnp.int32)}
+             "len": jnp.full((b,), s, jnp.int32)}
     return logits[:, 0], cache

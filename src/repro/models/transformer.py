@@ -173,19 +173,28 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
 
     cache: Dict[str, Any] = {
         "stacks": [kv(n_groups, kind) for kind in pattern],
-        "len": jnp.zeros((), jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
     }
     if tail:
         cache["tail"] = [kv(1, kind) for kind in tail]
     return cache
 
 
+def _as_positions(pos, batch: int) -> jax.Array:
+    """Normalize a scalar or [B] ``len`` entry to a per-row position vector."""
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (batch,))
+
+
 def _cache_write(c, k_new, v_new, pos, kind, cfg):
-    """Write one token's k/v at position ``pos`` (ring for local layers)."""
-    s_len = c["k"].shape[2]
+    """Write one token's k/v at per-row position ``pos`` [B] (ring for
+    local layers). Rows may sit at different positions — the continuous-
+    batching case — so the write is a per-row scatter."""
+    b, _, s_len, _ = c["k"].shape
+    pos = _as_positions(pos, b)
     idx = pos % jnp.int32(s_len) if kind == "L" else jnp.minimum(pos, s_len - 1)
-    k = jax.lax.dynamic_update_slice_in_dim(c["k"], k_new.astype(c["k"].dtype), idx, 2)
-    v = jax.lax.dynamic_update_slice_in_dim(c["v"], v_new.astype(c["v"].dtype), idx, 2)
+    rows = jnp.arange(b)
+    k = c["k"].at[rows, :, idx].set(k_new[:, :, 0].astype(c["k"].dtype))
+    v = c["v"].at[rows, :, idx].set(v_new[:, :, 0].astype(c["v"].dtype))
     return {"k": k, "v": v}
 
 
@@ -200,8 +209,8 @@ def _decode_layer(x, p, c, kind, cfg: ModelConfig, pos, *, qparams=None):
     q = lin("wq", h).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
     k = lin("wk", h).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
     v = lin("wv", h).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
-    q = nn.rope(q, pos[None], cfg.rope_theta)
-    k = nn.rope(k, pos[None], cfg.rope_theta)
+    q = nn.rope(q, pos[:, None, None], cfg.rope_theta)  # per-row positions
+    k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
 
     if int8:
         kq = attn.KV_SCALE
@@ -232,11 +241,16 @@ def _qlin(qp_slice, name, y):
 
 def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
                 embeds=None):
-    """One decode step. tokens [B] (or embeds [B, 1, D]); returns (logits, cache)."""
+    """One decode step. tokens [B] (or embeds [B, 1, D]); returns (logits, cache).
+
+    ``cache["len"]`` is a per-row position vector [B] (a scalar is accepted
+    for backward compatibility and broadcast), so rows of the batch can sit
+    at different sequence positions — the continuous-batching serve layout.
+    """
     pattern, n_groups, tail = cfg.layer_layout()
     x = embeds if embeds is not None else nn.embed(
         tokens[:, None], params["embed"], cfg.compute_dtype)
-    pos = cache["len"]
+    pos = _as_positions(cache["len"], x.shape[0])
 
     def group_body(xc, slices):
         stacks_slice, cache_slice, q_slice = slices
@@ -273,11 +287,24 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
     return logits[:, 0], cache
 
 
-def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
+# Right-padded prompts are exact for this family (causal attention: real
+# positions never attend to pad positions; pad entries beyond ``true_len``
+# are masked out of decode by the per-row position vector). Recurrent
+# families scan left→right through pad tokens, so they cannot set this.
+SUPPORTS_PADDED_PREFILL = True
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None,
+            true_len=None):
     """Prefill: forward pass + populated float cache; returns (logits, cache).
 
     Used for the ``prefill_32k`` cells: computes full-sequence logits while
     writing the KV cache (float; quantized serving re-quantizes at decode).
+
+    ``true_len`` (int32 scalar, optional) enables length-bucketed serving
+    admission: ``tokens`` may be right-padded to a bucket length, logits are
+    taken at position ``true_len - 1`` and the cache position vector is set
+    to ``true_len`` so padded entries are never attended during decode.
     """
     pattern, n_groups, tail = cfg.layer_layout()
     x = embeds if embeds is not None else nn.embed(
@@ -333,8 +360,14 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
 
     x = nn.rms_norm(x, params["final_norm"])
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
-    logits = nn.unembed(x[:, -1:], table)
-    cache = dict(cache, len=jnp.asarray(s, jnp.int32))
+    if true_len is None:
+        last = x[:, -1:]
+        lens = jnp.full((b,), s, jnp.int32)
+    else:
+        lens = jnp.broadcast_to(jnp.asarray(true_len, jnp.int32), (b,))
+        last = x[jnp.arange(b), lens - 1][:, None]  # last *real* position
+    logits = nn.unembed(last, table)
+    cache = dict(cache, len=lens)
     return logits[:, 0], cache
 
 

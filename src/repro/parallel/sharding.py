@@ -195,7 +195,7 @@ def cache_axes(cfg, cache):
         names = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
         key = names[-1] if names else None
         if key == "len":
-            return ()
+            return ("batch",)  # per-row position vector
         if key in ("k", "v", "xk", "xv"):
             return ("layers", "batch", "kv", "seq", None)
         if key == "conv":

@@ -1,16 +1,44 @@
-"""Batched serving engine with continuous batching and QoS-split dispatch.
+"""Continuous-batching serve engine: one jitted decode step over all slots.
 
 The CHIMERA QoS principle carried up the stack: *latency-critical decode
-steps are never blocked behind bulk prefill work*. The engine keeps two
-queues — admission (prefill, bulk/wide-class) and active slots (decode,
-narrow/latency-class) — and runs decode every iteration; prefill admission
-happens only when the decode batch has free slots, mirroring the island's
-bounded-priority arbiter (decode priority, bounded so admissions cannot
-starve: at most ``admit_window`` consecutive decode-only iterations before
-one admission is forced through).
+steps are never blocked behind bulk prefill work*, and bulk admissions are
+*bounded-priority* — decode has priority, but after ``admit_window``
+consecutive iterations in which a request was left waiting, one admission
+is forced through (preempting the decode slot with the most remaining work
+if none is free), mirroring the memory island's bounded-priority arbiter.
+
+Batched dataflow (``BatchedServeEngine``, the default):
+
+  * **One decode dispatch per iteration.** All ``slots`` requests live in a
+    single fixed-shape batched cache (``[slots, max_len, ...]`` per leaf)
+    with a per-slot position vector ``cache["len"]``; each engine iteration
+    runs exactly one jitted ``decode_step`` over the whole batch, so the
+    accelerator's inner loop never re-dispatches per request.
+  * **On-device sampling, one device→host fetch per iteration.** Greedy /
+    temperature sampling is fused into the jitted step; sampled tokens stay
+    on device and are fetched asynchronously as one array per iteration
+    (instead of one ``argmax`` sync per slot per token).
+  * **Length-bucketed prefill.** Admission pads prompts to power-of-two
+    buckets (``models.cache.bucket_for``) and passes the true length into
+    ``prefill(..., true_len=...)``, so prefill traces once per bucket, not
+    once per distinct prompt length. The prefilled batch-1 cache is spliced
+    into the batched arena with ``models.cache.cache_insert`` — the
+    per-slot reset+insert primitive.
+  * **Free slots keep computing.** The decode shape never changes; finished
+    or empty slots produce garbage rows that are ignored host-side and
+    overwritten by the next admission. Constant shapes beat masked
+    dispatch on every backend we target.
+
+``ServeEngine`` remains as the sequential per-slot reference (batch-1
+jitted decode per slot + host argmax sync per token): it is the numerical
+reference for token-identity tests and the baseline for
+``benchmarks/serve_bench.py``. Both engines expose dispatch / transfer /
+retrace counters so the one-dispatch-one-transfer contract is measurable.
 
 Runs the paper-faithful INT8 decode path when the model config enables
-``serve_quant`` (dense family), bf16 otherwise.
+``serve_quant`` (dense family), bf16 otherwise. The batched cache is kept
+in float storage (decode writes requantized values into it), matching the
+reference engine's numerics exactly.
 """
 
 from __future__ import annotations
@@ -18,13 +46,14 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import registry, schema as schema_lib
+from repro.models import registry
+from repro.models.cache import bucket_for, cache_insert
 
 
 @dataclasses.dataclass
@@ -36,6 +65,7 @@ class Request:
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
     output: List[int] = dataclasses.field(default_factory=list)
+    preemptions: int = 0         # times evicted by a forced admission
 
 
 @dataclasses.dataclass
@@ -44,40 +74,150 @@ class EngineConfig:
     max_len: int = 256
     admit_window: int = 8        # bounded priority (see module docstring)
     greedy: bool = True
+    temperature: float = 1.0     # used when greedy=False
+    seed: int = 0                # sampling PRNG seed (batched engine)
+    prefill_buckets: bool = True  # pad admission prompts to pow2 buckets
+    min_bucket: int = 8
 
 
-class ServeEngine:
+def sample_tokens(logits: jax.Array, ec: EngineConfig, key) -> jax.Array:
+    """[B, V] logits → [B] int32 tokens, on device (fused into the step)."""
+    if ec.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / max(ec.temperature, 1e-6)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def _build_qparams(arch: registry.Arch, params):
+    if arch.cfg.serve_quant and arch.quantize_params is not None and (
+            arch.cfg.family in ("dense", "vlm-dense")):
+        return arch.quantize_params(params)
+    return None
+
+
+def _continuation_tokens(req: Request) -> np.ndarray:
+    """Prompt plus already-generated tokens — the re-prefill input after a
+    preemption (greedy decode resumes token-identically)."""
+    return np.concatenate([np.asarray(req.prompt, np.int32),
+                           np.asarray(req.output, np.int32)])
+
+
+class _EngineBase:
+    """Queue/QoS bookkeeping shared by both engines."""
+
     def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
         self.arch = arch
         self.ec = ec
         self.params = params
-        self.qparams = None
-        if arch.cfg.serve_quant and arch.quantize_params is not None and (
-                arch.cfg.family in ("dense", "vlm-dense")):
-            self.qparams = arch.quantize_params(params)
+        self.qparams = _build_qparams(arch, params)
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * ec.slots
-        self.caches = [None] * ec.slots
         self._decode_only_iters = 0
-        self._decode = jax.jit(
-            lambda p, c, t: arch.decode_step(p, c, t)
-            if self.qparams is None
-            else arch.decode_step(p, c, t, qparams=self.qparams))
+        # observability: the one-dispatch / one-transfer / bucketed-trace
+        # contract is asserted from these in benchmarks and tests
+        self.iterations = 0
+        self.decode_dispatches = 0
+        self.transfers = 0
+        self.decode_traces = 0
+        self.prefill_traces = 0
 
     def submit(self, req: Request):
+        if len(req.prompt) + req.max_new_tokens > self.ec.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds "
+                f"max_len={self.ec.max_len}")
         req.submitted_at = time.perf_counter()
         self.queue.append(req)
 
-    def _admit_one(self):
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(r is None for r in self.slots)
+
+    def _pick_victim(self) -> int:
+        """Slot to preempt on a forced admission: most remaining work."""
+        remaining = [
+            (r.max_new_tokens - len(r.output), i)
+            for i, r in enumerate(self.slots) if r is not None
+        ]
+        return max(remaining)[1]
+
+    def _note_admission(self, admitted: bool):
+        if admitted:
+            self._decode_only_iters = 0
+        elif self.queue:  # a request was left waiting this iteration
+            self._decode_only_iters += 1
+        else:
+            self._decode_only_iters = 0
+
+    def _forced_admission_due(self) -> bool:
+        return (bool(self.queue)
+                and self._decode_only_iters >= self.ec.admit_window)
+
+    def run_until_drained(self, max_iters: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_iters):
+            done.extend(self.step())
+            if self.idle:
+                break
+        return done
+
+
+class ServeEngine(_EngineBase):
+    """Sequential per-slot reference engine (pre-batching baseline).
+
+    Decodes each slot with a batch-1 jitted call and syncs to host for the
+    argmax of every token of every slot — kept as the numerical reference
+    for the batched engine and as the benchmark baseline. Prefill is jitted
+    per prompt length (the retrace cost the bucketed path removes).
+    """
+
+    def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
+        super().__init__(arch, params, ec)
+        if not ec.greedy:
+            raise NotImplementedError(
+                "reference engine is greedy-only; use BatchedServeEngine")
+        self.caches = [None] * ec.slots
+
+        def _dec(p, c, t):
+            self.decode_traces += 1  # runs at trace time only
+            if self.qparams is None:
+                return arch.decode_step(p, c, t)
+            return arch.decode_step(p, c, t, qparams=self.qparams)
+
+        def _pre(p, t):
+            self.prefill_traces += 1  # retraces for every new prompt length
+            return arch.prefill(p, t, ec.max_len)
+
+        self._decode = jax.jit(_dec)
+        self._prefill = jax.jit(_pre)
+
+    def _admit_one(self, forced: bool = False) -> Optional[Request]:
+        """Admit the queue head; returns the request if prefill finished it
+        (max_new_tokens reached on the first token), else None."""
         req = self.queue.popleft()
-        toks = jnp.asarray(req.prompt[None, :], jnp.int32)
-        logits, cache = self.arch.prefill(self.params, toks, self.ec.max_len)
-        tok = int(jnp.argmax(logits[0]))
+        if None not in self.slots:
+            assert forced
+            victim = self._pick_victim()
+            evicted = self.slots[victim]
+            evicted.preemptions += 1
+            self.slots[victim] = None
+            self.caches[victim] = None
+            self.queue.appendleft(evicted)  # re-admitted at queue head
+        toks = jnp.asarray(_continuation_tokens(req)[None, :], jnp.int32)
+        logits, cache = self._prefill(self.params, toks)
+        tok = int(jnp.argmax(logits[0]))  # host sync (counted)
+        self.transfers += 1
         req.output.append(tok)
-        req.first_token_at = time.perf_counter()
+        if req.first_token_at is None:
+            req.first_token_at = time.perf_counter()
+        if len(req.output) >= req.max_new_tokens:
+            req.done_at = time.perf_counter()  # prefill already finished it
+            return req
         slot = self.slots.index(None)
         self.slots[slot] = req
         self.caches[slot] = cache
+        return None
 
     def _decode_active(self):
         for slot, req in enumerate(self.slots):
@@ -86,7 +226,9 @@ class ServeEngine:
             last = jnp.asarray([req.output[-1]], jnp.int32)
             logits, self.caches[slot] = self._decode(
                 self.params, self.caches[slot], last)
-            tok = int(jnp.argmax(logits[0]))
+            self.decode_dispatches += 1
+            tok = int(jnp.argmax(logits[0]))  # per-slot host sync (counted)
+            self.transfers += 1
             req.output.append(tok)
             if len(req.output) >= req.max_new_tokens:
                 req.done_at = time.perf_counter()
@@ -94,38 +236,196 @@ class ServeEngine:
                 self.caches[slot] = None
                 yield req
 
-    def step(self):
+    def step(self) -> List[Request]:
         """One engine iteration → list of finished requests.
 
         Decode (latency class) always runs first; at most one admission
-        (bulk class) per iteration, and after ``admit_window`` consecutive
-        decode-only iterations an admission is forced even if decode slots
-        keep churning — the bounded-priority guarantee.
+        (bulk class) per iteration. After ``admit_window`` consecutive
+        iterations with a request waiting, an admission is forced through —
+        preempting the busiest slot if none is free — the bounded-priority
+        guarantee.
         """
+        self.iterations += 1
         finished = list(self._decode_active())
+        admitted = False
         if self.queue and None in self.slots:
-            self._admit_one()  # one bulk admission max per decode iteration
-            self._decode_only_iters = 0
-        else:
-            self._decode_only_iters += 1
+            done = self._admit_one()
+            admitted = True
+        elif self._forced_admission_due():
+            done = self._admit_one(forced=True)
+            admitted = True
+        if admitted and done is not None:
+            finished.append(done)
+        self._note_admission(admitted)
         return finished
 
-    def run_until_drained(self, max_iters: int = 10_000) -> List[Request]:
-        done: List[Request] = []
-        for _ in range(max_iters):
-            done.extend(self.step())
-            if not self.queue and all(s is None for s in self.slots):
-                break
-        return done
+
+class BatchedServeEngine(_EngineBase):
+    """Vectorized continuous-batching engine (see module docstring)."""
+
+    def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
+        super().__init__(arch, params, ec)
+        cfg = arch.cfg
+        # Float-dtype arena: the int8 decode path writes requantized values
+        # into it (same numerics as the per-slot reference, which decodes
+        # against a float prefill cache).
+        self.cache = arch.init_cache(ec.slots, ec.max_len, quantized=False)
+        self.last_tok = jnp.zeros((ec.slots,), jnp.int32)
+        self._key = jax.random.key(ec.seed)
+        self._bucketing = ec.prefill_buckets and arch.supports_padded_prefill
+
+        def _dec(p, qp, cache, last_tok, key):
+            self.decode_traces += 1  # runs at trace time only
+            if qp is None:
+                logits, cache = arch.decode_step(p, cache, last_tok)
+            else:
+                logits, cache = arch.decode_step(p, cache, last_tok,
+                                                 qparams=qp)
+            key, sub = jax.random.split(key)
+            tok = sample_tokens(logits, ec, sub)  # fused on-device sampling
+            return tok, cache, key
+
+        def _insert_and_sample(logits, c1, slot, cache, last_tok, key):
+            cache = cache_insert(cache, c1, slot)
+            key, sub = jax.random.split(key)
+            tok = sample_tokens(logits, ec, sub)  # [1]
+            last_tok = jax.lax.dynamic_update_slice(last_tok, tok, (slot,))
+            return tok[0], cache, last_tok, key
+
+        def _pre_bucketed(p, tokens, true_len, slot, cache, last_tok, key):
+            self.prefill_traces += 1  # one trace per bucket, not per length
+            logits, c1 = arch.prefill(p, tokens, ec.max_len,
+                                      true_len=true_len)
+            return _insert_and_sample(logits, c1, slot, cache, last_tok, key)
+
+        def _pre_exact(p, tokens, slot, cache, last_tok, key):
+            self.prefill_traces += 1
+            logits, c1 = arch.prefill(p, tokens, ec.max_len)
+            return _insert_and_sample(logits, c1, slot, cache, last_tok, key)
+
+        # Donate the cache arena: in-place slot updates instead of a whole-
+        # arena copy per token. last_tok is NOT donated — it is fetched
+        # (device_get) after the next dispatch has already consumed it.
+        self._decode_fn = jax.jit(_dec, donate_argnums=(2,))
+        self._prefill_bucketed = jax.jit(_pre_bucketed, donate_argnums=(4,))
+        self._prefill_exact = jax.jit(_pre_exact, donate_argnums=(3,))
+
+    # -- admission ---------------------------------------------------------
+
+    def _bucket_ok(self, bucket: int) -> bool:
+        # ring (sliding-window) caches drop leading positions once the
+        # prefill length exceeds the window — only bucket under it
+        cfg = self.arch.cfg
+        return "L" not in cfg.pattern or bucket <= cfg.local_window
+
+    def _dispatch_admission(self, req: Request, slot: int):
+        toks = _continuation_tokens(req)
+        n = toks.size
+        bucket = bucket_for(n, self.ec.min_bucket, self.ec.max_len)
+        if self._bucketing and self._bucket_ok(bucket):
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :n] = toks
+            return self._prefill_bucketed(
+                self.params, jnp.asarray(padded),
+                jnp.asarray(n, jnp.int32), jnp.asarray(slot, jnp.int32),
+                self.cache, self.last_tok, self._key)
+        return self._prefill_exact(
+            self.params, jnp.asarray(toks[None, :]),
+            jnp.asarray(slot, jnp.int32),
+            self.cache, self.last_tok, self._key)
+
+    # -- one iteration -----------------------------------------------------
+
+    def step(self) -> List[Request]:
+        """One engine iteration → list of finished requests.
+
+        Exactly one batched decode dispatch (if any slot is active), at
+        most one admission dispatch, then a single device→host fetch of the
+        sampled tokens. Which requests finish is length-determined, so all
+        host bookkeeping that gates dispatch happens *before* the fetch.
+        """
+        self.iterations += 1
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        at_dispatch = list(self.slots)  # snapshot: who owns each decode row
+
+        dec_tok = None
+        if active:
+            dec_tok, self.cache, self._key = self._decode_fn(
+                self.params, self.qparams, self.cache, self.last_tok,
+                self._key)
+            self.last_tok = dec_tok
+            self.decode_dispatches += 1
+
+        # admission decision (host-side; finishes are length-determined)
+        will_free = [i for i in active
+                     if len(self.slots[i].output) + 1
+                     >= self.slots[i].max_new_tokens]
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        admitted_req = None
+        adm_tok = None
+        adm_slot = -1
+        if self.queue and (free or will_free):
+            adm_slot = (free + will_free)[0]
+        elif self._forced_admission_due():
+            adm_slot = self._pick_victim()  # preempt: bounded priority
+            victim = self.slots[adm_slot]
+            victim.preemptions += 1
+            admitted_req = self.queue.popleft()
+            self.queue.appendleft(victim)
+        if adm_slot >= 0:
+            if admitted_req is None:
+                admitted_req = self.queue.popleft()
+            adm_tok, self.cache, self.last_tok, self._key = (
+                self._dispatch_admission(admitted_req, adm_slot))
+            self.slots[adm_slot] = admitted_req
+
+        # single async fetch per iteration: decode tokens (+ the admitted
+        # request's first token when an admission happened)
+        fetch = {}
+        if dec_tok is not None:
+            fetch["dec"] = dec_tok
+        if adm_tok is not None:
+            fetch["adm"] = adm_tok
+        finished: List[Request] = []
+        if fetch:
+            jax.tree.map(lambda a: a.copy_to_host_async(), fetch)
+            got = jax.device_get(fetch)
+            self.transfers += 1
+            now = time.perf_counter()
+            if dec_tok is not None:
+                for i in active:
+                    r = at_dispatch[i]
+                    r.output.append(int(got["dec"][i]))
+                    if len(r.output) >= r.max_new_tokens:
+                        r.done_at = now
+                        finished.append(r)
+                        if self.slots[i] is r:
+                            self.slots[i] = None
+            if adm_tok is not None:
+                admitted_req.output.append(int(got["adm"]))
+                if admitted_req.first_token_at is None:
+                    admitted_req.first_token_at = now
+                if len(admitted_req.output) >= admitted_req.max_new_tokens:
+                    admitted_req.done_at = now
+                    finished.append(admitted_req)
+                    self.slots[adm_slot] = None
+        self._note_admission(adm_slot >= 0)
+        return finished
 
 
 def metrics(done: List[Request]) -> Dict[str, float]:
-    ttft = [r.first_token_at - r.submitted_at for r in done if r.first_token_at]
-    lat = [r.done_at - r.submitted_at for r in done if r.done_at]
-    toks = sum(len(r.output) for r in done)
-    wall = max((r.done_at or 0) for r in done) - min(r.submitted_at for r in done)
+    finished = [r for r in done if r.done_at is not None]
+    if not finished:
+        return {"requests": 0, "ttft_avg_s": 0.0, "latency_avg_s": 0.0,
+                "tokens_per_s": 0.0}
+    ttft = [r.first_token_at - r.submitted_at
+            for r in finished if r.first_token_at is not None]
+    lat = [r.done_at - r.submitted_at for r in finished]
+    toks = sum(len(r.output) for r in finished)
+    wall = (max(r.done_at for r in finished)
+            - min(r.submitted_at for r in finished))
     return {
-        "requests": len(done),
+        "requests": len(finished),
         "ttft_avg_s": float(np.mean(ttft)) if ttft else 0.0,
         "latency_avg_s": float(np.mean(lat)) if lat else 0.0,
         "tokens_per_s": toks / wall if wall > 0 else 0.0,

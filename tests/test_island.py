@@ -1,7 +1,10 @@
 """L2 memory-island simulator invariants + paper-claim reproduction."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import memory_island as mi
 from repro.core import qos

@@ -77,7 +77,9 @@ def test_prefill_then_decode_finite(built, name):
     logits_d, cache = arch.decode_step(params, cache, toks[:, -1])
     assert logits_d.shape == (2, cfg.vocab)
     assert bool(jnp.isfinite(logits_d.astype(jnp.float32)).all())
-    assert int(cache["len"]) == 25
+    # per-row position vector: every row advanced to prompt_len + 1
+    assert cache["len"].shape == (2,)
+    assert [int(v) for v in cache["len"]] == [25, 25]
 
 
 def test_dense_decode_matches_forward(built):
