@@ -6,27 +6,58 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   table1  — peak perf/efficiency incl. Fig. 7 L1/L2 and Fig. 8b shmoo
   table2  — full-network energy/throughput (MobileBERT/Whisper/DINOv2)
   kernels — op-backend micro-benchmarks + bit-exactness
-  serve   — batched vs per-slot serve engines (also writes BENCH_serve.json)
+  serve   — per-slot vs batched vs paged serve engines (also writes
+            BENCH_serve.json with the paged-vs-dense capacity comparison)
+
+``--smoke`` only imports every benchmark module (CI import check: catches
+broken imports / renamed APIs without paying the full benchmark runtime).
 """
 
 from __future__ import annotations
 
 import importlib
+import os
 import sys
 import traceback
+
+# allow `python benchmarks/run.py` from the repo root (script mode puts
+# benchmarks/ itself, not the repo root, on sys.path)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+SECTIONS = [
+    ("fig6a", "benchmarks.fig6a_multicluster"),
+    ("fig6b", "benchmarks.fig6b_qos"),
+    ("table1", "benchmarks.table1_efficiency"),
+    ("table2", "benchmarks.table2_networks"),
+    ("kernels", "benchmarks.kernel_bench"),
+    ("serve", "benchmarks.serve_bench"),
+]
+
+
+def smoke() -> None:
+    """Import-check every benchmark module without running it."""
+    failures = 0
+    for label, mod in SECTIONS:
+        try:
+            m = importlib.import_module(mod)
+            if not callable(getattr(m, "main", None)):
+                raise AttributeError(f"{mod}.main is not callable")
+            print(f"{label},0.0,import_ok")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{label}_IMPORT_ERROR,0.0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr, limit=3)
+    if failures:
+        print(f"FAILURES,{failures},see stderr")
+        sys.exit(1)
 
 
 def main() -> None:
     failures = 0
     print("name,us_per_call,derived")
-    for label, mod in [
-        ("fig6a", "benchmarks.fig6a_multicluster"),
-        ("fig6b", "benchmarks.fig6b_qos"),
-        ("table1", "benchmarks.table1_efficiency"),
-        ("table2", "benchmarks.table2_networks"),
-        ("kernels", "benchmarks.kernel_bench"),
-        ("serve", "benchmarks.serve_bench"),
-    ]:
+    for label, mod in SECTIONS:
         try:
             m = importlib.import_module(mod)
             m.main(csv=True)
@@ -44,4 +75,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+    else:
+        main()

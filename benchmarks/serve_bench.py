@@ -1,21 +1,23 @@
-"""Serve-engine benchmark: batched continuous batching vs per-slot baseline.
+"""Serve-engine benchmark: per-slot baseline vs batched vs paged engines.
 
 Runs the same mixed prompt-length workload through the sequential per-slot
-reference engine (batch-1 jitted decode per slot, host argmax sync per
-token, prefill retraced per prompt length) and the vectorized
-``BatchedServeEngine`` (one batched decode dispatch + one device→host
-fetch per iteration, on-device sampling, pow2-bucketed prefill), and
-reports tokens/s, TTFT, p50/p99 per-iteration decode latency, and the
-dispatch / transfer / retrace counters that make the QoS dataflow contract
-measurable.
+reference engine, the vectorized ``BatchedServeEngine`` (dense
+``[slots, max_len]`` KV arena) and the ``PagedServeEngine`` (shared
+block-pool KV with a per-slot block table), and reports tokens/s, TTFT,
+p50/p99 per-iteration latency, and the dispatch / transfer / retrace
+counters that make the QoS dataflow contract measurable.
 
-Claims validated (ISSUE 1 acceptance):
-  * ≥ 3x tokens/s over the per-slot baseline at 8 slots;
-  * exactly one decode dispatch and one device→host fetch per iteration;
-  * bucketed prefill traces ≤ #buckets (vs ≥ #distinct lengths baseline).
+Claims validated:
+  * ≥ 3x tokens/s for the batched engine over the per-slot baseline
+    (ISSUE 1) — the paged engine keeps the same contract;
+  * exactly one decode dispatch and one device→host fetch per iteration
+    for both vectorized engines;
+  * **capacity**: at the dense arena's exact KV token budget, the paged
+    pool admits ≥ 2x the concurrent requests on a short-request workload
+    (ISSUE 2) — the block pool recycles what short requests never use.
 
-Emits ``BENCH_serve.json`` ({name, tokens_per_s, ttft_avg_s,
-retrace_count}) so future PRs can track the serve-throughput trajectory.
+Emits ``BENCH_serve.json`` with the batched/paged throughputs and the
+paged-vs-dense concurrency comparison so future PRs can track both.
 """
 
 from __future__ import annotations
@@ -29,6 +31,8 @@ SLOTS = 8
 REQUESTS = 32
 MAX_NEW = 24
 MAX_LEN = 64
+BLOCK_LEN = 8
+CAP_REQUESTS = 48
 
 
 def _workload(cfg, seed=0):
@@ -45,9 +49,25 @@ def _workload(cfg, seed=0):
     ]
 
 
-def _drive(engine, cfg):
+def _short_workload(cfg, seed=1):
+    """Short requests: worst-case extent ≤ 32 tokens (4 blocks of 8), so a
+    512-token budget holds 16 of them at once vs 8 dense slots."""
+    from repro.serve.engine import Request
+
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rid=rid,
+                prompt=rng.integers(0, cfg.vocab,
+                                    size=int(rng.integers(3, 9))
+                                    ).astype(np.int32),
+                max_new_tokens=MAX_NEW)
+        for rid in range(CAP_REQUESTS)
+    ]
+
+
+def _drive(engine, requests):
     """Run to drain, timing every engine iteration; returns (done, stats)."""
-    for r in _workload(cfg):
+    for r in requests:
         engine.submit(r)
     done, iter_s = [], []
     t0 = time.perf_counter()
@@ -68,20 +88,22 @@ def main(csv: bool = True):
     from repro import configs
     from repro.models import registry, schema as schema_lib
     from repro.serve.engine import (
-        BatchedServeEngine, EngineConfig, ServeEngine, metrics,
+        BatchedServeEngine, EngineConfig, PagedServeEngine, ServeEngine,
+        metrics,
     )
 
     cfg = configs.smoke_config("phi3-mini-3.8b")
     arch = registry.build(cfg)
     params = schema_lib.init_params(arch.schema(), jax.random.key(0))
-    ec = EngineConfig(slots=SLOTS, max_len=MAX_LEN)
+    ec = EngineConfig(slots=SLOTS, max_len=MAX_LEN, block_len=BLOCK_LEN)
 
     rows = []
     results = {}
     for name, engine_cls in (("per_slot", ServeEngine),
-                             ("batched", BatchedServeEngine)):
+                             ("batched", BatchedServeEngine),
+                             ("paged", PagedServeEngine)):
         eng = engine_cls(arch, params, ec)
-        done, wall, iter_s = _drive(eng, cfg)
+        done, wall, iter_s = _drive(eng, _workload(cfg))
         m = metrics(done)
         toks = sum(len(r.output) for r in done)
         results[name] = {
@@ -100,7 +122,23 @@ def main(csv: bool = True):
             f"retrace_pre={eng.prefill_traces}",
         ))
 
-    bat, ref = results["batched"], results["per_slot"]
+    # capacity at a fixed KV budget: dense reserves SLOTS·MAX_LEN tokens;
+    # give the paged pool the same budget and 4x the decode rows
+    budget_tokens = SLOTS * MAX_LEN
+    ec_cap = EngineConfig(
+        slots=4 * SLOTS, max_len=MAX_LEN, block_len=BLOCK_LEN,
+        num_blocks=budget_tokens // BLOCK_LEN + 1)
+    cap_eng = PagedServeEngine(arch, params, ec_cap)
+    cap_done, cap_wall, _ = _drive(cap_eng, _short_workload(cfg))
+    capacity_ratio = cap_eng.max_concurrent / SLOTS
+    rows.append((
+        "serve_paged_capacity", cap_wall * 1e6 / max(cap_eng.iterations, 1),
+        f"budget_tokens={budget_tokens}|dense_slots={SLOTS}|"
+        f"paged_concurrent={cap_eng.max_concurrent}|"
+        f"ratio={capacity_ratio:.2f}x (claim: >=2x)",
+    ))
+
+    bat, ref, pag = results["batched"], results["per_slot"], results["paged"]
     speedup = bat["tokens_per_s"] / ref["tokens_per_s"]
     rows.append(("serve_speedup", 0.0,
                  f"{speedup:.2f}x (claim: >=3x at {SLOTS} slots)"))
@@ -115,17 +153,32 @@ def main(csv: bool = True):
             "ttft_avg_s": bat["metrics"]["ttft_avg_s"],
             "retrace_count": (bat["engine"].decode_traces
                               + bat["engine"].prefill_traces),
+            "paged": {
+                "tokens_per_s": pag["tokens_per_s"],
+                "ttft_avg_s": pag["metrics"]["ttft_avg_s"],
+                "block_len": BLOCK_LEN,
+                "budget_tokens": budget_tokens,
+                "dense_concurrent_slots": SLOTS,
+                "paged_concurrent_slots": cap_eng.max_concurrent,
+                "capacity_ratio": capacity_ratio,
+            },
         }, f, indent=2)
 
-    beng = bat["engine"]
-    # the QoS dataflow contract: one batched decode dispatch and one
-    # device→host fetch per engine iteration — never per slot
-    assert beng.decode_dispatches <= beng.iterations, "extra decode dispatch"
-    assert beng.transfers <= beng.iterations, "extra device→host transfer"
-    assert beng.prefill_traces < ref["engine"].prefill_traces, (
+    for name in ("batched", "paged"):
+        eng = results[name]["engine"]
+        # the QoS dataflow contract: one batched decode dispatch and one
+        # device→host fetch per engine iteration — never per slot
+        assert eng.decode_dispatches <= eng.iterations, (
+            f"{name}: extra decode dispatch")
+        assert eng.transfers <= eng.iterations, (
+            f"{name}: extra device→host transfer")
+    assert bat["engine"].prefill_traces < ref["engine"].prefill_traces, (
         "bucketing did not reduce prefill retraces")
     assert speedup >= 3.0, (
         f"batched engine {speedup:.2f}x < 3x over per-slot baseline")
+    assert capacity_ratio >= 2.0, (
+        f"paged pool admitted only {capacity_ratio:.2f}x the dense slots "
+        f"at an equal KV budget")
     return rows
 
 

@@ -1,0 +1,25 @@
+"""Version compatibility shims for jax APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to the
+top-level ``jax`` namespace; the pinned container image may carry either
+side of that move, so every in-repo use routes through here.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def pvary(x, axis_names):
+    """``jax.lax.pvary`` where available (varying-manual-axes jax, where its
+    transpose is the psum that sums replica cotangents); identity on 0.4.x
+    shard_map, which treats unvaried operands as device-varying already."""
+    fn = getattr(jax.lax, "pvary", None)
+    if fn is None:
+        return x
+    return fn(x, axis_names)

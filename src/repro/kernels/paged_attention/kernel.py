@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: paged gather-decode attention over a block table.
+
+The serving analogue of CHIMERA's banked shared-L2 island: KV state lives
+in a shared pool of fixed-size blocks (``[num_blocks, Hkv, block_len, D]``)
+instead of one dense per-slot arena, and each decode row walks its own
+block list. The kernel never materializes the gathered KV — the grid's
+innermost dimension iterates over table entries and the **scalar-prefetched
+block table drives the BlockSpec index maps**, so each (row, head, i) step
+DMAs exactly one pool block into VMEM (the software version of the island's
+interleaved bank fetch).
+
+Dataflow per (row b, kv-head h):
+    for i in range(max_blocks):                 # innermost grid dim
+        K_blk = k_pool[table[b, i], h]          # DMA via index_map
+        s     = Q_row · K_blkᵀ  (+ length/window mask)
+        flash-update (m, l, acc)                # f32 running softmax
+    out[b, h] = acc / l
+
+Grouped GQA: the q "row" is the [group, D] bundle of query heads sharing
+kv-head h, so pool blocks are read once per kv head, not per query head.
+
+Contract: allclose against ``ref.paged_attention_ref`` (same masking; the
+flash accumulation only reorders f32 additions).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    table_ref, lens_ref,            # scalar prefetch (SMEM)
+    q_ref, k_ref, v_ref,            # blocks picked by index maps
+    o_ref,
+    m_ref, l_ref, acc_ref,          # VMEM scratch
+    *, block_len: int, group: int, window: Optional[int],
+):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lens_ref[b]
+    # skip table entries entirely past the row's valid length
+    @pl.when(i * block_len < length)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)    # [group, D] (pre-scaled)
+        k = k_ref[0, 0].astype(jnp.float32)    # [block_len, D]
+        v = v_ref[0, 0].astype(jnp.float32)    # [block_len, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)  # [group, block_len]
+        pos = i * block_len + jax.lax.broadcasted_iota(
+            jnp.int32, (group, block_len), 1)
+        mask = pos < length
+        if window is not None:
+            mask &= pos >= length - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                    # [group, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                 # [group, block_len]
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(i == nb - 1)
+    def _finish():
+        # fully-masked rows (len 0: empty serve slots) produce zeros
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "interpret"))
+def paged_attention_pallas(
+    q: jax.Array,            # [B, Hq, 1, D] float (post-RoPE)
+    k_pool: jax.Array,       # [N, Hkv, block_len, D]
+    v_pool: jax.Array,       # [N, Hkv, block_len, D]
+    block_table: jax.Array,  # [B, M] int32
+    lens: jax.Array,         # [B] int32
+    *,
+    window: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, _, d = q.shape
+    n, hkv, blk, _ = k_pool.shape
+    m = block_table.shape[1]
+    group = hq // hkv
+    if hq % hkv:
+        raise ValueError(f"query heads {hq} not a multiple of kv heads {hkv}")
+    qg = (q.astype(jnp.float32) * (d ** -0.5)).reshape(b, hkv, group, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block table + lens drive the index maps
+        grid=(b, hkv, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d), lambda bi, h, i, tbl, ln: (bi, h, 0, 0)),
+            pl.BlockSpec((1, 1, blk, d), lambda bi, h, i, tbl, ln: (tbl[bi, i], h, 0, 0)),
+            pl.BlockSpec((1, 1, blk, d), lambda bi, h, i, tbl, ln: (tbl[bi, i], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, group, d), lambda bi, h, i, tbl, ln: (bi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_kernel, block_len=blk, group=group, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), jnp.asarray(lens, jnp.int32),
+      qg, k_pool, v_pool)
+    return out.reshape(b, hq, 1, d)

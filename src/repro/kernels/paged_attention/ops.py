@@ -1,0 +1,49 @@
+"""Public op: paged decode attention with backend dispatch.
+
+``paged_attention(q, k_pool, v_pool, block_table, lens)`` computes one-token
+decode attention where each batch row's KV lives in fixed-size blocks of a
+shared pool, addressed through a per-row block table (position ``p`` is
+table entry ``p // block_len``, offset ``p % block_len``).
+
+Backends:
+  * ``pallas``    — TPU kernel; scalar-prefetched block table drives the
+    BlockSpec index maps so pool blocks are DMA'd on demand.
+  * ``interpret`` — same kernel through the Pallas interpreter (CPU tests).
+  * ``xla``       — gather-then-dense oracle (``ref.py``); the default on
+    this container and the numerical reference for the serve engines.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+DEFAULT_BACKEND = "xla"
+
+
+def paged_attention(
+    q: jax.Array,            # [B, Hq, 1, D] float (post-RoPE)
+    k_pool: jax.Array,       # [N, Hkv, block_len, D]
+    v_pool: jax.Array,       # [N, Hkv, block_len, D]
+    block_table: jax.Array,  # [B, M] int32 pool indices
+    lens: jax.Array,         # [B] int32 valid positions per row
+    *,
+    window: Optional[int] = None,
+    backend: str = DEFAULT_BACKEND,
+) -> jax.Array:
+    if q.shape[1] % k_pool.shape[1]:
+        raise ValueError(
+            f"query heads {q.shape[1]} not a multiple of kv heads "
+            f"{k_pool.shape[1]}")
+    if backend in ("pallas", "interpret"):
+        return paged_attention_pallas(
+            q, k_pool, v_pool, block_table, lens, window=window,
+            interpret=backend == "interpret")
+    if backend == "xla":
+        return paged_attention_ref(
+            q, k_pool, v_pool, block_table, lens, window=window)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,67 @@
+"""Dense oracle for paged decode attention.
+
+Gathers each row's KV blocks from the shared pool into a contiguous
+``[B, Hkv, max_blocks·block_len, D]`` view (block-table order IS position
+order — position ``p`` lives in table entry ``p // block_len`` at offset
+``p % block_len``) and runs the standard masked decode attention over it.
+
+This is also the ``xla`` serving backend on CPU: the gather is one
+``take`` per layer and XLA fuses the rest; entries past ``lens`` (and, for
+sliding-window layers, before ``lens - window``) are masked to −∞, so the
+result is bit-identical to decoding against a dense per-slot arena holding
+the same values (softmax of −∞ rows contributes exact zeros).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gather_kv(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """[N, Hkv, blk, D] pool + [B, M] table → [B, Hkv, M·blk, D] dense KV."""
+    n, hkv, blk, d = pool.shape
+    b, m = block_table.shape
+    g = pool[block_table]                # [B, M, Hkv, blk, D]
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, m * blk, d)
+
+
+def paged_attention_ref(
+    q: jax.Array,            # [B, Hq, 1, D] float
+    k_pool: jax.Array,       # [N, Hkv, blk, D]
+    v_pool: jax.Array,       # [N, Hkv, blk, D]
+    block_table: jax.Array,  # [B, M] int32 pool indices
+    lens: jax.Array,         # [B] int32 valid positions per row
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    b, hq, _, d = q.shape
+    _, hkv, blk, _ = k_pool.shape
+    group = hq // hkv
+    k = gather_kv(k_pool, block_table)   # [B, Hkv, S, D]
+    v = gather_kv(v_pool, block_table)
+    s = k.shape[2]
+    idx = jnp.arange(s)
+    cl = jnp.asarray(lens, jnp.int32).reshape(-1, 1)
+    valid = idx[None, :] < cl
+    if window is not None:
+        valid &= idx[None, :] >= cl - window
+    # grouped GQA (no KV head expansion), f32 softmax — matches
+    # models.attention.decode_attention numerics exactly
+    qg = q.reshape(b, hkv, group, d)
+    logits = jnp.einsum(
+        "bhgd,bhkd->bhgk", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (d ** -0.5)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    # rows with no valid entries (empty serve slots) produce zeros, not the
+    # uniform average a softmax over all-(−∞) logits would give — for any
+    # row with ≥1 valid entry this mask is an exact no-op (those probs are
+    # already exactly 0), so dense-arena token identity is unaffected
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, 1, d).astype(q.dtype)

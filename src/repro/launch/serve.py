@@ -1,8 +1,10 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> …``.
 
 Defaults to the vectorized continuous-batching engine (one batched decode
-dispatch + one device→host fetch per iteration); ``--engine reference``
-selects the sequential per-slot baseline for A/B comparison.
+dispatch + one device→host fetch per iteration); ``--engine paged``
+serves from the shared block-pool KV cache (same contract, fragmentation-
+free admission); ``--engine reference`` selects the sequential per-slot
+baseline for A/B comparison.
 """
 
 from __future__ import annotations
@@ -16,13 +18,18 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--engine", choices=("batched", "reference"),
+    ap.add_argument("--engine", choices=("batched", "paged", "reference"),
                     default="batched")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--admit-window", type=int, default=8)
+    ap.add_argument("--block-len", type=int, default=16,
+                    help="KV block size (paged engine)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool size incl. trash block (paged engine; "
+                         "default matches the dense arena budget)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 enables on-device sampling "
                          "(batched engine only)")
@@ -33,7 +40,8 @@ def main():
     from repro import configs
     from repro.models import registry, schema as schema_lib
     from repro.serve.engine import (
-        BatchedServeEngine, EngineConfig, Request, ServeEngine, metrics,
+        BatchedServeEngine, EngineConfig, PagedServeEngine, Request,
+        ServeEngine, metrics,
     )
 
     model = (configs.smoke_config(args.arch) if args.smoke
@@ -43,8 +51,10 @@ def main():
     ec = EngineConfig(slots=args.slots, max_len=args.max_len,
                       admit_window=args.admit_window,
                       greedy=args.temperature <= 0,
-                      temperature=max(args.temperature, 1e-6))
+                      temperature=max(args.temperature, 1e-6),
+                      block_len=args.block_len, num_blocks=args.num_blocks)
     engine_cls = {"batched": BatchedServeEngine,
+                  "paged": PagedServeEngine,
                   "reference": ServeEngine}[args.engine]
     engine = engine_cls(arch, params, ec)
     rng = np.random.default_rng(0)

@@ -148,6 +148,8 @@ def decode_attention_int8(
     v_cache8: jax.Array,
     cache_len: jax.Array,
     cfg,
+    *,
+    window: Optional[int] = None,
 ) -> jax.Array:
     """One-token ITA integer attention against an int8 KV cache.
 
@@ -155,6 +157,10 @@ def decode_attention_int8(
     probabilities into the AV accumulation) on a single query row. Storing
     the cache in int8 halves decode memory traffic — the dominant roofline
     term for decode cells (see EXPERIMENTS.md §Roofline).
+
+    ``window`` masks entries before ``cache_len − window`` — needed by
+    caches that store full-length history (the paged layout); ring caches
+    enforce the window physically and leave it None.
     """
     from repro.core import ita
 
@@ -190,7 +196,10 @@ def decode_attention_int8(
     idx = jnp.arange(s_cache)
     # cache_len: scalar or per-row [B] position vector
     cl = jnp.asarray(cache_len, jnp.int32).reshape(-1, 1, 1, 1)
-    t = jnp.where(idx[None, None, None, :] < cl, t, neg)
+    valid = idx[None, None, None, :] < cl
+    if window is not None:
+        valid &= idx[None, None, None, :] >= cl - window
+    t = jnp.where(valid, t, neg)
     m = jnp.max(t, -1, keepdims=True)
     be = -((-m) >> ita.FB)
     e = ita.exp2_fixed(jnp.maximum(t - (be << ita.FB), neg))

@@ -19,6 +19,9 @@ family's cache as a fixed-shape ``[slots, ...]`` arena:
 
 from __future__ import annotations
 
+import dataclasses
+from typing import Dict, List
+
 import jax
 import jax.numpy as jnp
 
@@ -61,3 +64,168 @@ def bucket_for(n: int, min_bucket: int = 8, cap: int | None = None) -> int:
     if cap is not None:
         b = min(b, cap)
     return max(b, n)
+
+
+# ---------------------------------------------------------------------------
+# Paged block-pool KV cache (the serving mirror of the paper's banked,
+# interleaved shared-L2 island: capacity is a pool of fixed-size blocks
+# handed to whoever needs them, not a dense per-requestor partition)
+# ---------------------------------------------------------------------------
+
+# Pool block 0 is a write-off "trash" block: decode rows whose slot is
+# empty still execute (constant shapes beat masked dispatch) and their
+# cache writes land here. The allocator never hands out block 0.
+TRASH_BLOCK = 0
+
+
+def blocks_for(n_tokens: int, block_len: int) -> int:
+    """Blocks needed to hold ``n_tokens`` positions."""
+    return max(1, -(-n_tokens // block_len))
+
+
+@dataclasses.dataclass
+class PagedLayout:
+    """Static shape plan for a paged KV pool.
+
+    ``num_blocks`` counts pool rows *including* the trash block, so usable
+    capacity is ``(num_blocks - 1) * block_len`` tokens. ``max_blocks`` is
+    the block-table width — the per-slot worst case ``ceil(max_len /
+    block_len)``.
+    """
+
+    block_len: int
+    num_blocks: int
+    max_len: int
+
+    def __post_init__(self):
+        if self.block_len & (self.block_len - 1):
+            raise ValueError(f"block_len {self.block_len} not a power of two")
+        if self.num_blocks < 2:
+            raise ValueError("need at least one usable block beside trash")
+
+    @property
+    def max_blocks(self) -> int:
+        return blocks_for(self.max_len, self.block_len)
+
+    @property
+    def usable_blocks(self) -> int:
+        return self.num_blocks - 1
+
+    @property
+    def usable_tokens(self) -> int:
+        return self.usable_blocks * self.block_len
+
+
+class BlockAllocator:
+    """Host-side free-list allocator with per-request worst-case reservation.
+
+    Admission reserves a request's *maximum* block extent up front
+    (``blocks_for(prompt + max_new_tokens)``), then draws physical blocks
+    lazily (``grow``) as the sequence crosses block boundaries. Because the
+    free pool always covers every outstanding reservation, a growing
+    request can never hit exhaustion mid-decode — exhaustion surfaces only
+    at admission time, where the engine defers (or preempts) instead.
+
+    Invariants enforced (and unit-tested): no double-allocation, no
+    double-free, frees only of owned blocks, reservations never exceeded,
+    reserved blocks never oversubscribed.
+    """
+
+    def __init__(self, layout: PagedLayout):
+        self.layout = layout
+        self._free: List[int] = list(
+            range(layout.num_blocks - 1, TRASH_BLOCK, -1))  # pop() → low ids
+        self._owned: Dict[int, List[int]] = {}    # rid → allocated block ids
+        self._reserved: Dict[int, int] = {}       # rid → max blocks reserved
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def reserved_unallocated(self) -> int:
+        return sum(self._reserved[r] - len(self._owned[r])
+                   for r in self._reserved)
+
+    @property
+    def available_blocks(self) -> int:
+        """Blocks admittable *without* touching outstanding reservations."""
+        return len(self._free) - self.reserved_unallocated
+
+    def can_admit(self, max_blocks: int) -> bool:
+        return max_blocks <= self.available_blocks
+
+    def can_admit_after_release(self, max_blocks: int, rid: int) -> bool:
+        """Would ``max_blocks`` fit if ``rid`` (a preemption victim) were
+        released first? Releasing returns exactly the victim's reservation
+        (allocated blocks rejoin the free list, the rest stop being
+        reserved)."""
+        return max_blocks <= self.available_blocks + self._reserved.get(rid, 0)
+
+    def admit(self, rid: int, now_blocks: int, max_blocks: int) -> List[int]:
+        """Reserve ``max_blocks`` for ``rid`` and allocate the first
+        ``now_blocks`` of them; returns the allocated block ids."""
+        if rid in self._reserved:
+            raise ValueError(f"request {rid} already admitted")
+        if now_blocks > max_blocks:
+            raise ValueError(f"now_blocks {now_blocks} > max {max_blocks}")
+        if not self.can_admit(max_blocks):
+            raise RuntimeError(
+                f"pool exhausted: need {max_blocks} blocks, "
+                f"{self.available_blocks} available")
+        self._reserved[rid] = max_blocks
+        self._owned[rid] = [self._free.pop() for _ in range(now_blocks)]
+        return list(self._owned[rid])
+
+    def grow(self, rid: int) -> int:
+        """Allocate one more block from ``rid``'s reservation."""
+        owned = self._owned.get(rid)
+        if owned is None:
+            raise KeyError(f"request {rid} not admitted")
+        if len(owned) >= self._reserved[rid]:
+            raise RuntimeError(
+                f"request {rid} exceeded its reservation "
+                f"of {self._reserved[rid]} blocks")
+        blk = self._free.pop()  # reservation math guarantees non-empty
+        owned.append(blk)
+        return blk
+
+    def release(self, rid: int) -> List[int]:
+        """Free all of ``rid``'s blocks and drop its reservation
+        (completion or preemption); returns the freed ids."""
+        owned = self._owned.pop(rid, None)
+        if owned is None:
+            raise KeyError(f"request {rid} not admitted (double release?)")
+        del self._reserved[rid]
+        for blk in owned:
+            if blk in self._free or blk == TRASH_BLOCK:
+                raise RuntimeError(f"double free of block {blk}")
+            self._free.append(blk)
+        return owned
+
+    def owned(self, rid: int) -> List[int]:
+        return list(self._owned.get(rid, ()))
+
+
+def paged_insert_kv(pool: jax.Array, single: jax.Array,
+                    block_ids: jax.Array) -> jax.Array:
+    """Scatter a batch-1 prefilled KV leaf into pool blocks.
+
+    ``pool``   [n_stack, N, Hkv, blk, D] (or [N, Hkv, blk, D] unstacked),
+    ``single`` [n_stack, 1, Hkv, S, D] with S = len(block_ids) · blk,
+    ``block_ids`` [nb] int32. Position ``p`` of the prefill lands in pool
+    block ``block_ids[p // blk]`` at offset ``p % blk`` — the block-table
+    layout convention shared with ``kernels.paged_attention``.
+    """
+    stacked = pool.ndim == 5
+    if not stacked:
+        pool, single = pool[None], single[None]
+    n_stack, _, hkv, blk, d = pool.shape
+    nb = block_ids.shape[0]
+    s = single.shape[3]
+    if s != nb * blk:
+        raise ValueError(f"prefill length {s} != {nb} blocks × {blk}")
+    # [n_stack, 1, Hkv, nb·blk, D] → [n_stack, nb, Hkv, blk, D]
+    src = single[:, 0].reshape(n_stack, hkv, nb, blk, d).transpose(0, 2, 1, 3, 4)
+    out = pool.at[:, block_ids].set(src.astype(pool.dtype))
+    return out if stacked else out[0]

@@ -164,6 +164,84 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
                           "len": jnp.full((b,), s, jnp.int32)}
 
 
+def init_paged_cache(cfg: ModelConfig, slots: int, layout, *, quantized=None):
+    """Paged self-attention KV pools + dense per-slot cross-attention cache.
+
+    Only the decoder's *self*-attention KV grows with decode position, so
+    only it is paged (``[L, num_blocks, Hkv, block_len, hd]`` shared pools);
+    the encoder-side cross K/V is a fixed ``enc_seq``-length per-slot arena.
+    """
+    del quantized
+    hd, nkv = cfg.hd, cfg.n_kv_heads
+    L = cfg.n_layers
+    dt = cfg.compute_dtype
+    pool = (L, layout.num_blocks, nkv, layout.block_len, hd)
+    return {
+        "k": jnp.zeros(pool, dt),
+        "v": jnp.zeros(pool, dt),
+        "xk": jnp.zeros((L, slots, nkv, cfg.enc_seq, hd), dt),
+        "xv": jnp.zeros((L, slots, nkv, cfg.enc_seq, hd), dt),
+        "len": jnp.zeros((slots,), jnp.int32),
+    }
+
+
+def paged_insert(cache, single, slot, block_ids, cfg: ModelConfig):
+    """Splice a batch-1 prefill into pool blocks (self-attn) and the slot
+    row (cross-attn)."""
+    from repro.models.cache import cache_insert, paged_insert_kv
+
+    block_ids = jnp.asarray(block_ids, jnp.int32)
+    out = dict(cache)
+    out["k"] = paged_insert_kv(cache["k"], single["k"], block_ids)
+    out["v"] = paged_insert_kv(cache["v"], single["v"], block_ids)
+    dense_part = cache_insert(
+        {"xk": cache["xk"], "xv": cache["xv"], "len": cache["len"]},
+        {"xk": single["xk"], "xv": single["xv"], "len": single["len"]},
+        slot)
+    out.update(dense_part)
+    return out
+
+
+def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
+                      qparams=None, embeds=None, attn_backend: str = "xla"):
+    """One decode step with paged self-attention KV (cross K/V stays dense)."""
+    from repro.kernels.paged_attention.ops import paged_attention
+
+    del qparams
+    x = nn.embed(tokens[:, None], params["embed"], cfg.compute_dtype)
+    b = x.shape[0]
+    pos = dense._as_positions(cache["len"], b)
+    table = jnp.asarray(table, jnp.int32)
+    hd = cfg.hd
+
+    def body(xc, slices):
+        p, kc, vc, xkc, xvc = slices
+        h = nn.rms_norm(xc, p["ln1"])
+        q = nn.dense(h, p["wq"]).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        k = nn.dense(h, p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        v = nn.dense(h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        q = nn.rope(q, pos[:, None, None], cfg.rope_theta)
+        k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
+        sc = dense._paged_cache_write({"k": kc, "v": vc}, k, v, pos, table,
+                                      kc.shape[2])
+        kc, vc = sc["k"], sc["v"]
+        o = paged_attention(q, kc, vc, table, pos + 1, backend=attn_backend)
+        xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
+        hx = nn.rms_norm(xc, p["lnx"])
+        xq = nn.dense(hx, p["xwq"]).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        xo = attn.decode_attention(xq, xkc, xvc, jnp.asarray(cfg.enc_seq, jnp.int32))
+        xc = xc + nn.dense(dense._merge_heads(xo), p["xwo"])
+        xc = xc + dense._mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
+        return xc, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_stack"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = nn.rms_norm(x, params["final_norm"])
+    logits = nn.unembed(x, params["unembed"])
+    return logits[:, 0], dict(cache, k=ks, v=vs, len=cache["len"] + 1)
+
+
 def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
                 embeds=None):
     x = nn.embed(tokens[:, None], params["embed"], cfg.compute_dtype)

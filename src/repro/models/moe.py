@@ -17,6 +17,7 @@ arithmetic is accuracy-, not performance-relevant here).
 
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict
 
 import jax
@@ -147,7 +148,7 @@ def moe_mlp(x: jax.Array, p, cfg: ModelConfig) -> jax.Array:
     slot_id_c = jnp.minimum(slot_id, s * k - 1)
     token_of_slot = slot_id_c // k                     # [B, E, C]
 
-    buf = _permute_in(x, token_of_slot, empty, flat_e, pos_c, keep)
+    buf = _permute_in(k, x, token_of_slot, empty, flat_e, pos_c, keep)
     # two-step layout plan: the permutation is LOCAL under batch sharding
     # (routing never crosses batch rows), then one explicit reshard to the
     # expert layout — GSPMD lowers the reshard to an all-to-all instead of
@@ -168,8 +169,12 @@ def moe_mlp(x: jax.Array, p, cfg: ModelConfig) -> jax.Array:
 # -- gather-only token↔slot permutations (see moe_mlp docstring) -----------
 
 
-@jax.custom_vjp
-def _permute_in(x, token_of_slot, empty, flat_e, pos_c, keep):
+# NOTE: dims needed by the backward passes are recomputed from static array
+# shapes (plus the nondiff `k`), never stashed as Python ints in residuals —
+# shard_map's replication-check rewrite turns residual int leaves into
+# tracers, which then poison `reshape` shape tuples.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _permute_in(k, x, token_of_slot, empty, flat_e, pos_c, keep):
     """[B,S,D] tokens → [B,E,C,D] expert slots (gather)."""
     b, s, d = x.shape
     _, e, cap = token_of_slot.shape
@@ -179,18 +184,19 @@ def _permute_in(x, token_of_slot, empty, flat_e, pos_c, keep):
     return jnp.where(empty[..., None], 0, buf)
 
 
-def _permute_in_fwd(x, token_of_slot, empty, flat_e, pos_c, keep):
-    out = _permute_in(x, token_of_slot, empty, flat_e, pos_c, keep)
-    return out, (x.shape, flat_e, pos_c, keep)
+def _permute_in_fwd(k, x, token_of_slot, empty, flat_e, pos_c, keep):
+    out = _permute_in(k, x, token_of_slot, empty, flat_e, pos_c, keep)
+    return out, (flat_e, pos_c, keep)
 
 
-def _permute_in_bwd(res, dbuf):
-    (b, s, d), flat_e, pos_c, keep = res
-    k = flat_e.shape[1] // s
+def _permute_in_bwd(k, res, dbuf):
+    flat_e, pos_c, keep = res
+    b, sk = flat_e.shape
+    d = dbuf.shape[-1]
     bidx = jnp.arange(b)[:, None]
     dx_slots = dbuf[bidx, flat_e, pos_c]           # gather, not scatter
     dx_slots = jnp.where(keep[..., None], dx_slots, 0)
-    dx = dx_slots.reshape(b, s, k, d).sum(2)
+    dx = dx_slots.reshape(b, sk // k, k, d).sum(2)
     return dx, None, None, None, None, None
 
 
@@ -208,11 +214,13 @@ def _permute_out(out_buf, flat_e, pos_c, keep, slot_id_c, empty):
 
 def _permute_out_fwd(out_buf, flat_e, pos_c, keep, slot_id_c, empty):
     y = _permute_out(out_buf, flat_e, pos_c, keep, slot_id_c, empty)
-    return y, (out_buf.shape, slot_id_c, empty)
+    return y, (slot_id_c, empty)
 
 
 def _permute_out_bwd(res, dy):
-    (b, e, cap, d), slot_id_c, empty = res
+    slot_id_c, empty = res
+    b, e, cap = slot_id_c.shape
+    d = dy.shape[-1]
     dbuf = jnp.take_along_axis(
         dy, slot_id_c.reshape(b, e * cap)[..., None], axis=1
     ).reshape(b, e, cap, d)
@@ -264,6 +272,8 @@ def forward(params, tokens, cfg: ModelConfig, *, embeds=None):
 
 
 init_cache = dense.init_cache  # same KV cache layout as the dense family
+init_paged_cache = dense.init_paged_cache  # …and the same paged pool layout
+paged_insert = dense.paged_insert
 
 
 def _decode_layer(x, p, c, kind, cfg, pos):
@@ -310,6 +320,63 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
     x = nn.rms_norm(x, params["final_norm"])
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
     logits = nn.unembed(x, table)
+    return logits[:, 0], dict(cache, len=cache["len"] + 1)
+
+
+def _paged_decode_layer(x, p, c, kind, cfg, pos, table, attn_backend):
+    from repro.kernels.paged_attention.ops import paged_attention
+
+    h = nn.rms_norm(x, p["ln1"])
+    b = x.shape[0]
+    hd = cfg.hd
+    q = nn.dense(h, p["wq"]).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = nn.dense(h, p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = nn.dense(h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    q = nn.rope(q, pos[:, None, None], cfg.rope_theta)
+    k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
+    c = dense._paged_cache_write(c, k, v, pos, table, c["k"].shape[2])
+    o = paged_attention(q, c["k"], c["v"], table, pos + 1,
+                        window=cfg.local_window if kind == "L" else None,
+                        backend=attn_backend)
+    x = x + nn.dense(dense._merge_heads(o), p["wo"])
+    x = x + moe_mlp(nn.rms_norm(x, p["ln2"]), p, cfg)
+    return x, c
+
+
+def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
+                      qparams=None, embeds=None, attn_backend: str = "xla"):
+    """One decode step against the paged block pool (see the dense family's
+    ``paged_decode_step`` for the block-table convention)."""
+    del qparams  # MoE serving runs the float path
+    pattern, n_groups, tail = cfg.layer_layout()
+    x = embeds if embeds is not None else nn.embed(
+        tokens[:, None], params["embed"], cfg.compute_dtype)
+    pos = dense._as_positions(cache["len"], x.shape[0])
+    table = jnp.asarray(table, jnp.int32)
+
+    def group_body(xc, slices):
+        stacks_slice, cache_slice = slices
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            xc, c = _paged_decode_layer(
+                xc, stacks_slice[i], cache_slice[i], kind, cfg, pos, table,
+                attn_backend)
+            new_caches.append(c)
+        return xc, tuple(new_caches)
+
+    if n_groups > 0:
+        x, new_caches = jax.lax.scan(
+            group_body, x, (tuple(params["stacks"]), tuple(cache["stacks"])))
+        cache = dict(cache, stacks=list(new_caches))
+    for i, kind in enumerate(tail):
+        p = jax.tree.map(lambda a: a[0], params["tail"][i])
+        c_in = jax.tree.map(lambda a: a[0], cache["tail"][i])
+        x, c = _paged_decode_layer(x, p, c_in, kind, cfg, pos, table,
+                                   attn_backend)
+        cache["tail"][i] = jax.tree.map(lambda a: a[None], c)
+    x = nn.rms_norm(x, params["final_norm"])
+    tbl = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = nn.unembed(x, tbl)
     return logits[:, 0], dict(cache, len=cache["len"] + 1)
 
 
@@ -367,7 +434,8 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
 
 
 def _moe_shard_map(x, p, cfg: ModelConfig, mesh, rules):
-    from jax import shard_map
+    from repro.core import compat
+    from repro.core.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     batch_ax = rules.mesh_axes("batch", mesh)
@@ -382,8 +450,8 @@ def _moe_shard_map(x, p, cfg: ModelConfig, mesh, rules):
         rank = jax.lax.axis_index("model")
         # declare x varying over 'model': each rank contributes a partial
         # dx, and pvary's transpose is the psum that sums them
-        x_b = jax.lax.pvary(x_b, ("model",))
-        router_b = jax.lax.pvary(router_b, ("model",))
+        x_b = compat.pvary(x_b, ("model",))
+        router_b = compat.pvary(router_b, ("model",))
         logits = jnp.einsum("bsd,de->bse", x_b.astype(jnp.float32),
                             router_b.astype(jnp.float32))
         probs = jax.nn.softmax(logits, -1)
@@ -413,7 +481,7 @@ def _moe_shard_map(x, p, cfg: ModelConfig, mesh, rules):
         # bwd of _permute_in gathers dbuf at (expert, pos): restrict to
         # slots this rank OWNS (foreign contributions arrive via the psum
         # from their owning ranks)
-        buf = _permute_in(x_b, token_of_slot, empty,
+        buf = _permute_in(k, x_b, token_of_slot, empty,
                           jnp.clip(loc_e, 0, e_loc - 1), pos_c,
                           keep & mine_e)
         h = act(

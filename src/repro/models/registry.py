@@ -36,6 +36,15 @@ class Arch:
     # prefill accepts right-padded prompts + ``true_len`` (bucketed serving
     # admission); exact only for causal-attention families
     supports_padded_prefill: bool = False
+    # paged block-pool KV cache entry points (attention-cache families only;
+    # recurrent state has no growing KV to page)
+    init_paged_cache: Optional[Callable] = None
+    paged_decode_step: Optional[Callable] = None
+    paged_insert: Optional[Callable] = None
+
+    @property
+    def supports_paged(self) -> bool:
+        return self.paged_decode_step is not None
 
     @property
     def name(self) -> str:
@@ -59,6 +68,21 @@ def build(cfg: ModelConfig) -> Arch:
             if hasattr(mod, "quantize_params") else None
         ),
         supports_padded_prefill=getattr(mod, "SUPPORTS_PADDED_PREFILL", False),
+        init_paged_cache=(
+            (lambda slots, layout, **kw: mod.init_paged_cache(
+                cfg, slots, layout, **kw))
+            if hasattr(mod, "init_paged_cache") else None
+        ),
+        paged_decode_step=(
+            (lambda params, cache, tokens, table, **kw: mod.paged_decode_step(
+                params, cache, tokens, cfg, table, **kw))
+            if hasattr(mod, "paged_decode_step") else None
+        ),
+        paged_insert=(
+            (lambda cache, single, slot, block_ids: mod.paged_insert(
+                cache, single, slot, block_ids, cfg))
+            if hasattr(mod, "paged_insert") else None
+        ),
     )
 
 

@@ -287,6 +287,175 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
     return logits[:, 0], cache
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache + decode (block-pool serving layout)
+# ---------------------------------------------------------------------------
+
+
+def init_paged_cache(cfg: ModelConfig, slots: int, layout, *,
+                     quantized: Optional[bool] = None):
+    """Block-pool KV cache: per pattern-position stacks of shape
+    ``[n_stack, num_blocks, Hkv, block_len, hd]`` shared by all ``slots``
+    decode rows, plus the per-row position vector. The per-row block table
+    that maps positions to pool blocks lives host-side (the serve engine
+    owns it) and is passed into ``paged_decode_step`` each call.
+
+    Every layer stores full-length history — sliding-window ("L") layers
+    are handled by a window mask at attention time rather than a ring
+    buffer, trading pool blocks for a uniform block-table layout.
+    """
+    del quantized  # pool storage is float; int8 serving requantizes values
+    pattern, n_groups, tail = cfg.layer_layout()
+    hd, nkv = cfg.hd, cfg.n_kv_heads
+    dt = cfg.compute_dtype
+
+    def kv(n_stack):
+        shape = (n_stack, layout.num_blocks, nkv, layout.block_len, hd)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+    cache: Dict[str, Any] = {
+        "stacks": [kv(n_groups) for _ in pattern],
+        "len": jnp.zeros((slots,), jnp.int32),
+    }
+    if tail:
+        cache["tail"] = [kv(1) for _ in tail]
+    return cache
+
+
+def _paged_cache_write(c, k_new, v_new, pos, table, block_len: int):
+    """Scatter one token's k/v at per-row position ``pos`` through the
+    block table. Empty rows point at the trash block (table row zeros), so
+    their writes are harmless."""
+    rows_b = pos.shape[0]
+    max_blocks = table.shape[1]
+    bi = jnp.minimum(pos // jnp.int32(block_len), max_blocks - 1)
+    blk_ids = table[jnp.arange(rows_b), bi]        # [B] pool rows
+    off = pos % jnp.int32(block_len)
+    k = c["k"].at[blk_ids, :, off].set(k_new[:, :, 0].astype(c["k"].dtype))
+    v = c["v"].at[blk_ids, :, off].set(v_new[:, :, 0].astype(c["v"].dtype))
+    return {"k": k, "v": v}
+
+
+def _paged_decode_layer(x, p, c, kind, cfg: ModelConfig, pos, table, *,
+                        qparams=None, attn_backend: str = "xla"):
+    """One-token decode through one layer against the paged pool."""
+    from repro.kernels.paged_attention.ops import paged_attention
+    from repro.kernels.paged_attention.ref import gather_kv
+
+    int8 = qparams is not None
+    h = nn.rms_norm(x, p["ln1"])
+    b = x.shape[0]
+    hd = cfg.hd
+    block_len = c["k"].shape[2]  # [num_blocks, Hkv, block_len, hd]
+    lin = functools.partial(_qlin, qparams) if int8 else (
+        lambda name, y: nn.dense(y, p[name]))
+    q = lin("wq", h).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = lin("wk", h).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = lin("wv", h).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    q = nn.rope(q, pos[:, None, None], cfg.rope_theta)
+    k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
+
+    window = cfg.local_window if kind == "L" else None
+    if int8:
+        # same numerics as the dense int8 path: requantized values stored
+        # in float blocks, ITA integer attention over the gathered view
+        kq = attn.KV_SCALE
+        k_store = jnp.clip(jnp.round(k.astype(jnp.float32) / kq), -127, 127)
+        v_store = jnp.clip(jnp.round(v.astype(jnp.float32) / kq), -127, 127)
+        c = _paged_cache_write(c, k_store, v_store, pos, table, block_len)
+        k_dense = gather_kv(c["k"], table)
+        v_dense = gather_kv(c["v"], table)
+        o = attn.decode_attention_int8(q, k_dense, v_dense, pos + 1, cfg,
+                                       window=window)
+    else:
+        c = _paged_cache_write(c, k, v, pos, table, block_len)
+        o = paged_attention(q, c["k"], c["v"], table, pos + 1,
+                            window=window, backend=attn_backend)
+    x = x + lin("wo", _merge_heads(o))
+    h = nn.rms_norm(x, p["ln2"])
+    act = nn.ACTIVATIONS[cfg.act]
+    x = x + lin("wd", act(lin("wg", h), lin("wu", h)))
+    return x, c
+
+
+def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
+                      qparams=None, embeds=None, attn_backend: str = "xla"):
+    """One decode step against the paged block pool.
+
+    ``table`` [slots, max_blocks] int32 maps each row's position ``p`` to
+    pool block ``table[row, p // block_len]`` (offset ``p % block_len``) —
+    the engine allocates blocks host-side and passes the table each call
+    (fixed shape, so the step never retraces).
+    """
+    pattern, n_groups, tail = cfg.layer_layout()
+    x = embeds if embeds is not None else nn.embed(
+        tokens[:, None], params["embed"], cfg.compute_dtype)
+    pos = _as_positions(cache["len"], x.shape[0])
+    table = jnp.asarray(table, jnp.int32)
+
+    def group_body(xc, slices):
+        stacks_slice, cache_slice, q_slice = slices
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            xc, c = _paged_decode_layer(
+                xc, stacks_slice[i], cache_slice[i], kind, cfg, pos, table,
+                qparams=None if q_slice is None else q_slice[i],
+                attn_backend=attn_backend,
+            )
+            new_caches.append(c)
+        return xc, tuple(new_caches)
+
+    if n_groups > 0:
+        qstacks = None if qparams is None else tuple(qparams["stacks"])
+        x, new_stack_caches = jax.lax.scan(
+            group_body, x,
+            (tuple(params["stacks"]), tuple(cache["stacks"]), qstacks),
+        )
+        cache = dict(cache, stacks=list(new_stack_caches))
+    for i, kind in enumerate(tail):
+        p = jax.tree.map(lambda a: a[0], params["tail"][i])
+        qp = None
+        if qparams is not None:
+            qp = jax.tree.map(lambda a: a[0], qparams["tail"][i])
+        c_in = jax.tree.map(lambda a: a[0], cache["tail"][i])
+        x, c = _paged_decode_layer(x, p, c_in, kind, cfg, pos, table,
+                                   qparams=qp, attn_backend=attn_backend)
+        cache["tail"][i] = jax.tree.map(lambda a: a[None], c)
+
+    x = nn.rms_norm(x, params["final_norm"])
+    table_w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = nn.unembed(x, table_w)
+    cache = dict(cache, len=cache["len"] + 1)
+    return logits[:, 0], cache
+
+
+def paged_insert(cache, single, slot, block_ids, cfg: ModelConfig):
+    """Splice a batch-1 prefilled dense cache (sized to the admission
+    bucket) into pool blocks ``block_ids`` and point ``slot``'s position
+    counter at the prefill's true length."""
+    from repro.models.cache import paged_insert_kv
+
+    block_ids = jnp.asarray(block_ids, jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def splice(pool_kv, single_kv):
+        return {
+            "k": paged_insert_kv(pool_kv["k"], single_kv["k"], block_ids),
+            "v": paged_insert_kv(pool_kv["v"], single_kv["v"], block_ids),
+        }
+
+    out = dict(cache)
+    out["stacks"] = [splice(pc, sc) for pc, sc
+                     in zip(cache["stacks"], single["stacks"])]
+    if "tail" in cache:
+        out["tail"] = [splice(pc, sc) for pc, sc
+                       in zip(cache["tail"], single["tail"])]
+    new_len = jax.lax.dynamic_update_slice(
+        cache["len"], single["len"].astype(jnp.int32), (slot,))
+    out["len"] = new_len
+    return out
+
+
 # Right-padded prompts are exact for this family (causal attention: real
 # positions never attend to pad positions; pad entries beyond ``true_len``
 # are masked out of decode by the per-row position vector). Recurrent

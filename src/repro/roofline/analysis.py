@@ -83,20 +83,27 @@ class Instr:
     is_root: bool = False
 
     def operands(self) -> List[str]:
-        # self.rest starts INSIDE the opcode's '(' — depth begins at 1
+        # self.rest starts INSIDE the opcode's '(' — depth begins at 1.
+        # Commas also appear inside shape/layout annotations ("f32[64,64]{1,0}")
+        # so brackets and braces must be tracked alongside parens.
         depth = 1
+        nest = 0  # {} / [] nesting
         args: List[str] = []
         cur = ""
         for ch in self.rest:
             if ch == "(":
                 depth += 1
+            elif ch in "{[":
+                nest += 1
+            elif ch in "}]":
+                nest -= 1
             if ch == ")":
                 depth -= 1
                 if depth == 0:
                     args.append(cur)
                     break
             if depth >= 1:
-                if ch == "," and depth == 1:
+                if ch == "," and depth == 1 and nest == 0:
                     args.append(cur)
                     cur = ""
                 else:
@@ -104,7 +111,11 @@ class Instr:
         names = []
         for a in args:
             a = a.strip()
-            m = re.match(r"%?([\w.\-]+)", a)
+            if not a:
+                continue
+            # operands may carry a type annotation: "f32[64,64]{1,0} %name"
+            # — the instruction name is the last whitespace-separated token
+            m = re.match(r"%?([\w.\-]+)", a.split()[-1])
             if m:
                 names.append(m.group(1))
         return names

@@ -53,7 +53,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import registry
-from repro.models.cache import bucket_for, cache_insert
+from repro.models.cache import (
+    BlockAllocator, PagedLayout, blocks_for, bucket_for, cache_insert,
+)
 
 
 @dataclasses.dataclass
@@ -78,6 +80,11 @@ class EngineConfig:
     seed: int = 0                # sampling PRNG seed (batched engine)
     prefill_buckets: bool = True  # pad admission prompts to pow2 buckets
     min_bucket: int = 8
+    # paged engine (PagedServeEngine): KV block size and pool size. With
+    # num_blocks=None the pool matches the dense arena's token budget
+    # (slots · max_len) — same memory, strictly more admissible requests.
+    block_len: int = 16
+    num_blocks: Optional[int] = None
 
 
 def sample_tokens(logits: jax.Array, ec: EngineConfig, key) -> jax.Array:
@@ -161,6 +168,47 @@ class _EngineBase:
             if self.idle:
                 break
         return done
+
+    def _on_admitted_finish(self, req: Request, slot: int):
+        """Hook: a request finished at its admission prefill (paged engine
+        recycles its blocks here). Runs before the slot is vacated."""
+
+    def _fetch_and_finish(self, dec_tok, adm_tok, active, at_dispatch,
+                          admitted_req, adm_slot) -> List[Request]:
+        """One async device→host fetch of this iteration's sampled tokens
+        (decode batch + the admitted request's first token), then the
+        host-side finish bookkeeping. Shared by both vectorized engines."""
+        fetch = {}
+        if dec_tok is not None:
+            fetch["dec"] = dec_tok
+        if adm_tok is not None:
+            fetch["adm"] = adm_tok
+        finished: List[Request] = []
+        if not fetch:
+            return finished
+        jax.tree.map(lambda a: a.copy_to_host_async(), fetch)
+        got = jax.device_get(fetch)
+        self.transfers += 1
+        now = time.perf_counter()
+        if dec_tok is not None:
+            for i in active:
+                r = at_dispatch[i]
+                r.output.append(int(got["dec"][i]))
+                if len(r.output) >= r.max_new_tokens:
+                    r.done_at = now
+                    finished.append(r)
+                    if self.slots[i] is r:
+                        self.slots[i] = None
+        if adm_tok is not None:
+            admitted_req.output.append(int(got["adm"]))
+            if admitted_req.first_token_at is None:
+                admitted_req.first_token_at = now
+            if len(admitted_req.output) >= admitted_req.max_new_tokens:
+                admitted_req.done_at = now
+                finished.append(admitted_req)
+                self._on_admitted_finish(admitted_req, adm_slot)
+                self.slots[adm_slot] = None
+        return finished
 
 
 class ServeEngine(_EngineBase):
@@ -381,36 +429,260 @@ class BatchedServeEngine(_EngineBase):
 
         # single async fetch per iteration: decode tokens (+ the admitted
         # request's first token when an admission happened)
-        fetch = {}
-        if dec_tok is not None:
-            fetch["dec"] = dec_tok
-        if adm_tok is not None:
-            fetch["adm"] = adm_tok
-        finished: List[Request] = []
-        if fetch:
-            jax.tree.map(lambda a: a.copy_to_host_async(), fetch)
-            got = jax.device_get(fetch)
-            self.transfers += 1
-            now = time.perf_counter()
-            if dec_tok is not None:
-                for i in active:
-                    r = at_dispatch[i]
-                    r.output.append(int(got["dec"][i]))
-                    if len(r.output) >= r.max_new_tokens:
-                        r.done_at = now
-                        finished.append(r)
-                        if self.slots[i] is r:
-                            self.slots[i] = None
-            if adm_tok is not None:
-                admitted_req.output.append(int(got["adm"]))
-                if admitted_req.first_token_at is None:
-                    admitted_req.first_token_at = now
-                if len(admitted_req.output) >= admitted_req.max_new_tokens:
-                    admitted_req.done_at = now
-                    finished.append(admitted_req)
-                    self.slots[adm_slot] = None
+        finished = self._fetch_and_finish(
+            dec_tok, adm_tok, active, at_dispatch, admitted_req, adm_slot)
         self._note_admission(adm_slot >= 0)
         return finished
+
+
+class PagedServeEngine(_EngineBase):
+    """Continuous batching over a paged block-pool KV cache.
+
+    The dense ``BatchedServeEngine`` reserves ``max_len`` KV rows per slot,
+    so short requests strand arena capacity that long ones need — the
+    fragmentation that CHIMERA's *banked, interleaved* shared-L2 island
+    avoids in hardware. Here KV state lives in a shared pool of fixed-size
+    blocks (``models.cache.PagedLayout``); each slot holds a block table
+    mapping position ``p`` to pool block ``table[slot, p // block_len]``.
+    A host-side free-list allocator (``models.cache.BlockAllocator``)
+    admits against *worst-case* block reservations, grows slots lazily at
+    block boundaries, and recycles blocks on completion and preemption —
+    so at a fixed KV-memory budget the paged engine admits every mix of
+    lengths the budget can actually hold, not ``budget / max_len`` slots.
+
+    The PR-1 dataflow contract is preserved: one jitted paged decode
+    dispatch over all rows per iteration, at most one admission dispatch,
+    one device→host token fetch. The block table is host-owned and passed
+    into the jitted step each call (fixed shape — no retrace); empty rows
+    decode against the dedicated trash block and are ignored host-side.
+
+    Pool exhaustion *defers* admission (the waiting request then rides the
+    bounded-priority QoS path: after ``admit_window`` iterations a victim
+    is preempted and its blocks recycled); a request that could never fit
+    the pool is rejected at ``submit``.
+    """
+
+    def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
+        super().__init__(arch, params, ec)
+        cfg = arch.cfg
+        if not arch.supports_paged:
+            raise NotImplementedError(
+                f"family {cfg.family!r} has no paged decode path")
+        if "L" in cfg.pattern and cfg.local_window < ec.max_len:
+            raise NotImplementedError(
+                "paged serving stores full-length history; sliding-window "
+                "layers with window < max_len need ring blocks (ROADMAP)")
+        num_blocks = ec.num_blocks
+        if num_blocks is None:  # match the dense arena's token budget
+            num_blocks = blocks_for(ec.slots * ec.max_len, ec.block_len) + 1
+        self.layout = PagedLayout(ec.block_len, num_blocks, ec.max_len)
+        self.alloc = BlockAllocator(self.layout)
+        self.table = np.zeros((ec.slots, self.layout.max_blocks), np.int32)
+        self._slot_len = [0] * ec.slots   # host mirror of active rows' len
+        self.cache = arch.init_paged_cache(ec.slots, self.layout)
+        self.last_tok = jnp.zeros((ec.slots,), jnp.int32)
+        self._key = jax.random.key(ec.seed)
+        self._bucketing = ec.prefill_buckets and arch.supports_padded_prefill
+        self.max_concurrent = 0           # peak active slots (capacity proof)
+
+        def _dec(p, qp, cache, table, last_tok, key):
+            self.decode_traces += 1  # runs at trace time only
+            logits, cache = arch.paged_decode_step(
+                p, cache, last_tok, table, qparams=qp)
+            key, sub = jax.random.split(key)
+            tok = sample_tokens(logits, ec, sub)
+            return tok, cache, key
+
+        def _pre_bucketed(p, tokens, true_len, slot, block_ids, cache,
+                          last_tok, key):
+            self.prefill_traces += 1  # one trace per bucket
+            logits, c1 = arch.prefill(p, tokens, tokens.shape[1],
+                                      true_len=true_len)
+            return _insert(logits, c1, slot, block_ids, cache, last_tok, key)
+
+        def _pre_exact(p, tokens, slot, block_ids, cache, last_tok, key):
+            self.prefill_traces += 1
+            pre_len = block_ids.shape[0] * ec.block_len
+            logits, c1 = arch.prefill(p, tokens, pre_len)
+            return _insert(logits, c1, slot, block_ids, cache, last_tok, key)
+
+        def _insert(logits, c1, slot, block_ids, cache, last_tok, key):
+            cache = arch.paged_insert(cache, c1, slot, block_ids)
+            key, sub = jax.random.split(key)
+            tok = sample_tokens(logits, ec, sub)  # [1]
+            last_tok = jax.lax.dynamic_update_slice(last_tok, tok, (slot,))
+            return tok[0], cache, last_tok, key
+
+        self._decode_fn = jax.jit(_dec, donate_argnums=(2,))
+        self._prefill_bucketed = jax.jit(_pre_bucketed, donate_argnums=(5,))
+        self._prefill_exact = jax.jit(_pre_exact, donate_argnums=(4,))
+
+    # -- capacity bookkeeping ----------------------------------------------
+
+    def _pre_len(self, req: Request) -> int:
+        """Prefill cache length for ``req``'s continuation (block multiple;
+        pow2 bucket when bucketing). The bucket is capped at the request's
+        worst-case decode extent so the block reservation is *invariant
+        across preemptions* — a pow2 bucket of a grown continuation must
+        never demand more blocks than ``submit`` admitted against, or a
+        preempted request could become unreadmittable."""
+        blk = self.ec.block_len
+        n = len(req.prompt) + len(req.output)
+        if self._bucketing:
+            bucket = bucket_for(n, max(self.ec.min_bucket, blk),
+                                self.ec.max_len)
+        else:
+            bucket = n
+        cap = blocks_for(len(req.prompt) + req.max_new_tokens - 1, blk) * blk
+        # round the (possibly max_len-clamped, non-pow2) bucket up to a
+        # block multiple; the roundup never exceeds cap because cap is one
+        return max(blocks_for(n, blk) * blk,
+                   blocks_for(min(bucket, cap), blk) * blk)
+
+    def _max_blocks_needed(self, req: Request) -> int:
+        """Worst-case block reservation: the prefill extent now, or the
+        final decode position, whichever is larger."""
+        final_pos = len(req.prompt) + req.max_new_tokens - 1
+        return blocks_for(max(self._pre_len(req), final_pos),
+                          self.ec.block_len)
+
+    def submit(self, req: Request):
+        need = self._max_blocks_needed(req)
+        if need > self.layout.usable_blocks:
+            raise ValueError(
+                f"request {req.rid} needs {need} blocks; pool has "
+                f"{self.layout.usable_blocks}")
+        super().submit(req)
+
+    def _release_slot(self, slot: int):
+        """Recycle a slot's blocks and point its table row at trash."""
+        req = self.slots[slot]
+        self.alloc.release(req.rid)
+        self.table[slot, :] = 0
+        self._slot_len[slot] = 0
+
+    # -- one iteration -----------------------------------------------------
+
+    def _dispatch_admission(self, req: Request, slot: int):
+        toks = _continuation_tokens(req)
+        n = toks.size
+        pre_len = self._pre_len(req)
+        block_ids = np.asarray(
+            self.alloc.admit(req.rid, pre_len // self.ec.block_len,
+                             self._max_blocks_needed(req)),
+            np.int32)
+        self.table[slot, :] = 0
+        self.table[slot, :block_ids.size] = block_ids
+        self._slot_len[slot] = n
+        if self._bucketing:
+            padded = np.zeros((1, pre_len), np.int32)
+            padded[0, :n] = toks
+            return self._prefill_bucketed(
+                self.params, jnp.asarray(padded), jnp.asarray(n, jnp.int32),
+                jnp.asarray(slot, jnp.int32), jnp.asarray(block_ids),
+                self.cache, self.last_tok, self._key)
+        return self._prefill_exact(
+            self.params, jnp.asarray(toks[None, :]),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(block_ids),
+            self.cache, self.last_tok, self._key)
+
+    def step(self) -> List[Request]:
+        """One engine iteration → finished requests (one paged decode
+        dispatch, ≤1 admission dispatch, one device→host fetch)."""
+        self.iterations += 1
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        at_dispatch = list(self.slots)
+        self.max_concurrent = max(self.max_concurrent, len(active))
+
+        # grow any slot whose next write position crosses a block boundary
+        # (drawn from its admission-time reservation — can never fail)
+        for i in active:
+            req = self.slots[i]
+            needed = self._slot_len[i] // self.ec.block_len + 1
+            owned = self.alloc.owned(req.rid)
+            while len(owned) < needed:
+                blk = self.alloc.grow(req.rid)
+                self.table[i, len(owned)] = blk
+                owned.append(blk)
+
+        dec_tok = None
+        if active:
+            dec_tok, self.cache, self._key = self._decode_fn(
+                self.params, self.qparams, self.cache,
+                jnp.asarray(self.table), self.last_tok, self._key)
+            self.last_tok = dec_tok
+            self.decode_dispatches += 1
+            for i in active:
+                self._slot_len[i] += 1
+
+        # finishes are length-determined: recycle their blocks *now* so
+        # this iteration's admission can reuse them (the decode dispatch
+        # that read them is already ordered before any insert)
+        will_free = [i for i in active
+                     if len(self.slots[i].output) + 1
+                     >= self.slots[i].max_new_tokens]
+        for i in will_free:
+            self._release_slot(i)
+        free = [i for i, r in enumerate(self.slots) if r is None]
+
+        admitted_req = None
+        adm_tok = None
+        adm_slot = -1
+        head = self.queue[0] if self.queue else None
+        if head is not None and (free or will_free):
+            if self.alloc.can_admit(self._max_blocks_needed(head)):
+                adm_slot = (free + will_free)[0]
+            # else: pool exhausted — defer; the waiting request accrues
+            # bounded-priority credit and will preempt below
+        if adm_slot < 0 and self._forced_admission_due():
+            need = self._max_blocks_needed(head)
+            # evict victims (most remaining work first — the dense engines'
+            # policy) until the head's reservation fits; multiple small
+            # slots may need to go, since the bounded-priority guarantee
+            # must not hinge on any single victim being block-rich enough.
+            # Evicting every slot always suffices: submit() guarantees
+            # need ≤ usable_blocks, and queued requests hold no blocks.
+            candidates = [i for _, i in sorted(
+                ((r.max_new_tokens - len(r.output), i)
+                 for i, r in enumerate(self.slots) if r is not None),
+                reverse=True)]
+            # one victim when one suffices (busiest-first); otherwise evict
+            # cumulatively until the head fits
+            single = next(
+                (i for i in candidates if self.alloc.can_admit_after_release(
+                    need, self.slots[i].rid)), None)
+            order = [single] if single is not None else candidates
+            evicted: List[tuple] = []   # (victim request, its slot)
+            for victim_slot in order:
+                if evicted and self.alloc.can_admit(need):
+                    break
+                victim = self.slots[victim_slot]
+                self._release_slot(victim_slot)
+                victim.preemptions += 1
+                self.slots[victim_slot] = None
+                evicted.append((victim, victim_slot))
+            if evicted:
+                admitted_req = self.queue.popleft()
+                for victim, _ in reversed(evicted):
+                    self.queue.appendleft(victim)
+                adm_slot = evicted[0][1]
+        if adm_slot >= 0:
+            if admitted_req is None:
+                admitted_req = self.queue.popleft()
+            adm_tok, self.cache, self.last_tok, self._key = (
+                self._dispatch_admission(admitted_req, adm_slot))
+            self.slots[adm_slot] = admitted_req
+
+        # single async fetch per iteration (same shape as the dense engine)
+        finished = self._fetch_and_finish(
+            dec_tok, adm_tok, active, at_dispatch, admitted_req, adm_slot)
+        self._note_admission(adm_slot >= 0)
+        return finished
+
+    def _on_admitted_finish(self, req: Request, slot: int):
+        # finished at its admission prefill: recycle before the slot is
+        # vacated (_release_slot reads self.slots[slot])
+        self._release_slot(slot)
 
 
 def metrics(done: List[Request]) -> Dict[str, float]:

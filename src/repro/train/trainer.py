@@ -170,7 +170,7 @@ def make_compressed_train_step(arch: registry.Arch, tc: TrainConfig,
     FSDP is future work. Returns (step_fn, init_error_buf_fn); the error
     buffer is part of the training state and must be threaded through.
     """
-    from jax import shard_map
+    from repro.core.compat import shard_map
 
     from repro.optim.grad_compression import compress_decompress_psum
 
@@ -179,18 +179,27 @@ def make_compressed_train_step(arch: registry.Arch, tc: TrainConfig,
     loss_fn = make_loss_fn(arch)
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
+    n_data = 1
+    for a, sz in zip(mesh.axis_names, mesh.devices.shape):
+        if a in data_axes:
+            n_data *= sz
+
     def step(params, opt_state, err_buf, tokens):
         def local(params, err_buf, toks):
+            # err_buf carries a leading data-shard axis (the residual is
+            # genuinely per-device state — it is NOT replicated)
+            e = jax.tree.map(lambda t: t[0], err_buf)
             loss, g = jax.value_and_grad(loss_fn)(params, toks)
-            g_mean, new_err = compress_decompress_psum(g, err_buf, data_axes)
+            g_mean, new_e = compress_decompress_psum(g, e, data_axes)
             loss = jax.lax.pmean(loss, data_axes)
-            return loss, g_mean, new_err
+            return loss, g_mean, jax.tree.map(lambda t: t[None], new_e)
 
         spec_rep = jax.tree.map(lambda _: P(), params)
+        spec_err = jax.tree.map(lambda _: P(data_axes), params)
         fm = shard_map(
             local, mesh=mesh,
-            in_specs=(spec_rep, spec_rep, P(*data_axes)),
-            out_specs=(P(), spec_rep, spec_rep),
+            in_specs=(spec_rep, spec_err, P(*data_axes)),
+            out_specs=(P(), spec_rep, spec_err),
         )
         loss, grads, new_err = fm(params, err_buf, tokens)
         new_params, new_opt, metrics = opt_lib.update(
@@ -198,7 +207,8 @@ def make_compressed_train_step(arch: registry.Arch, tc: TrainConfig,
         return new_params, new_opt, new_err, {"loss": loss, **metrics}
 
     def init_err(params):
-        return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        return jax.tree.map(
+            lambda x: jnp.zeros((n_data, *x.shape), jnp.float32), params)
 
     return step, init_err
 

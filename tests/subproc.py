@@ -1,0 +1,46 @@
+"""Shared harness for tests that need a multi-device host mesh.
+
+The suite itself runs on 1 CPU device, so multi-device tests re-exec
+``sys.executable`` with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+set before jax import. Two things the old ad-hoc harness got wrong:
+
+* it built a from-scratch env (``{"PYTHONPATH": "src", "PATH": ...}``),
+  dropping ``JAX_PLATFORMS=cpu`` — the child then probed for TPU/GPU
+  backends and hung until the timeout;
+* ``PYTHONPATH=src`` was relative, so the child failed at import whenever
+  pytest ran from any cwd other than the repo root.
+
+This helper inherits the parent env, prepends the absolute ``src`` dir to
+``PYTHONPATH``, pins ``JAX_PLATFORMS=cpu``, and raises with the child's
+stderr tail so breakage is diagnosable from the pytest report.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC_DIR = os.path.join(REPO_ROOT, "src")
+
+
+def run_script(script: str, *, timeout: float = 560.0,
+               expect: str = "OK") -> subprocess.CompletedProcess:
+    """Run ``script`` in a fresh interpreter and assert it prints ``expect``."""
+    env = os.environ.copy()
+    env["PYTHONPATH"] = SRC_DIR + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    # Children force host devices via XLA_FLAGS; keep them on the CPU
+    # backend even when the parent env doesn't pin it.
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env.pop("XLA_FLAGS", None)  # child scripts set their own device count
+    r = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, cwd=REPO_ROOT, timeout=timeout)
+    if expect not in r.stdout:
+        raise AssertionError(
+            f"subprocess did not print {expect!r} (returncode={r.returncode})\n"
+            f"--- stdout ---\n{r.stdout[-2000:]}\n"
+            f"--- stderr ---\n{r.stderr[-4000:]}")
+    return r

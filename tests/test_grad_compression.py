@@ -1,16 +1,16 @@
 """INT8 gradient all-reduce with error feedback (multi-device via subprocess:
 the suite runs with 1 CPU device; the compression path needs ≥4)."""
 
-import subprocess
-import sys
 import textwrap
+
+from subproc import run_script
 
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import Mesh, PartitionSpec as P
-    from jax import shard_map
+    from repro.core.compat import shard_map
     from repro.optim.grad_compression import (
         compress_decompress_psum, init_error_buf)
 
@@ -48,10 +48,7 @@ SCRIPT = textwrap.dedent("""
 
 
 def test_compressed_allreduce_subprocess():
-    r = subprocess.run(
-        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}, timeout=300)
-    assert "OK" in r.stdout, f"stdout={r.stdout}\nstderr={r.stderr[-2000:]}"
+    run_script(SCRIPT, timeout=300)
 
 
 def test_compressed_train_step_subprocess():
@@ -94,7 +91,4 @@ def test_compressed_train_step_subprocess():
         assert losses[-1] < losses[0], losses
         print("OK")
     """)
-    r = subprocess.run(
-        [sys.executable, "-c", script], capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}, timeout=560)
-    assert "OK" in r.stdout, f"stdout={r.stdout}\nstderr={r.stderr[-2000:]}"
+    run_script(script, timeout=560)

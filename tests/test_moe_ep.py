@@ -1,9 +1,9 @@
 """shard_map expert parallelism: numerical equivalence vs the GSPMD path
 (subprocess — needs an 8-device host mesh)."""
 
-import subprocess
-import sys
 import textwrap
+
+from subproc import run_script
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -39,7 +39,4 @@ SCRIPT = textwrap.dedent("""
 
 
 def test_shard_map_ep_equivalent_subprocess():
-    r = subprocess.run(
-        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}, timeout=560)
-    assert "OK" in r.stdout, f"stdout={r.stdout}\nstderr={r.stderr[-2000:]}"
+    run_script(SCRIPT, timeout=560)

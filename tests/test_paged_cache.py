@@ -1,0 +1,163 @@
+"""Block allocator invariants + paged-attention kernel oracle tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.cache import (
+    TRASH_BLOCK, BlockAllocator, PagedLayout, blocks_for, paged_insert_kv,
+)
+
+
+def _layout(block_len=4, num_blocks=9, max_len=32):
+    return PagedLayout(block_len, num_blocks, max_len)
+
+
+def test_layout_counts_trash_block():
+    lay = _layout()
+    assert lay.usable_blocks == 8
+    assert lay.usable_tokens == 32
+    assert lay.max_blocks == 8
+    with pytest.raises(ValueError):
+        PagedLayout(3, 9, 32)          # non-pow2 block
+    with pytest.raises(ValueError):
+        PagedLayout(4, 1, 32)          # nothing beside trash
+
+
+def test_admit_grow_release_roundtrip():
+    a = BlockAllocator(_layout())
+    ids = a.admit("r0", now_blocks=2, max_blocks=4)
+    assert len(ids) == 2 and TRASH_BLOCK not in ids
+    assert a.free_blocks == 6
+    assert a.available_blocks == 4      # 2 blocks still reserved for r0
+    g = a.grow("r0")
+    assert g not in ids and g != TRASH_BLOCK
+    freed = a.release("r0")
+    assert sorted(freed) == sorted(ids + [g])
+    assert a.free_blocks == 8 and a.available_blocks == 8
+
+
+def test_no_double_admit_no_double_release():
+    a = BlockAllocator(_layout())
+    a.admit("r0", 1, 2)
+    with pytest.raises(ValueError):
+        a.admit("r0", 1, 2)
+    a.release("r0")
+    with pytest.raises(KeyError):
+        a.release("r0")
+
+
+def test_reservation_is_a_hard_ceiling():
+    a = BlockAllocator(_layout())
+    a.admit("r0", 1, 2)
+    a.grow("r0")
+    with pytest.raises(RuntimeError):
+        a.grow("r0")                    # exceeds its own reservation
+
+
+def test_exhaustion_raises_and_reservations_block_admission():
+    a = BlockAllocator(_layout())       # 8 usable
+    a.admit("r0", 2, 6)                 # 4 unallocated-but-reserved
+    assert a.available_blocks == 2
+    assert not a.can_admit(3)
+    with pytest.raises(RuntimeError):
+        a.admit("r1", 1, 3)
+    # a growing r0 can always draw its reservation even after r1 takes
+    # what remains
+    a.admit("r1", 2, 2)
+    for _ in range(4):
+        a.grow("r0")
+    assert a.free_blocks == 0
+
+
+def test_release_makes_room_for_admission():
+    a = BlockAllocator(_layout())
+    a.admit("victim", 4, 8)
+    assert not a.can_admit(4)
+    assert a.can_admit_after_release(8, "victim")
+    a.release("victim")
+    a.admit("r1", 4, 8)
+
+
+def test_blocks_for():
+    assert blocks_for(1, 4) == 1
+    assert blocks_for(4, 4) == 1
+    assert blocks_for(5, 4) == 2
+    assert blocks_for(0, 4) == 1        # at least one block
+
+
+def test_paged_insert_kv_scatters_blocks():
+    pool = jnp.zeros((2, 6, 3, 4, 5))   # [n_stack, N, Hkv, blk, D]
+    single = jnp.arange(2 * 1 * 3 * 8 * 5, dtype=jnp.float32).reshape(
+        2, 1, 3, 8, 5)
+    ids = jnp.asarray([4, 2], jnp.int32)
+    out = paged_insert_kv(pool, single, ids)
+    # positions 0..3 land in block 4, 4..7 in block 2
+    np.testing.assert_array_equal(
+        np.asarray(out[:, 4]), np.asarray(single[:, 0])[:, :, :4])
+    np.testing.assert_array_equal(
+        np.asarray(out[:, 2]), np.asarray(single[:, 0])[:, :, 4:])
+    assert float(jnp.abs(out[:, 0]).sum()) == 0.0  # untouched blocks stay 0
+    with pytest.raises(ValueError):
+        paged_insert_kv(pool, single[:, :, :, :6], ids)  # length mismatch
+
+
+@pytest.mark.parametrize("lens,window", [
+    ([7, 0, 20], None),
+    ([7, 0, 20], 6),
+    ([1, 16, 3], None),
+])
+def test_paged_attention_kernel_vs_oracle(lens, window):
+    """Pallas gather-decode kernel (interpret mode) matches the dense
+    gather oracle, including empty rows and sliding windows."""
+    from repro.kernels.paged_attention.ops import paged_attention
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+
+    rng = np.random.default_rng(0)
+    B, HQ, HKV, D, BLK, N, M = 3, 8, 2, 16, 4, 10, 5
+    q = jnp.asarray(rng.standard_normal((B, HQ, 1, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((N, HKV, BLK, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((N, HKV, BLK, D)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(1, N, (B, M)), jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    ref = paged_attention_ref(q, kp, vp, tbl, lens, window=window)
+    out = paged_attention(q, kp, vp, tbl, lens, window=window,
+                          backend="interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-6, rtol=2e-5)
+
+
+def test_paged_attention_matches_dense_decode_attention():
+    """Paged attention over a block-scattered cache equals dense decode
+    attention over the contiguous cache holding the same values."""
+    from repro.kernels.paged_attention.ops import paged_attention
+    from repro.models.attention import decode_attention
+
+    rng = np.random.default_rng(1)
+    B, HQ, HKV, D, BLK = 2, 4, 2, 8, 4
+    S = 16                                # = M · BLK
+    M = S // BLK
+    q = jnp.asarray(rng.standard_normal((B, HQ, 1, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, HKV, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, HKV, S, D)), jnp.float32)
+    lens = jnp.asarray([5, 14], jnp.int32)
+
+    # scatter each row's S positions into disjoint pool blocks
+    N = 1 + B * M
+    perm = rng.permutation(np.arange(1, N))
+    tbl = perm.reshape(B, M).astype(np.int32)
+    kp = np.zeros((N, HKV, BLK, D), np.float32)
+    vp = np.zeros((N, HKV, BLK, D), np.float32)
+    for b in range(B):
+        for m in range(M):
+            kp[tbl[b, m]] = np.asarray(k)[b, :, m * BLK:(m + 1) * BLK]
+            vp[tbl[b, m]] = np.asarray(v)[b, :, m * BLK:(m + 1) * BLK]
+
+    dense_out = decode_attention(q, k, v, lens)
+    for backend in ("xla", "interpret"):
+        paged_out = paged_attention(q, jnp.asarray(kp), jnp.asarray(vp),
+                                    jnp.asarray(tbl), lens, backend=backend)
+        np.testing.assert_allclose(np.asarray(paged_out),
+                                   np.asarray(dense_out),
+                                   atol=2e-6, rtol=2e-5)

@@ -1,0 +1,334 @@
+"""Paged serve engine: token identity, capacity at a fixed KV budget,
+preemption recycling, and the one-dispatch/one-transfer contract."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro import configs
+from repro.models import registry, schema as schema_lib
+from repro.serve.engine import (
+    BatchedServeEngine, EngineConfig, PagedServeEngine, Request, ServeEngine,
+)
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = configs.smoke_config("phi3-mini-3.8b")
+    arch = registry.build(cfg)
+    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+    return cfg, arch, params
+
+
+def _mixed_workload(cfg, n=6, seed=0, max_new=5):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rid=rid,
+                prompt=rng.integers(0, cfg.vocab,
+                                    size=int(rng.integers(3, 20))
+                                    ).astype(np.int32),
+                max_new_tokens=max_new)
+        for rid in range(n)
+    ]
+
+
+def test_paged_token_identity_and_contract(engine_setup):
+    """PagedServeEngine is token-identical to BatchedServeEngine on a
+    mixed-length greedy workload, under the same dispatch/transfer
+    contract, and recycles every block by drain time."""
+    cfg, arch, params = engine_setup
+    ec = EngineConfig(slots=3, max_len=48, block_len=8)
+
+    bat = BatchedServeEngine(arch, params, ec)
+    for r in _mixed_workload(cfg):
+        bat.submit(r)
+    bat_out = {r.rid: list(r.output) for r in bat.run_until_drained()}
+
+    pag = PagedServeEngine(arch, params, ec)
+    for r in _mixed_workload(cfg):
+        pag.submit(r)
+    done = pag.run_until_drained()
+    pag_out = {r.rid: list(r.output) for r in done}
+
+    assert len(pag_out) == len(bat_out) == 6
+    for rid in bat_out:
+        assert pag_out[rid] == bat_out[rid], f"rid {rid} diverged"
+    # one paged decode dispatch + one device→host fetch per iteration
+    assert pag.decode_dispatches <= pag.iterations
+    assert pag.transfers <= pag.iterations
+    # every block returned to the free list (no leaks)
+    assert pag.alloc.free_blocks == pag.layout.usable_blocks
+    assert pag.alloc.reserved_unallocated == 0
+
+
+def test_paged_token_identity_float_path(engine_setup):
+    """Same identity on the float (serve_quant=False) path, which runs the
+    paged-attention op instead of the gathered ITA pipeline."""
+    cfg, arch, params = engine_setup
+    cfg_f = dataclasses.replace(cfg, serve_quant=False)
+    arch_f = registry.build(cfg_f)
+    # max_len a multiple of block_len keeps the gathered reduction length
+    # equal to the dense arena's (exact f32 agreement, not just allclose)
+    ec = EngineConfig(slots=2, max_len=32, block_len=8)
+
+    bat = BatchedServeEngine(arch_f, params, ec)
+    for r in _mixed_workload(cfg, n=4, max_new=4):
+        bat.submit(r)
+    bat_out = {r.rid: list(r.output) for r in bat.run_until_drained()}
+
+    pag = PagedServeEngine(arch_f, params, ec)
+    for r in _mixed_workload(cfg, n=4, max_new=4):
+        pag.submit(r)
+    pag_out = {r.rid: list(r.output) for r in pag.run_until_drained()}
+    assert pag_out == bat_out
+
+
+def test_paged_admits_2x_slots_at_fixed_budget(engine_setup):
+    """At the dense arena's exact KV token budget, the paged pool admits
+    ≥2x the concurrent requests on a short-request workload."""
+    cfg, arch, params = engine_setup
+    dense_slots, max_len, block_len = 2, 32, 4
+    budget_tokens = dense_slots * max_len
+    ec = EngineConfig(
+        slots=8, max_len=max_len, block_len=block_len,
+        num_blocks=budget_tokens // block_len + 1,  # same KV budget + trash
+        min_bucket=4)
+    eng = PagedServeEngine(arch, params, ec)
+    assert eng.layout.usable_tokens == budget_tokens
+    rng = np.random.default_rng(0)
+    for rid in range(10):
+        # extent ≤ 4 + 12 = 16 tokens → 4 blocks; budget holds 4 at once
+        eng.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab, size=4).astype(np.int32),
+            max_new_tokens=12))
+    done = eng.run_until_drained()
+    assert len(done) == 10
+    assert eng.max_concurrent >= 2 * dense_slots
+    assert eng.alloc.free_blocks == eng.layout.usable_blocks
+
+
+def test_pool_exhaustion_defers_then_preempts(engine_setup):
+    """A request that outsizes the free pool waits (admission deferred);
+    after admit_window iterations the bounded-priority path preempts a
+    victim and recycles its blocks."""
+    cfg, arch, params = engine_setup
+    # pool fits exactly one request's worst case at a time
+    ec = EngineConfig(slots=2, max_len=32, block_len=4,
+                      num_blocks=8 + 1, admit_window=2, min_bucket=4)
+    eng = PagedServeEngine(arch, params, ec)
+    r0 = Request(rid=0, prompt=np.arange(4, dtype=np.int32) + 7,
+                 max_new_tokens=25)           # extent 28 → 7 blocks
+    r1 = Request(rid=1, prompt=np.arange(4, dtype=np.int32) + 3,
+                 max_new_tokens=8)            # needs 3 blocks
+    eng.submit(r0)
+    eng.step()                                # admits r0 (slot 0)
+    eng.submit(r1)
+    eng.step()                                # slot 1 free, but pool is not
+    assert eng.slots[1] is None               # deferred, not admitted
+    for _ in range(ec.admit_window + 1):
+        eng.step()
+    assert r0.preemptions == 1                # victim evicted, blocks freed
+    assert r1 in eng.slots                    # r1 admitted via preemption
+    done = {r.rid: r for r in eng.run_until_drained(max_iters=200)}
+    assert set(done) == {0, 1}
+    assert len(done[0].output) == 25          # continuation completed
+    assert eng.alloc.free_blocks == eng.layout.usable_blocks
+
+
+def test_forced_admission_falls_back_past_block_poor_victim(engine_setup):
+    """When the preferred (most-remaining-work) victim's blocks can't cover
+    the waiting request, the bounded-priority path must evict a
+    block-richer victim instead of silently stalling."""
+    cfg, arch, params = engine_setup
+    # usable=13: r0 reserves 9 blocks (prompt 28 → final pos 35), r1
+    # reserves 4 (prompt 4, max_new 12 → final 15); r2 needs 7. The
+    # preferred victim is r1 (9 tokens of work left vs r0's 4) but
+    # releasing it frees only 4 blocks — the fallback must evict r0.
+    ec = EngineConfig(slots=2, max_len=64, block_len=4, num_blocks=14,
+                      admit_window=2, min_bucket=4)
+    eng = PagedServeEngine(arch, params, ec)
+    r0 = Request(rid=0, prompt=np.arange(28, dtype=np.int32) % cfg.vocab,
+                 max_new_tokens=8)
+    r1 = Request(rid=1, prompt=np.arange(4, dtype=np.int32) + 3,
+                 max_new_tokens=12)
+    r2 = Request(rid=2, prompt=np.arange(8, dtype=np.int32) + 5,
+                 max_new_tokens=20)
+    eng.submit(r0)
+    eng.step()                                # admits r0
+    eng.submit(r1)
+    eng.step()                                # admits r1
+    eng.submit(r2)                            # both slots busy, pool full
+    for _ in range(ec.admit_window + 1):
+        eng.step()
+    assert r0.preemptions == 1                # block-rich fallback victim
+    assert r1.preemptions == 0                # preferred victim spared
+    assert r2 in eng.slots
+    done = {r.rid: r for r in eng.run_until_drained(max_iters=400)}
+    assert set(done) == {0, 1, 2}
+    assert len(done[0].output) == 8           # capped re-bucket: r0 still
+    assert eng.alloc.free_blocks == eng.layout.usable_blocks  # fits + drains
+
+
+def test_submit_rejects_never_fitting_request(engine_setup):
+    cfg, arch, params = engine_setup
+    ec = EngineConfig(slots=2, max_len=32, block_len=4, num_blocks=4)
+    eng = PagedServeEngine(arch, params, ec)
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                           max_new_tokens=20))
+
+
+def test_forced_admission_evicts_multiple_small_victims(engine_setup):
+    """When no single victim's blocks cover the waiting request, the
+    bounded-priority path evicts as many as it takes — the admit_window
+    guarantee holds for big requests behind many small slots."""
+    cfg, arch, params = engine_setup
+    # 8 usable blocks; four 1-token-prompt requests reserve 2 blocks each
+    # (full pool); the big request needs 6 → three victims must go
+    ec = EngineConfig(slots=4, max_len=32, block_len=4, num_blocks=9,
+                      admit_window=2, min_bucket=4)
+    eng = PagedServeEngine(arch, params, ec)
+    small = [Request(rid=r, prompt=np.asarray([r + 1], np.int32),
+                     max_new_tokens=8) for r in range(4)]
+    for r in small:
+        eng.submit(r)
+        eng.step()                            # one admission per iteration
+    big = Request(rid=9, prompt=np.arange(8, dtype=np.int32) + 1,
+                  max_new_tokens=16)          # 6-block reservation
+    eng.submit(big)
+    for _ in range(ec.admit_window + 1):
+        eng.step()
+    assert big in eng.slots                   # admitted within the bound
+    assert sum(r.preemptions for r in small) == 3
+    done = {r.rid for r in eng.run_until_drained(max_iters=400)}
+    assert done == {0, 1, 2, 3, 9}
+    assert eng.alloc.free_blocks == eng.layout.usable_blocks
+
+
+def test_unaligned_max_len_admission(engine_setup):
+    """A max_len that is not a block multiple must not crash admission
+    (the pow2 bucket clamps to max_len and then needs block rounding)."""
+    cfg, arch, params = engine_setup
+    ec = EngineConfig(slots=2, max_len=60, block_len=8)
+    eng = PagedServeEngine(arch, params, ec)
+    eng.submit(Request(rid=0,
+                       prompt=(np.arange(33) % cfg.vocab).astype(np.int32),
+                       max_new_tokens=27))
+    done = eng.run_until_drained()
+    assert len(done) == 1 and len(done[0].output) == 27
+    assert eng.alloc.free_blocks == eng.layout.usable_blocks
+
+
+def test_windowed_int8_paged_decode_matches_dense():
+    """Sliding-window ('L') layers on the int8 path: the paged cache keeps
+    full history and must window-mask at attention time to match the dense
+    engine's ring cache once positions pass local_window."""
+    import jax.numpy as jnp
+
+    from repro.models.cache import PagedLayout
+
+    cfg = configs.smoke_config("gemma3-4b")   # pattern LLLLLG, window 16
+    arch = registry.build(cfg)
+    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+    qparams = arch.quantize_params(params)
+    toks = jnp.asarray(np.arange(6)[None, :] % cfg.vocab, jnp.int32)
+    n_steps = 14                              # positions 6..19 cross window
+
+    _, dense_cache = arch.prefill(params, toks, 20)
+    layout = PagedLayout(4, 12, 20)
+    paged_cache = arch.init_paged_cache(1, layout)
+    _, single = arch.prefill(params, toks, 8)
+    blocks = [3, 7]
+    paged_cache = arch.paged_insert(paged_cache, single, 0, blocks)
+    table = np.zeros((1, layout.max_blocks), np.int32)
+    table[0, :2] = blocks
+    free = [b for b in range(1, 12) if b not in blocks]
+
+    dense_step = jax.jit(
+        lambda c, t: arch.decode_step(params, c, t, qparams=qparams))
+    paged_step = jax.jit(
+        lambda c, t, tbl: arch.paged_decode_step(params, c, t, tbl,
+                                                 qparams=qparams))
+    tok = jnp.asarray([11], jnp.int32)
+    for step in range(n_steps):
+        pos = 6 + step
+        needed = pos // layout.block_len + 1
+        have = int((table[0] > 0).sum())
+        if have < needed:
+            table[0, have] = free.pop(0)
+        ld, dense_cache = dense_step(dense_cache, tok)
+        lp, paged_cache = paged_step(paged_cache, tok, jnp.asarray(table))
+        np.testing.assert_allclose(
+            np.asarray(lp, np.float32), np.asarray(ld, np.float32),
+            atol=1e-3, rtol=1e-3,
+            err_msg=f"diverged at position {pos}")
+        tok = jnp.asarray([int(jnp.argmax(ld[0]))], jnp.int32)
+
+
+def test_paged_rejects_unsupported_family():
+    cfg = configs.smoke_config("recurrentgemma-9b")
+    arch = registry.build(cfg)
+    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+    with pytest.raises(NotImplementedError):
+        PagedServeEngine(arch, params, EngineConfig(slots=2, max_len=32))
+
+
+def test_encdec_paged_decode_matches_dense():
+    """Model-level wiring: the enc-dec family pages its self-attention KV
+    (cross K/V stays dense) and matches the dense decode step."""
+    import jax.numpy as jnp
+
+    from repro.models.cache import PagedLayout
+
+    cfg = configs.smoke_config("whisper-small")
+    arch = registry.build(cfg)
+    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+    toks = jnp.asarray(np.arange(6)[None, :] % cfg.vocab, jnp.int32)
+    embeds = 0.1 * jax.random.normal(
+        jax.random.key(2), (1, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+
+    _, dense_cache = arch.prefill(params, toks, 16, embeds=embeds)
+    layout = PagedLayout(4, 9, 16)
+    paged_cache = arch.init_paged_cache(1, layout)
+    _, single = arch.prefill(params, toks, 8, embeds=embeds)
+    paged_cache = arch.paged_insert(paged_cache, single, 0, [6, 2])
+    table = np.zeros((1, layout.max_blocks), np.int32)
+    table[0, :2] = [6, 2]
+
+    nxt = jnp.asarray([11], jnp.int32)
+    logits_d, _ = arch.decode_step(params, dense_cache, nxt)
+    logits_p, _ = arch.paged_decode_step(params, paged_cache, nxt, table)
+    np.testing.assert_allclose(
+        np.asarray(logits_p, np.float32), np.asarray(logits_d, np.float32),
+        atol=1e-2, rtol=1e-2)
+
+
+def test_moe_paged_decode_matches_dense():
+    """Model-level wiring: the MoE family's paged decode step produces the
+    same logits as its dense decode step."""
+    import jax.numpy as jnp
+
+    from repro.models.cache import PagedLayout
+
+    cfg = configs.smoke_config("qwen3-moe-30b-a3b")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    arch = registry.build(cfg)
+    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+    toks = jnp.asarray(np.arange(6)[None, :] % cfg.vocab, jnp.int32)
+
+    _, dense_cache = arch.prefill(params, toks, 16)
+    layout = PagedLayout(4, 9, 16)
+    paged_cache = arch.init_paged_cache(1, layout)
+    _, single = arch.prefill(params, toks, 8)    # 2 blocks of 4
+    paged_cache = arch.paged_insert(paged_cache, single, 0, [3, 5])
+    table = np.zeros((1, layout.max_blocks), np.int32)
+    table[0, :2] = [3, 5]
+
+    nxt = jnp.asarray([11], jnp.int32)
+    logits_d, _ = arch.decode_step(params, dense_cache, nxt)
+    logits_p, _ = arch.paged_decode_step(params, paged_cache, nxt, table)
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_d),
+                               atol=1e-5, rtol=1e-4)
