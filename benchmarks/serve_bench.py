@@ -14,10 +14,16 @@ Claims validated:
     for both vectorized engines;
   * **capacity**: at the dense arena's exact KV token budget, the paged
     pool admits ≥ 2x the concurrent requests on a short-request workload
-    (ISSUE 2) — the block pool recycles what short requests never use.
+    (ISSUE 2) — the block pool recycles what short requests never use;
+  * **sliding-window capacity** (ISSUE 3 ring blocks): a model whose
+    ``local_window < max_len`` serves on the paged engine token-identical
+    to the dense arena while every sliding-window layer's pool holds only
+    ``slots · (ceil(window/block)+1)`` blocks — per-sliding-layer KV
+    residency bounded by the window, not ``max_len``.
 
-Emits ``BENCH_serve.json`` with the batched/paged throughputs and the
-paged-vs-dense concurrency comparison so future PRs can track both.
+Emits ``BENCH_serve.json`` with the batched/paged throughputs, the
+paged-vs-dense concurrency comparison and the sliding-window (ring-block)
+capacity entry so future PRs can track all three.
 """
 
 from __future__ import annotations
@@ -138,6 +144,54 @@ def main(csv: bool = True):
         f"ratio={capacity_ratio:.2f}x (claim: >=2x)",
     ))
 
+    # sliding-window (ring-block) capacity: a windowed model serves on the
+    # paged engine with per-L-layer pools bounded by the window; greedy
+    # output must match the dense arena engine token-for-token
+    from repro.models.cache import ring_blocks_for
+
+    sw_cfg = configs.smoke_config("gemma3-4b")      # LLLLLG, window 16
+    sw_arch = registry.build(sw_cfg)
+    sw_params = schema_lib.init_params(sw_arch.schema(), jax.random.key(0))
+    sw_ec = EngineConfig(slots=4, max_len=MAX_LEN, block_len=BLOCK_LEN)
+    def sw_work():       # fresh identical workload per engine
+        return _workload(sw_cfg, seed=3)[:12]
+
+    sw_dense = BatchedServeEngine(sw_arch, sw_params, sw_ec)
+    for r in sw_work():
+        sw_dense.submit(r)
+    sw_dense_out = {r.rid: list(r.output)
+                    for r in sw_dense.run_until_drained()}
+    sw_eng = PagedServeEngine(sw_arch, sw_params, sw_ec)
+    sw_done, sw_wall, _ = _drive(sw_eng, sw_work())
+    sw_out = {r.rid: list(r.output) for r in sw_done}
+    assert sw_eng.ring, "sliding-window run did not use ring blocks"
+    assert sw_out == sw_dense_out, "ring-block serving diverged from dense"
+    wb = ring_blocks_for(sw_cfg.local_window, BLOCK_LEN)
+    assert sw_eng.layout.ring_blocks == wb
+    assert sw_eng.layout.ring_num_blocks == 1 + sw_ec.slots * wb
+    ring_tokens = wb * BLOCK_LEN
+    sliding = {
+        "arch": sw_cfg.name,
+        "local_window": sw_cfg.local_window,
+        "max_len": sw_ec.max_len,
+        "block_len": BLOCK_LEN,
+        "ring_blocks_per_slot": wb,
+        "ring_pool_blocks": sw_eng.layout.ring_num_blocks,
+        "full_pool_blocks": sw_eng.layout.num_blocks,
+        "ring_tokens_per_slot": ring_tokens,
+        "dense_tokens_per_slot": sw_ec.max_len,
+        "sliding_layer_residency_ratio": sw_ec.max_len / ring_tokens,
+        "tokens_per_s": sum(len(r.output) for r in sw_done) / sw_wall,
+        "token_identical_to_dense": True,
+    }
+    rows.append((
+        "serve_paged_sliding_window", sw_wall * 1e6 / max(sw_eng.iterations, 1),
+        f"window={sw_cfg.local_window}|ring_blocks/slot={wb}|"
+        f"L-residency={ring_tokens} vs dense {sw_ec.max_len} tokens/slot "
+        f"({sliding['sliding_layer_residency_ratio']:.1f}x smaller)|"
+        f"identical=yes",
+    ))
+
     bat, ref, pag = results["batched"], results["per_slot"], results["paged"]
     speedup = bat["tokens_per_s"] / ref["tokens_per_s"]
     rows.append(("serve_speedup", 0.0,
@@ -161,6 +215,7 @@ def main(csv: bool = True):
                 "dense_concurrent_slots": SLOTS,
                 "paged_concurrent_slots": cap_eng.max_concurrent,
                 "capacity_ratio": capacity_ratio,
+                "sliding_window": sliding,
             },
         }, f, indent=2)
 

@@ -19,6 +19,12 @@ Dataflow per (row b, kv-head h):
 Grouped GQA: the q "row" is the [group, D] bundle of query heads sharing
 kv-head h, so pool blocks are read once per kv head, not per query head.
 
+Ring tables (sliding-window layers): the table may cover a *rotating*
+window of blocks instead of the full history. A third scalar-prefetched
+vector ``start`` gives each row the absolute position of table entry 0's
+first row, so masking is always by absolute position — full-history
+callers pass zeros and the two layouts share one kernel.
+
 Contract: allclose against ``ref.paged_attention_ref`` (same masking; the
 flash accumulation only reorders f32 additions).
 """
@@ -37,7 +43,7 @@ NEG_INF = -1e30
 
 
 def _paged_kernel(
-    table_ref, lens_ref,            # scalar prefetch (SMEM)
+    table_ref, lens_ref, start_ref,  # scalar prefetch (SMEM)
     q_ref, k_ref, v_ref,            # blocks picked by index maps
     o_ref,
     m_ref, l_ref, acc_ref,          # VMEM scratch
@@ -54,8 +60,12 @@ def _paged_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     length = lens_ref[b]
+    # absolute position of table entry i's first row: ring tables hand the
+    # kernel a window-start vector (entry 0 = oldest live block); full-
+    # history tables pass zeros and reduce to position == table offset
+    row0 = start_ref[b] + i * block_len
     # skip table entries entirely past the row's valid length
-    @pl.when(i * block_len < length)
+    @pl.when(row0 < length)
     def _block():
         q = q_ref[0, 0].astype(jnp.float32)    # [group, D] (pre-scaled)
         k = k_ref[0, 0].astype(jnp.float32)    # [block_len, D]
@@ -63,7 +73,7 @@ def _paged_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)  # [group, block_len]
-        pos = i * block_len + jax.lax.broadcasted_iota(
+        pos = row0 + jax.lax.broadcasted_iota(
             jnp.int32, (group, block_len), 1)
         mask = pos < length
         if window is not None:
@@ -99,6 +109,7 @@ def paged_attention_pallas(
     lens: jax.Array,         # [B] int32
     *,
     window: Optional[int] = None,
+    start: Optional[jax.Array] = None,  # [B] int32 abs position of entry 0
     interpret: bool = False,
 ) -> jax.Array:
     b, hq, _, d = q.shape
@@ -108,17 +119,23 @@ def paged_attention_pallas(
     if hq % hkv:
         raise ValueError(f"query heads {hq} not a multiple of kv heads {hkv}")
     qg = (q.astype(jnp.float32) * (d ** -0.5)).reshape(b, hkv, group, d)
+    if start is None:
+        start = jnp.zeros((b,), jnp.int32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # block table + lens drive the index maps
+        # block table + lens + window start drive index maps and masking
+        num_scalar_prefetch=3,
         grid=(b, hkv, m),
         in_specs=[
-            pl.BlockSpec((1, 1, group, d), lambda bi, h, i, tbl, ln: (bi, h, 0, 0)),
-            pl.BlockSpec((1, 1, blk, d), lambda bi, h, i, tbl, ln: (tbl[bi, i], h, 0, 0)),
-            pl.BlockSpec((1, 1, blk, d), lambda bi, h, i, tbl, ln: (tbl[bi, i], h, 0, 0)),
+            pl.BlockSpec((1, 1, group, d),
+                         lambda bi, h, i, tbl, ln, st: (bi, h, 0, 0)),
+            pl.BlockSpec((1, 1, blk, d),
+                         lambda bi, h, i, tbl, ln, st: (tbl[bi, i], h, 0, 0)),
+            pl.BlockSpec((1, 1, blk, d),
+                         lambda bi, h, i, tbl, ln, st: (tbl[bi, i], h, 0, 0)),
         ],
         out_specs=pl.BlockSpec(
-            (1, 1, group, d), lambda bi, h, i, tbl, ln: (bi, h, 0, 0)),
+            (1, 1, group, d), lambda bi, h, i, tbl, ln, st: (bi, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((group, 1), jnp.float32),
             pltpu.VMEM((group, 1), jnp.float32),
@@ -133,5 +150,5 @@ def paged_attention_pallas(
         out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
         interpret=interpret,
     )(block_table.astype(jnp.int32), jnp.asarray(lens, jnp.int32),
-      qg, k_pool, v_pool)
+      jnp.asarray(start, jnp.int32), qg, k_pool, v_pool)
     return out.reshape(b, hq, 1, d)

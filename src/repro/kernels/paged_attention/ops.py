@@ -3,7 +3,10 @@
 ``paged_attention(q, k_pool, v_pool, block_table, lens)`` computes one-token
 decode attention where each batch row's KV lives in fixed-size blocks of a
 shared pool, addressed through a per-row block table (position ``p`` is
-table entry ``p // block_len``, offset ``p % block_len``).
+table entry ``(p - start) // block_len``, offset ``p % block_len``).
+``start`` (default zeros) is the absolute position of table entry 0: ring
+tables for sliding-window layers rotate and hand the kernel the window's
+block-aligned start per row; full-history tables leave it at 0.
 
 Backends:
   * ``pallas``    — TPU kernel; scalar-prefetched block table drives the
@@ -33,6 +36,7 @@ def paged_attention(
     lens: jax.Array,         # [B] int32 valid positions per row
     *,
     window: Optional[int] = None,
+    start: Optional[jax.Array] = None,  # [B] int32 abs position of entry 0
     backend: str = DEFAULT_BACKEND,
 ) -> jax.Array:
     if q.shape[1] % k_pool.shape[1]:
@@ -41,9 +45,9 @@ def paged_attention(
             f"{k_pool.shape[1]}")
     if backend in ("pallas", "interpret"):
         return paged_attention_pallas(
-            q, k_pool, v_pool, block_table, lens, window=window,
+            q, k_pool, v_pool, block_table, lens, window=window, start=start,
             interpret=backend == "interpret")
     if backend == "xla":
         return paged_attention_ref(
-            q, k_pool, v_pool, block_table, lens, window=window)
+            q, k_pool, v_pool, block_table, lens, window=window, start=start)
     raise ValueError(f"unknown backend {backend!r}")

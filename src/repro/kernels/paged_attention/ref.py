@@ -2,8 +2,10 @@
 
 Gathers each row's KV blocks from the shared pool into a contiguous
 ``[B, Hkv, max_blocks·block_len, D]`` view (block-table order IS position
-order — position ``p`` lives in table entry ``p // block_len`` at offset
-``p % block_len``) and runs the standard masked decode attention over it.
+order — position ``p`` lives in table entry ``(p - start) // block_len``
+at offset ``p % block_len``; ``start`` is 0 for full-history tables and
+the first live block's absolute position for sliding-window ring tables)
+and runs the standard masked decode attention over it.
 
 This is also the ``xla`` serving backend on CPU: the gather is one
 ``take`` per layer and XLA fuses the rest; entries past ``lens`` (and, for
@@ -38,6 +40,7 @@ def paged_attention_ref(
     lens: jax.Array,         # [B] int32 valid positions per row
     *,
     window: Optional[int] = None,
+    start: Optional[jax.Array] = None,  # [B] int32 abs position of entry 0
 ) -> jax.Array:
     b, hq, _, d = q.shape
     _, hkv, blk, _ = k_pool.shape
@@ -45,11 +48,15 @@ def paged_attention_ref(
     k = gather_kv(k_pool, block_table)   # [B, Hkv, S, D]
     v = gather_kv(v_pool, block_table)
     s = k.shape[2]
-    idx = jnp.arange(s)
+    # absolute position of gathered entry j: start + j (ring tables start at
+    # the window's first live block; full-history tables start at 0)
+    idx = jnp.arange(s)[None, :]
+    if start is not None:
+        idx = idx + jnp.asarray(start, jnp.int32).reshape(-1, 1)
     cl = jnp.asarray(lens, jnp.int32).reshape(-1, 1)
-    valid = idx[None, :] < cl
+    valid = idx < cl
     if window is not None:
-        valid &= idx[None, :] >= cl - window
+        valid &= idx >= cl - window
     # grouped GQA (no KV head expansion), f32 softmax — matches
     # models.attention.decode_attention numerics exactly
     qg = q.reshape(b, hkv, group, d)

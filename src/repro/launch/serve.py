@@ -25,14 +25,20 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--admit-window", type=int, default=8)
+    ap.add_argument("--admit-batch", type=int, default=1,
+                    help="max admissions per iteration (cold-start ramp "
+                         "reaches full concurrency in slots/admit_batch "
+                         "iterations)")
     ap.add_argument("--block-len", type=int, default=16,
                     help="KV block size (paged engine)")
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="KV pool size incl. trash block (paged engine; "
-                         "default matches the dense arena budget)")
+                         "default matches the dense arena budget; "
+                         "sliding-window layers use a separate ring arena "
+                         "bounded by the window)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 enables on-device sampling "
-                         "(batched engine only)")
+                         "(vectorized engines)")
     args = ap.parse_args()
 
     import jax
@@ -50,6 +56,7 @@ def main():
     params = schema_lib.init_params(arch.schema(), jax.random.key(0))
     ec = EngineConfig(slots=args.slots, max_len=args.max_len,
                       admit_window=args.admit_window,
+                      admit_batch=args.admit_batch,
                       greedy=args.temperature <= 0,
                       temperature=max(args.temperature, 1e-6),
                       block_len=args.block_len, num_blocks=args.num_blocks)

@@ -150,6 +150,7 @@ def decode_attention_int8(
     cfg,
     *,
     window: Optional[int] = None,
+    start: Optional[jax.Array] = None,  # [B] abs position of cache row 0
 ) -> jax.Array:
     """One-token ITA integer attention against an int8 KV cache.
 
@@ -160,7 +161,9 @@ def decode_attention_int8(
 
     ``window`` masks entries before ``cache_len − window`` — needed by
     caches that store full-length history (the paged layout); ring caches
-    enforce the window physically and leave it None.
+    enforce the window physically and leave it None. ``start`` shifts the
+    masking to absolute positions for caches gathered from a rotating ring
+    block table (row ``j`` holds absolute position ``start + j``).
     """
     from repro.core import ita
 
@@ -193,12 +196,14 @@ def decode_attention_int8(
     t = (s8.astype(jnp.int32) * spec.alpha_mult) >> spec.alpha_rshift
     neg = -(31 << ita.FB)
     t = jnp.maximum(t, neg)
-    idx = jnp.arange(s_cache)
+    idx = jnp.arange(s_cache)[None, None, None, :]
+    if start is not None:
+        idx = idx + jnp.asarray(start, jnp.int32).reshape(-1, 1, 1, 1)
     # cache_len: scalar or per-row [B] position vector
     cl = jnp.asarray(cache_len, jnp.int32).reshape(-1, 1, 1, 1)
-    valid = idx[None, None, None, :] < cl
+    valid = idx < cl
     if window is not None:
-        valid &= idx[None, None, None, :] >= cl - window
+        valid &= idx >= cl - window
     t = jnp.where(valid, t, neg)
     m = jnp.max(t, -1, keepdims=True)
     be = -((-m) >> ita.FB)

@@ -20,7 +20,7 @@ family's cache as a fixed-shape ``[slots, ...]`` arena:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +83,13 @@ def blocks_for(n_tokens: int, block_len: int) -> int:
     return max(1, -(-n_tokens // block_len))
 
 
+def ring_blocks_for(window: int, block_len: int) -> int:
+    """Ring-table width for a sliding-window layer: enough blocks to hold
+    the window plus one write-ahead block (the newest block fills while the
+    oldest still holds in-window positions)."""
+    return blocks_for(window, block_len) + 1
+
+
 @dataclasses.dataclass
 class PagedLayout:
     """Static shape plan for a paged KV pool.
@@ -91,17 +98,36 @@ class PagedLayout:
     capacity is ``(num_blocks - 1) * block_len`` tokens. ``max_blocks`` is
     the block-table width — the per-slot worst case ``ceil(max_len /
     block_len)``.
+
+    **Ring blocks** (sliding-window "L" layers): when ``window`` is set,
+    L-layer pools are sized ``ring_num_blocks`` rows instead of
+    ``num_blocks`` and each slot reuses a fixed set of
+    ``ring_blocks = ceil(window / block_len) + 1`` blocks circularly —
+    absolute block index ``bi`` lives in the slot's ring entry
+    ``bi % ring_blocks``, and the host-owned ring table rotates as the
+    window slides (entry 0 is always the oldest live block). ``window``
+    left ``None`` keeps the PR-2 behavior: full-length history in every
+    layer, window masking at attention time.
     """
 
     block_len: int
     num_blocks: int
     max_len: int
+    window: Optional[int] = None       # L layers go ring-block when set
+    ring_num_blocks: int = 0           # L-layer pool rows incl. trash
 
     def __post_init__(self):
         if self.block_len & (self.block_len - 1):
             raise ValueError(f"block_len {self.block_len} not a power of two")
         if self.num_blocks < 2:
             raise ValueError("need at least one usable block beside trash")
+        if self.window is not None:
+            if self.window < 1:
+                raise ValueError(f"window {self.window} must be >= 1")
+            if self.ring_num_blocks < self.ring_blocks + 1:
+                raise ValueError(
+                    f"ring pool ({self.ring_num_blocks} rows) smaller than "
+                    f"one ring ({self.ring_blocks} blocks) + trash")
 
     @property
     def max_blocks(self) -> int:
@@ -114,6 +140,13 @@ class PagedLayout:
     @property
     def usable_tokens(self) -> int:
         return self.usable_blocks * self.block_len
+
+    @property
+    def ring_blocks(self) -> int:
+        """Per-slot ring-table width (0 when ring blocks are disabled)."""
+        if self.window is None:
+            return 0
+        return ring_blocks_for(self.window, self.block_len)
 
 
 class BlockAllocator:
@@ -229,3 +262,76 @@ def paged_insert_kv(pool: jax.Array, single: jax.Array,
     src = single[:, 0].reshape(n_stack, hkv, nb, blk, d).transpose(0, 2, 1, 3, 4)
     out = pool.at[:, block_ids].set(src.astype(pool.dtype))
     return out if stacked else out[0]
+
+
+def _pad_to_blocks(kv: jax.Array, n_blocks: int, block_len: int) -> jax.Array:
+    """Right-pad a ``[..., S, D]`` prefill KV leaf to ``n_blocks·block_len``
+    positions (pad rows are garbage-by-construction: masked by ``len``)."""
+    s = kv.shape[-2]
+    target = n_blocks * block_len
+    if s > target:
+        raise ValueError(f"prefill length {s} exceeds {n_blocks} blocks "
+                         f"× {block_len}")
+    if s == target:
+        return kv
+    pad = [(0, 0)] * kv.ndim
+    pad[-2] = (0, target - s)
+    return jnp.pad(kv, pad)
+
+
+def prefill_write_kv(pool: jax.Array, single: jax.Array,
+                     block_ids: jax.Array) -> jax.Array:
+    """Paged-prefill write for a full-history layer: full blocks in bulk,
+    the tail at block granularity (the partially-valid last block is padded
+    to ``block_len`` and written whole; pad rows are masked by ``len``).
+
+    Same layout contract as ``paged_insert_kv`` but tolerant of prefill
+    lengths that are not block multiples.
+    """
+    blk = pool.shape[-2]
+    return paged_insert_kv(
+        pool, _pad_to_blocks(single, block_ids.shape[0], blk), block_ids)
+
+
+def ring_prefill_write_kv(pool: jax.Array, single: jax.Array,
+                          ring_ids: jax.Array, true_len) -> jax.Array:
+    """Paged-prefill write for a sliding-window (ring) layer.
+
+    Only the last ``ring_blocks`` blocks of the prefill matter (decode
+    attention never reaches further back than ``window`` positions, and
+    ``ring_blocks·block_len ≥ window + block_len``), so absolute block
+    index ``bi`` is written to the slot's ring block ``ring_ids[bi %
+    ring_blocks]`` — the same modular convention the serve engine's
+    rotating ring table exposes to the decode step. Blocks past the last
+    *true* position are skipped (their write is diverted to the trash
+    block) so a padded admission bucket can never wrap over live history.
+
+    ``pool``     [n_stack, N_ring, Hkv, blk, D] (or 4D unstacked),
+    ``single``   [n_stack, 1, Hkv, S, D] prefill KV (S ≥ true_len),
+    ``ring_ids`` [ring_blocks] int32, ``true_len`` int32 scalar (traced ok).
+    """
+    stacked = pool.ndim == 5
+    if not stacked:
+        pool, single = pool[None], single[None]
+    blk = pool.shape[3]
+    wb = ring_ids.shape[0]
+    n = jnp.asarray(true_len, jnp.int32)
+    single = _pad_to_blocks(single, -(-single.shape[3] // blk), blk)
+    last_bi = jnp.maximum(n - 1, 0) // blk      # block of the last true token
+    first_bi = jnp.maximum(last_bi - (wb - 1), 0)
+    for r in range(wb):                          # one write per ring entry
+        # the unique block index in [first_bi, first_bi + wb) with bi ≡ r
+        bi = first_bi + (r - first_bi) % wb
+        live = bi <= last_bi
+        src = jax.lax.dynamic_slice_in_dim(
+            single, jnp.where(live, bi, 0) * blk, blk, axis=3)
+        tgt = jnp.where(live, ring_ids[r], TRASH_BLOCK)
+        pool = pool.at[:, tgt].set(src[:, 0].astype(pool.dtype))
+    return pool if stacked else pool[0]
+
+
+def ring_table_row(ring_ids, first_bi: int):
+    """Host-side rotated ring-table row: entry ``j`` is the pool block of
+    absolute block index ``first_bi + j`` (entry 0 = oldest live block)."""
+    wb = len(ring_ids)
+    return [int(ring_ids[(first_bi + j) % wb]) for j in range(wb)]

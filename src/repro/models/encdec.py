@@ -133,6 +133,21 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, quantized=None):
     }
 
 
+def _dec_prefill_layer(xc, p, enc, cfg: ModelConfig, positions):
+    """One decoder-layer prefill application; returns (x, k, v, xk, xv).
+    Shared by ``prefill`` and ``paged_prefill`` so the dense and paged
+    write paths can never diverge in how layers are applied."""
+    h = nn.rms_norm(xc, p["ln1"])
+    q, k, v = dense._project_qkv(h, p, cfg, positions)
+    o = attn.chunked_attention(q, k, v, causal=True,
+                               chunk_q=min(cfg.attn_chunk_q, xc.shape[1]))
+    xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
+    xk, xv = _enc_kv(p, enc, cfg)
+    xc = _cross_attn(xc, p, (xk, xv), cfg)
+    xc = xc + dense._mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
+    return xc, k, v, xk, xv
+
+
 def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
     """Encode audio + ingest decoder prompt; cache cross-K/V per layer."""
     if embeds is None:
@@ -144,14 +159,7 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
     cache = init_cache(cfg, b, max_len)
 
     def body(xc, p):
-        h = nn.rms_norm(xc, p["ln1"])
-        q, k, v = dense._project_qkv(h, p, cfg, positions)
-        o = attn.chunked_attention(q, k, v, causal=True,
-                                   chunk_q=min(cfg.attn_chunk_q, s))
-        xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
-        xk, xv = _enc_kv(p, enc, cfg)
-        xc = _cross_attn(xc, p, (xk, xv), cfg)
-        xc = xc + dense._mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
+        xc, k, v, xk, xv = _dec_prefill_layer(xc, p, enc, cfg, positions)
         kw = jnp.pad(k, ((0, 0), (0, 0), (0, max_len - s), (0, 0)))
         vw = jnp.pad(v, ((0, 0), (0, 0), (0, max_len - s), (0, 0)))
         return xc, (kw.astype(cfg.compute_dtype), vw.astype(cfg.compute_dtype),
@@ -202,6 +210,53 @@ def paged_insert(cache, single, slot, block_ids, cfg: ModelConfig):
     return out
 
 
+def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
+                  *, ring_ids=None, true_len=None, embeds=None):
+    """Encode audio + ingest decoder prompt straight into the paged cache:
+    self-attention K/V lands in pool blocks (bulk block writes, tail at
+    block granularity), cross-attention K/V and the position counter land
+    in ``slot``'s dense rows. No intermediate dense cache, no splice."""
+    from repro.models.cache import prefill_write_kv
+
+    if ring_ids is not None:
+        raise ValueError(
+            "encdec has no sliding-window layers: ring_ids must be None "
+            "(a ring table/start layout would be read incorrectly)")
+    if embeds is None:
+        raise ValueError("encdec prefill needs frame embeddings (stub input)")
+    enc = encode(params, embeds, cfg)
+    x = nn.embed(tokens, params["embed"], cfg.compute_dtype)
+    b, s = x.shape[:2]
+    positions = jnp.arange(s)
+    block_ids = jnp.asarray(block_ids, jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    n = jnp.asarray(s if true_len is None else true_len, jnp.int32)
+
+    def body(carry, slices):
+        xc = carry
+        p, kc, vc = slices
+        xc, k, v, xk, xv = _dec_prefill_layer(xc, p, enc, cfg, positions)
+        kc = prefill_write_kv(kc, k, block_ids)
+        vc = prefill_write_kv(vc, v, block_ids)
+        return xc, (kc, vc, xk.astype(cfg.compute_dtype),
+                    xv.astype(cfg.compute_dtype))
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(
+        body, x, (params["dec_stack"], cache["k"], cache["v"]))
+    x = nn.rms_norm(x, params["final_norm"])
+    lens = jnp.broadcast_to(n, (b,))
+    last = x[jnp.arange(b), lens - 1][:, None]
+    logits = nn.unembed(last, params["unembed"])
+    out = dict(cache, k=ks, v=vs)
+    out["xk"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["xk"], xks.astype(cache["xk"].dtype), slot, axis=1)
+    out["xv"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["xv"], xvs.astype(cache["xv"].dtype), slot, axis=1)
+    out["len"] = jax.lax.dynamic_update_slice(
+        cache["len"], n[None].astype(jnp.int32), (slot,))
+    return logits[:, 0], out
+
+
 def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
                       qparams=None, embeds=None, attn_backend: str = "xla"):
     """One decode step with paged self-attention KV (cross K/V stays dense)."""
@@ -211,7 +266,10 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
     x = nn.embed(tokens[:, None], params["embed"], cfg.compute_dtype)
     b = x.shape[0]
     pos = dense._as_positions(cache["len"], b)
-    table = jnp.asarray(table, jnp.int32)
+    table = jax.tree.map(lambda a: jnp.asarray(a, jnp.int32), table)
+    # self-attention is always global in this family — resolve as kind "G"
+    # (start is always None for global layers; no window plumbing applies)
+    tbl, _ = dense._resolve_paged_table(table, "G")
     hd = cfg.hd
 
     def body(xc, slices):
@@ -222,10 +280,10 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
         v = nn.dense(h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
         q = nn.rope(q, pos[:, None, None], cfg.rope_theta)
         k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
-        sc = dense._paged_cache_write({"k": kc, "v": vc}, k, v, pos, table,
+        sc = dense._paged_cache_write({"k": kc, "v": vc}, k, v, pos, tbl,
                                       kc.shape[2])
         kc, vc = sc["k"], sc["v"]
-        o = paged_attention(q, kc, vc, table, pos + 1, backend=attn_backend)
+        o = paged_attention(q, kc, vc, tbl, pos + 1, backend=attn_backend)
         xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
         hx = nn.rms_norm(xc, p["lnx"])
         xq = nn.dense(hx, p["xwq"]).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)

@@ -334,10 +334,12 @@ def _paged_decode_layer(x, p, c, kind, cfg, pos, table, attn_backend):
     v = nn.dense(h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
     q = nn.rope(q, pos[:, None, None], cfg.rope_theta)
     k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
-    c = dense._paged_cache_write(c, k, v, pos, table, c["k"].shape[2])
-    o = paged_attention(q, c["k"], c["v"], table, pos + 1,
+    tbl, start = dense._resolve_paged_table(table, kind)
+    c = dense._paged_cache_write(c, k, v, pos, tbl, c["k"].shape[2],
+                                 start=start)
+    o = paged_attention(q, c["k"], c["v"], tbl, pos + 1,
                         window=cfg.local_window if kind == "L" else None,
-                        backend=attn_backend)
+                        start=start, backend=attn_backend)
     x = x + nn.dense(dense._merge_heads(o), p["wo"])
     x = x + moe_mlp(nn.rms_norm(x, p["ln2"]), p, cfg)
     return x, c
@@ -352,7 +354,7 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
     x = embeds if embeds is not None else nn.embed(
         tokens[:, None], params["embed"], cfg.compute_dtype)
     pos = dense._as_positions(cache["len"], x.shape[0])
-    table = jnp.asarray(table, jnp.int32)
+    table = jax.tree.map(lambda a: jnp.asarray(a, jnp.int32), table)
 
     def group_body(xc, slices):
         stacks_slice, cache_slice = slices
@@ -380,6 +382,21 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
     return logits[:, 0], dict(cache, len=cache["len"] + 1)
 
 
+def _prefill_layer(xc, p, kind, cfg: ModelConfig, positions):
+    """One prefill layer application; returns (x, this layer's k, v).
+    Shared by ``prefill`` and ``paged_prefill`` so the two write paths can
+    never diverge in how layers are applied."""
+    h = nn.rms_norm(xc, p["ln1"])
+    q, k, v = dense._project_qkv(h, p, cfg, positions)
+    o = attn.chunked_attention(
+        q, k, v, causal=kind != "B",
+        window=cfg.local_window if kind == "L" else None,
+        chunk_q=min(cfg.attn_chunk_q, xc.shape[1]))
+    xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
+    xc = xc + moe_mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
+    return xc, k, v
+
+
 def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
     """MoE prefill: forward + cache (float path)."""
     pattern, n_groups, tail = cfg.layer_layout()
@@ -389,36 +406,55 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
     positions = jnp.arange(s)
     cache = init_cache(cfg, b, max_len, quantized=False)
 
+    def fill(c_kv, k, v):
+        s_len = c_kv["k"].shape[2]
+        if s <= s_len:
+            pad = ((0, 0), (0, 0), (0, s_len - s), (0, 0))
+            kw, vw = jnp.pad(k, pad), jnp.pad(v, pad)
+        else:
+            # ring semantics (as in the dense family): absolute position p
+            # lives at slot p % s_len, so decode's ring write evicts the
+            # oldest in-window position, not an arbitrary one
+            kw = jnp.roll(k[:, :, -s_len:], s % s_len, axis=2)
+            vw = jnp.roll(v[:, :, -s_len:], s % s_len, axis=2)
+        return {"k": kw.astype(c_kv["k"].dtype),
+                "v": vw.astype(c_kv["v"].dtype)}
+
     def group_body(xc, slices):
         stacks_slice, cache_slice = slices
         new_caches = []
         for i, kind in enumerate(pattern):
-            p = stacks_slice[i]
-            h = nn.rms_norm(xc, p["ln1"])
-            q, k, v = dense._project_qkv(h, p, cfg, positions)
-            o = attn.chunked_attention(
-                q, k, v, causal=kind != "B",
-                window=cfg.local_window if kind == "L" else None,
-                chunk_q=min(cfg.attn_chunk_q, s))
-            xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
-            xc = xc + moe_mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
-            s_len = cache_slice[i]["k"].shape[2]
-            kw = k[:, :, -s_len:] if s >= s_len else jnp.pad(
-                k, ((0, 0), (0, 0), (0, s_len - s), (0, 0)))
-            vw = v[:, :, -s_len:] if s >= s_len else jnp.pad(
-                v, ((0, 0), (0, 0), (0, s_len - s), (0, 0)))
-            new_caches.append({"k": kw.astype(cache_slice[i]["k"].dtype),
-                               "v": vw.astype(cache_slice[i]["v"].dtype)})
+            xc, k, v = _prefill_layer(xc, stacks_slice[i], kind, cfg,
+                                      positions)
+            new_caches.append(fill(cache_slice[i], k, v))
         return xc, tuple(new_caches)
 
     if n_groups > 0:
         x, new_caches = jax.lax.scan(
             group_body, x, (tuple(params["stacks"]), tuple(cache["stacks"])))
         cache = dict(cache, stacks=list(new_caches))
+    for i, kind in enumerate(tail):  # layers past the last full group
+        p = jax.tree.map(lambda a: a[0], params["tail"][i])
+        c_in = jax.tree.map(lambda a: a[0], cache["tail"][i])
+        x, k, v = _prefill_layer(x, p, kind, cfg, positions)
+        cache["tail"][i] = jax.tree.map(lambda a: a[None], fill(c_in, k, v))
     x = nn.rms_norm(x, params["final_norm"])
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
     logits = nn.unembed(x[:, -1:], table)
     return logits[:, 0], dict(cache, len=jnp.full((b,), s, jnp.int32))
+
+
+def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
+                  *, ring_ids=None, true_len=None, embeds=None):
+    """MoE prefill straight into pool blocks: the dense family's shared
+    scaffold with this family's expert-FFN layer (see ``dense.
+    _paged_prefill_impl`` for the write conventions). ``tokens`` should be
+    the exact prompt (no bucket padding): pad tokens would enlarge the
+    routing capacity ``_capacity(cfg, s)`` and could change which real
+    tokens overflow — the K/V writes pad to block granularity instead."""
+    return dense._paged_prefill_impl(
+        params, tokens, cfg, cache, slot, block_ids, layer_fn=_prefill_layer,
+        ring_ids=ring_ids, true_len=true_len, embeds=embeds)
 
 
 # ---------------------------------------------------------------------------

@@ -41,10 +41,16 @@ class Arch:
     init_paged_cache: Optional[Callable] = None
     paged_decode_step: Optional[Callable] = None
     paged_insert: Optional[Callable] = None
+    # prefill straight into pool blocks (no dense bucket cache + splice)
+    paged_prefill: Optional[Callable] = None
 
     @property
     def supports_paged(self) -> bool:
         return self.paged_decode_step is not None
+
+    @property
+    def supports_paged_prefill(self) -> bool:
+        return self.paged_prefill is not None
 
     @property
     def name(self) -> str:
@@ -82,6 +88,12 @@ def build(cfg: ModelConfig) -> Arch:
             (lambda cache, single, slot, block_ids: mod.paged_insert(
                 cache, single, slot, block_ids, cfg))
             if hasattr(mod, "paged_insert") else None
+        ),
+        paged_prefill=(
+            (lambda params, tokens, cache, slot, block_ids, **kw:
+             mod.paged_prefill(params, tokens, cfg, cache, slot, block_ids,
+                               **kw))
+            if hasattr(mod, "paged_prefill") else None
         ),
     )
 

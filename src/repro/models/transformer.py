@@ -300,35 +300,61 @@ def init_paged_cache(cfg: ModelConfig, slots: int, layout, *,
     that maps positions to pool blocks lives host-side (the serve engine
     owns it) and is passed into ``paged_decode_step`` each call.
 
-    Every layer stores full-length history — sliding-window ("L") layers
-    are handled by a window mask at attention time rather than a ring
-    buffer, trading pool blocks for a uniform block-table layout.
+    When ``layout.window`` is set, sliding-window ("L") stacks are sized
+    ``layout.ring_num_blocks`` rows — each slot reuses a fixed ring of
+    ``layout.ring_blocks`` blocks circularly, so per-sliding-layer pool
+    residency is bounded by the window, not ``max_len``. With ``window``
+    left ``None`` every layer stores full-length history and L layers are
+    handled by a window mask at attention time (the PR-2 layout).
     """
     del quantized  # pool storage is float; int8 serving requantizes values
     pattern, n_groups, tail = cfg.layer_layout()
     hd, nkv = cfg.hd, cfg.n_kv_heads
     dt = cfg.compute_dtype
+    ring = getattr(layout, "window", None) is not None
 
-    def kv(n_stack):
-        shape = (n_stack, layout.num_blocks, nkv, layout.block_len, hd)
+    def kv(n_stack, kind):
+        n_blocks = (layout.ring_num_blocks if ring and kind == "L"
+                    else layout.num_blocks)
+        shape = (n_stack, n_blocks, nkv, layout.block_len, hd)
         return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
     cache: Dict[str, Any] = {
-        "stacks": [kv(n_groups) for _ in pattern],
+        "stacks": [kv(n_groups, kind) for kind in pattern],
         "len": jnp.zeros((slots,), jnp.int32),
     }
     if tail:
-        cache["tail"] = [kv(1) for _ in tail]
+        cache["tail"] = [kv(1, kind) for kind in tail]
     return cache
 
 
-def _paged_cache_write(c, k_new, v_new, pos, table, block_len: int):
+def _resolve_paged_table(table, kind: str):
+    """(block table, start vector or None) for a layer of ``kind``.
+
+    ``table`` is either a plain ``[slots, max_blocks]`` array (PR-2 layout:
+    every layer walks the full-history table from position 0) or the ring
+    dict ``{"full", "ring", "start"}`` the serve engine passes when
+    sliding-window layers store ring blocks: L layers then walk the
+    rotating ring table whose entry 0 sits at absolute position
+    ``start[slot]``.
+    """
+    if isinstance(table, dict):
+        if kind == "L":
+            return table["ring"], table["start"]
+        return table["full"], None
+    return table, None
+
+
+def _paged_cache_write(c, k_new, v_new, pos, table, block_len: int,
+                       start=None):
     """Scatter one token's k/v at per-row position ``pos`` through the
-    block table. Empty rows point at the trash block (table row zeros), so
-    their writes are harmless."""
+    block table (ring tables pass ``start``, the absolute position of
+    table entry 0). Empty rows point at the trash block (table row
+    zeros), so their writes are harmless."""
     rows_b = pos.shape[0]
     max_blocks = table.shape[1]
-    bi = jnp.minimum(pos // jnp.int32(block_len), max_blocks - 1)
+    rel = pos if start is None else pos - jnp.asarray(start, jnp.int32)
+    bi = jnp.clip(rel // jnp.int32(block_len), 0, max_blocks - 1)
     blk_ids = table[jnp.arange(rows_b), bi]        # [B] pool rows
     off = pos % jnp.int32(block_len)
     k = c["k"].at[blk_ids, :, off].set(k_new[:, :, 0].astype(c["k"].dtype))
@@ -356,21 +382,24 @@ def _paged_decode_layer(x, p, c, kind, cfg: ModelConfig, pos, table, *,
     k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
 
     window = cfg.local_window if kind == "L" else None
+    tbl, start = _resolve_paged_table(table, kind)
     if int8:
         # same numerics as the dense int8 path: requantized values stored
         # in float blocks, ITA integer attention over the gathered view
         kq = attn.KV_SCALE
         k_store = jnp.clip(jnp.round(k.astype(jnp.float32) / kq), -127, 127)
         v_store = jnp.clip(jnp.round(v.astype(jnp.float32) / kq), -127, 127)
-        c = _paged_cache_write(c, k_store, v_store, pos, table, block_len)
-        k_dense = gather_kv(c["k"], table)
-        v_dense = gather_kv(c["v"], table)
+        c = _paged_cache_write(c, k_store, v_store, pos, tbl, block_len,
+                               start=start)
+        k_dense = gather_kv(c["k"], tbl)
+        v_dense = gather_kv(c["v"], tbl)
         o = attn.decode_attention_int8(q, k_dense, v_dense, pos + 1, cfg,
-                                       window=window)
+                                       window=window, start=start)
     else:
-        c = _paged_cache_write(c, k, v, pos, table, block_len)
-        o = paged_attention(q, c["k"], c["v"], table, pos + 1,
-                            window=window, backend=attn_backend)
+        c = _paged_cache_write(c, k, v, pos, tbl, block_len, start=start)
+        o = paged_attention(q, c["k"], c["v"], tbl, pos + 1,
+                            window=window, start=start,
+                            backend=attn_backend)
     x = x + lin("wo", _merge_heads(o))
     h = nn.rms_norm(x, p["ln2"])
     act = nn.ACTIVATIONS[cfg.act]
@@ -385,13 +414,16 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
     ``table`` [slots, max_blocks] int32 maps each row's position ``p`` to
     pool block ``table[row, p // block_len]`` (offset ``p % block_len``) —
     the engine allocates blocks host-side and passes the table each call
-    (fixed shape, so the step never retraces).
+    (fixed shape, so the step never retraces). When sliding-window layers
+    store ring blocks, ``table`` is instead the dict ``{"full": [slots,
+    max_blocks], "ring": [slots, ring_blocks], "start": [slots]}`` (see
+    ``_resolve_paged_table``).
     """
     pattern, n_groups, tail = cfg.layer_layout()
     x = embeds if embeds is not None else nn.embed(
         tokens[:, None], params["embed"], cfg.compute_dtype)
     pos = _as_positions(cache["len"], x.shape[0])
-    table = jnp.asarray(table, jnp.int32)
+    table = jax.tree.map(lambda a: jnp.asarray(a, jnp.int32), table)
 
     def group_body(xc, slices):
         stacks_slice, cache_slice, q_slice = slices
@@ -456,11 +488,103 @@ def paged_insert(cache, single, slot, block_ids, cfg: ModelConfig):
     return out
 
 
+def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
+                  *, ring_ids=None, true_len=None, embeds=None):
+    """Prefill straight into pool blocks: forward pass + per-layer K/V
+    writes into the paged ``cache`` — no intermediate dense bucket cache,
+    no splice dispatch. Returns ``(last-position logits, updated cache)``.
+
+    Full-history layers scatter all ``len(block_ids)`` blocks in bulk (the
+    partially-valid tail block at block granularity); sliding-window ("L")
+    layers write only the last ``len(ring_ids)`` blocks, circularly, under
+    the ``bi % ring_blocks`` convention shared with the engine's rotating
+    ring table (``ring_ids=None`` keeps every layer full-history — the
+    PR-2 layout). ``true_len`` enables right-padded admission buckets
+    exactly as in ``prefill``; ``slot``'s position counter is set to the
+    true length.
+    """
+    return _paged_prefill_impl(
+        params, tokens, cfg, cache, slot, block_ids, layer_fn=_prefill_layer,
+        ring_ids=ring_ids, true_len=true_len, embeds=embeds)
+
+
+def _paged_prefill_impl(params, tokens, cfg: ModelConfig, cache, slot,
+                        block_ids, *, layer_fn, ring_ids=None, true_len=None,
+                        embeds=None):
+    """Shared paged-prefill scaffold (block writes, scan over groups, tail
+    layers, last-real-token logits, slot position update). ``layer_fn`` is
+    the family's per-layer prefill application — the MoE family reuses
+    this whole function with its expert-FFN layer."""
+    from repro.models.cache import prefill_write_kv, ring_prefill_write_kv
+
+    pattern, n_groups, tail = cfg.layer_layout()
+    x = embeds if embeds is not None else nn.embed(
+        tokens, params["embed"], cfg.compute_dtype)
+    b, s = x.shape[:2]
+    positions = jnp.arange(s)
+    block_ids = jnp.asarray(block_ids, jnp.int32)
+    if ring_ids is not None:
+        ring_ids = jnp.asarray(ring_ids, jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    n = jnp.asarray(s if true_len is None else true_len, jnp.int32)
+
+    def write(c_kv, k, v, kind):
+        if kind == "L" and ring_ids is not None:
+            return {"k": ring_prefill_write_kv(c_kv["k"], k, ring_ids, n),
+                    "v": ring_prefill_write_kv(c_kv["v"], v, ring_ids, n)}
+        return {"k": prefill_write_kv(c_kv["k"], k, block_ids),
+                "v": prefill_write_kv(c_kv["v"], v, block_ids)}
+
+    def group_body(xc, slices):
+        stacks_slice, cache_slice = slices
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            xc, k, v = layer_fn(xc, stacks_slice[i], kind, cfg, positions)
+            new_caches.append(write(cache_slice[i], k, v, kind))
+        return xc, tuple(new_caches)
+
+    if n_groups > 0:
+        x, new_stack_caches = jax.lax.scan(
+            group_body, x, (tuple(params["stacks"]), tuple(cache["stacks"])))
+        cache = dict(cache, stacks=list(new_stack_caches))
+    for i, kind in enumerate(tail):
+        p = jax.tree.map(lambda a: a[0], params["tail"][i])
+        c_in = jax.tree.map(lambda a: a[0], cache["tail"][i])
+        x, k, v = layer_fn(x, p, kind, cfg, positions)
+        cache["tail"][i] = jax.tree.map(
+            lambda a: a[None], write(c_in, k, v, kind))
+
+    x = nn.rms_norm(x, params["final_norm"])
+    table_w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    lens = jnp.broadcast_to(n, (b,))
+    last = x[jnp.arange(b), lens - 1][:, None]   # last *real* position
+    logits = nn.unembed(last, table_w)
+    new_len = jax.lax.dynamic_update_slice(
+        cache["len"], n[None].astype(jnp.int32), (slot,))
+    return logits[:, 0], dict(cache, len=new_len)
+
+
 # Right-padded prompts are exact for this family (causal attention: real
 # positions never attend to pad positions; pad entries beyond ``true_len``
 # are masked out of decode by the per-row position vector). Recurrent
 # families scan left→right through pad tokens, so they cannot set this.
 SUPPORTS_PADDED_PREFILL = True
+
+
+def _prefill_layer(xc, p, kind: str, cfg: ModelConfig, positions):
+    """One prefill layer application; returns (x, this layer's k, v).
+    Shared by ``prefill`` and ``paged_prefill`` so the dense and paged
+    write paths can never diverge in how layers are applied."""
+    h = nn.rms_norm(xc, p["ln1"])
+    q, k, v = _project_qkv(h, p, cfg, positions)
+    o = attn.chunked_attention(
+        q, k, v, causal=kind != "B",
+        window=cfg.local_window if kind == "L" else None,
+        chunk_q=min(cfg.attn_chunk_q, xc.shape[1]),
+    )
+    xc = xc + nn.dense(_merge_heads(o), p["wo"])
+    xc = xc + _mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
+    return xc, k, v
 
 
 def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None,
@@ -498,16 +622,8 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None,
         stacks_slice, cache_slice = slices
         new_caches = []
         for i, kind in enumerate(pattern):
-            p = stacks_slice[i]
-            h = nn.rms_norm(xc, p["ln1"])
-            q, k, v = _project_qkv(h, p, cfg, positions)
-            o = attn.chunked_attention(
-                q, k, v, causal=kind != "B",
-                window=cfg.local_window if kind == "L" else None,
-                chunk_q=min(cfg.attn_chunk_q, s),
-            )
-            xc = xc + nn.dense(_merge_heads(o), p["wo"])
-            xc = xc + _mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
+            xc, k, v = _prefill_layer(xc, stacks_slice[i], kind, cfg,
+                                      positions)
             new_caches.append(fill(cache_slice[i], k, v, kind))
         return xc, tuple(new_caches)
 
@@ -517,14 +633,7 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None,
         cache = dict(cache, stacks=list(new_stack_caches))
     for i, kind in enumerate(tail):
         p = jax.tree.map(lambda a: a[0], params["tail"][i])
-        h = nn.rms_norm(x, p["ln1"])
-        q, k, v = _project_qkv(h, p, cfg, positions)
-        o = attn.chunked_attention(
-            q, k, v, causal=kind != "B",
-            window=cfg.local_window if kind == "L" else None,
-            chunk_q=min(cfg.attn_chunk_q, s))
-        x = x + nn.dense(_merge_heads(o), p["wo"])
-        x = x + _mlp(nn.rms_norm(x, p["ln2"]), p, cfg)
+        x, k, v = _prefill_layer(x, p, kind, cfg, positions)
         cache["tail"][i] = fill(cache["tail"][i], k, v, kind)
 
     x = nn.rms_norm(x, params["final_norm"])

@@ -6,6 +6,10 @@ steps are never blocked behind bulk prefill work*, and bulk admissions are
 consecutive iterations in which a request was left waiting, one admission
 is forced through (preempting the decode slot with the most remaining work
 if none is free), mirroring the memory island's bounded-priority arbiter.
+Cold starts ramp faster than the forced path: up to ``admit_batch``
+requests are admitted per iteration into free slots, so full concurrency
+is reached in ``ceil(slots / admit_batch)`` iterations while the
+``admit_window`` bound is unchanged (the forced path still admits one).
 
 Batched dataflow (``BatchedServeEngine``, the default):
 
@@ -55,6 +59,7 @@ import numpy as np
 from repro.models import registry
 from repro.models.cache import (
     BlockAllocator, PagedLayout, blocks_for, bucket_for, cache_insert,
+    ring_blocks_for, ring_table_row,
 )
 
 
@@ -63,6 +68,8 @@ class Request:
     rid: int
     prompt: np.ndarray           # [S] int32
     max_new_tokens: int = 16
+    # frame embeddings [enc_seq, d] for encoder-decoder archs (stub input)
+    embeds: Optional[np.ndarray] = None
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
@@ -75,6 +82,9 @@ class EngineConfig:
     slots: int = 4               # decode batch size
     max_len: int = 256
     admit_window: int = 8        # bounded priority (see module docstring)
+    admit_batch: int = 1         # max admissions per iteration (cold-start
+    #                              ramp: `slots` concurrency is reached in
+    #                              ceil(slots/admit_batch) iterations)
     greedy: bool = True
     temperature: float = 1.0     # used when greedy=False
     seed: int = 0                # sampling PRNG seed (batched engine)
@@ -113,6 +123,11 @@ class _EngineBase:
     """Queue/QoS bookkeeping shared by both engines."""
 
     def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
+        if ec.admit_batch < 1:
+            raise ValueError(
+                f"admit_batch must be >= 1, got {ec.admit_batch} "
+                f"(0 would starve admission and break the bounded-priority "
+                f"forced path)")
         self.arch = arch
         self.ec = ec
         self.params = params
@@ -173,16 +188,20 @@ class _EngineBase:
         """Hook: a request finished at its admission prefill (paged engine
         recycles its blocks here). Runs before the slot is vacated."""
 
-    def _fetch_and_finish(self, dec_tok, adm_tok, active, at_dispatch,
-                          admitted_req, adm_slot) -> List[Request]:
+    def _fetch_and_finish(self, dec_tok, active, at_dispatch,
+                          admitted) -> List[Request]:
         """One async device→host fetch of this iteration's sampled tokens
-        (decode batch + the admitted request's first token), then the
-        host-side finish bookkeeping. Shared by both vectorized engines."""
+        (decode batch + every admitted request's first token), then the
+        host-side finish bookkeeping. Shared by both vectorized engines.
+
+        ``admitted`` is this iteration's admission list — ``(request, slot,
+        on-device first token)`` triples, at most ``admit_batch`` of them.
+        """
         fetch = {}
         if dec_tok is not None:
             fetch["dec"] = dec_tok
-        if adm_tok is not None:
-            fetch["adm"] = adm_tok
+        if admitted:
+            fetch["adm"] = [tok for _, _, tok in admitted]
         finished: List[Request] = []
         if not fetch:
             return finished
@@ -199,15 +218,16 @@ class _EngineBase:
                     finished.append(r)
                     if self.slots[i] is r:
                         self.slots[i] = None
-        if adm_tok is not None:
-            admitted_req.output.append(int(got["adm"]))
-            if admitted_req.first_token_at is None:
-                admitted_req.first_token_at = now
-            if len(admitted_req.output) >= admitted_req.max_new_tokens:
-                admitted_req.done_at = now
-                finished.append(admitted_req)
-                self._on_admitted_finish(admitted_req, adm_slot)
-                self.slots[adm_slot] = None
+        if admitted:
+            for (req, slot, _), tok in zip(admitted, got["adm"]):
+                req.output.append(int(tok))
+                if req.first_token_at is None:
+                    req.first_token_at = now
+                if len(req.output) >= req.max_new_tokens:
+                    req.done_at = now
+                    finished.append(req)
+                    self._on_admitted_finish(req, slot)
+                    self.slots[slot] = None
         return finished
 
 
@@ -233,9 +253,9 @@ class ServeEngine(_EngineBase):
                 return arch.decode_step(p, c, t)
             return arch.decode_step(p, c, t, qparams=self.qparams)
 
-        def _pre(p, t):
+        def _pre(p, t, embeds):
             self.prefill_traces += 1  # retraces for every new prompt length
-            return arch.prefill(p, t, ec.max_len)
+            return arch.prefill(p, t, ec.max_len, embeds=embeds)
 
         self._decode = jax.jit(_dec)
         self._prefill = jax.jit(_pre)
@@ -253,7 +273,8 @@ class ServeEngine(_EngineBase):
             self.caches[victim] = None
             self.queue.appendleft(evicted)  # re-admitted at queue head
         toks = jnp.asarray(_continuation_tokens(req)[None, :], jnp.int32)
-        logits, cache = self._prefill(self.params, toks)
+        embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
+        logits, cache = self._prefill(self.params, toks, embeds)
         tok = int(jnp.argmax(logits[0]))  # host sync (counted)
         self.transfers += 1
         req.output.append(tok)
@@ -340,15 +361,16 @@ class BatchedServeEngine(_EngineBase):
             last_tok = jax.lax.dynamic_update_slice(last_tok, tok, (slot,))
             return tok[0], cache, last_tok, key
 
-        def _pre_bucketed(p, tokens, true_len, slot, cache, last_tok, key):
+        def _pre_bucketed(p, tokens, true_len, slot, cache, last_tok, key,
+                          embeds):
             self.prefill_traces += 1  # one trace per bucket, not per length
             logits, c1 = arch.prefill(p, tokens, ec.max_len,
-                                      true_len=true_len)
+                                      true_len=true_len, embeds=embeds)
             return _insert_and_sample(logits, c1, slot, cache, last_tok, key)
 
-        def _pre_exact(p, tokens, slot, cache, last_tok, key):
+        def _pre_exact(p, tokens, slot, cache, last_tok, key, embeds):
             self.prefill_traces += 1
-            logits, c1 = arch.prefill(p, tokens, ec.max_len)
+            logits, c1 = arch.prefill(p, tokens, ec.max_len, embeds=embeds)
             return _insert_and_sample(logits, c1, slot, cache, last_tok, key)
 
         # Donate the cache arena: in-place slot updates instead of a whole-
@@ -367,30 +389,37 @@ class BatchedServeEngine(_EngineBase):
         return "L" not in cfg.pattern or bucket <= cfg.local_window
 
     def _dispatch_admission(self, req: Request, slot: int):
+        """One prefill dispatch for ``req`` into ``slot``; returns the
+        on-device sampled first token (fetched later, with the batch)."""
         toks = _continuation_tokens(req)
         n = toks.size
+        embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
         bucket = bucket_for(n, self.ec.min_bucket, self.ec.max_len)
         if self._bucketing and self._bucket_ok(bucket):
             padded = np.zeros((1, bucket), np.int32)
             padded[0, :n] = toks
-            return self._prefill_bucketed(
-                self.params, jnp.asarray(padded),
-                jnp.asarray(n, jnp.int32), jnp.asarray(slot, jnp.int32),
-                self.cache, self.last_tok, self._key)
-        return self._prefill_exact(
-            self.params, jnp.asarray(toks[None, :]),
-            jnp.asarray(slot, jnp.int32),
-            self.cache, self.last_tok, self._key)
+            tok, self.cache, self.last_tok, self._key = (
+                self._prefill_bucketed(
+                    self.params, jnp.asarray(padded),
+                    jnp.asarray(n, jnp.int32), jnp.asarray(slot, jnp.int32),
+                    self.cache, self.last_tok, self._key, embeds))
+        else:
+            tok, self.cache, self.last_tok, self._key = self._prefill_exact(
+                self.params, jnp.asarray(toks[None, :]),
+                jnp.asarray(slot, jnp.int32),
+                self.cache, self.last_tok, self._key, embeds)
+        return tok
 
     # -- one iteration -----------------------------------------------------
 
     def step(self) -> List[Request]:
         """One engine iteration → list of finished requests.
 
-        Exactly one batched decode dispatch (if any slot is active), at
-        most one admission dispatch, then a single device→host fetch of the
-        sampled tokens. Which requests finish is length-determined, so all
-        host bookkeeping that gates dispatch happens *before* the fetch.
+        Exactly one batched decode dispatch (if any slot is active), up to
+        ``admit_batch`` admission dispatches, then a single device→host
+        fetch of the sampled tokens. Which requests finish is
+        length-determined, so all host bookkeeping that gates dispatch
+        happens *before* the fetch.
         """
         self.iterations += 1
         active = [i for i, r in enumerate(self.slots) if r is not None]
@@ -404,35 +433,61 @@ class BatchedServeEngine(_EngineBase):
             self.last_tok = dec_tok
             self.decode_dispatches += 1
 
-        # admission decision (host-side; finishes are length-determined)
+        # admission decision (host-side; finishes are length-determined):
+        # admit up to admit_batch waiting requests into free (or freeing)
+        # slots — the cold-start concurrency ramp
         will_free = [i for i in active
                      if len(self.slots[i].output) + 1
                      >= self.slots[i].max_new_tokens]
         free = [i for i, r in enumerate(self.slots) if r is None]
-        admitted_req = None
-        adm_tok = None
-        adm_slot = -1
-        if self.queue and (free or will_free):
-            adm_slot = (free + will_free)[0]
-        elif self._forced_admission_due():
-            adm_slot = self._pick_victim()  # preempt: bounded priority
-            victim = self.slots[adm_slot]
+        avail = free + will_free
+        admitted: List[tuple] = []      # (request, slot, on-device token)
+        while self.queue and avail and len(admitted) < self.ec.admit_batch:
+            slot = avail.pop(0)
+            req = self.queue.popleft()
+            tok = self._dispatch_admission(req, slot)
+            self.slots[slot] = req
+            admitted.append((req, slot, tok))
+        if not admitted and self._forced_admission_due():
+            slot = self._pick_victim()  # preempt: bounded priority
+            victim = self.slots[slot]
             victim.preemptions += 1
-            admitted_req = self.queue.popleft()
+            req = self.queue.popleft()
             self.queue.appendleft(victim)
-        if adm_slot >= 0:
-            if admitted_req is None:
-                admitted_req = self.queue.popleft()
-            adm_tok, self.cache, self.last_tok, self._key = (
-                self._dispatch_admission(admitted_req, adm_slot))
-            self.slots[adm_slot] = admitted_req
+            tok = self._dispatch_admission(req, slot)
+            self.slots[slot] = req
+            admitted.append((req, slot, tok))
 
         # single async fetch per iteration: decode tokens (+ the admitted
-        # request's first token when an admission happened)
-        finished = self._fetch_and_finish(
-            dec_tok, adm_tok, active, at_dispatch, admitted_req, adm_slot)
-        self._note_admission(adm_slot >= 0)
+        # requests' first tokens when admissions happened)
+        finished = self._fetch_and_finish(dec_tok, active, at_dispatch,
+                                          admitted)
+        self._note_admission(bool(admitted))
         return finished
+
+
+def validate_paged_config(arch: registry.Arch):
+    """Config validation for the paged engine. After ring blocks + paged
+    prefill, every attention-cache family serves on the paged path for any
+    ``local_window``; what remains unsupported is recurrent state (no
+    growing KV to page). The error names the offending family + layer
+    pattern so the fix (pick an attention-cache arch, or the dense engine)
+    is obvious from the message."""
+    cfg = arch.cfg
+    if not arch.supports_paged:
+        bad = "".join(sorted(set(cfg.pattern) - set("GLB")))
+        why = (f"layer kinds {bad!r} keep recurrent state, which has no "
+               f"growing KV cache to page" if bad else
+               "the family does not implement paged_decode_step")
+        raise ValueError(
+            f"paged serving: family {cfg.family!r} (layer pattern "
+            f"{cfg.pattern!r}) has no paged decode path — {why}; use "
+            f"BatchedServeEngine for this arch")
+    if not arch.supports_paged_prefill:
+        raise ValueError(
+            f"paged serving: family {cfg.family!r} has a paged decode path "
+            f"but no paged prefill — implement `paged_prefill` next to its "
+            f"`paged_decode_step`")
 
 
 class PagedServeEngine(_EngineBase):
@@ -450,11 +505,24 @@ class PagedServeEngine(_EngineBase):
     so at a fixed KV-memory budget the paged engine admits every mix of
     lengths the budget can actually hold, not ``budget / max_len`` slots.
 
+    **Ring blocks** (sliding-window "L" layers with ``local_window <
+    max_len``): L-layer pools are a separate, much smaller arena — each
+    slot owns a fixed ring of ``ceil(window/block_len) + 1`` blocks and
+    reuses them circularly. The host rotates the per-slot ring table as
+    the window slides (entry 0 = oldest live block) and passes its
+    block-aligned absolute start position into the step, so the kernel
+    masks by absolute position and wrapped blocks attend correctly.
+
+    **Paged prefill**: admission runs ``arch.paged_prefill``, which writes
+    K/V straight into pool blocks (full blocks in bulk, the tail at block
+    granularity) — no dense bucket cache, no splice dispatch.
+
     The PR-1 dataflow contract is preserved: one jitted paged decode
-    dispatch over all rows per iteration, at most one admission dispatch,
-    one device→host token fetch. The block table is host-owned and passed
-    into the jitted step each call (fixed shape — no retrace); empty rows
-    decode against the dedicated trash block and are ignored host-side.
+    dispatch over all rows per iteration, up to ``admit_batch`` admission
+    dispatches, one device→host token fetch. Tables are host-owned and
+    passed into the jitted step each call (fixed shapes — no retrace);
+    empty rows decode against the dedicated trash block and are ignored
+    host-side.
 
     Pool exhaustion *defers* admission (the waiting request then rides the
     bounded-priority QoS path: after ``admit_window`` iterations a victim
@@ -465,19 +533,34 @@ class PagedServeEngine(_EngineBase):
     def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
         super().__init__(arch, params, ec)
         cfg = arch.cfg
-        if not arch.supports_paged:
-            raise NotImplementedError(
-                f"family {cfg.family!r} has no paged decode path")
-        if "L" in cfg.pattern and cfg.local_window < ec.max_len:
-            raise NotImplementedError(
-                "paged serving stores full-length history; sliding-window "
-                "layers with window < max_len need ring blocks (ROADMAP)")
+        validate_paged_config(arch)
         num_blocks = ec.num_blocks
         if num_blocks is None:  # match the dense arena's token budget
             num_blocks = blocks_for(ec.slots * ec.max_len, ec.block_len) + 1
-        self.layout = PagedLayout(ec.block_len, num_blocks, ec.max_len)
+        # ring blocks when sliding-window layers can't hold full history
+        self.ring = ("L" in cfg.pattern
+                     and cfg.local_window < ec.max_len
+                     and cfg.family != "encdec")
+        wb = ring_blocks_for(cfg.local_window, ec.block_len) if self.ring \
+            else 0
+        self.layout = PagedLayout(
+            ec.block_len, num_blocks, ec.max_len,
+            window=cfg.local_window if self.ring else None,
+            ring_num_blocks=(1 + ec.slots * wb) if self.ring else 0)
         self.alloc = BlockAllocator(self.layout)
+        # full-history blocks are consumed by non-L layers only; an all-L
+        # pattern reserves none of them
+        self._has_full = (not self.ring) or any(k != "L" for k in cfg.pattern)
         self.table = np.zeros((ec.slots, self.layout.max_blocks), np.int32)
+        if self.ring:
+            # the ring arena always fits every slot's ring (sized above),
+            # but runs through an allocator so leaks/double-frees surface
+            self.ring_alloc = BlockAllocator(PagedLayout(
+                ec.block_len, self.layout.ring_num_blocks, ec.max_len))
+            self.ring_table = np.zeros((ec.slots, wb), np.int32)
+            self.ring_start = np.zeros((ec.slots,), np.int32)
+            self._ring_first = [0] * ec.slots   # abs block idx of entry 0
+            self._ring_ids: List = [None] * ec.slots
         self._slot_len = [0] * ec.slots   # host mirror of active rows' len
         self.cache = arch.init_paged_cache(ec.slots, self.layout)
         self.last_tok = jnp.zeros((ec.slots,), jnp.int32)
@@ -493,29 +576,19 @@ class PagedServeEngine(_EngineBase):
             tok = sample_tokens(logits, ec, sub)
             return tok, cache, key
 
-        def _pre_bucketed(p, tokens, true_len, slot, block_ids, cache,
-                          last_tok, key):
-            self.prefill_traces += 1  # one trace per bucket
-            logits, c1 = arch.prefill(p, tokens, tokens.shape[1],
-                                      true_len=true_len)
-            return _insert(logits, c1, slot, block_ids, cache, last_tok, key)
-
-        def _pre_exact(p, tokens, slot, block_ids, cache, last_tok, key):
-            self.prefill_traces += 1
-            pre_len = block_ids.shape[0] * ec.block_len
-            logits, c1 = arch.prefill(p, tokens, pre_len)
-            return _insert(logits, c1, slot, block_ids, cache, last_tok, key)
-
-        def _insert(logits, c1, slot, block_ids, cache, last_tok, key):
-            cache = arch.paged_insert(cache, c1, slot, block_ids)
+        def _pre(p, tokens, true_len, slot, block_ids, ring_ids, cache,
+                 last_tok, key, embeds):
+            self.prefill_traces += 1  # one trace per (bucket, block count)
+            logits, cache = arch.paged_prefill(
+                p, tokens, cache, slot, block_ids, ring_ids=ring_ids,
+                true_len=true_len, embeds=embeds)
             key, sub = jax.random.split(key)
             tok = sample_tokens(logits, ec, sub)  # [1]
             last_tok = jax.lax.dynamic_update_slice(last_tok, tok, (slot,))
             return tok[0], cache, last_tok, key
 
         self._decode_fn = jax.jit(_dec, donate_argnums=(2,))
-        self._prefill_bucketed = jax.jit(_pre_bucketed, donate_argnums=(5,))
-        self._prefill_exact = jax.jit(_pre_exact, donate_argnums=(4,))
+        self._prefill_fn = jax.jit(_pre, donate_argnums=(6,))
 
     # -- capacity bookkeeping ----------------------------------------------
 
@@ -540,8 +613,12 @@ class PagedServeEngine(_EngineBase):
                    blocks_for(min(bucket, cap), blk) * blk)
 
     def _max_blocks_needed(self, req: Request) -> int:
-        """Worst-case block reservation: the prefill extent now, or the
-        final decode position, whichever is larger."""
+        """Worst-case full-history block reservation: the prefill extent
+        now, or the final decode position, whichever is larger. An all-L
+        pattern consumes no full-history blocks (its ring reservation is a
+        fixed ``ring_blocks`` per slot, accounted separately)."""
+        if not self._has_full:
+            return 0
         final_pos = len(req.prompt) + req.max_new_tokens - 1
         return blocks_for(max(self._pre_len(req), final_pos),
                           self.ec.block_len)
@@ -555,68 +632,127 @@ class PagedServeEngine(_EngineBase):
         super().submit(req)
 
     def _release_slot(self, slot: int):
-        """Recycle a slot's blocks and point its table row at trash."""
+        """Recycle a slot's blocks (full + ring) and point its table rows
+        at trash."""
         req = self.slots[slot]
         self.alloc.release(req.rid)
         self.table[slot, :] = 0
+        if self.ring:
+            self.ring_alloc.release(req.rid)
+            self.ring_table[slot, :] = 0
+            self.ring_start[slot] = 0
+            self._ring_first[slot] = 0
+            self._ring_ids[slot] = None
         self._slot_len[slot] = 0
+
+    def _can_admit(self, req: Request) -> bool:
+        if not self.alloc.can_admit(self._max_blocks_needed(req)):
+            return False
+        if self.ring and not self.ring_alloc.can_admit(
+                self.layout.ring_blocks):
+            return False
+        return True
+
+    def _tables(self):
+        """Device view of the host-owned block tables for this iteration."""
+        if not self.ring:
+            return jnp.asarray(self.table)
+        return {"full": jnp.asarray(self.table),
+                "ring": jnp.asarray(self.ring_table),
+                "start": jnp.asarray(self.ring_start)}
 
     # -- one iteration -----------------------------------------------------
 
     def _dispatch_admission(self, req: Request, slot: int):
+        """Reserve blocks, set up tables, and run one paged-prefill
+        dispatch (K/V written straight into pool blocks); returns the
+        on-device sampled first token."""
         toks = _continuation_tokens(req)
         n = toks.size
         pre_len = self._pre_len(req)
+        now_blocks = pre_len // self.ec.block_len if self._has_full else 0
         block_ids = np.asarray(
-            self.alloc.admit(req.rid, pre_len // self.ec.block_len,
+            self.alloc.admit(req.rid, now_blocks,
                              self._max_blocks_needed(req)),
             np.int32)
         self.table[slot, :] = 0
         self.table[slot, :block_ids.size] = block_ids
+        ring_ids = None
+        if self.ring:
+            wb = self.layout.ring_blocks
+            ring_ids = np.asarray(
+                self.ring_alloc.admit(req.rid, wb, wb), np.int32)
+            first = max(0, (n - 1) // self.ec.block_len - (wb - 1))
+            self._ring_first[slot] = first
+            self._ring_ids[slot] = ring_ids
+            self.ring_table[slot, :] = ring_table_row(ring_ids, first)
+            self.ring_start[slot] = first * self.ec.block_len
         self._slot_len[slot] = n
         if self._bucketing:
             padded = np.zeros((1, pre_len), np.int32)
             padded[0, :n] = toks
-            return self._prefill_bucketed(
-                self.params, jnp.asarray(padded), jnp.asarray(n, jnp.int32),
-                jnp.asarray(slot, jnp.int32), jnp.asarray(block_ids),
-                self.cache, self.last_tok, self._key)
-        return self._prefill_exact(
-            self.params, jnp.asarray(toks[None, :]),
-            jnp.asarray(slot, jnp.int32), jnp.asarray(block_ids),
-            self.cache, self.last_tok, self._key)
+            tokens = jnp.asarray(padded)
+            true_len = jnp.asarray(n, jnp.int32)
+        else:
+            # exact prompt, no pad tokens (MoE routing capacity depends on
+            # token count); K/V writes pad to block granularity internally
+            tokens = jnp.asarray(toks[None, :])
+            true_len = None
+        embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
+        tok, self.cache, self.last_tok, self._key = self._prefill_fn(
+            self.params, tokens, true_len, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(block_ids),
+            None if ring_ids is None else jnp.asarray(ring_ids),
+            self.cache, self.last_tok, self._key, embeds)
+        return tok
 
     def step(self) -> List[Request]:
         """One engine iteration → finished requests (one paged decode
-        dispatch, ≤1 admission dispatch, one device→host fetch)."""
+        dispatch, ≤ admit_batch admission dispatches, one device→host
+        fetch)."""
         self.iterations += 1
         active = [i for i, r in enumerate(self.slots) if r is not None]
         at_dispatch = list(self.slots)
         self.max_concurrent = max(self.max_concurrent, len(active))
 
-        # grow any slot whose next write position crosses a block boundary
-        # (drawn from its admission-time reservation — can never fail)
+        blk = self.ec.block_len
         for i in active:
             req = self.slots[i]
-            needed = self._slot_len[i] // self.ec.block_len + 1
-            owned = self.alloc.owned(req.rid)
-            while len(owned) < needed:
-                blk = self.alloc.grow(req.rid)
-                self.table[i, len(owned)] = blk
-                owned.append(blk)
+            if self._has_full:
+                # grow any slot whose next write position crosses a block
+                # boundary (drawn from its admission-time reservation —
+                # can never fail)
+                needed = self._slot_len[i] // blk + 1
+                owned = self.alloc.owned(req.rid)
+                while len(owned) < needed:
+                    b = self.alloc.grow(req.rid)
+                    self.table[i, len(owned)] = b
+                    owned.append(b)
+            if self.ring:
+                # rotate the ring table when the next write position enters
+                # a block past the current ring: the evicted oldest block
+                # is entirely below the window by construction
+                wb = self.layout.ring_blocks
+                next_bi = self._slot_len[i] // blk
+                if next_bi > self._ring_first[i] + wb - 1:
+                    first = next_bi - (wb - 1)
+                    self._ring_first[i] = first
+                    self.ring_table[i, :] = ring_table_row(
+                        self._ring_ids[i], first)
+                    self.ring_start[i] = first * blk
 
         dec_tok = None
         if active:
             dec_tok, self.cache, self._key = self._decode_fn(
                 self.params, self.qparams, self.cache,
-                jnp.asarray(self.table), self.last_tok, self._key)
+                self._tables(), self.last_tok, self._key)
             self.last_tok = dec_tok
             self.decode_dispatches += 1
             for i in active:
                 self._slot_len[i] += 1
 
         # finishes are length-determined: recycle their blocks *now* so
-        # this iteration's admission can reuse them (the decode dispatch
+        # this iteration's admissions can reuse them (the decode dispatch
         # that read them is already ordered before any insert)
         will_free = [i for i in active
                      if len(self.slots[i].output) + 1
@@ -624,17 +760,22 @@ class PagedServeEngine(_EngineBase):
         for i in will_free:
             self._release_slot(i)
         free = [i for i, r in enumerate(self.slots) if r is None]
+        avail = free + will_free
 
-        admitted_req = None
-        adm_tok = None
-        adm_slot = -1
-        head = self.queue[0] if self.queue else None
-        if head is not None and (free or will_free):
-            if self.alloc.can_admit(self._max_blocks_needed(head)):
-                adm_slot = (free + will_free)[0]
-            # else: pool exhausted — defer; the waiting request accrues
-            # bounded-priority credit and will preempt below
-        if adm_slot < 0 and self._forced_admission_due():
+        # admit up to admit_batch queue heads that fit the pool (FIFO —
+        # never skip the head: QoS credit is head-of-line)
+        admitted: List[tuple] = []      # (request, slot, on-device token)
+        while (self.queue and avail and len(admitted) < self.ec.admit_batch
+               and self._can_admit(self.queue[0])):
+            slot = avail.pop(0)
+            req = self.queue.popleft()
+            tok = self._dispatch_admission(req, slot)
+            self.slots[slot] = req
+            admitted.append((req, slot, tok))
+        # else: pool exhausted or slots busy — defer; the waiting request
+        # accrues bounded-priority credit and will preempt below
+        if not admitted and self._forced_admission_due():
+            head = self.queue[0]
             need = self._max_blocks_needed(head)
             # evict victims (most remaining work first — the dense engines'
             # policy) until the head's reservation fits; multiple small
@@ -662,21 +803,18 @@ class PagedServeEngine(_EngineBase):
                 self.slots[victim_slot] = None
                 evicted.append((victim, victim_slot))
             if evicted:
-                admitted_req = self.queue.popleft()
+                req = self.queue.popleft()
                 for victim, _ in reversed(evicted):
                     self.queue.appendleft(victim)
-                adm_slot = evicted[0][1]
-        if adm_slot >= 0:
-            if admitted_req is None:
-                admitted_req = self.queue.popleft()
-            adm_tok, self.cache, self.last_tok, self._key = (
-                self._dispatch_admission(admitted_req, adm_slot))
-            self.slots[adm_slot] = admitted_req
+                slot = evicted[0][1]
+                tok = self._dispatch_admission(req, slot)
+                self.slots[slot] = req
+                admitted.append((req, slot, tok))
 
         # single async fetch per iteration (same shape as the dense engine)
-        finished = self._fetch_and_finish(
-            dec_tok, adm_tok, active, at_dispatch, admitted_req, adm_slot)
-        self._note_admission(adm_slot >= 0)
+        finished = self._fetch_and_finish(dec_tok, active, at_dispatch,
+                                          admitted)
+        self._note_admission(bool(admitted))
         return finished
 
     def _on_admitted_finish(self, req: Request, slot: int):

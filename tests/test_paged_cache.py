@@ -1,4 +1,5 @@
-"""Block allocator invariants + paged-attention kernel oracle tests."""
+"""Block allocator invariants (unit + property-based) and paged-attention
+kernel oracle tests, including ring-table (sliding-window) layouts."""
 
 import numpy as np
 import jax
@@ -7,6 +8,7 @@ import pytest
 
 from repro.models.cache import (
     TRASH_BLOCK, BlockAllocator, PagedLayout, blocks_for, paged_insert_kv,
+    prefill_write_kv, ring_blocks_for, ring_prefill_write_kv, ring_table_row,
 )
 
 
@@ -87,6 +89,132 @@ def test_blocks_for():
     assert blocks_for(0, 4) == 1        # at least one block
 
 
+def test_ring_blocks_for():
+    # window + one write-ahead block
+    assert ring_blocks_for(6, 4) == 3
+    assert ring_blocks_for(8, 4) == 3
+    assert ring_blocks_for(9, 4) == 4
+    assert ring_blocks_for(1, 4) == 2
+
+
+def test_ring_layout_validation():
+    lay = PagedLayout(4, 9, 32, window=6, ring_num_blocks=7)
+    assert lay.ring_blocks == 3
+    assert PagedLayout(4, 9, 32).ring_blocks == 0       # ring disabled
+    with pytest.raises(ValueError):
+        PagedLayout(4, 9, 32, window=6, ring_num_blocks=3)  # < ring + trash
+    with pytest.raises(ValueError):
+        PagedLayout(4, 9, 32, window=0, ring_num_blocks=7)
+
+
+# ---------------------------------------------------------------------------
+# Property-based allocator invariants: random alloc/reserve/grow/free/recycle
+# sequences. One op interpreter is shared by the Hypothesis suite (when
+# hypothesis is installed) and a seeded fallback driver (always runs), so
+# the invariants are exercised on this container either way.
+# ---------------------------------------------------------------------------
+
+_N_RIDS = 6
+
+
+def _check_invariants(a: BlockAllocator, layout: PagedLayout):
+    owned_all = [b for rid in list(a._reserved) for b in a.owned(rid)]
+    # no double-assignment, trash block 0 never handed out
+    assert len(set(owned_all)) == len(owned_all)
+    assert TRASH_BLOCK not in owned_all
+    assert TRASH_BLOCK not in a._free
+    # free-list conservation: every usable block is free xor owned
+    assert sorted(a._free + owned_all) == list(
+        range(1, layout.num_blocks))
+    # reservation accounting exact: owned never exceeds reserved, and the
+    # unallocated remainder is covered by the free list
+    for rid in a._reserved:
+        assert len(a.owned(rid)) <= a._reserved[rid]
+    assert a.reserved_unallocated == sum(
+        a._reserved[r] - len(a.owned(r)) for r in a._reserved)
+    assert a.reserved_unallocated <= a.free_blocks
+    assert a.available_blocks == a.free_blocks - a.reserved_unallocated
+    assert a.available_blocks >= 0
+
+
+def _apply_ops(layout: PagedLayout, ops):
+    """Interpret (kind, x, y) int triples as allocator ops, asserting the
+    allocator either performs the op or refuses it for the documented
+    reason — and that every invariant holds after every op."""
+    a = BlockAllocator(layout)
+    for kind, x, y in ops:
+        kind %= 4
+        rid = x % _N_RIDS
+        if kind == 0:                          # admit (reserve + alloc)
+            maxb = y % (layout.usable_blocks + 2)   # can exceed capacity
+            nowb = min(x % (maxb + 1), maxb)
+            if rid in a._reserved:
+                with pytest.raises(ValueError):
+                    a.admit(rid, nowb, maxb)
+            elif not a.can_admit(maxb):
+                with pytest.raises(RuntimeError):
+                    a.admit(rid, nowb, maxb)
+            else:
+                ids = a.admit(rid, nowb, maxb)
+                assert len(ids) == nowb
+        elif kind == 1:                        # grow within reservation
+            if rid not in a._reserved:
+                with pytest.raises(KeyError):
+                    a.grow(rid)
+            elif len(a.owned(rid)) >= a._reserved[rid]:
+                with pytest.raises(RuntimeError):
+                    a.grow(rid)
+            else:
+                blk = a.grow(rid)
+                assert blk != TRASH_BLOCK
+        elif kind == 2:                        # release (finish/preempt)
+            if rid not in a._reserved:
+                with pytest.raises(KeyError):
+                    a.release(rid)
+            else:
+                before = set(a.owned(rid))
+                freed = a.release(rid)
+                assert set(freed) == before
+        else:                                  # recycle: release + re-admit
+            if rid in a._reserved:
+                res = a._reserved[rid]
+                a.release(rid)
+                ids = a.admit(rid, 0, min(res, a.available_blocks))
+                assert ids == []
+        _check_invariants(a, layout)
+    return a
+
+
+def test_allocator_random_op_sequences_seeded():
+    """500 seeded random op sequences (the always-on fallback for the
+    Hypothesis suite below — same interpreter, same invariants)."""
+    rng = np.random.default_rng(0)
+    for seq in range(500):
+        layout = PagedLayout(
+            4, int(rng.integers(2, 12)), 64)
+        n_ops = int(rng.integers(1, 25))
+        ops = rng.integers(0, 1_000_000, size=(n_ops, 3)).tolist()
+        _apply_ops(layout, ops)
+
+
+def test_allocator_property_based_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=500, deadline=None)
+    @given(
+        num_blocks=st.integers(2, 12),
+        ops=st.lists(
+            st.tuples(st.integers(0, 3), st.integers(0, 1_000_000),
+                      st.integers(0, 1_000_000)),
+            min_size=1, max_size=25),
+    )
+    def run(num_blocks, ops):
+        _apply_ops(PagedLayout(4, num_blocks, 64), ops)
+
+    run()
+
+
 def test_paged_insert_kv_scatters_blocks():
     pool = jnp.zeros((2, 6, 3, 4, 5))   # [n_stack, N, Hkv, blk, D]
     single = jnp.arange(2 * 1 * 3 * 8 * 5, dtype=jnp.float32).reshape(
@@ -124,6 +252,102 @@ def test_paged_attention_kernel_vs_oracle(lens, window):
     ref = paged_attention_ref(q, kp, vp, tbl, lens, window=window)
     out = paged_attention(q, kp, vp, tbl, lens, window=window,
                           backend="interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-6, rtol=2e-5)
+
+
+def test_prefill_write_kv_pads_tail_block():
+    """Non-block-multiple prefill: full blocks in bulk, the tail block at
+    block granularity (padded rows land in the block, masked by len)."""
+    pool = jnp.zeros((6, 2, 4, 3))           # [N, Hkv, blk, D], unstacked
+    single = jnp.arange(2 * 6 * 3, dtype=jnp.float32).reshape(1, 2, 6, 3)
+    out = prefill_write_kv(pool, single, jnp.asarray([5, 1], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out[5]),
+                                  np.asarray(single[0, :, :4]))
+    np.testing.assert_array_equal(np.asarray(out[1, :, :2]),
+                                  np.asarray(single[0, :, 4:6]))
+    assert float(jnp.abs(out[1, :, 2:]).sum()) == 0.0   # tail padding
+    with pytest.raises(ValueError):
+        prefill_write_kv(pool, single, jnp.asarray([5], jnp.int32))
+
+
+@pytest.mark.parametrize("true_len", [3, 8, 11, 17, 20])
+def test_ring_prefill_write_keeps_last_blocks(true_len):
+    """Ring prefill writes exactly the last ≤ ring_blocks blocks under the
+    ``bi % ring_blocks`` convention; stale/future entries are untouched."""
+    blk, wb = 4, 3
+    ring_ids = jnp.asarray([2, 5, 1], jnp.int32)
+    s_pad = blocks_for(true_len, blk) * blk
+    single = jnp.arange(2 * s_pad * 2, dtype=jnp.float32).reshape(
+        1, 2, s_pad, 2) + 1.0
+    pool = jnp.zeros((7, 2, blk, 2))
+    out = ring_prefill_write_kv(pool, single, ring_ids, true_len)
+    last_bi = (true_len - 1) // blk
+    first_bi = max(0, last_bi - (wb - 1))
+    written = set()
+    for bi in range(first_bi, last_bi + 1):
+        phys = int(ring_ids[bi % wb])
+        written.add(phys)
+        np.testing.assert_array_equal(
+            np.asarray(out[phys]),
+            np.asarray(single[0, :, bi * blk:(bi + 1) * blk]),
+            err_msg=f"block {bi} → ring entry {bi % wb}")
+    for phys in range(7):
+        if phys not in written and phys != TRASH_BLOCK:
+            assert float(jnp.abs(out[phys]).sum()) == 0.0
+
+
+def test_ring_table_row_rotation():
+    ids = [11, 12, 13]
+    assert ring_table_row(ids, 0) == [11, 12, 13]
+    # first_bi=2: entry 0 holds block 2 (2 % 3 = 2 → id 13), then wraps
+    assert ring_table_row(ids, 2) == [13, 11, 12]
+    assert ring_table_row(ids, 3) == [11, 12, 13]
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_paged_attention_ring_start_matches_full_history(backend):
+    """A rotated ring table + start vector attends to exactly the same
+    positions as a full-history table with window masking: build one
+    sequence, serve it both ways, compare."""
+    from repro.kernels.paged_attention.ops import paged_attention
+
+    rng = np.random.default_rng(3)
+    HQ, HKV, D, BLK, WINDOW = 4, 2, 8, 4, 6
+    WB = ring_blocks_for(WINDOW, BLK)            # 3 ring entries
+    S = 24                                        # 6 absolute blocks
+    length = 22                                   # window covers 16..21
+    k = rng.standard_normal((1, HKV, S, D)).astype(np.float32)
+    v = rng.standard_normal((1, HKV, S, D)).astype(np.float32)
+    q = jnp.asarray(rng.standard_normal((1, HQ, 1, D)), jnp.float32)
+
+    # full-history pool: block bi at pool row bi+1
+    n_full = S // BLK + 1
+    kp_f = np.zeros((n_full, HKV, BLK, D), np.float32)
+    vp_f = np.zeros((n_full, HKV, BLK, D), np.float32)
+    for bi in range(S // BLK):
+        kp_f[bi + 1] = k[0, :, bi * BLK:(bi + 1) * BLK]
+        vp_f[bi + 1] = v[0, :, bi * BLK:(bi + 1) * BLK]
+    tbl_f = np.arange(1, n_full)[None, :].astype(np.int32)
+    lens = jnp.asarray([length], jnp.int32)
+    ref = paged_attention(q, jnp.asarray(kp_f), jnp.asarray(vp_f),
+                          jnp.asarray(tbl_f), lens, window=WINDOW,
+                          backend=backend)
+
+    # ring pool: only the last WB live blocks, under bi % WB
+    ring_ids = np.asarray([1, 2, 3], np.int32)
+    kp_r = np.zeros((4, HKV, BLK, D), np.float32)
+    vp_r = np.zeros((4, HKV, BLK, D), np.float32)
+    last_bi = (length - 1) // BLK                 # 5
+    first_bi = last_bi - (WB - 1)                 # 3
+    for bi in range(first_bi, last_bi + 1):
+        kp_r[ring_ids[bi % WB]] = k[0, :, bi * BLK:(bi + 1) * BLK]
+        vp_r[ring_ids[bi % WB]] = v[0, :, bi * BLK:(bi + 1) * BLK]
+    tbl_r = np.asarray([ring_table_row(ring_ids, first_bi)], np.int32)
+    start = jnp.asarray([first_bi * BLK], jnp.int32)
+    out = paged_attention(q, jnp.asarray(kp_r), jnp.asarray(vp_r),
+                          jnp.asarray(tbl_r), lens, window=WINDOW,
+                          start=start, backend=backend)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-6, rtol=2e-5)
 

@@ -129,6 +129,15 @@ def test_bucketed_prefill_traces_once_per_bucket(engine_setup):
     assert eng.prefill_traces == 1
 
 
+def test_admit_batch_must_be_positive(engine_setup):
+    """admit_batch=0 would starve admission (and crash the forced path on
+    an empty victim list) — rejected at engine construction."""
+    cfg, arch, params = engine_setup
+    with pytest.raises(ValueError, match="admit_batch"):
+        BatchedServeEngine(arch, params,
+                           EngineConfig(slots=2, max_len=32, admit_batch=0))
+
+
 def test_metrics_empty_and_partial():
     assert metrics([]) == {"requests": 0, "ttft_avg_s": 0.0,
                            "latency_avg_s": 0.0, "tokens_per_s": 0.0}

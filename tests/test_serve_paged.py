@@ -1,14 +1,18 @@
-"""Paged serve engine: token identity, capacity at a fixed KV budget,
-preemption recycling, and the one-dispatch/one-transfer contract."""
+"""Paged serve engine: cross-family paged-vs-dense token-identity matrix,
+ring-block (sliding-window) serving, paged-prefill oracle, capacity at a
+fixed KV budget, preemption recycling, multi-admission ramp, and the
+one-dispatch/one-transfer contract."""
 
 import dataclasses
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 import pytest
 
 from repro import configs
 from repro.models import registry, schema as schema_lib
+from repro.models.cache import PagedLayout, ring_blocks_for
 from repro.serve.engine import (
     BatchedServeEngine, EngineConfig, PagedServeEngine, Request, ServeEngine,
 )
@@ -22,67 +26,276 @@ def engine_setup():
     return cfg, arch, params
 
 
-def _mixed_workload(cfg, n=6, seed=0, max_new=5):
+def _mixed_workload(cfg, n=6, seed=0, max_new=5, embeds_seed=None):
     rng = np.random.default_rng(seed)
+    emb_rng = np.random.default_rng(embeds_seed)
     return [
         Request(rid=rid,
                 prompt=rng.integers(0, cfg.vocab,
                                     size=int(rng.integers(3, 20))
                                     ).astype(np.int32),
+                embeds=None if embeds_seed is None else (
+                    0.1 * emb_rng.standard_normal(
+                        (cfg.enc_seq, cfg.d_model))).astype(np.float32),
                 max_new_tokens=max_new)
         for rid in range(n)
     ]
 
 
-def test_paged_token_identity_and_contract(engine_setup):
-    """PagedServeEngine is token-identical to BatchedServeEngine on a
-    mixed-length greedy workload, under the same dispatch/transfer
-    contract, and recycles every block by drain time."""
-    cfg, arch, params = engine_setup
-    ec = EngineConfig(slots=3, max_len=48, block_len=8)
+# ---------------------------------------------------------------------------
+# Cross-family token-identity matrix:
+#   {dense, moe, encdec} × {float, int8} × {full, sliding-window}
+#                        × {greedy, temperature(seeded)}
+# Every supported combination runs the same mixed workload through the
+# dense-arena BatchedServeEngine and the PagedServeEngine and must produce
+# identical tokens — new layouts (e.g. ring blocks) are covered by
+# construction, not by per-family copy-paste tests.
+# ---------------------------------------------------------------------------
 
-    bat = BatchedServeEngine(arch, params, ec)
-    for r in _mixed_workload(cfg):
-        bat.submit(r)
-    bat_out = {r.rid: list(r.output) for r in bat.run_until_drained()}
+# (family, layout) → base smoke config; None marks an unsupported combo
+_MATRIX_CFGS = {
+    ("dense", "full"): lambda: configs.smoke_config("phi3-mini-3.8b"),
+    # gemma3 pattern LLLLLG, local_window 16 < max_len → ring blocks
+    ("dense", "sliding"): lambda: configs.smoke_config("gemma3-4b"),
+    # float32 keeps MoE routing ties deterministic across both engines
+    ("moe", "full"): lambda: dataclasses.replace(
+        configs.smoke_config("qwen3-moe-30b-a3b"), dtype="float32"),
+    # n_layers=3 over pattern "GL" leaves a tail layer ("G") past the last
+    # full group — covers the unscanned tail path through paged prefill
+    ("moe", "sliding"): lambda: dataclasses.replace(
+        configs.smoke_config("qwen3-moe-30b-a3b"), dtype="float32",
+        pattern="GL", n_layers=3),
+    ("encdec", "full"): lambda: configs.smoke_config("whisper-small"),
+    ("encdec", "sliding"): None,   # no sliding-window layers in this family
+}
 
-    pag = PagedServeEngine(arch, params, ec)
-    for r in _mixed_workload(cfg):
-        pag.submit(r)
-    done = pag.run_until_drained()
-    pag_out = {r.rid: list(r.output) for r in done}
+_ARCH_CACHE = {}
 
-    assert len(pag_out) == len(bat_out) == 6
-    for rid in bat_out:
-        assert pag_out[rid] == bat_out[rid], f"rid {rid} diverged"
-    # one paged decode dispatch + one device→host fetch per iteration
-    assert pag.decode_dispatches <= pag.iterations
-    assert pag.transfers <= pag.iterations
-    # every block returned to the free list (no leaks)
+
+def _matrix_setup(family, layout, quant):
+    base = _MATRIX_CFGS[(family, layout)]
+    key = (family, layout)
+    if key not in _ARCH_CACHE:
+        cfg = base()
+        arch = registry.build(cfg)
+        params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+        _ARCH_CACHE[key] = (cfg, arch, params)
+    cfg, arch, params = _ARCH_CACHE[key]
+    want_quant = quant == "int8"
+    if cfg.serve_quant != want_quant:
+        cfg = dataclasses.replace(cfg, serve_quant=want_quant)
+        arch = registry.build(cfg)
+    return cfg, arch, params
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("sampling", ["greedy", "temperature"])
+@pytest.mark.parametrize("layout", ["full", "sliding"])
+@pytest.mark.parametrize("quant", ["float", "int8"])
+@pytest.mark.parametrize("family", ["dense", "moe", "encdec"])
+def test_paged_dense_identity_matrix(family, quant, layout, sampling):
+    if _MATRIX_CFGS[(family, layout)] is None:
+        pytest.skip(f"{family} has no {layout} layout")
+    if quant == "int8" and family != "dense":
+        pytest.skip(f"{family} serves on the float path only")
+    cfg, arch, params = _matrix_setup(family, layout, quant)
+    ec = EngineConfig(slots=2, max_len=48, block_len=8,
+                      greedy=sampling == "greedy", temperature=0.8, seed=11)
+    embeds_seed = 5 if family == "encdec" else None
+
+    def run(engine_cls):
+        eng = engine_cls(arch, params, ec)
+        for r in _mixed_workload(cfg, n=4, max_new=6,
+                                 embeds_seed=embeds_seed):
+            eng.submit(r)
+        out = {r.rid: list(r.output) for r in eng.run_until_drained()}
+        # the QoS dataflow contract holds for every cell of the matrix
+        assert eng.decode_dispatches <= eng.iterations
+        assert eng.transfers <= eng.iterations
+        return eng, out
+
+    _, dense_out = run(BatchedServeEngine)
+    pag, paged_out = run(PagedServeEngine)
+    assert len(dense_out) == 4
+    assert paged_out == dense_out
+    # every block recycled by drain time (full + ring arenas)
     assert pag.alloc.free_blocks == pag.layout.usable_blocks
     assert pag.alloc.reserved_unallocated == 0
+    if layout == "sliding":
+        # ring blocks active, and per-sliding-layer pool residency is
+        # bounded by ceil(window/block)+1 blocks per slot — the L-layer
+        # pools are physically incapable of holding more
+        assert pag.ring
+        wb = ring_blocks_for(cfg.local_window, ec.block_len)
+        assert pag.layout.ring_blocks == wb
+        assert pag.ring_table.shape == (ec.slots, wb)
+        assert pag.ring_alloc.free_blocks == pag.layout.ring_num_blocks - 1
+        for i, kind in enumerate(cfg.pattern):
+            pool = pag.cache["stacks"][i]["k"]
+            expect = (pag.layout.ring_num_blocks if kind == "L"
+                      else pag.layout.num_blocks)
+            assert pool.shape[1] == expect
+    else:
+        assert not pag.ring
 
 
-def test_paged_token_identity_float_path(engine_setup):
-    """Same identity on the float (serve_quant=False) path, which runs the
-    paged-attention op instead of the gathered ITA pipeline."""
+# ---------------------------------------------------------------------------
+# Ring-block serving specifics
+# ---------------------------------------------------------------------------
+
+
+def test_sliding_window_residency_bounded_during_serving():
+    """A sliding-window model with local_window < max_len serves on the
+    paged engine while each slot's ring never references more than
+    ceil(window/block)+1 distinct non-trash blocks at any iteration, and
+    the ring table row always covers the attention window."""
+    cfg, arch, params = _matrix_setup("dense", "sliding", "int8")
+    ec = EngineConfig(slots=2, max_len=64, block_len=8)
+    eng = PagedServeEngine(arch, params, ec)
+    assert eng.ring
+    wb = eng.layout.ring_blocks
+    assert wb == ring_blocks_for(cfg.local_window, ec.block_len)
+    rng = np.random.default_rng(2)
+    for rid in range(3):
+        eng.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab, size=20).astype(np.int32),
+            max_new_tokens=40))             # decode well past the window
+    for _ in range(10_000):
+        if eng.idle:
+            break
+        eng.step()
+        for s in range(ec.slots):
+            row = eng.ring_table[s]
+            live = {b for b in row if b != 0}
+            assert len(live) <= wb
+            if eng.slots[s] is not None:
+                # the ring covers every in-window position
+                p = eng._slot_len[s]
+                lo = max(0, p - cfg.local_window)
+                assert eng.ring_start[s] <= lo
+    assert eng.idle
+    assert eng.ring_alloc.free_blocks == eng.layout.ring_num_blocks - 1
+    # ring pools are a fraction of the full-history pool
+    assert eng.layout.ring_num_blocks < eng.layout.num_blocks
+
+
+def test_paged_prefill_matches_dense_splice_bit_identical(engine_setup):
+    """Tentpole oracle: paged prefill writes pool contents bit-identical
+    to the PR-2 path (dense bucket cache + paged_insert splice)."""
     cfg, arch, params = engine_setup
-    cfg_f = dataclasses.replace(cfg, serve_quant=False)
-    arch_f = registry.build(cfg_f)
-    # max_len a multiple of block_len keeps the gathered reduction length
-    # equal to the dense arena's (exact f32 agreement, not just allclose)
-    ec = EngineConfig(slots=2, max_len=32, block_len=8)
+    layout = PagedLayout(8, 12, 64)
+    toks = jnp.asarray(np.arange(13)[None, :] % cfg.vocab, jnp.int32)
+    n = 13
+    pre_len = 16                              # padded bucket, 2 blocks
+    blocks = [4, 9]
+    padded = jnp.zeros((1, pre_len), jnp.int32).at[0, :n].set(toks[0])
 
-    bat = BatchedServeEngine(arch_f, params, ec)
-    for r in _mixed_workload(cfg, n=4, max_new=4):
-        bat.submit(r)
-    bat_out = {r.rid: list(r.output) for r in bat.run_until_drained()}
+    # PR-2 path: dense bucket prefill + splice into pool blocks
+    old = arch.init_paged_cache(2, layout)
+    _, single = arch.prefill(params, padded, pre_len,
+                             true_len=jnp.asarray(n, jnp.int32))
+    old = arch.paged_insert(old, single, 1, blocks)
 
-    pag = PagedServeEngine(arch_f, params, ec)
-    for r in _mixed_workload(cfg, n=4, max_new=4):
-        pag.submit(r)
-    pag_out = {r.rid: list(r.output) for r in pag.run_until_drained()}
-    assert pag_out == bat_out
+    # paged prefill: K/V straight into the same pool blocks
+    new = arch.init_paged_cache(2, layout)
+    logits_new, new = arch.paged_prefill(
+        params, padded, new, 1, blocks, true_len=jnp.asarray(n, jnp.int32))
+
+    flat_old, _ = jax.tree.flatten(old)
+    flat_new, treedef = jax.tree.flatten(new)
+    for a, b in zip(flat_old, flat_new):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the exact (unpadded) path agrees with the padded one's logits
+    logits_exact, _ = arch.paged_prefill(
+        params, toks, arch.init_paged_cache(2, layout), 1, blocks)
+    np.testing.assert_allclose(
+        np.asarray(logits_new, np.float32),
+        np.asarray(logits_exact, np.float32), atol=2e-2, rtol=2e-2)
+
+
+def test_ring_paged_prefill_matches_full_history_blocks():
+    """Ring prefill content oracle: each live ring block holds exactly the
+    same values the full-history layout stores for that absolute block."""
+    cfg, arch, params = _matrix_setup("dense", "sliding", "float")
+    blk = 8
+    wb = ring_blocks_for(cfg.local_window, blk)       # window 16 → 3
+    n = 37                                            # 5 blocks, 3 live
+    pre_len = 40
+    toks = jnp.asarray(np.arange(n)[None, :] % cfg.vocab, jnp.int32)
+    padded = jnp.zeros((1, pre_len), jnp.int32).at[0, :n].set(toks[0])
+    tl = jnp.asarray(n, jnp.int32)
+
+    full_layout = PagedLayout(blk, 8, 64)             # every layer full
+    full = arch.init_paged_cache(1, full_layout)
+    block_ids = [2, 5, 1, 6, 3]
+    _, full = arch.paged_prefill(params, padded, full, 0, block_ids,
+                                 true_len=tl)
+
+    ring_layout = PagedLayout(blk, 8, 64, window=cfg.local_window,
+                              ring_num_blocks=1 + wb)
+    ring = arch.init_paged_cache(1, ring_layout)
+    ring_ids = [3, 1, 2]
+    _, ring = arch.paged_prefill(params, padded, ring, 0, block_ids,
+                                 ring_ids=ring_ids, true_len=tl)
+
+    last_bi = (n - 1) // blk                          # 4
+    first_bi = last_bi - (wb - 1)                     # 2
+    for i, kind in enumerate(cfg.pattern):
+        fp = np.asarray(full["stacks"][i]["k"], np.float32)
+        rp = np.asarray(ring["stacks"][i]["k"], np.float32)
+        if kind != "L":
+            np.testing.assert_array_equal(rp[:, block_ids], fp[:, block_ids])
+            continue
+        for bi in range(first_bi, last_bi + 1):
+            np.testing.assert_array_equal(
+                rp[:, ring_ids[bi % wb]], fp[:, block_ids[bi]],
+                err_msg=f"stack {i} block {bi}")
+
+
+# ---------------------------------------------------------------------------
+# Multi-admission (cold-start concurrency ramp)
+# ---------------------------------------------------------------------------
+
+
+def test_multi_admission_ramp_and_bounded_priority(engine_setup):
+    """With admit_batch=k the concurrency ramp reaches `slots` in
+    ceil(slots/k) iterations (both vectorized engines), while the
+    bounded-priority admit_window contract still holds: a waiting request
+    still preempts within admit_window decode-only iterations."""
+    cfg, arch, params = engine_setup
+    slots, admit_batch = 6, 4
+    for cls in (BatchedServeEngine, PagedServeEngine):
+        ec = EngineConfig(slots=slots, max_len=32, block_len=8,
+                          admit_batch=admit_batch, admit_window=2)
+        eng = cls(arch, params, ec)
+        rng = np.random.default_rng(0)
+        for rid in range(slots):
+            eng.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab, size=5).astype(np.int32),
+                max_new_tokens=12))
+        ramp = []
+        want_iters = -(-slots // admit_batch)
+        for _ in range(want_iters):
+            eng.step()
+            ramp.append(sum(s is not None for s in eng.slots))
+        assert ramp[-1] == slots, f"{cls.__name__}: ramp {ramp}"
+        # bounded priority unchanged: a late request preempts in-window
+        late = Request(rid=99,
+                       prompt=rng.integers(0, cfg.vocab,
+                                           size=4).astype(np.int32),
+                       max_new_tokens=4)
+        eng.submit(late)
+        for _ in range(ec.admit_window + 1):
+            eng.step()
+        assert late in eng.slots, f"{cls.__name__}: admit_window violated"
+        eng.run_until_drained()
+
+
+# ---------------------------------------------------------------------------
+# Capacity / exhaustion / preemption (block-pool QoS)
+# ---------------------------------------------------------------------------
 
 
 def test_paged_admits_2x_slots_at_fixed_budget(engine_setup):
@@ -222,14 +435,30 @@ def test_unaligned_max_len_admission(engine_setup):
     assert eng.alloc.free_blocks == eng.layout.usable_blocks
 
 
+# ---------------------------------------------------------------------------
+# Config validation + back-compat layout paths
+# ---------------------------------------------------------------------------
+
+
+def test_paged_rejects_recurrent_family_naming_pattern():
+    """Unsupported layouts fail at construction with a config-validation
+    error that names the offending family and layer pattern."""
+    cfg = configs.smoke_config("recurrentgemma-9b")
+    arch = registry.build(cfg)
+    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+    with pytest.raises(ValueError) as exc:
+        PagedServeEngine(arch, params, EngineConfig(slots=2, max_len=32))
+    msg = str(exc.value)
+    assert cfg.pattern in msg                  # names the layer pattern
+    assert cfg.family in msg                   # ...and the family
+    assert "R" in msg                          # ...and the offending kind
+
+
 def test_windowed_int8_paged_decode_matches_dense():
-    """Sliding-window ('L') layers on the int8 path: the paged cache keeps
-    full history and must window-mask at attention time to match the dense
-    engine's ring cache once positions pass local_window."""
-    import jax.numpy as jnp
-
-    from repro.models.cache import PagedLayout
-
+    """Back-compat plain-table layout: sliding-window ('L') layers on the
+    int8 path with a full-history pool must window-mask at attention time
+    to match the dense engine's ring cache once positions pass
+    local_window (the PR-2 layout, still used by model-level callers)."""
     cfg = configs.smoke_config("gemma3-4b")   # pattern LLLLLG, window 16
     arch = registry.build(cfg)
     params = schema_lib.init_params(arch.schema(), jax.random.key(0))
@@ -266,69 +495,3 @@ def test_windowed_int8_paged_decode_matches_dense():
             atol=1e-3, rtol=1e-3,
             err_msg=f"diverged at position {pos}")
         tok = jnp.asarray([int(jnp.argmax(ld[0]))], jnp.int32)
-
-
-def test_paged_rejects_unsupported_family():
-    cfg = configs.smoke_config("recurrentgemma-9b")
-    arch = registry.build(cfg)
-    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
-    with pytest.raises(NotImplementedError):
-        PagedServeEngine(arch, params, EngineConfig(slots=2, max_len=32))
-
-
-def test_encdec_paged_decode_matches_dense():
-    """Model-level wiring: the enc-dec family pages its self-attention KV
-    (cross K/V stays dense) and matches the dense decode step."""
-    import jax.numpy as jnp
-
-    from repro.models.cache import PagedLayout
-
-    cfg = configs.smoke_config("whisper-small")
-    arch = registry.build(cfg)
-    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
-    toks = jnp.asarray(np.arange(6)[None, :] % cfg.vocab, jnp.int32)
-    embeds = 0.1 * jax.random.normal(
-        jax.random.key(2), (1, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
-
-    _, dense_cache = arch.prefill(params, toks, 16, embeds=embeds)
-    layout = PagedLayout(4, 9, 16)
-    paged_cache = arch.init_paged_cache(1, layout)
-    _, single = arch.prefill(params, toks, 8, embeds=embeds)
-    paged_cache = arch.paged_insert(paged_cache, single, 0, [6, 2])
-    table = np.zeros((1, layout.max_blocks), np.int32)
-    table[0, :2] = [6, 2]
-
-    nxt = jnp.asarray([11], jnp.int32)
-    logits_d, _ = arch.decode_step(params, dense_cache, nxt)
-    logits_p, _ = arch.paged_decode_step(params, paged_cache, nxt, table)
-    np.testing.assert_allclose(
-        np.asarray(logits_p, np.float32), np.asarray(logits_d, np.float32),
-        atol=1e-2, rtol=1e-2)
-
-
-def test_moe_paged_decode_matches_dense():
-    """Model-level wiring: the MoE family's paged decode step produces the
-    same logits as its dense decode step."""
-    import jax.numpy as jnp
-
-    from repro.models.cache import PagedLayout
-
-    cfg = configs.smoke_config("qwen3-moe-30b-a3b")
-    cfg = dataclasses.replace(cfg, dtype="float32")
-    arch = registry.build(cfg)
-    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
-    toks = jnp.asarray(np.arange(6)[None, :] % cfg.vocab, jnp.int32)
-
-    _, dense_cache = arch.prefill(params, toks, 16)
-    layout = PagedLayout(4, 9, 16)
-    paged_cache = arch.init_paged_cache(1, layout)
-    _, single = arch.prefill(params, toks, 8)    # 2 blocks of 4
-    paged_cache = arch.paged_insert(paged_cache, single, 0, [3, 5])
-    table = np.zeros((1, layout.max_blocks), np.int32)
-    table[0, :2] = [3, 5]
-
-    nxt = jnp.asarray([11], jnp.int32)
-    logits_d, _ = arch.decode_step(params, dense_cache, nxt)
-    logits_p, _ = arch.paged_decode_step(params, paged_cache, nxt, table)
-    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_d),
-                               atol=1e-5, rtol=1e-4)
