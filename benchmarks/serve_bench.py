@@ -19,11 +19,17 @@ Claims validated:
     ``local_window < max_len`` serves on the paged engine token-identical
     to the dense arena while every sliding-window layer's pool holds only
     ``slots · (ceil(window/block)+1)`` blocks — per-sliding-layer KV
-    residency bounded by the window, not ``max_len``.
+    residency bounded by the window, not ``max_len``;
+  * **int8 block capacity** (ISSUE 4): a quantized arch stores K/V
+    natively as int8 blocks + per-block scales, roughly halving pool
+    bytes per resident token vs the old float-block layout — so at the
+    *same pool byte budget* the int8 pool admits ≥ 1.8x the concurrent
+    requests, token-identical to the dense int8 reference throughout.
 
 Emits ``BENCH_serve.json`` with the batched/paged throughputs, the
-paged-vs-dense concurrency comparison and the sliding-window (ring-block)
-capacity entry so future PRs can track all three.
+paged-vs-dense concurrency comparison, the sliding-window (ring-block)
+capacity entry and the ``paged.int8_blocks`` entry (bytes/token, capacity
+ratio, tokens/s) so future PRs can track all four.
 """
 
 from __future__ import annotations
@@ -55,7 +61,7 @@ def _workload(cfg, seed=0):
     ]
 
 
-def _short_workload(cfg, seed=1):
+def _short_workload(cfg, seed=1, n=CAP_REQUESTS):
     """Short requests: worst-case extent ≤ 32 tokens (4 blocks of 8), so a
     512-token budget holds 16 of them at once vs 8 dense slots."""
     from repro.serve.engine import Request
@@ -67,7 +73,7 @@ def _short_workload(cfg, seed=1):
                                     size=int(rng.integers(3, 9))
                                     ).astype(np.int32),
                 max_new_tokens=MAX_NEW)
-        for rid in range(CAP_REQUESTS)
+        for rid in range(n)
     ]
 
 
@@ -192,6 +198,79 @@ def main(csv: bool = True):
         f"identical=yes",
     ))
 
+    # int8 block capacity: the quantized arch stores K/V natively as int8
+    # blocks (+ per-block scales) — roughly half the pool bytes per token
+    # of the float-block layout — so the SAME pool byte budget admits ~2x
+    # the concurrent short requests. The float-block baseline is the same
+    # model with serve_quant off (identical pool geometry, bf16 blocks).
+    import dataclasses
+
+    assert cfg.serve_quant, "int8 capacity run needs the quantized arch"
+    arch_f = registry.build(dataclasses.replace(cfg, serve_quant=False))
+    cap_ec = dict(max_len=MAX_LEN, block_len=BLOCK_LEN, admit_batch=4)
+    float_eng = PagedServeEngine(arch_f, params, EngineConfig(
+        slots=4 * SLOTS, num_blocks=budget_tokens // BLOCK_LEN + 1,
+        **cap_ec))
+    budget_bytes = float_eng.pool_bytes
+    # size the int8 pool to the float pool's byte budget (per-block bytes
+    # measured off a probe engine; pools scale linearly in num_blocks)
+    probe = PagedServeEngine(arch, params, EngineConfig(
+        slots=2, num_blocks=9, **cap_ec))
+    per_block_i8 = probe.pool_bytes / probe.layout.num_blocks
+    i8_eng = PagedServeEngine(arch, params, EngineConfig(
+        slots=6 * SLOTS, num_blocks=int(budget_bytes // per_block_i8),
+        **cap_ec))
+    assert i8_eng.quantized and not float_eng.quantized
+    assert i8_eng.pool_bytes <= budget_bytes
+    f_done, f_wall, _ = _drive(float_eng, _short_workload(cfg, seed=2, n=64))
+    i8_done, i8_wall, _ = _drive(i8_eng, _short_workload(cfg, seed=2, n=64))
+    assert len(f_done) == len(i8_done) == 64
+    i8_ratio = i8_eng.max_concurrent / max(float_eng.max_concurrent, 1)
+
+    # identity spot check: the int8 block pool decodes token-identically
+    # to the dense int8 reference (the full matrix lives in
+    # tests/test_serve_paged.py; the sliding run above already asserted it
+    # for the windowed arch)
+    id_ec = EngineConfig(slots=4, max_len=MAX_LEN, block_len=BLOCK_LEN)
+    id_dense = BatchedServeEngine(arch, params, id_ec)
+    for r in _short_workload(cfg, seed=5, n=10):
+        id_dense.submit(r)
+    id_dense_out = {r.rid: list(r.output)
+                    for r in id_dense.run_until_drained()}
+    id_paged = PagedServeEngine(arch, params, id_ec)
+    for r in _short_workload(cfg, seed=5, n=10):
+        id_paged.submit(r)
+    id_paged_out = {r.rid: list(r.output)
+                    for r in id_paged.run_until_drained()}
+    assert id_paged_out == id_dense_out, (
+        "int8 block pool diverged from the dense int8 reference")
+
+    int8_blocks = {
+        "arch": cfg.name,
+        "block_len": BLOCK_LEN,
+        "budget_bytes": int(budget_bytes),
+        "bytes_per_token_float": float_eng.pool_bytes_per_token,
+        "bytes_per_token_int8": i8_eng.pool_bytes_per_token,
+        "bytes_per_token_ratio": (float_eng.pool_bytes_per_token
+                                  / i8_eng.pool_bytes_per_token),
+        "pool_tokens_float": float_eng.layout.usable_tokens,
+        "pool_tokens_int8": i8_eng.layout.usable_tokens,
+        "float_concurrent_slots": float_eng.max_concurrent,
+        "int8_concurrent_slots": i8_eng.max_concurrent,
+        "capacity_ratio": i8_ratio,
+        "tokens_per_s": sum(len(r.output) for r in i8_done) / i8_wall,
+        "token_identical_to_dense_int8": True,
+    }
+    rows.append((
+        "serve_paged_int8_blocks", i8_wall * 1e6 / max(i8_eng.iterations, 1),
+        f"budget_bytes={int(budget_bytes)}|"
+        f"B/token={int8_blocks['bytes_per_token_float']:.0f}->"
+        f"{int8_blocks['bytes_per_token_int8']:.0f} "
+        f"({int8_blocks['bytes_per_token_ratio']:.2f}x smaller)|"
+        f"concurrent={float_eng.max_concurrent}->{i8_eng.max_concurrent} "
+        f"({i8_ratio:.2f}x, claim: >=1.8x)|identical=yes",
+    ))
+
     bat, ref, pag = results["batched"], results["per_slot"], results["paged"]
     speedup = bat["tokens_per_s"] / ref["tokens_per_s"]
     rows.append(("serve_speedup", 0.0,
@@ -216,6 +295,7 @@ def main(csv: bool = True):
                 "paged_concurrent_slots": cap_eng.max_concurrent,
                 "capacity_ratio": capacity_ratio,
                 "sliding_window": sliding,
+                "int8_blocks": int8_blocks,
             },
         }, f, indent=2)
 
@@ -234,6 +314,9 @@ def main(csv: bool = True):
     assert capacity_ratio >= 2.0, (
         f"paged pool admitted only {capacity_ratio:.2f}x the dense slots "
         f"at an equal KV budget")
+    assert i8_ratio >= 1.8, (
+        f"int8 block pool admitted only {i8_ratio:.2f}x the float-block "
+        f"slots at an equal pool byte budget")
     return rows
 
 

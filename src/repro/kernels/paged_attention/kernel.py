@@ -27,6 +27,19 @@ callers pass zeros and the two layouts share one kernel.
 
 Contract: allclose against ``ref.paged_attention_ref`` (same masking; the
 flash accumulation only reorders f32 additions).
+
+**Int8 block pools** (``paged_attention_int8_pallas``): the quantized
+serving layout stores K/V blocks as int8 plus per-block scales, so the
+kernel DMAs *half* the bytes per block and dequantizes on the fly — q is
+requantized once outside (static ``Q_SCALE``), each block contributes an
+exact int8·int8 → int32 score dot (the ITA pipeline's quantized-operand /
+integer-accumulation discipline), and the int32 scores are dequantized
+through ``Q_SCALE · k_scale[block]`` into the same f32 flash softmax. The
+per-block scales ride in scalar prefetch next to the table. Numerical
+contract: allclose against ``ref.paged_attention_int8_dequant_ref`` (flash
+reordering only); the ITA *integer*-softmax oracle differs by its own
+quantization error (~1%) because a streamed kernel cannot take the global
+integer max before exponentiating.
 """
 
 from __future__ import annotations
@@ -151,4 +164,139 @@ def paged_attention_pallas(
         interpret=interpret,
     )(block_table.astype(jnp.int32), jnp.asarray(lens, jnp.int32),
       jnp.asarray(start, jnp.int32), qg, k_pool, v_pool)
+    return out.reshape(b, hq, 1, d)
+
+
+# ---------------------------------------------------------------------------
+# Int8 block pools: fused dequantizing decode kernel
+# ---------------------------------------------------------------------------
+
+
+def _paged_int8_kernel(
+    table_ref, lens_ref, start_ref, ks_ref, vs_ref,  # scalar prefetch (SMEM)
+    q_ref, k_ref, v_ref,            # q int8 row, int8 pool blocks
+    o_ref,
+    m_ref, l_ref, acc_ref,          # VMEM scratch (f32)
+    *, block_len: int, group: int, window: Optional[int], q_scale: float,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lens_ref[b]
+    row0 = start_ref[b] + i * block_len
+    blk_id = table_ref[b, i]
+
+    @pl.when(row0 < length)
+    def _block():
+        q8 = q_ref[0, 0]                       # [group, D] int8
+        k8 = k_ref[0, 0]                       # [block_len, D] int8
+        v8 = v_ref[0, 0]                       # [block_len, D] int8
+        # exact integer score dot (the ITA quantized-operand discipline),
+        # dequantized through the static q scale × this block's k scale
+        s32 = jax.lax.dot_general(
+            q8, k8, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)  # [group, block_len]
+        s = s32.astype(jnp.float32) * (q_scale * ks_ref[blk_id])
+        pos = row0 + jax.lax.broadcasted_iota(
+            jnp.int32, (group, block_len), 1)
+        mask = pos < length
+        if window is not None:
+            mask &= pos >= length - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                    # [group, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                 # [group, block_len]
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        # v dequant folds into the partial product: the scale is constant
+        # within a block, so (p · v8)·vs ≡ p · (vs·v8)
+        pv = jax.lax.dot_general(
+            p, v8.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv * vs_ref[blk_id]
+        m_ref[...] = m_new
+
+    @pl.when(i == nb - 1)
+    def _finish():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "q_scale", "interpret"))
+def paged_attention_int8_pallas(
+    q: jax.Array,            # [B, Hq, 1, D] float (post-RoPE)
+    k_pool: jax.Array,       # [N, Hkv, block_len, D] int8
+    v_pool: jax.Array,       # [N, Hkv, block_len, D] int8
+    block_table: jax.Array,  # [B, M] int32
+    lens: jax.Array,         # [B] int32
+    k_scale: jax.Array,      # [N] f32 per-block scales
+    v_scale: jax.Array,      # [N] f32
+    *,
+    q_scale: float,
+    window: Optional[int] = None,
+    start: Optional[jax.Array] = None,  # [B] int32 abs position of entry 0
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, _, d = q.shape
+    n, hkv, blk, _ = k_pool.shape
+    m = block_table.shape[1]
+    group = hq // hkv
+    if hq % hkv:
+        raise ValueError(f"query heads {hq} not a multiple of kv heads {hkv}")
+    if k_pool.dtype != jnp.int8 or v_pool.dtype != jnp.int8:
+        raise ValueError(
+            f"int8 kernel needs int8 pools, got {k_pool.dtype}/{v_pool.dtype}")
+    qs = q.astype(jnp.float32) * (d ** -0.5)
+    q8 = jnp.clip(jnp.round(qs / q_scale), -127, 127).astype(jnp.int8)
+    qg = q8.reshape(b, hkv, group, d)
+    if start is None:
+        start = jnp.zeros((b,), jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        # table + lens + start + per-block k/v scales: the scales are tiny
+        # ([N] f32) and needed at score/accumulate time, so they ride in
+        # SMEM with the rest of the prefetch set
+        num_scalar_prefetch=5,
+        grid=(b, hkv, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d),
+                         lambda bi, h, i, tbl, ln, st, ks, vs: (bi, h, 0, 0)),
+            pl.BlockSpec((1, 1, blk, d),
+                         lambda bi, h, i, tbl, ln, st, ks, vs:
+                         (tbl[bi, i], h, 0, 0)),
+            pl.BlockSpec((1, 1, blk, d),
+                         lambda bi, h, i, tbl, ln, st, ks, vs:
+                         (tbl[bi, i], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, group, d),
+            lambda bi, h, i, tbl, ln, st, ks, vs: (bi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_int8_kernel, block_len=blk, group=group, window=window,
+        q_scale=q_scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), jnp.asarray(lens, jnp.int32),
+      jnp.asarray(start, jnp.int32), jnp.asarray(k_scale, jnp.float32),
+      jnp.asarray(v_scale, jnp.float32), qg, k_pool, v_pool)
     return out.reshape(b, hq, 1, d)

@@ -1,4 +1,4 @@
-"""Public op: paged decode attention with backend dispatch.
+"""Public ops: paged decode attention (float + int8 pools) with dispatch.
 
 ``paged_attention(q, k_pool, v_pool, block_table, lens)`` computes one-token
 decode attention where each batch row's KV lives in fixed-size blocks of a
@@ -8,24 +8,54 @@ table entry ``(p - start) // block_len``, offset ``p % block_len``).
 tables for sliding-window layers rotate and hand the kernel the window's
 block-aligned start per row; full-history tables leave it at 0.
 
-Backends:
-  * ``pallas``    — TPU kernel; scalar-prefetched block table drives the
-    BlockSpec index maps so pool blocks are DMA'd on demand.
-  * ``interpret`` — same kernel through the Pallas interpreter (CPU tests).
+``paged_attention_int8`` is the quantized-residency variant: the pools are
+int8 blocks with per-block scales (the serving layout fills the scales with
+the static ``attn.KV_SCALE`` calibration; the arrays exist so per-block
+calibration can land without a layout change).
+
+Backends (set ``REPRO_PAGED_ATTN_BACKEND`` to override the default):
+  * ``pallas``    — TPU kernel; scalar-prefetched block table (plus, for
+    int8, the per-block scale vectors) drives the BlockSpec index maps so
+    pool blocks are DMA'd on demand. Int8 pools move half the bytes and
+    dequantize on the fly into f32 flash accumulators.
+  * ``interpret`` — same kernels through the Pallas interpreter (CPU/CI).
   * ``xla``       — gather-then-dense oracle (``ref.py``); the default on
-    this container and the numerical reference for the serve engines.
+    this container. For int8 pools this is the ITA integer pipeline over
+    the gathered blocks — bit-identical to the dense int8 serving
+    reference, which is what the paged-vs-dense token-identity matrix
+    anchors on.
+
+Note the int8 numerics split: ``xla`` is the ITA integer softmax (exact,
+token-identity anchor); ``pallas``/``interpret`` run the fused kernel whose
+softmax is f32 flash over the same exact integer score dots (contract:
+``ref.paged_attention_int8_dequant_ref``). ``INT8_BACKENDS`` names the
+backends that implement int8 blocks at all — engines validate against it
+at config time so a quantized arch on an unsupported backend fails at
+construction, not mid-serve inside a jitted step.
 """
 
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.paged_attention.kernel import paged_attention_pallas
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_int8_pallas, paged_attention_pallas,
+)
+from repro.kernels.paged_attention.ref import (
+    paged_attention_int8_ref, paged_attention_ref,
+)
 
-DEFAULT_BACKEND = "xla"
+DEFAULT_BACKEND = os.environ.get("REPRO_PAGED_ATTN_BACKEND", "xla")
+
+# backends implementing decode over float block pools
+BACKENDS = ("pallas", "interpret", "xla")
+# backends implementing decode over int8 block pools (+ per-block scales)
+INT8_BACKENDS = ("pallas", "interpret", "xla")
 
 
 def paged_attention(
@@ -49,5 +79,71 @@ def paged_attention(
             interpret=backend == "interpret")
     if backend == "xla":
         return paged_attention_ref(
+            q, k_pool, v_pool, block_table, lens, window=window, start=start)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def paged_attention_int8(
+    q: jax.Array,            # [B, Hq, 1, D] float (post-RoPE)
+    k_pool: jax.Array,       # [N, Hkv, block_len, D] int8
+    v_pool: jax.Array,       # [N, Hkv, block_len, D] int8
+    block_table: jax.Array,  # [B, M] int32 pool indices
+    lens: jax.Array,         # [B] int32 valid positions per row
+    *,
+    k_scale: Optional[jax.Array] = None,  # [N] f32 per-block (None→KV_SCALE)
+    v_scale: Optional[jax.Array] = None,
+    window: Optional[int] = None,
+    start: Optional[jax.Array] = None,  # [B] int32 abs position of entry 0
+    backend: str = DEFAULT_BACKEND,
+) -> jax.Array:
+    """Decode attention over int8 block pools (see module docstring).
+
+    The ``xla`` (ITA) backend compiles its fixed-point requant constants
+    from the static calibration, so it requires the scale pools to hold
+    ``attn.KV_SCALE`` — exactly what the serving layout writes; concrete
+    non-uniform scale arrays are rejected with a ValueError (traced arrays
+    — the serving cache pools — are trusted by construction). Per-block
+    calibration (non-uniform scale arrays) is honored by the ``pallas`` /
+    ``interpret`` kernel and the dequant oracle.
+    """
+    if q.shape[1] % k_pool.shape[1]:
+        raise ValueError(
+            f"query heads {q.shape[1]} not a multiple of kv heads "
+            f"{k_pool.shape[1]}")
+    if k_pool.dtype != jnp.int8 or v_pool.dtype != jnp.int8:
+        raise ValueError(
+            f"paged_attention_int8 needs int8 pools, got "
+            f"{k_pool.dtype}/{v_pool.dtype} — float pools go through "
+            f"paged_attention")
+    from repro.models.attention import KV_SCALE, Q_SCALE
+
+    if backend in ("pallas", "interpret"):
+        n = k_pool.shape[0]
+        if k_scale is None:
+            k_scale = jnp.full((n,), KV_SCALE, jnp.float32)
+        if v_scale is None:
+            v_scale = jnp.full((n,), KV_SCALE, jnp.float32)
+        return paged_attention_int8_pallas(
+            q, k_pool, v_pool, block_table, lens, k_scale, v_scale,
+            q_scale=Q_SCALE, window=window, start=start,
+            interpret=backend == "interpret")
+    if backend == "xla":
+        # the ITA oracle's fixed-point requant constants are compiled from
+        # the static KV_SCALE; a non-uniform scale pool would be silently
+        # mis-scaled here. Serving passes the (uniformly KV_SCALE) cache
+        # scale pools as tracers — those are trusted by construction — but
+        # concrete arrays from direct callers are checked.
+        for name, scale in (("k_scale", k_scale), ("v_scale", v_scale)):
+            if scale is None or isinstance(scale, jax.core.Tracer):
+                continue
+            vals = np.asarray(scale)
+            if not np.all(vals == np.float32(KV_SCALE)):
+                raise ValueError(
+                    f"paged_attention_int8 backend='xla' (ITA integer "
+                    f"pipeline) supports only the static KV_SCALE "
+                    f"calibration, but {name} has per-block values — use "
+                    f"the 'pallas'/'interpret' kernel (or the dequant "
+                    f"oracle) for per-block calibration")
+        return paged_attention_int8_ref(
             q, k_pool, v_pool, block_table, lens, window=window, start=start)
     raise ValueError(f"unknown backend {backend!r}")

@@ -1,4 +1,4 @@
-"""Dense oracle for paged decode attention.
+"""Dense oracles for paged decode attention (float and int8 pools).
 
 Gathers each row's KV blocks from the shared pool into a contiguous
 ``[B, Hkv, max_blocks·block_len, D]`` view (block-table order IS position
@@ -12,6 +12,20 @@ This is also the ``xla`` serving backend on CPU: the gather is one
 sliding-window layers, before ``lens - window``) are masked to −∞, so the
 result is bit-identical to decoding against a dense per-slot arena holding
 the same values (softmax of −∞ rows contributes exact zeros).
+
+Int8 pools get two oracles with different contracts:
+
+  * ``paged_attention_int8_ref`` — gather + the ITA integer pipeline
+    (``models.attention.decode_attention_int8``). Integer arithmetic over
+    int8 blocks is exact, so this is *bit-identical* to the dense int8
+    serving reference (which decodes the same requantized values from its
+    per-slot arena). It is the ``xla`` serving backend for quantized archs
+    and assumes the static ``KV_SCALE`` calibration.
+  * ``paged_attention_int8_dequant_ref`` — gather + on-the-fly dequant
+    (honoring per-block scales) + f32 softmax over int8 q·k logits: the
+    numerical contract of the fused Pallas kernel, which streams blocks
+    and cannot run the ITA softmax's global integer max. The two oracles
+    agree to integer-softmax quantization error (~1%), not bit-exactly.
 """
 
 from __future__ import annotations
@@ -22,6 +36,20 @@ import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+
+
+def _valid_mask(s: int, lens, window, start):
+    """[B, S] absolute-position validity mask shared by every oracle:
+    gathered entry ``j`` holds absolute position ``start + j`` (``start``
+    None ⇒ 0), valid iff inside ``[lens - window, lens)``."""
+    idx = jnp.arange(s)[None, :]
+    if start is not None:
+        idx = idx + jnp.asarray(start, jnp.int32).reshape(-1, 1)
+    cl = jnp.asarray(lens, jnp.int32).reshape(-1, 1)
+    valid = idx < cl
+    if window is not None:
+        valid &= idx >= cl - window
+    return valid
 
 
 def gather_kv(pool: jax.Array, block_table: jax.Array) -> jax.Array:
@@ -48,15 +76,7 @@ def paged_attention_ref(
     k = gather_kv(k_pool, block_table)   # [B, Hkv, S, D]
     v = gather_kv(v_pool, block_table)
     s = k.shape[2]
-    # absolute position of gathered entry j: start + j (ring tables start at
-    # the window's first live block; full-history tables start at 0)
-    idx = jnp.arange(s)[None, :]
-    if start is not None:
-        idx = idx + jnp.asarray(start, jnp.int32).reshape(-1, 1)
-    cl = jnp.asarray(lens, jnp.int32).reshape(-1, 1)
-    valid = idx < cl
-    if window is not None:
-        valid &= idx >= cl - window
+    valid = _valid_mask(s, lens, window, start)
     # grouped GQA (no KV head expansion), f32 softmax — matches
     # models.attention.decode_attention numerics exactly
     qg = q.reshape(b, hkv, group, d)
@@ -71,4 +91,88 @@ def paged_attention_ref(
     # already exactly 0), so dense-arena token identity is unaffected
     p = jnp.where(valid[:, None, None, :], p, 0.0)
     out = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+def paged_attention_int8_ref(
+    q: jax.Array,            # [B, Hq, 1, D] float (post-RoPE)
+    k_pool: jax.Array,       # [N, Hkv, blk, D] int8 (KV_SCALE calibration)
+    v_pool: jax.Array,       # [N, Hkv, blk, D] int8
+    block_table: jax.Array,  # [B, M] int32
+    lens: jax.Array,         # [B] int32
+    *,
+    window: Optional[int] = None,
+    start: Optional[jax.Array] = None,
+) -> jax.Array:
+    """ITA gather oracle: the ``xla`` backend for int8 block pools.
+
+    Gathers the int8 blocks densely and runs the exact ITA integer
+    pipeline (int8 logits → base-2 integer softmax → int8 probabilities),
+    so the result is bit-identical to the dense int8 serving path decoding
+    the same requantized values — the anchor of the int8 paged-vs-dense
+    token-identity matrix. Assumes the static ``attn.KV_SCALE``
+    calibration (per-block scale pools exist for the fused kernel; this
+    oracle's fixed-point requant constants are compiled from the static
+    scale).
+    """
+    # lazy import: models.attention imports kernels.ita_attention; pulling
+    # it at module scope would couple the kernel package import order
+    from repro.models.attention import decode_attention_int8
+
+    k = gather_kv(k_pool, block_table)
+    v = gather_kv(v_pool, block_table)
+    return decode_attention_int8(q, k, v, lens, None, window=window,
+                                 start=start)
+
+
+def paged_attention_int8_dequant_ref(
+    q: jax.Array,            # [B, Hq, 1, D] float (post-RoPE)
+    k_pool: jax.Array,       # [N, Hkv, blk, D] int8
+    v_pool: jax.Array,       # [N, Hkv, blk, D] int8
+    block_table: jax.Array,  # [B, M] int32
+    lens: jax.Array,         # [B] int32
+    *,
+    k_scale,                 # python float or per-block [N] f32
+    v_scale,
+    window: Optional[int] = None,
+    start: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Dequant oracle: the fused int8 kernel's numerical contract.
+
+    Same quantized operands as the kernel — q is requantized with the
+    static ``Q_SCALE``, logits are exact int8·int8 dot products dequantized
+    with the (possibly per-block) K scale — but softmax and the AV
+    accumulation run in f32, densely. The kernel must match this to flash
+    reordering error only.
+    """
+    from repro.models.attention import Q_SCALE
+
+    b, hq, _, d = q.shape
+    _, hkv, blk, _ = k_pool.shape
+    group = hq // hkv
+    k8 = gather_kv(k_pool, block_table)  # [B, Hkv, S, D] int8
+    v8 = gather_kv(v_pool, block_table)
+    s = k8.shape[2]
+
+    def entry_scale(scale):
+        """Per gathered entry [B, 1, 1, S] f32 (block scale repeated)."""
+        scale = jnp.asarray(scale, jnp.float32)
+        if scale.ndim == 0:
+            return scale
+        per_block = scale[block_table]                 # [B, M]
+        return jnp.repeat(per_block, blk, axis=1)[:, None, None, :]
+
+    qs = q.astype(jnp.float32) * (d ** -0.5)
+    q8 = jnp.clip(jnp.round(qs / Q_SCALE), -127, 127)
+    qg = q8.reshape(b, hkv, group, d)
+    s32 = jnp.einsum("bhgd,bhkd->bhgk", qg, k8.astype(jnp.float32))
+    logits = s32 * Q_SCALE * entry_scale(k_scale)
+    valid = _valid_mask(s, lens, window, start)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    # fold the per-entry V scale into the probabilities (scale is per key
+    # entry, so p·(scale·v) == (p·scale)·v) — one broadcast either way
+    out = jnp.einsum("bhgk,bhkd->bhgd", p * entry_scale(v_scale),
+                     v8.astype(jnp.float32))
     return out.reshape(b, hq, 1, d).astype(q.dtype)

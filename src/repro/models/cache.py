@@ -78,6 +78,34 @@ def bucket_for(n: int, min_bucket: int = 8, cap: int | None = None) -> int:
 TRASH_BLOCK = 0
 
 
+# ---------------------------------------------------------------------------
+# Int8 block quantization (the paper's int8-end-to-end attention operands:
+# quantized K/V *residency*, not just quantized compute — pool bytes per
+# resident token halve vs bf16 blocks)
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: jax.Array, scale) -> jax.Array:
+    """Symmetric int8 KV quantization used by every serving write path.
+
+    Uses ``jnp.round`` (round-half-to-even) — the rounding the int8 decode
+    paths have always used at cache-write time (`attn.KV_SCALE` static
+    calibration), NOT ``core.quant``'s round-half-away weight rounding.
+    Every engine/layout must requantize identically at write time or the
+    int8 paged-vs-dense token-identity contract breaks.
+
+    ``scale`` broadcasts: a python float (static calibration) or a
+    per-block array shaped to broadcast against ``x``.
+    """
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def dequantize_kv(q: jax.Array, scale) -> jax.Array:
+    """int8 K/V → f32; ``scale`` broadcasts like in ``quantize_kv``."""
+    return q.astype(jnp.float32) * scale
+
+
 def blocks_for(n_tokens: int, block_len: int) -> int:
     """Blocks needed to hold ``n_tokens`` positions."""
     return max(1, -(-n_tokens // block_len))

@@ -7,6 +7,11 @@ cross-attention to encoder states + MLP.
 
 Positions use RoPE as the structural stand-in for Whisper's sinusoidal
 absolute embeddings (identical FLOPs/memory; noted in DESIGN.md).
+
+Int8 KV residency (``serve_quant``): the decoder's self-attention K/V —
+the only cache that grows with decode position — is requantized at write
+time and served through the ITA integer pipeline (int8 blocks on the
+paged layout); weights and the fixed-size cross K/V arena stay float.
 """
 
 from __future__ import annotations
@@ -121,6 +126,12 @@ def forward(params, tokens, cfg: ModelConfig, *, embeds=None):
     return nn.unembed(x, params["unembed"])
 
 
+# self-attention KV may live in int8 blocks on the paged layout (cross K/V
+# stays a float dense arena): write paths requantize identically to the
+# dense serve_quant reference
+PAGED_INT8_KV = True
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, quantized=None):
     hd, nkv = cfg.hd, cfg.n_kv_heads
     L = cfg.n_layers
@@ -149,7 +160,15 @@ def _dec_prefill_layer(xc, p, enc, cfg: ModelConfig, positions):
 
 
 def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
-    """Encode audio + ingest decoder prompt; cache cross-K/V per layer."""
+    """Encode audio + ingest decoder prompt; cache cross-K/V per layer.
+
+    Under ``serve_quant`` the decoder's *self*-attention K/V are
+    requantized at write time (the int8-end-to-end residency shared with
+    the dense family, making the int8 block pool bit-identical to this
+    reference); cross K/V stay float — they are a fixed-size encoder-side
+    arena, not paged residency."""
+    from repro.models.cache import quantize_kv
+
     if embeds is None:
         raise ValueError("encdec prefill needs frame embeddings (stub input)")
     enc = encode(params, embeds, cfg)
@@ -160,6 +179,9 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
 
     def body(xc, p):
         xc, k, v, xk, xv = _dec_prefill_layer(xc, p, enc, cfg, positions)
+        if cfg.serve_quant:
+            k = quantize_kv(k, attn.KV_SCALE)
+            v = quantize_kv(v, attn.KV_SCALE)
         kw = jnp.pad(k, ((0, 0), (0, 0), (0, max_len - s), (0, 0)))
         vw = jnp.pad(v, ((0, 0), (0, 0), (0, max_len - s), (0, 0)))
         return xc, (kw.astype(cfg.compute_dtype), vw.astype(cfg.compute_dtype),
@@ -178,19 +200,34 @@ def init_paged_cache(cfg: ModelConfig, slots: int, layout, *, quantized=None):
     Only the decoder's *self*-attention KV grows with decode position, so
     only it is paged (``[L, num_blocks, Hkv, block_len, hd]`` shared pools);
     the encoder-side cross K/V is a fixed ``enc_seq``-length per-slot arena.
+
+    ``quantized`` (default ``cfg.serve_quant``) stores the self-attention
+    pools as int8 blocks plus per-block scale vectors (static
+    ``attn.KV_SCALE`` calibration) — the growing, paged residency is what
+    the int8 halving targets; the fixed-size cross K/V arena stays in
+    ``compute_dtype``.
     """
-    del quantized
+    if quantized is None:
+        quantized = cfg.serve_quant
     hd, nkv = cfg.hd, cfg.n_kv_heads
     L = cfg.n_layers
     dt = cfg.compute_dtype
+    pool_dt = jnp.int8 if quantized else dt
     pool = (L, layout.num_blocks, nkv, layout.block_len, hd)
-    return {
-        "k": jnp.zeros(pool, dt),
-        "v": jnp.zeros(pool, dt),
+    cache = {
+        "k": jnp.zeros(pool, pool_dt),
+        "v": jnp.zeros(pool, pool_dt),
         "xk": jnp.zeros((L, slots, nkv, cfg.enc_seq, hd), dt),
         "xv": jnp.zeros((L, slots, nkv, cfg.enc_seq, hd), dt),
         "len": jnp.zeros((slots,), jnp.int32),
     }
+    if quantized:
+        # distinct buffers: engines donate the cache pytree (see dense)
+        cache["kscale"] = jnp.full((L, layout.num_blocks), attn.KV_SCALE,
+                                   jnp.float32)
+        cache["vscale"] = jnp.full((L, layout.num_blocks), attn.KV_SCALE,
+                                   jnp.float32)
+    return cache
 
 
 def paged_insert(cache, single, slot, block_ids, cfg: ModelConfig):
@@ -215,8 +252,10 @@ def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
     """Encode audio + ingest decoder prompt straight into the paged cache:
     self-attention K/V lands in pool blocks (bulk block writes, tail at
     block granularity), cross-attention K/V and the position counter land
-    in ``slot``'s dense rows. No intermediate dense cache, no splice."""
-    from repro.models.cache import prefill_write_kv
+    in ``slot``'s dense rows. No intermediate dense cache, no splice.
+    Int8 pools requantize before the block write (same write-time
+    requantization as the dense reference)."""
+    from repro.models.cache import prefill_write_kv, quantize_kv
 
     if ring_ids is not None:
         raise ValueError(
@@ -236,6 +275,9 @@ def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
         xc = carry
         p, kc, vc = slices
         xc, k, v, xk, xv = _dec_prefill_layer(xc, p, enc, cfg, positions)
+        if kc.dtype == jnp.int8:   # int8 block pool (serve_quant layout)
+            k = quantize_kv(k, attn.KV_SCALE)
+            v = quantize_kv(v, attn.KV_SCALE)
         kc = prefill_write_kv(kc, k, block_ids)
         vc = prefill_write_kv(vc, v, block_ids)
         return xc, (kc, vc, xk.astype(cfg.compute_dtype),
@@ -259,8 +301,15 @@ def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
 
 def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
                       qparams=None, embeds=None, attn_backend: str = "xla"):
-    """One decode step with paged self-attention KV (cross K/V stays dense)."""
-    from repro.kernels.paged_attention.ops import paged_attention
+    """One decode step with paged self-attention KV (cross K/V stays dense).
+
+    Int8 block pools take ``paged_attention_int8`` (requantized write +
+    ITA/xla or fused-kernel attention over the int8 blocks); the per-layer
+    scale vectors ride through the scan alongside the pools."""
+    from repro.kernels.paged_attention.ops import (
+        paged_attention, paged_attention_int8,
+    )
+    from repro.models.cache import quantize_kv
 
     del qparams
     x = nn.embed(tokens[:, None], params["embed"], cfg.compute_dtype)
@@ -271,19 +320,27 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
     # (start is always None for global layers; no window plumbing applies)
     tbl, _ = dense._resolve_paged_table(table, "G")
     hd = cfg.hd
+    int8_kv = cache["k"].dtype == jnp.int8
 
     def body(xc, slices):
-        p, kc, vc, xkc, xvc = slices
+        p, kc, vc, ksc, vsc, xkc, xvc = slices
         h = nn.rms_norm(xc, p["ln1"])
         q = nn.dense(h, p["wq"]).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
         k = nn.dense(h, p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
         v = nn.dense(h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
         q = nn.rope(q, pos[:, None, None], cfg.rope_theta)
         k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
+        if int8_kv:
+            k, v = quantize_kv(k, attn.KV_SCALE), quantize_kv(v, attn.KV_SCALE)
         sc = dense._paged_cache_write({"k": kc, "v": vc}, k, v, pos, tbl,
                                       kc.shape[2])
         kc, vc = sc["k"], sc["v"]
-        o = paged_attention(q, kc, vc, tbl, pos + 1, backend=attn_backend)
+        if int8_kv:
+            o = paged_attention_int8(q, kc, vc, tbl, pos + 1,
+                                     k_scale=ksc, v_scale=vsc,
+                                     backend=attn_backend)
+        else:
+            o = paged_attention(q, kc, vc, tbl, pos + 1, backend=attn_backend)
         xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
         hx = nn.rms_norm(xc, p["lnx"])
         xq = nn.dense(hx, p["xwq"]).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
@@ -292,9 +349,12 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
         xc = xc + dense._mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
         return xc, (kc, vc)
 
+    L = cfg.n_layers
+    ks_in = cache.get("kscale", jnp.zeros((L, 1), jnp.float32))
+    vs_in = cache.get("vscale", jnp.zeros((L, 1), jnp.float32))
     x, (ks, vs) = jax.lax.scan(
         body, x, (params["dec_stack"], cache["k"], cache["v"],
-                  cache["xk"], cache["xv"]))
+                  ks_in, vs_in, cache["xk"], cache["xv"]))
     x = nn.rms_norm(x, params["final_norm"])
     logits = nn.unembed(x, params["unembed"])
     return logits[:, 0], dict(cache, k=ks, v=vs, len=cache["len"] + 1)
@@ -302,6 +362,12 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
 
 def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
                 embeds=None):
+    """One dense-arena decode step. Under ``serve_quant`` the self-attention
+    K/V are requantized at write time and attended through the ITA integer
+    pipeline — the dense int8 reference the paged int8 pool must match
+    token-for-token. Cross-attention stays float."""
+    from repro.models.cache import quantize_kv
+
     x = nn.embed(tokens[:, None], params["embed"], cfg.compute_dtype)
     b = x.shape[0]
     pos = dense._as_positions(cache["len"], b)
@@ -315,9 +381,14 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
         v = nn.dense(h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
         q = nn.rope(q, pos[:, None, None], cfg.rope_theta)  # per-row positions
         k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
+        if cfg.serve_quant:
+            k, v = quantize_kv(k, attn.KV_SCALE), quantize_kv(v, attn.KV_SCALE)
         sc = dense._cache_write({"k": kc, "v": vc}, k, v, pos, "G", cfg)
         kc, vc = sc["k"], sc["v"]
-        o = attn.decode_attention(q, kc, vc, pos + 1)
+        if cfg.serve_quant:
+            o = attn.decode_attention_int8(q, kc, vc, pos + 1, cfg)
+        else:
+            o = attn.decode_attention(q, kc, vc, pos + 1)
         xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
         # cross attention against cached encoder K/V (always full enc_seq)
         hx = nn.rms_norm(xc, p["lnx"])

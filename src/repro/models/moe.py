@@ -275,8 +275,15 @@ init_cache = dense.init_cache  # same KV cache layout as the dense family
 init_paged_cache = dense.init_paged_cache  # …and the same paged pool layout
 paged_insert = dense.paged_insert
 
+# int8 KV residency (serve_quant): this family keeps float weights (no
+# W8A8 expert GEMMs) but stores/serves the KV cache int8 exactly like the
+# dense family — requantize at write time, ITA integer decode attention
+PAGED_INT8_KV = True
+
 
 def _decode_layer(x, p, c, kind, cfg, pos):
+    from repro.models.cache import quantize_kv
+
     h = nn.rms_norm(x, p["ln1"])
     b = x.shape[0]
     hd = cfg.hd
@@ -285,8 +292,14 @@ def _decode_layer(x, p, c, kind, cfg, pos):
     v = nn.dense(h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
     q = nn.rope(q, pos[:, None, None], cfg.rope_theta)  # per-row positions
     k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
-    c = dense._cache_write(c, k, v, pos, kind, cfg)
-    o = attn.decode_attention(q, c["k"], c["v"], pos + 1, ring=kind == "L")
+    if cfg.serve_quant:
+        c = dense._cache_write(c, quantize_kv(k, attn.KV_SCALE),
+                               quantize_kv(v, attn.KV_SCALE), pos, kind, cfg)
+        o = attn.decode_attention_int8(q, c["k"], c["v"], pos + 1, cfg)
+    else:
+        c = dense._cache_write(c, k, v, pos, kind, cfg)
+        o = attn.decode_attention(q, c["k"], c["v"], pos + 1,
+                                  ring=kind == "L")
     x = x + nn.dense(dense._merge_heads(o), p["wo"])
     x = x + moe_mlp(nn.rms_norm(x, p["ln2"]), p, cfg)
     return x, c
@@ -324,7 +337,10 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
 
 
 def _paged_decode_layer(x, p, c, kind, cfg, pos, table, attn_backend):
-    from repro.kernels.paged_attention.ops import paged_attention
+    from repro.kernels.paged_attention.ops import (
+        paged_attention, paged_attention_int8,
+    )
+    from repro.models.cache import quantize_kv
 
     h = nn.rms_norm(x, p["ln1"])
     b = x.shape[0]
@@ -335,11 +351,20 @@ def _paged_decode_layer(x, p, c, kind, cfg, pos, table, attn_backend):
     q = nn.rope(q, pos[:, None, None], cfg.rope_theta)
     k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
     tbl, start = dense._resolve_paged_table(table, kind)
-    c = dense._paged_cache_write(c, k, v, pos, tbl, c["k"].shape[2],
-                                 start=start)
-    o = paged_attention(q, c["k"], c["v"], tbl, pos + 1,
-                        window=cfg.local_window if kind == "L" else None,
-                        start=start, backend=attn_backend)
+    window = cfg.local_window if kind == "L" else None
+    if c["k"].dtype == jnp.int8:   # int8 block pool (serve_quant layout)
+        c = dense._paged_cache_write(
+            c, quantize_kv(k, attn.KV_SCALE), quantize_kv(v, attn.KV_SCALE),
+            pos, tbl, c["k"].shape[2], start=start)
+        o = paged_attention_int8(q, c["k"], c["v"], tbl, pos + 1,
+                                 k_scale=c["kscale"], v_scale=c["vscale"],
+                                 window=window, start=start,
+                                 backend=attn_backend)
+    else:
+        c = dense._paged_cache_write(c, k, v, pos, tbl, c["k"].shape[2],
+                                     start=start)
+        o = paged_attention(q, c["k"], c["v"], tbl, pos + 1,
+                            window=window, start=start, backend=attn_backend)
     x = x + nn.dense(dense._merge_heads(o), p["wo"])
     x = x + moe_mlp(nn.rms_norm(x, p["ln2"]), p, cfg)
     return x, c
@@ -398,7 +423,12 @@ def _prefill_layer(xc, p, kind, cfg: ModelConfig, positions):
 
 
 def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
-    """MoE prefill: forward + cache (float path)."""
+    """MoE prefill: forward + populated cache. Under ``serve_quant`` the
+    K/V are requantized at write time (int8-end-to-end residency, same as
+    the dense family) so the int8 block pool is bit-identical to this
+    dense reference."""
+    from repro.models.cache import quantize_kv
+
     pattern, n_groups, tail = cfg.layer_layout()
     x = embeds if embeds is not None else nn.embed(
         tokens, params["embed"], cfg.compute_dtype)
@@ -407,6 +437,9 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
     cache = init_cache(cfg, b, max_len, quantized=False)
 
     def fill(c_kv, k, v):
+        if cfg.serve_quant:
+            k = quantize_kv(k, attn.KV_SCALE)
+            v = quantize_kv(v, attn.KV_SCALE)
         s_len = c_kv["k"].shape[2]
         if s <= s_len:
             pad = ((0, 0), (0, 0), (0, s_len - s), (0, 0))

@@ -43,6 +43,9 @@ class Arch:
     paged_insert: Optional[Callable] = None
     # prefill straight into pool blocks (no dense bucket cache + splice)
     paged_prefill: Optional[Callable] = None
+    # the family can store paged K/V as int8 blocks (+ per-block scales)
+    # with write-time requantization identical to its dense int8 reference
+    paged_int8_kv: bool = False
 
     @property
     def supports_paged(self) -> bool:
@@ -51,6 +54,10 @@ class Arch:
     @property
     def supports_paged_prefill(self) -> bool:
         return self.paged_prefill is not None
+
+    @property
+    def supports_paged_int8(self) -> bool:
+        return self.supports_paged and self.paged_int8_kv
 
     @property
     def name(self) -> str:
@@ -74,6 +81,7 @@ def build(cfg: ModelConfig) -> Arch:
             if hasattr(mod, "quantize_params") else None
         ),
         supports_padded_prefill=getattr(mod, "SUPPORTS_PADDED_PREFILL", False),
+        paged_int8_kv=getattr(mod, "PAGED_INT8_KV", False),
         init_paged_cache=(
             (lambda slots, layout, **kw: mod.init_paged_cache(
                 cfg, slots, layout, **kw))

@@ -13,6 +13,14 @@ Serving: the INT8 path (``serve_quant=True``) runs the paper's technique —
 W8A8 projections via ``kernels.int8_gemm``, KV cache stored int8 (static
 scales), attention through the ITA integer pipeline. Norms, RoPE and the
 LM head stay in float (see DESIGN.md §2 assumption 3).
+
+INT8 is a *residency* property, not just a compute property: every serving
+write path — prefill fill, dense-arena decode write, paged-pool prefill
+and decode writes — requantizes K/V with ``cache.quantize_kv`` at write
+time when ``serve_quant`` is set, so the dense reference engines and the
+int8 block pool hold the *same* integers and paged-vs-dense decoding is
+token-identical. Weight quantization (``qparams``) remains a separate
+switch (the engines enable both together for this family).
 """
 
 from __future__ import annotations
@@ -212,11 +220,11 @@ def _decode_layer(x, p, c, kind, cfg: ModelConfig, pos, *, qparams=None):
     q = nn.rope(q, pos[:, None, None], cfg.rope_theta)  # per-row positions
     k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
 
-    if int8:
-        kq = attn.KV_SCALE
-        k_store = jnp.clip(jnp.round(k.astype(jnp.float32) / kq), -127, 127)
-        v_store = jnp.clip(jnp.round(v.astype(jnp.float32) / kq), -127, 127)
-        c = _cache_write(c, k_store, v_store, pos, kind, cfg)
+    if cfg.serve_quant:
+        from repro.models.cache import quantize_kv
+
+        c = _cache_write(c, quantize_kv(k, attn.KV_SCALE),
+                         quantize_kv(v, attn.KV_SCALE), pos, kind, cfg)
         o = attn.decode_attention_int8(q, c["k"], c["v"], pos + 1, cfg)
     else:
         c = _cache_write(c, k, v, pos, kind, cfg)
@@ -306,18 +314,36 @@ def init_paged_cache(cfg: ModelConfig, slots: int, layout, *,
     residency is bounded by the window, not ``max_len``. With ``window``
     left ``None`` every layer stores full-length history and L layers are
     handled by a window mask at attention time (the PR-2 layout).
+
+    **Int8 blocks** (``quantized``, default ``cfg.serve_quant``): pools
+    store K/V as int8 — half the resident bytes of a bf16 pool per token —
+    plus per-block scale vectors ``kscale``/``vscale`` ([n_stack,
+    n_blocks] f32, filled with the static ``attn.KV_SCALE`` calibration;
+    the arrays let per-block calibration land without a layout change).
+    Every write path requantizes with ``cache.quantize_kv`` before
+    storing, so pool contents are the same integers the dense int8
+    reference holds in its float arena.
     """
-    del quantized  # pool storage is float; int8 serving requantizes values
+    if quantized is None:
+        quantized = cfg.serve_quant
     pattern, n_groups, tail = cfg.layer_layout()
     hd, nkv = cfg.hd, cfg.n_kv_heads
-    dt = cfg.compute_dtype
+    dt = jnp.int8 if quantized else cfg.compute_dtype
     ring = getattr(layout, "window", None) is not None
 
     def kv(n_stack, kind):
         n_blocks = (layout.ring_num_blocks if ring and kind == "L"
                     else layout.num_blocks)
         shape = (n_stack, n_blocks, nkv, layout.block_len, hd)
-        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+        c = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+        if quantized:
+            # two distinct buffers: the engines donate the cache pytree and
+            # aliasing k/v scales would donate one buffer twice
+            c["kscale"] = jnp.full((n_stack, n_blocks), attn.KV_SCALE,
+                                   jnp.float32)
+            c["vscale"] = jnp.full((n_stack, n_blocks), attn.KV_SCALE,
+                                   jnp.float32)
+        return c
 
     cache: Dict[str, Any] = {
         "stacks": [kv(n_groups, kind) for kind in pattern],
@@ -359,21 +385,37 @@ def _paged_cache_write(c, k_new, v_new, pos, table, block_len: int,
     off = pos % jnp.int32(block_len)
     k = c["k"].at[blk_ids, :, off].set(k_new[:, :, 0].astype(c["k"].dtype))
     v = c["v"].at[blk_ids, :, off].set(v_new[:, :, 0].astype(c["v"].dtype))
-    return {"k": k, "v": v}
+    # dict(c, ...) keeps the int8 layout's per-block scale pools riding
+    # along (static calibration: writes never touch them)
+    return dict(c, k=k, v=v)
 
 
 def _paged_decode_layer(x, p, c, kind, cfg: ModelConfig, pos, table, *,
                         qparams=None, attn_backend: str = "xla"):
-    """One-token decode through one layer against the paged pool."""
-    from repro.kernels.paged_attention.ops import paged_attention
-    from repro.kernels.paged_attention.ref import gather_kv
+    """One-token decode through one layer against the paged pool.
 
-    int8 = qparams is not None
+    Int8 block pools (``c["k"].dtype == int8``) take the fused quantized
+    path: requantized K/V written straight into int8 blocks and
+    ``paged_attention_int8`` over the pool — no dense gather, no float
+    copy of the history. The ``xla`` backend of that op is the ITA gather
+    oracle, bit-identical to the dense int8 reference.
+    """
+    from repro.kernels.paged_attention.ops import paged_attention
+    from repro.kernels.paged_attention.ops import paged_attention_int8
+    from repro.models.cache import quantize_kv
+
+    int8_w = qparams is not None
+    int8_kv = c["k"].dtype == jnp.int8
+    if int8_w and not int8_kv:
+        raise ValueError(
+            "int8 serving over float block pools was removed (the dense-"
+            "gather ITA detour): build the paged cache with quantized=True "
+            "so K/V live in int8 blocks")
     h = nn.rms_norm(x, p["ln1"])
     b = x.shape[0]
     hd = cfg.hd
     block_len = c["k"].shape[2]  # [num_blocks, Hkv, block_len, hd]
-    lin = functools.partial(_qlin, qparams) if int8 else (
+    lin = functools.partial(_qlin, qparams) if int8_w else (
         lambda name, y: nn.dense(y, p[name]))
     q = lin("wq", h).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
     k = lin("wk", h).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
@@ -383,18 +425,14 @@ def _paged_decode_layer(x, p, c, kind, cfg: ModelConfig, pos, table, *,
 
     window = cfg.local_window if kind == "L" else None
     tbl, start = _resolve_paged_table(table, kind)
-    if int8:
-        # same numerics as the dense int8 path: requantized values stored
-        # in float blocks, ITA integer attention over the gathered view
-        kq = attn.KV_SCALE
-        k_store = jnp.clip(jnp.round(k.astype(jnp.float32) / kq), -127, 127)
-        v_store = jnp.clip(jnp.round(v.astype(jnp.float32) / kq), -127, 127)
-        c = _paged_cache_write(c, k_store, v_store, pos, tbl, block_len,
-                               start=start)
-        k_dense = gather_kv(c["k"], tbl)
-        v_dense = gather_kv(c["v"], tbl)
-        o = attn.decode_attention_int8(q, k_dense, v_dense, pos + 1, cfg,
-                                       window=window, start=start)
+    if int8_kv:
+        c = _paged_cache_write(c, quantize_kv(k, attn.KV_SCALE),
+                               quantize_kv(v, attn.KV_SCALE), pos, tbl,
+                               block_len, start=start)
+        o = paged_attention_int8(q, c["k"], c["v"], tbl, pos + 1,
+                                 k_scale=c["kscale"], v_scale=c["vscale"],
+                                 window=window, start=start,
+                                 backend=attn_backend)
     else:
         c = _paged_cache_write(c, k, v, pos, tbl, block_len, start=start)
         o = paged_attention(q, c["k"], c["v"], tbl, pos + 1,
@@ -471,10 +509,14 @@ def paged_insert(cache, single, slot, block_ids, cfg: ModelConfig):
     slot = jnp.asarray(slot, jnp.int32)
 
     def splice(pool_kv, single_kv):
-        return {
-            "k": paged_insert_kv(pool_kv["k"], single_kv["k"], block_ids),
-            "v": paged_insert_kv(pool_kv["v"], single_kv["v"], block_ids),
-        }
+        # int8 pools: the single cache already holds requantized integers
+        # (serve_quant prefill), so the astype inside paged_insert_kv is
+        # exact; dict(...) keeps the scale pools
+        return dict(pool_kv,
+                    k=paged_insert_kv(pool_kv["k"], single_kv["k"],
+                                      block_ids),
+                    v=paged_insert_kv(pool_kv["v"], single_kv["v"],
+                                      block_ids))
 
     out = dict(cache)
     out["stacks"] = [splice(pc, sc) for pc, sc
@@ -514,8 +556,15 @@ def _paged_prefill_impl(params, tokens, cfg: ModelConfig, cache, slot,
     """Shared paged-prefill scaffold (block writes, scan over groups, tail
     layers, last-real-token logits, slot position update). ``layer_fn`` is
     the family's per-layer prefill application — the MoE family reuses
-    this whole function with its expert-FFN layer."""
-    from repro.models.cache import prefill_write_kv, ring_prefill_write_kv
+    this whole function with its expert-FFN layer.
+
+    Int8 block pools requantize K/V (``cache.quantize_kv``, static
+    ``attn.KV_SCALE``) before the block write — the same write-time
+    requantization the dense serving reference applies, so pool contents
+    are bit-identical to what the dense arena holds."""
+    from repro.models.cache import (
+        prefill_write_kv, quantize_kv, ring_prefill_write_kv,
+    )
 
     pattern, n_groups, tail = cfg.layer_layout()
     x = embeds if embeds is not None else nn.embed(
@@ -529,11 +578,16 @@ def _paged_prefill_impl(params, tokens, cfg: ModelConfig, cache, slot,
     n = jnp.asarray(s if true_len is None else true_len, jnp.int32)
 
     def write(c_kv, k, v, kind):
+        if c_kv["k"].dtype == jnp.int8:
+            k = quantize_kv(k, attn.KV_SCALE)
+            v = quantize_kv(v, attn.KV_SCALE)
         if kind == "L" and ring_ids is not None:
-            return {"k": ring_prefill_write_kv(c_kv["k"], k, ring_ids, n),
-                    "v": ring_prefill_write_kv(c_kv["v"], v, ring_ids, n)}
-        return {"k": prefill_write_kv(c_kv["k"], k, block_ids),
-                "v": prefill_write_kv(c_kv["v"], v, block_ids)}
+            return dict(c_kv,
+                        k=ring_prefill_write_kv(c_kv["k"], k, ring_ids, n),
+                        v=ring_prefill_write_kv(c_kv["v"], v, ring_ids, n))
+        return dict(c_kv,
+                    k=prefill_write_kv(c_kv["k"], k, block_ids),
+                    v=prefill_write_kv(c_kv["v"], v, block_ids))
 
     def group_body(xc, slices):
         stacks_slice, cache_slice = slices
@@ -570,6 +624,11 @@ def _paged_prefill_impl(params, tokens, cfg: ModelConfig, cache, slot,
 # families scan left→right through pad tokens, so they cannot set this.
 SUPPORTS_PADDED_PREFILL = True
 
+# The paged pool may store K/V as int8 blocks (+ per-block scales) for this
+# family: every serving write path requantizes at write time, so int8
+# residency is token-identical to the dense int8 reference.
+PAGED_INT8_KV = True
+
 
 def _prefill_layer(xc, p, kind: str, cfg: ModelConfig, positions):
     """One prefill layer application; returns (x, this layer's k, v).
@@ -598,7 +657,17 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None,
     admission: ``tokens`` may be right-padded to a bucket length, logits are
     taken at position ``true_len - 1`` and the cache position vector is set
     to ``true_len`` so padded entries are never attended during decode.
+
+    When ``serve_quant`` is set, K/V are requantized (static
+    ``attn.KV_SCALE``) before the cache fill: int8 serving is int8
+    *end-to-end*, prefix positions included — this is what makes the int8
+    block pool (which can only hold the requantized integers) bit-identical
+    to this dense reference. Storage stays ``compute_dtype`` (the integers
+    are exactly representable); attention over the prompt itself runs in
+    float either way.
     """
+    from repro.models.cache import quantize_kv
+
     pattern, n_groups, tail = cfg.layer_layout()
     x = embeds if embeds is not None else nn.embed(
         tokens, params["embed"], cfg.compute_dtype)
@@ -607,6 +676,9 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None,
     cache = init_cache(cfg, b, max_len, quantized=False)
 
     def fill(c_kv, k, v, kind):
+        if cfg.serve_quant:
+            k = quantize_kv(k, attn.KV_SCALE)
+            v = quantize_kv(v, attn.KV_SCALE)
         s_len = c_kv["k"].shape[2]
         if s <= s_len:
             pad = s_len - s

@@ -39,10 +39,25 @@ reference for token-identity tests and the baseline for
 ``benchmarks/serve_bench.py``. Both engines expose dispatch / transfer /
 retrace counters so the one-dispatch-one-transfer contract is measurable.
 
-Runs the paper-faithful INT8 decode path when the model config enables
-``serve_quant`` (dense family), bf16 otherwise. The batched cache is kept
-in float storage (decode writes requantized values into it), matching the
-reference engine's numerics exactly.
+**Per-request sampling** (vectorized engines): each ``Request`` may carry
+its own ``temperature`` / ``top_k``; the engines thread them as per-slot
+vectors into the jitted sampling step, and the PRNG is *stateless* — row
+``i``'s draw keys on ``fold_in(fold_in(seed, rid), token_index)`` — so a
+request's token sequence is a pure function of (seed, rid, index),
+identical across engines, batch compositions, slot placement and
+preemptions. A mixed greedy+temperature batch therefore matches per-slot
+single-engine runs token-for-token.
+
+INT8 serving (``serve_quant``): K/V are requantized *at write time* on
+every path — prefill fill, dense-arena decode write, paged block writes —
+so all engines hold the same integers. The dense arenas keep
+``compute_dtype`` storage (the requantized integers are exactly
+representable; layout unchanged), while the paged pool stores the same
+integers natively as int8 blocks plus per-block scales — half the resident
+bytes per token — and decodes them through ``kernels.paged_attention
+.paged_attention_int8`` (ITA gather oracle on ``xla``, fused dequantizing
+kernel on ``pallas``/``interpret``). The old detour — float-dtype blocks
+densely gathered before the ITA pipeline — is gone.
 """
 
 from __future__ import annotations
@@ -68,6 +83,11 @@ class Request:
     rid: int
     prompt: np.ndarray           # [S] int32
     max_new_tokens: int = 16
+    # per-request decode-time sampling params (vectorized engines):
+    # temperature None → the engine default (0 when ec.greedy, else
+    # ec.temperature); 0 → greedy. top_k 0 → full vocab.
+    temperature: Optional[float] = None
+    top_k: int = 0
     # frame embeddings [enc_seq, d] for encoder-decoder archs (stub input)
     embeds: Optional[np.ndarray] = None
     submitted_at: float = 0.0
@@ -95,14 +115,49 @@ class EngineConfig:
     # (slots · max_len) — same memory, strictly more admissible requests.
     block_len: int = 16
     num_blocks: Optional[int] = None
+    # paged attention backend (None → kernels.paged_attention default,
+    # env-overridable via REPRO_PAGED_ATTN_BACKEND). Validated at engine
+    # construction: quantized archs must name a backend that implements
+    # int8 block pools.
+    attn_backend: Optional[str] = None
 
 
-def sample_tokens(logits: jax.Array, ec: EngineConfig, key) -> jax.Array:
-    """[B, V] logits → [B] int32 tokens, on device (fused into the step)."""
-    if ec.greedy:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    scaled = logits.astype(jnp.float32) / max(ec.temperature, 1e-6)
-    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+def sample_tokens_per_slot(logits: jax.Array, temps: jax.Array,
+                           topks: jax.Array, rids: jax.Array,
+                           steps: jax.Array, base_key, *,
+                           any_sampling: bool = True) -> jax.Array:
+    """[B, V] logits + per-slot sampling vectors → [B] int32 tokens.
+
+    Per-request decode-time sampling, fused into the jitted step:
+    ``temps[i] <= 0`` decodes row ``i`` greedily; ``topks[i] > 0``
+    restricts sampling to the top-k logits (ties at the threshold are
+    kept — deterministic and batch-size independent). The PRNG is
+    stateless: row ``i`` draws with ``fold_in(fold_in(base_key, rids[i]),
+    steps[i])`` where ``steps[i]`` is the request's output-token index, so
+    a request's sequence is a pure function of (seed, rid, index) —
+    identical whether it decodes alone, in any mixed batch, on either
+    vectorized engine, or across a preemption's re-prefill continuation.
+
+    ``any_sampling`` is a *static* host-known flag: the engines set it
+    False when every dispatched row is greedy (the default workload), so
+    the all-greedy hot path stays a plain argmax — no full-vocab sort, no
+    discarded categorical draw.
+    """
+    f = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(f, axis=-1).astype(jnp.int32)
+    if not any_sampling:
+        return greedy_tok
+    vocab = f.shape[-1]
+    k_eff = jnp.where(topks > 0, jnp.clip(topks, 1, vocab), vocab)
+    sorted_desc = jnp.flip(jnp.sort(f, axis=-1), axis=-1)
+    thresh = jnp.take_along_axis(sorted_desc, (k_eff - 1)[:, None], axis=-1)
+    masked = jnp.where(f >= thresh, f, -jnp.inf)
+    scaled = masked / jnp.maximum(temps, 1e-6)[:, None]
+    keys = jax.vmap(
+        lambda r, s: jax.random.fold_in(jax.random.fold_in(base_key, r), s)
+    )(jnp.asarray(rids, jnp.int32), jnp.asarray(steps, jnp.int32))
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy_tok)
 
 
 def _build_qparams(arch: registry.Arch, params):
@@ -128,6 +183,12 @@ class _EngineBase:
                 f"admit_batch must be >= 1, got {ec.admit_batch} "
                 f"(0 would starve admission and break the bounded-priority "
                 f"forced path)")
+        if ec.attn_backend is not None and not isinstance(
+                self, PagedServeEngine):
+            raise ValueError(
+                f"attn_backend={ec.attn_backend!r} applies to "
+                f"PagedServeEngine only — the dense-arena engines do not "
+                f"dispatch through kernels.paged_attention")
         self.arch = arch
         self.ec = ec
         self.params = params
@@ -155,6 +216,46 @@ class _EngineBase:
     @property
     def idle(self) -> bool:
         return not self.queue and all(r is None for r in self.slots)
+
+    def _req_temperature(self, req: Request) -> float:
+        """Effective decode temperature: the request's own, else the engine
+        default (0 — greedy — when ``ec.greedy``)."""
+        if req.temperature is not None:
+            return float(req.temperature)
+        return 0.0 if self.ec.greedy else float(self.ec.temperature)
+
+    def _sampling_vectors(self):
+        """(per-slot (temps, topks, rids, steps), any_sampling) for this
+        iteration's decode dispatch. Empty slots sample greedily into
+        garbage rows that are ignored host-side; ``steps`` is each
+        request's output-token index (the stateless-PRNG coordinate).
+        ``any_sampling`` is the static hot-path switch: False (the common
+        all-greedy case) compiles to a plain argmax."""
+        n = self.ec.slots
+        temps = np.zeros((n,), np.float32)
+        topks = np.zeros((n,), np.int32)
+        rids = np.zeros((n,), np.int32)
+        steps = np.zeros((n,), np.int32)
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            temps[i] = self._req_temperature(r)
+            topks[i] = r.top_k
+            rids[i] = r.rid
+            steps[i] = len(r.output)
+        vecs = (jnp.asarray(temps), jnp.asarray(topks),
+                jnp.asarray(rids), jnp.asarray(steps))
+        return vecs, bool(temps.max(initial=0.0) > 0)
+
+    def _admission_vectors(self, req: Request):
+        """(length-1 sampling vectors, any_sampling) for an admission
+        prefill's first token (same stateless coordinates as decode)."""
+        temp = self._req_temperature(req)
+        vecs = (jnp.asarray([temp], jnp.float32),
+                jnp.asarray([req.top_k], jnp.int32),
+                jnp.asarray([req.rid], jnp.int32),
+                jnp.asarray([len(req.output)], jnp.int32))
+        return vecs, temp > 0
 
     def _pick_victim(self) -> int:
         """Slot to preempt on a forced admission: most remaining work."""
@@ -260,6 +361,15 @@ class ServeEngine(_EngineBase):
         self._decode = jax.jit(_dec)
         self._prefill = jax.jit(_pre)
 
+    def submit(self, req: Request):
+        # greedy-only reference: refuse rather than silently decode a
+        # sampling request with argmax
+        if self._req_temperature(req) > 0 or req.top_k > 0:
+            raise NotImplementedError(
+                f"reference engine is greedy-only and would ignore request "
+                f"{req.rid}'s temperature/top_k; use BatchedServeEngine")
+        super().submit(req)
+
     def _admit_one(self, forced: bool = False) -> Optional[Request]:
         """Admit the queue head; returns the request if prefill finished it
         (max_new_tokens reached on the first token), else None."""
@@ -335,50 +445,61 @@ class BatchedServeEngine(_EngineBase):
     def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
         super().__init__(arch, params, ec)
         cfg = arch.cfg
-        # Float-dtype arena: the int8 decode path writes requantized values
-        # into it (same numerics as the per-slot reference, which decodes
-        # against a float prefill cache).
+        # Dense arena in compute_dtype storage: under serve_quant every
+        # write path (prefill fill + decode write) requantizes first, so
+        # the arena holds exactly the integers the int8 paged pool stores
+        # natively — this engine is the numerical reference for both.
         self.cache = arch.init_cache(ec.slots, ec.max_len, quantized=False)
         self.last_tok = jnp.zeros((ec.slots,), jnp.int32)
-        self._key = jax.random.key(ec.seed)
+        base_key = jax.random.key(ec.seed)
         self._bucketing = ec.prefill_buckets and arch.supports_padded_prefill
 
-        def _dec(p, qp, cache, last_tok, key):
+        def _dec(p, qp, cache, last_tok, samp, any_sampling):
             self.decode_traces += 1  # runs at trace time only
             if qp is None:
                 logits, cache = arch.decode_step(p, cache, last_tok)
             else:
                 logits, cache = arch.decode_step(p, cache, last_tok,
                                                  qparams=qp)
-            key, sub = jax.random.split(key)
-            tok = sample_tokens(logits, ec, sub)  # fused on-device sampling
-            return tok, cache, key
+            # fused per-slot sampling (stateless PRNG: see module docstring)
+            tok = sample_tokens_per_slot(logits, *samp, base_key,
+                                         any_sampling=any_sampling)
+            return tok, cache
 
-        def _insert_and_sample(logits, c1, slot, cache, last_tok, key):
+        def _insert_and_sample(logits, c1, slot, cache, last_tok, samp,
+                               any_sampling):
             cache = cache_insert(cache, c1, slot)
-            key, sub = jax.random.split(key)
-            tok = sample_tokens(logits, ec, sub)  # [1]
+            tok = sample_tokens_per_slot(logits, *samp, base_key,
+                                         any_sampling=any_sampling)  # [1]
             last_tok = jax.lax.dynamic_update_slice(last_tok, tok, (slot,))
-            return tok[0], cache, last_tok, key
+            return tok[0], cache, last_tok
 
-        def _pre_bucketed(p, tokens, true_len, slot, cache, last_tok, key,
-                          embeds):
+        def _pre_bucketed(p, tokens, true_len, slot, cache, last_tok, samp,
+                          embeds, any_sampling):
             self.prefill_traces += 1  # one trace per bucket, not per length
             logits, c1 = arch.prefill(p, tokens, ec.max_len,
                                       true_len=true_len, embeds=embeds)
-            return _insert_and_sample(logits, c1, slot, cache, last_tok, key)
+            return _insert_and_sample(logits, c1, slot, cache, last_tok,
+                                      samp, any_sampling)
 
-        def _pre_exact(p, tokens, slot, cache, last_tok, key, embeds):
+        def _pre_exact(p, tokens, slot, cache, last_tok, samp, embeds,
+                       any_sampling):
             self.prefill_traces += 1
             logits, c1 = arch.prefill(p, tokens, ec.max_len, embeds=embeds)
-            return _insert_and_sample(logits, c1, slot, cache, last_tok, key)
+            return _insert_and_sample(logits, c1, slot, cache, last_tok,
+                                      samp, any_sampling)
 
         # Donate the cache arena: in-place slot updates instead of a whole-
         # arena copy per token. last_tok is NOT donated — it is fetched
         # (device_get) after the next dispatch has already consumed it.
-        self._decode_fn = jax.jit(_dec, donate_argnums=(2,))
-        self._prefill_bucketed = jax.jit(_pre_bucketed, donate_argnums=(4,))
-        self._prefill_exact = jax.jit(_pre_exact, donate_argnums=(3,))
+        # any_sampling is static: the all-greedy workload compiles to a
+        # plain argmax (one extra trace only when sampling rows appear).
+        self._decode_fn = jax.jit(_dec, donate_argnums=(2,),
+                                  static_argnums=(5,))
+        self._prefill_bucketed = jax.jit(_pre_bucketed, donate_argnums=(4,),
+                                         static_argnums=(8,))
+        self._prefill_exact = jax.jit(_pre_exact, donate_argnums=(3,),
+                                      static_argnums=(7,))
 
     # -- admission ---------------------------------------------------------
 
@@ -393,21 +514,21 @@ class BatchedServeEngine(_EngineBase):
         on-device sampled first token (fetched later, with the batch)."""
         toks = _continuation_tokens(req)
         n = toks.size
+        samp, any_sampling = self._admission_vectors(req)
         embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
         bucket = bucket_for(n, self.ec.min_bucket, self.ec.max_len)
         if self._bucketing and self._bucket_ok(bucket):
             padded = np.zeros((1, bucket), np.int32)
             padded[0, :n] = toks
-            tok, self.cache, self.last_tok, self._key = (
-                self._prefill_bucketed(
-                    self.params, jnp.asarray(padded),
-                    jnp.asarray(n, jnp.int32), jnp.asarray(slot, jnp.int32),
-                    self.cache, self.last_tok, self._key, embeds))
+            tok, self.cache, self.last_tok = self._prefill_bucketed(
+                self.params, jnp.asarray(padded),
+                jnp.asarray(n, jnp.int32), jnp.asarray(slot, jnp.int32),
+                self.cache, self.last_tok, samp, embeds, any_sampling)
         else:
-            tok, self.cache, self.last_tok, self._key = self._prefill_exact(
+            tok, self.cache, self.last_tok = self._prefill_exact(
                 self.params, jnp.asarray(toks[None, :]),
                 jnp.asarray(slot, jnp.int32),
-                self.cache, self.last_tok, self._key, embeds)
+                self.cache, self.last_tok, samp, embeds, any_sampling)
         return tok
 
     # -- one iteration -----------------------------------------------------
@@ -427,9 +548,10 @@ class BatchedServeEngine(_EngineBase):
 
         dec_tok = None
         if active:
-            dec_tok, self.cache, self._key = self._decode_fn(
+            samp, any_sampling = self._sampling_vectors()
+            dec_tok, self.cache = self._decode_fn(
                 self.params, self.qparams, self.cache, self.last_tok,
-                self._key)
+                samp, any_sampling)
             self.last_tok = dec_tok
             self.decode_dispatches += 1
 
@@ -466,13 +588,18 @@ class BatchedServeEngine(_EngineBase):
         return finished
 
 
-def validate_paged_config(arch: registry.Arch):
+def validate_paged_config(arch: registry.Arch, attn_backend: str = "xla"):
     """Config validation for the paged engine. After ring blocks + paged
     prefill, every attention-cache family serves on the paged path for any
     ``local_window``; what remains unsupported is recurrent state (no
-    growing KV to page). The error names the offending family + layer
-    pattern so the fix (pick an attention-cache arch, or the dense engine)
-    is obvious from the message."""
+    growing KV to page). Quantized (``serve_quant``) archs additionally
+    need int8 block-pool support — both in the family (write-time
+    requantization + int8 decode) and in the configured attention backend
+    (the fused int8 kernel / ITA oracle). All of it fails *here*, at
+    construction, with the arch named in the error — never mid-serve
+    inside a jitted step."""
+    from repro.kernels.paged_attention import ops as paged_ops
+
     cfg = arch.cfg
     if not arch.supports_paged:
         bad = "".join(sorted(set(cfg.pattern) - set("GLB")))
@@ -488,6 +615,24 @@ def validate_paged_config(arch: registry.Arch):
             f"paged serving: family {cfg.family!r} has a paged decode path "
             f"but no paged prefill — implement `paged_prefill` next to its "
             f"`paged_decode_step`")
+    if cfg.serve_quant:
+        if not arch.supports_paged_int8:
+            raise ValueError(
+                f"paged serving: arch {cfg.name!r} (family {cfg.family!r}) "
+                f"is quantized (serve_quant) but the family does not "
+                f"support int8 block pools — set serve_quant=False or add "
+                f"write-time requantization + PAGED_INT8_KV to the family")
+        if attn_backend not in paged_ops.INT8_BACKENDS:
+            raise ValueError(
+                f"paged serving: arch {cfg.name!r} is quantized "
+                f"(serve_quant) but attention backend {attn_backend!r} "
+                f"does not implement the int8 paged-attention kernel "
+                f"(supported: {', '.join(paged_ops.INT8_BACKENDS)}) — "
+                f"pick one of those or serve the float path")
+    elif attn_backend not in paged_ops.BACKENDS:
+        raise ValueError(
+            f"paged serving: unknown attention backend {attn_backend!r} "
+            f"(supported: {', '.join(paged_ops.BACKENDS)})")
 
 
 class PagedServeEngine(_EngineBase):
@@ -517,6 +662,15 @@ class PagedServeEngine(_EngineBase):
     K/V straight into pool blocks (full blocks in bulk, the tail at block
     granularity) — no dense bucket cache, no splice dispatch.
 
+    **Int8 blocks** (``serve_quant`` archs): pools store K/V natively as
+    int8 plus per-block scales — roughly half the resident bytes per token
+    of a bf16 pool, so a fixed byte budget admits ~2x the concurrent
+    requests — and decode runs ``paged_attention_int8`` over the blocks
+    (ITA gather oracle on ``xla``, token-identical to the dense int8
+    reference; fused dequantizing kernel on ``pallas``/``interpret``).
+    Every write path requantizes at write time, so no dense gather or
+    float copy of the history ever exists.
+
     The PR-1 dataflow contract is preserved: one jitted paged decode
     dispatch over all rows per iteration, up to ``admit_batch`` admission
     dispatches, one device→host token fetch. Tables are host-owned and
@@ -533,7 +687,11 @@ class PagedServeEngine(_EngineBase):
     def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
         super().__init__(arch, params, ec)
         cfg = arch.cfg
-        validate_paged_config(arch)
+        from repro.kernels.paged_attention import ops as paged_ops
+
+        self.attn_backend = (paged_ops.DEFAULT_BACKEND
+                             if ec.attn_backend is None else ec.attn_backend)
+        validate_paged_config(arch, self.attn_backend)
         num_blocks = ec.num_blocks
         if num_blocks is None:  # match the dense arena's token budget
             num_blocks = blocks_for(ec.slots * ec.max_len, ec.block_len) + 1
@@ -562,33 +720,39 @@ class PagedServeEngine(_EngineBase):
             self._ring_first = [0] * ec.slots   # abs block idx of entry 0
             self._ring_ids: List = [None] * ec.slots
         self._slot_len = [0] * ec.slots   # host mirror of active rows' len
+        # quantized archs get int8 block pools (+ per-block scales) — the
+        # family default; float archs keep compute_dtype pools
+        self.quantized = bool(cfg.serve_quant)
         self.cache = arch.init_paged_cache(ec.slots, self.layout)
         self.last_tok = jnp.zeros((ec.slots,), jnp.int32)
-        self._key = jax.random.key(ec.seed)
+        base_key = jax.random.key(ec.seed)
         self._bucketing = ec.prefill_buckets and arch.supports_padded_prefill
         self.max_concurrent = 0           # peak active slots (capacity proof)
+        backend = self.attn_backend
 
-        def _dec(p, qp, cache, table, last_tok, key):
+        def _dec(p, qp, cache, table, last_tok, samp, any_sampling):
             self.decode_traces += 1  # runs at trace time only
             logits, cache = arch.paged_decode_step(
-                p, cache, last_tok, table, qparams=qp)
-            key, sub = jax.random.split(key)
-            tok = sample_tokens(logits, ec, sub)
-            return tok, cache, key
+                p, cache, last_tok, table, qparams=qp, attn_backend=backend)
+            tok = sample_tokens_per_slot(logits, *samp, base_key,
+                                         any_sampling=any_sampling)
+            return tok, cache
 
         def _pre(p, tokens, true_len, slot, block_ids, ring_ids, cache,
-                 last_tok, key, embeds):
+                 last_tok, samp, embeds, any_sampling):
             self.prefill_traces += 1  # one trace per (bucket, block count)
             logits, cache = arch.paged_prefill(
                 p, tokens, cache, slot, block_ids, ring_ids=ring_ids,
                 true_len=true_len, embeds=embeds)
-            key, sub = jax.random.split(key)
-            tok = sample_tokens(logits, ec, sub)  # [1]
+            tok = sample_tokens_per_slot(logits, *samp, base_key,
+                                         any_sampling=any_sampling)  # [1]
             last_tok = jax.lax.dynamic_update_slice(last_tok, tok, (slot,))
-            return tok[0], cache, last_tok, key
+            return tok[0], cache, last_tok
 
-        self._decode_fn = jax.jit(_dec, donate_argnums=(2,))
-        self._prefill_fn = jax.jit(_pre, donate_argnums=(6,))
+        self._decode_fn = jax.jit(_dec, donate_argnums=(2,),
+                                  static_argnums=(6,))
+        self._prefill_fn = jax.jit(_pre, donate_argnums=(6,),
+                                   static_argnums=(10,))
 
     # -- capacity bookkeeping ----------------------------------------------
 
@@ -661,6 +825,39 @@ class PagedServeEngine(_EngineBase):
                 "ring": jnp.asarray(self.ring_table),
                 "start": jnp.asarray(self.ring_start)}
 
+    def pool_leaves(self):
+        """KV pool leaves (k/v block pools + per-block scale vectors) of
+        the paged cache — per-slot arenas (encdec cross K/V, positions)
+        excluded."""
+        out = []
+
+        def grab(d):
+            for key in ("k", "v", "kscale", "vscale"):
+                if key in d:
+                    out.append(d[key])
+
+        if "stacks" in self.cache:
+            for d in self.cache["stacks"]:
+                grab(d)
+            for d in self.cache.get("tail", []):
+                grab(d)
+        else:
+            grab(self.cache)
+        return out
+
+    @property
+    def pool_bytes(self) -> int:
+        """Total resident bytes of the KV block pools (full + ring arenas,
+        scale vectors included) — the quantity the int8 layout halves."""
+        return int(sum(leaf.nbytes for leaf in self.pool_leaves()))
+
+    @property
+    def pool_bytes_per_token(self) -> float:
+        """Pool bytes per token of full-history capacity. (Ring arenas are
+        counted in the numerator; for windowed models their capacity is
+        window-bounded, so compare like layouts.)"""
+        return self.pool_bytes / self.layout.usable_tokens
+
     # -- one iteration -----------------------------------------------------
 
     def _dispatch_admission(self, req: Request, slot: int):
@@ -699,11 +896,12 @@ class PagedServeEngine(_EngineBase):
             tokens = jnp.asarray(toks[None, :])
             true_len = None
         embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
-        tok, self.cache, self.last_tok, self._key = self._prefill_fn(
+        samp, any_sampling = self._admission_vectors(req)
+        tok, self.cache, self.last_tok = self._prefill_fn(
             self.params, tokens, true_len, jnp.asarray(slot, jnp.int32),
             jnp.asarray(block_ids),
             None if ring_ids is None else jnp.asarray(ring_ids),
-            self.cache, self.last_tok, self._key, embeds)
+            self.cache, self.last_tok, samp, embeds, any_sampling)
         return tok
 
     def step(self) -> List[Request]:
@@ -743,9 +941,10 @@ class PagedServeEngine(_EngineBase):
 
         dec_tok = None
         if active:
-            dec_tok, self.cache, self._key = self._decode_fn(
+            samp, any_sampling = self._sampling_vectors()
+            dec_tok, self.cache = self._decode_fn(
                 self.params, self.qparams, self.cache,
-                self._tables(), self.last_tok, self._key)
+                self._tables(), self.last_tok, samp, any_sampling)
             self.last_tok = dec_tok
             self.decode_dispatches += 1
             for i in active:

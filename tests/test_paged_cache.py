@@ -352,6 +352,102 @@ def test_paged_attention_ring_start_matches_full_history(backend):
                                atol=2e-6, rtol=2e-5)
 
 
+@pytest.mark.parametrize("lens,window", [
+    ([7, 0, 20], None),
+    ([7, 0, 20], 6),
+    ([1, 16, 3], None),
+])
+def test_paged_attention_int8_kernel_vs_dequant_oracle(lens, window):
+    """Fused int8 kernel (interpret mode) matches the dequant oracle —
+    same quantized operands, exact int8·int8 score dots, f32 softmax —
+    including empty rows and sliding windows."""
+    from repro.kernels.paged_attention.ops import paged_attention_int8
+    from repro.kernels.paged_attention.ref import (
+        paged_attention_int8_dequant_ref,
+    )
+    from repro.models.attention import KV_SCALE
+
+    rng = np.random.default_rng(0)
+    B, HQ, HKV, D, BLK, N, M = 3, 8, 2, 16, 4, 10, 5
+    q = jnp.asarray(rng.standard_normal((B, HQ, 1, D)), jnp.float32)
+    kp = jnp.asarray(rng.integers(-127, 128, (N, HKV, BLK, D)), jnp.int8)
+    vp = jnp.asarray(rng.integers(-127, 128, (N, HKV, BLK, D)), jnp.int8)
+    tbl = jnp.asarray(rng.integers(1, N, (B, M)), jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    scale = jnp.full((N,), KV_SCALE, jnp.float32)
+    ref = paged_attention_int8_dequant_ref(
+        q, kp, vp, tbl, lens, k_scale=scale, v_scale=scale, window=window)
+    out = paged_attention_int8(q, kp, vp, tbl, lens, window=window,
+                               backend="interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-6, rtol=3e-5)
+
+
+def test_paged_attention_int8_xla_matches_dense_ita():
+    """The xla (ITA gather) backend over block-scattered int8 pools is
+    bit-identical to decode_attention_int8 over the contiguous int8 cache
+    holding the same values — the serving token-identity anchor."""
+    from repro.kernels.paged_attention.ops import paged_attention_int8
+    from repro.models.attention import decode_attention_int8
+
+    rng = np.random.default_rng(1)
+    B, HQ, HKV, D, BLK = 2, 4, 2, 8, 4
+    S = 16
+    M = S // BLK
+    q = jnp.asarray(rng.standard_normal((B, HQ, 1, D)), jnp.float32)
+    k = jnp.asarray(rng.integers(-127, 128, (B, HKV, S, D)), jnp.int8)
+    v = jnp.asarray(rng.integers(-127, 128, (B, HKV, S, D)), jnp.int8)
+    lens = jnp.asarray([5, 14], jnp.int32)
+    N = 1 + B * M
+    perm = rng.permutation(np.arange(1, N))
+    tbl = perm.reshape(B, M).astype(np.int32)
+    kp = np.zeros((N, HKV, BLK, D), np.int8)
+    vp = np.zeros((N, HKV, BLK, D), np.int8)
+    for b in range(B):
+        for m in range(M):
+            kp[tbl[b, m]] = np.asarray(k)[b, :, m * BLK:(m + 1) * BLK]
+            vp[tbl[b, m]] = np.asarray(v)[b, :, m * BLK:(m + 1) * BLK]
+    dense_out = decode_attention_int8(q, k, v, lens, None)
+    paged_out = paged_attention_int8(q, jnp.asarray(kp), jnp.asarray(vp),
+                                     jnp.asarray(tbl), lens, backend="xla")
+    np.testing.assert_array_equal(np.asarray(paged_out),
+                                  np.asarray(dense_out))
+
+
+def test_paged_attention_int8_rejects_float_pools():
+    from repro.kernels.paged_attention.ops import paged_attention_int8
+
+    q = jnp.zeros((1, 2, 1, 8), jnp.float32)
+    pool = jnp.zeros((3, 1, 4, 8), jnp.float32)
+    with pytest.raises(ValueError, match="int8 pools"):
+        paged_attention_int8(q, pool, pool, jnp.zeros((1, 2), jnp.int32),
+                             jnp.zeros((1,), jnp.int32))
+
+
+def test_paged_attention_int8_xla_rejects_per_block_scales():
+    """The ITA (xla) backend's fixed-point constants assume the static
+    KV_SCALE calibration — concrete non-uniform scale arrays must fail
+    loudly, not silently mis-scale (the fused kernel honors them)."""
+    from repro.kernels.paged_attention.ops import paged_attention_int8
+    from repro.models.attention import KV_SCALE
+
+    q = jnp.zeros((1, 2, 1, 8), jnp.float32)
+    pool = jnp.zeros((3, 1, 4, 8), jnp.int8)
+    tbl = jnp.ones((1, 2), jnp.int32)
+    lens = jnp.asarray([4], jnp.int32)
+    bad = jnp.asarray([0.01, 0.02, 0.03], jnp.float32)
+    with pytest.raises(ValueError, match="per-block"):
+        paged_attention_int8(q, pool, pool, tbl, lens, k_scale=bad,
+                             backend="xla")
+    # uniform static-calibration arrays (what the serving cache holds)
+    # pass, as does the fused kernel with the non-uniform scales
+    uniform = jnp.full((3,), KV_SCALE, jnp.float32)
+    paged_attention_int8(q, pool, pool, tbl, lens, k_scale=uniform,
+                         v_scale=uniform, backend="xla")
+    paged_attention_int8(q, pool, pool, tbl, lens, k_scale=bad, v_scale=bad,
+                         backend="interpret")
+
+
 def test_paged_attention_matches_dense_decode_attention():
     """Paged attention over a block-scattered cache equals dense decode
     attention over the contiguous cache holding the same values."""

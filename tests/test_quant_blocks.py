@@ -1,0 +1,285 @@
+"""Block-quantization property suite: round-trip error bounds for the
+int8 KV block helpers and fuzzed int8 paged-attention kernel-vs-oracle
+agreement (wrapped ring tables included).
+
+Structure mirrors the PR-3 allocator suite: each property is a plain
+checker function driven twice — by Hypothesis (when installed) and by an
+always-on seeded fallback — so the invariants are exercised on this
+container either way.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.models.cache import dequantize_kv, quantize_kv, ring_blocks_for
+from repro.models.attention import KV_SCALE
+
+
+# ---------------------------------------------------------------------------
+# Property 1: quantize/dequant round trip is bounded by scale/2 per element
+# (for values inside the representable range ±127·scale; outside it the
+# error is the clip distance, checked separately)
+# ---------------------------------------------------------------------------
+
+
+def _check_roundtrip(shape, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-127.0 * scale, 127.0 * scale, size=shape).astype(
+        np.float32)
+    q = quantize_kv(jnp.asarray(x), scale)
+    assert q.dtype == jnp.int8
+    back = np.asarray(dequantize_kv(q, scale))
+    err = np.abs(back - x)
+    assert err.max() <= scale / 2 + 1e-7 * scale, (
+        f"round-trip error {err.max()} > scale/2 = {scale / 2}")
+    # out-of-range values clip to ±127·scale exactly
+    big = np.float32(500.0 * scale)
+    q_big = quantize_kv(jnp.asarray([big, -big]), scale)
+    np.testing.assert_array_equal(np.asarray(q_big), [127, -127])
+
+
+def _check_per_block_scales(n_blocks, blk, d, seed):
+    """Per-block scale arrays broadcast exactly like a loop over blocks."""
+    rng = np.random.default_rng(seed)
+    scales = rng.uniform(0.005, 0.2, size=n_blocks).astype(np.float32)
+    x = rng.standard_normal((n_blocks, blk, d)).astype(np.float32)
+    q = quantize_kv(jnp.asarray(x), scales[:, None, None])
+    back = np.asarray(dequantize_kv(q, jnp.asarray(scales)[:, None, None]))
+    for i in range(n_blocks):
+        qi = quantize_kv(jnp.asarray(x[i]), float(scales[i]))
+        np.testing.assert_array_equal(np.asarray(q[i]), np.asarray(qi))
+        in_range = np.abs(x[i]) <= 127.0 * scales[i]
+        err = np.abs(back[i] - x[i])[in_range]
+        if err.size:
+            assert err.max() <= scales[i] / 2 + 1e-6
+
+
+def test_roundtrip_seeded():
+    """Always-on seeded fallback for the Hypothesis suite below."""
+    rng = np.random.default_rng(0)
+    for case in range(200):
+        ndim = int(rng.integers(1, 4))
+        shape = tuple(int(rng.integers(1, 9)) for _ in range(ndim))
+        scale = float(rng.uniform(1e-3, 2.0))
+        _check_roundtrip(shape, scale, seed=case)
+    for case in range(50):
+        _check_per_block_scales(int(rng.integers(1, 8)),
+                                int(rng.integers(1, 6)),
+                                int(rng.integers(1, 6)), seed=case)
+
+
+def test_roundtrip_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        shape=st.lists(st.integers(1, 8), min_size=1, max_size=3),
+        scale=st.floats(1e-3, 2.0, allow_nan=False),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def run(shape, scale, seed):
+        _check_roundtrip(tuple(shape), scale, seed)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# Property 2: fused int8 kernel (interpret mode) agrees with the dequant
+# oracle over fuzzed block_len / heads / history lengths, per-block scales
+# and wrapped ring tables; the ITA (xla) oracle agrees bit-exactly with the
+# dense int8 reference over the same gathered values.
+# ---------------------------------------------------------------------------
+
+# small draw pools keep jit retraces bounded (shape-keyed cache hits)
+_DIMS = (8, 16)
+_BLOCKS = (2, 4, 8)
+_GROUPS = (1, 2, 4)
+
+
+def _int8_pool_case(seed):
+    """Draw one fuzz case: pools, table, lens, scales, window."""
+    rng = np.random.default_rng(seed)
+    b = int(rng.integers(1, 4))
+    hkv = int(rng.integers(1, 3))
+    group = int(rng.choice(_GROUPS))
+    d = int(rng.choice(_DIMS))
+    blk = int(rng.choice(_BLOCKS))
+    m = int(rng.integers(1, 6))
+    n = 1 + b * m                       # disjoint blocks + trash row 0
+    kp = rng.integers(-127, 128, (n, hkv, blk, d)).astype(np.int8)
+    vp = rng.integers(-127, 128, (n, hkv, blk, d)).astype(np.int8)
+    perm = rng.permutation(np.arange(1, n))
+    tbl = perm.reshape(b, m).astype(np.int32)
+    lens = rng.integers(0, m * blk + 1, size=b).astype(np.int32)
+    window = int(rng.integers(1, m * blk + 1)) if rng.random() < 0.5 else None
+    if rng.random() < 0.5:
+        ks = vs = None                  # static KV_SCALE path
+    else:
+        ks = rng.uniform(0.005, 0.1, n).astype(np.float32)
+        vs = rng.uniform(0.005, 0.1, n).astype(np.float32)
+    q = rng.standard_normal((b, hkv * group, 1, d)).astype(np.float32)
+    return q, kp, vp, tbl, lens, ks, vs, window
+
+
+def _check_kernel_vs_oracle(seed):
+    from repro.kernels.paged_attention.ops import paged_attention_int8
+    from repro.kernels.paged_attention.ref import (
+        paged_attention_int8_dequant_ref,
+    )
+
+    q, kp, vp, tbl, lens, ks, vs, window = _int8_pool_case(seed)
+    n = kp.shape[0]
+    ks_arr = jnp.full((n,), KV_SCALE, jnp.float32) if ks is None else \
+        jnp.asarray(ks)
+    vs_arr = jnp.full((n,), KV_SCALE, jnp.float32) if vs is None else \
+        jnp.asarray(vs)
+    ref = paged_attention_int8_dequant_ref(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(tbl),
+        jnp.asarray(lens), k_scale=ks_arr, v_scale=vs_arr, window=window)
+    out = paged_attention_int8(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(tbl),
+        jnp.asarray(lens), k_scale=None if ks is None else ks_arr,
+        v_scale=None if vs is None else vs_arr, window=window,
+        backend="interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-6, rtol=3e-5)
+
+
+def _check_ita_oracle_vs_dense_int8(seed):
+    """xla (ITA) backend over scattered blocks is bit-identical to the
+    dense int8 reference over the contiguous cache — the token-identity
+    anchor of the serving matrix."""
+    from repro.kernels.paged_attention.ops import paged_attention_int8
+    from repro.models.attention import decode_attention_int8
+
+    rng = np.random.default_rng(seed)
+    b = int(rng.integers(1, 3))
+    hkv = int(rng.integers(1, 3))
+    group = int(rng.choice(_GROUPS))
+    d = int(rng.choice(_DIMS))
+    blk = int(rng.choice(_BLOCKS))
+    m = int(rng.integers(1, 5))
+    s = m * blk
+    k = rng.integers(-127, 128, (b, hkv, s, d)).astype(np.int8)
+    v = rng.integers(-127, 128, (b, hkv, s, d)).astype(np.int8)
+    q = rng.standard_normal((b, hkv * group, 1, d)).astype(np.float32)
+    lens = rng.integers(0, s + 1, size=b).astype(np.int32)
+    n = 1 + b * m
+    perm = rng.permutation(np.arange(1, n))
+    tbl = perm.reshape(b, m).astype(np.int32)
+    kp = np.zeros((n, hkv, blk, d), np.int8)
+    vp = np.zeros((n, hkv, blk, d), np.int8)
+    for bi in range(b):
+        for mi in range(m):
+            kp[tbl[bi, mi]] = k[bi, :, mi * blk:(mi + 1) * blk]
+            vp[tbl[bi, mi]] = v[bi, :, mi * blk:(mi + 1) * blk]
+    dense = decode_attention_int8(jnp.asarray(q), jnp.asarray(k),
+                                  jnp.asarray(v), jnp.asarray(lens), None)
+    paged = paged_attention_int8(jnp.asarray(q), jnp.asarray(kp),
+                                 jnp.asarray(vp), jnp.asarray(tbl),
+                                 jnp.asarray(lens), backend="xla")
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(dense))
+
+
+def _check_wrapped_ring(seed):
+    """A rotated ring table + start vector equals the full-history table
+    with window masking — for both the fused kernel and the dequant
+    oracle, with the ring entries physically wrapped (bi % ring_blocks)."""
+    from repro.kernels.paged_attention.ops import paged_attention_int8
+    from repro.kernels.paged_attention.ref import (
+        paged_attention_int8_dequant_ref,
+    )
+    from repro.models.cache import ring_table_row
+
+    rng = np.random.default_rng(seed)
+    hkv = int(rng.integers(1, 3))
+    group = int(rng.choice(_GROUPS))
+    d = int(rng.choice(_DIMS))
+    blk = int(rng.choice(_BLOCKS))
+    window = int(rng.integers(1, 3 * blk))
+    wb = ring_blocks_for(window, blk)
+    n_abs = wb + int(rng.integers(0, 4))     # history long enough to wrap
+    s = n_abs * blk
+    length = int(rng.integers((n_abs - 1) * blk + 1, s + 1))
+    k = rng.integers(-127, 128, (hkv, s, d)).astype(np.int8)
+    v = rng.integers(-127, 128, (hkv, s, d)).astype(np.int8)
+    q = rng.standard_normal((1, hkv * group, 1, d)).astype(np.float32)
+    lens = np.asarray([length], np.int32)
+
+    # full-history layout: block bi at pool row bi+1
+    n_full = n_abs + 1
+    kp_f = np.zeros((n_full, hkv, blk, d), np.int8)
+    vp_f = np.zeros((n_full, hkv, blk, d), np.int8)
+    for bi in range(n_abs):
+        kp_f[bi + 1] = k[:, bi * blk:(bi + 1) * blk]
+        vp_f[bi + 1] = v[:, bi * blk:(bi + 1) * blk]
+    tbl_f = np.arange(1, n_full)[None, :].astype(np.int32)
+
+    # ring layout: last wb live blocks under bi % wb
+    ring_ids = np.arange(1, wb + 1, dtype=np.int32)
+    kp_r = np.zeros((wb + 1, hkv, blk, d), np.int8)
+    vp_r = np.zeros((wb + 1, hkv, blk, d), np.int8)
+    last_bi = (length - 1) // blk
+    first_bi = max(0, last_bi - (wb - 1))
+    for bi in range(first_bi, last_bi + 1):
+        kp_r[ring_ids[bi % wb]] = k[:, bi * blk:(bi + 1) * blk]
+        vp_r[ring_ids[bi % wb]] = v[:, bi * blk:(bi + 1) * blk]
+    tbl_r = np.asarray([ring_table_row(ring_ids, first_bi)], np.int32)
+    start = jnp.asarray([first_bi * blk], jnp.int32)
+
+    full = paged_attention_int8(
+        jnp.asarray(q), jnp.asarray(kp_f), jnp.asarray(vp_f),
+        jnp.asarray(tbl_f), jnp.asarray(lens), window=window,
+        backend="interpret")
+    ring = paged_attention_int8(
+        jnp.asarray(q), jnp.asarray(kp_r), jnp.asarray(vp_r),
+        jnp.asarray(tbl_r), jnp.asarray(lens), window=window, start=start,
+        backend="interpret")
+    np.testing.assert_allclose(np.asarray(ring), np.asarray(full),
+                               atol=3e-6, rtol=3e-5)
+    nr = wb + 1
+    oracle = paged_attention_int8_dequant_ref(
+        jnp.asarray(q), jnp.asarray(kp_r), jnp.asarray(vp_r),
+        jnp.asarray(tbl_r), jnp.asarray(lens),
+        k_scale=jnp.full((nr,), KV_SCALE, jnp.float32),
+        v_scale=jnp.full((nr,), KV_SCALE, jnp.float32),
+        window=window, start=start)
+    np.testing.assert_allclose(np.asarray(ring), np.asarray(oracle),
+                               atol=3e-6, rtol=3e-5)
+
+
+def test_int8_kernel_vs_oracle_seeded():
+    """Always-on seeded fuzz (the fallback for the Hypothesis drivers)."""
+    for seed in range(12):
+        _check_kernel_vs_oracle(seed)
+    for seed in range(12):
+        _check_ita_oracle_vs_dense_int8(seed)
+    for seed in range(8):
+        _check_wrapped_ring(seed)
+
+
+@pytest.mark.slow
+def test_int8_kernel_vs_oracle_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def run_kernel(seed):
+        _check_kernel_vs_oracle(seed)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def run_ita(seed):
+        _check_ita_oracle_vs_dense_int8(seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def run_ring(seed):
+        _check_wrapped_ring(seed)
+
+    run_kernel()
+    run_ita()
+    run_ring()

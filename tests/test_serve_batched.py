@@ -138,6 +138,104 @@ def test_admit_batch_must_be_positive(engine_setup):
                            EngineConfig(slots=2, max_len=32, admit_batch=0))
 
 
+def test_per_request_sampling_matches_per_slot_runs(engine_setup):
+    """Decode-time sampling params per request: a mixed greedy+temperature
+    (+top-k) batch produces, for every request, exactly the tokens that a
+    single-slot engine decoding that request alone produces — the
+    stateless fold_in(seed, rid, token-index) PRNG makes the sequence
+    independent of batch composition and slot placement."""
+    cfg, arch, params = engine_setup
+    rng = np.random.default_rng(7)
+
+    def work():
+        reqs = []
+        for rid, (temp, topk) in enumerate(
+                [(0.0, 0), (0.9, 0), (0.7, 5), (None, 0)]):
+            reqs.append(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab,
+                                    size=4 + rid).astype(np.int32),
+                max_new_tokens=6, temperature=temp, top_k=topk))
+        return reqs
+
+    mixed_reqs = work()
+    ec = EngineConfig(slots=4, max_len=48, seed=3)   # greedy default
+    eng = BatchedServeEngine(arch, params, ec)
+    for r in mixed_reqs:
+        eng.submit(r)
+    mixed = {r.rid: list(r.output) for r in eng.run_until_drained()}
+    assert len(mixed) == 4
+
+    rng = np.random.default_rng(7)                   # identical prompts
+    for solo_req in work():
+        solo_ec = EngineConfig(slots=1, max_len=48, seed=3)
+        solo = BatchedServeEngine(arch, params, solo_ec)
+        solo.submit(solo_req)
+        (done,) = solo.run_until_drained()
+        assert list(done.output) == mixed[solo_req.rid], (
+            f"rid {solo_req.rid} diverged from its solo run")
+
+    # the two greedy requests (temp 0.0 explicit, None→engine default)
+    # must be deterministic: a re-run reproduces them
+    rng = np.random.default_rng(7)
+    eng2 = BatchedServeEngine(arch, params, ec)
+    for r in work():
+        eng2.submit(r)
+    again = {r.rid: list(r.output) for r in eng2.run_until_drained()}
+    assert again == mixed
+
+    # the paged engine shares the stateless sampling scheme: the same
+    # mixed batch over int8 block pools produces the same tokens
+    from repro.serve.engine import PagedServeEngine
+
+    rng = np.random.default_rng(7)
+    pag = PagedServeEngine(arch, params,
+                           EngineConfig(slots=4, max_len=48, block_len=8,
+                                        seed=3))
+    for r in work():
+        pag.submit(r)
+    paged = {r.rid: list(r.output) for r in pag.run_until_drained()}
+    assert paged == mixed
+
+
+def test_reference_engine_rejects_sampling_requests(engine_setup):
+    """The greedy-only per-slot reference refuses requests carrying
+    sampling params instead of silently decoding them with argmax."""
+    cfg, arch, params = engine_setup
+    eng = ServeEngine(arch, params, EngineConfig(slots=1, max_len=32))
+    with pytest.raises(NotImplementedError, match="greedy-only"):
+        eng.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=2, temperature=0.8))
+    with pytest.raises(NotImplementedError, match="greedy-only"):
+        eng.submit(Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=2, top_k=3))
+    # explicit temperature=0.0 is greedy and accepted
+    eng.submit(Request(rid=2, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=2, temperature=0.0))
+
+
+def test_top_k_restricts_support(engine_setup):
+    """top_k=1 sampling is argmax regardless of temperature — the masked
+    distribution has a single support point."""
+    cfg, arch, params = engine_setup
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+    outs = []
+    for seed in (0, 1):
+        eng = BatchedServeEngine(arch, params,
+                                 EngineConfig(slots=1, max_len=32,
+                                              seed=seed))
+        eng.submit(Request(rid=0, prompt=prompt.copy(), max_new_tokens=5,
+                           temperature=5.0, top_k=1))
+        (done,) = eng.run_until_drained()
+        outs.append(list(done.output))
+    greedy_eng = BatchedServeEngine(arch, params,
+                                    EngineConfig(slots=1, max_len=32))
+    greedy_eng.submit(Request(rid=0, prompt=prompt.copy(), max_new_tokens=5))
+    (greedy_done,) = greedy_eng.run_until_drained()
+    assert outs[0] == outs[1] == list(greedy_done.output)
+
+
 def test_metrics_empty_and_partial():
     assert metrics([]) == {"requests": 0, "ttft_avg_s": 0.0,
                            "latency_avg_s": 0.0, "tokens_per_s": 0.0}

@@ -94,10 +94,11 @@ def _matrix_setup(family, layout, quant):
 @pytest.mark.parametrize("quant", ["float", "int8"])
 @pytest.mark.parametrize("family", ["dense", "moe", "encdec"])
 def test_paged_dense_identity_matrix(family, quant, layout, sampling):
+    """Every int8 cell runs the int8 *block* pool (native int8 K/V blocks +
+    per-block scales) against the dense int8 reference — token-identical
+    because both requantize identically at write time."""
     if _MATRIX_CFGS[(family, layout)] is None:
         pytest.skip(f"{family} has no {layout} layout")
-    if quant == "int8" and family != "dense":
-        pytest.skip(f"{family} serves on the float path only")
     cfg, arch, params = _matrix_setup(family, layout, quant)
     ec = EngineConfig(slots=2, max_len=48, block_len=8,
                       greedy=sampling == "greedy", temperature=0.8, seed=11)
@@ -121,6 +122,18 @@ def test_paged_dense_identity_matrix(family, quant, layout, sampling):
     # every block recycled by drain time (full + ring arenas)
     assert pag.alloc.free_blocks == pag.layout.usable_blocks
     assert pag.alloc.reserved_unallocated == 0
+    # int8 cells store the pool natively as int8 blocks + scale vectors
+    # (half the resident bytes of the float layout); float cells must not
+    # grow scale pools
+    pool = (pag.cache["stacks"][0] if "stacks" in pag.cache else pag.cache)
+    if quant == "int8":
+        assert pag.quantized
+        assert pool["k"].dtype == jnp.int8 and pool["v"].dtype == jnp.int8
+        assert "kscale" in pool and "vscale" in pool
+    else:
+        assert not pag.quantized
+        assert pool["k"].dtype != jnp.int8
+        assert "kscale" not in pool
     if layout == "sliding":
         # ring blocks active, and per-sliding-layer pool residency is
         # bounded by ceil(window/block)+1 blocks per slot — the L-layer
@@ -438,6 +451,34 @@ def test_unaligned_max_len_admission(engine_setup):
 # ---------------------------------------------------------------------------
 # Config validation + back-compat layout paths
 # ---------------------------------------------------------------------------
+
+
+def test_quantized_arch_rejects_backend_without_int8_kernel(engine_setup):
+    """A serve_quant arch on an attention backend that lacks the int8
+    paged kernel fails at engine construction (config-validation time)
+    with the arch named in the error — never mid-serve inside a jitted
+    step. The float path still reports unknown backends."""
+    cfg, arch, params = engine_setup
+    assert cfg.serve_quant
+    with pytest.raises(ValueError) as exc:
+        PagedServeEngine(arch, params,
+                         EngineConfig(slots=2, max_len=32, block_len=8,
+                                      attn_backend="tpu_splash"))
+    msg = str(exc.value)
+    assert cfg.name in msg                     # names the arch
+    assert "tpu_splash" in msg                 # ...and the backend
+    assert "int8" in msg                       # ...and the reason
+    # supported backends construct fine
+    PagedServeEngine(arch, params,
+                     EngineConfig(slots=2, max_len=32, block_len=8,
+                                  attn_backend="xla"))
+    # float archs get the plain unknown-backend error
+    cfg_f = dataclasses.replace(cfg, serve_quant=False)
+    arch_f = registry.build(cfg_f)
+    with pytest.raises(ValueError, match="unknown attention backend"):
+        PagedServeEngine(arch_f, params,
+                         EngineConfig(slots=2, max_len=32, block_len=8,
+                                      attn_backend="tpu_splash"))
 
 
 def test_paged_rejects_recurrent_family_naming_pattern():
