@@ -36,9 +36,40 @@ SECTIONS = [
 ]
 
 
+# the serve package split (LLMEngine front-end / schedulers / backends /
+# legacy shims): a bad module split should fail the smoke check, not the
+# first real serving run
+SERVE_MODULES = [
+    "repro.serve",
+    "repro.serve.request",
+    "repro.serve.config",
+    "repro.serve.scheduler",
+    "repro.serve.backends",
+    "repro.serve.api",
+    "repro.serve.engine",
+]
+
+
 def smoke() -> None:
-    """Import-check every benchmark module without running it."""
+    """Import-check every benchmark module without running it, plus the
+    serve package modules (and their public entry points)."""
     failures = 0
+    for mod in SERVE_MODULES:
+        try:
+            m = importlib.import_module(mod)
+            if mod == "repro.serve.api" and not callable(
+                    getattr(m, "LLMEngine", None)):
+                raise AttributeError("repro.serve.api.LLMEngine missing")
+            if mod == "repro.serve.engine":
+                for legacy in ("ServeEngine", "BatchedServeEngine",
+                               "PagedServeEngine"):
+                    if not callable(getattr(m, legacy, None)):
+                        raise AttributeError(f"legacy shim {legacy} missing")
+            print(f"{mod},0.0,import_ok")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{mod}_IMPORT_ERROR,0.0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr, limit=3)
     for label, mod in SECTIONS:
         try:
             m = importlib.import_module(mod)

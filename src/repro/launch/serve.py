@@ -1,10 +1,16 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> …``.
 
-Defaults to the vectorized continuous-batching engine (one batched decode
-dispatch + one device→host fetch per iteration); ``--engine paged``
-serves from the shared block-pool KV cache (same contract, fragmentation-
-free admission); ``--engine reference`` selects the sequential per-slot
-baseline for A/B comparison.
+Constructs the one serve front-end, ``repro.serve.LLMEngine``, from a
+``--backend`` (execution) × ``--scheduler`` (admission policy) pair:
+
+  * backends: ``arena`` (vectorized dense arena, default), ``paged``
+    (shared block-pool KV), ``slot`` (sequential per-slot reference);
+  * schedulers: ``bounded`` (default), ``fcfs``, ``qos`` (two traffic
+    classes — ``--rt-fraction`` marks that share of requests as ``"rt"``
+    latency-critical; the rest are best-effort).
+
+``--engine batched|paged|reference`` is kept as a deprecated alias for
+``--backend``.
 """
 
 from __future__ import annotations
@@ -13,13 +19,32 @@ import argparse
 
 import numpy as np
 
+# name lists live in repro.serve.config (the single source of truth);
+# the deprecated --engine names are that module's legacy aliases too
+from repro.serve.config import BACKENDS, SCHEDULERS, canonical_backend
+
+_ENGINE_NAMES = ("batched", "paged", "reference")
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--engine", choices=("batched", "paged", "reference"),
-                    default="batched")
+    ap.add_argument("--backend", choices=BACKENDS,
+                    default=None, help="execution backend (CacheBackend)")
+    ap.add_argument("--engine", choices=_ENGINE_NAMES,
+                    default=None,
+                    help="DEPRECATED alias for --backend "
+                         "(batched→arena, reference→slot)")
+    ap.add_argument("--scheduler", choices=SCHEDULERS,
+                    default="bounded", help="admission policy")
+    ap.add_argument("--rt-fraction", type=float, default=0.0,
+                    help="fraction of requests submitted as the 'rt' "
+                         "(latency-critical) QoS class; the qos scheduler "
+                         "guarantees their admission window")
+    ap.add_argument("--rt-window", type=int, default=2,
+                    help="qos scheduler: max iterations an rt lane head "
+                         "may wait before a forced admission")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
@@ -30,49 +55,62 @@ def main():
                          "reaches full concurrency in slots/admit_batch "
                          "iterations)")
     ap.add_argument("--block-len", type=int, default=16,
-                    help="KV block size (paged engine)")
+                    help="KV block size (paged backend)")
     ap.add_argument("--num-blocks", type=int, default=None,
-                    help="KV pool size incl. trash block (paged engine; "
+                    help="KV pool size incl. trash block (paged backend; "
                          "default matches the dense arena budget; "
                          "sliding-window layers use a separate ring arena "
                          "bounded by the window)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 enables on-device sampling "
-                         "(vectorized engines)")
+                         "(vectorized backends)")
     args = ap.parse_args()
 
     import jax
 
     from repro import configs
     from repro.models import registry, schema as schema_lib
-    from repro.serve.engine import (
-        BatchedServeEngine, EngineConfig, PagedServeEngine, Request,
-        ServeEngine, metrics,
-    )
+    from repro.serve import EngineConfig, LLMEngine, metrics
 
+    backend = canonical_backend(args.backend or args.engine or "batched")
     model = (configs.smoke_config(args.arch) if args.smoke
              else configs.get_config(args.arch))
     arch = registry.build(model)
+    if backend not in arch.serve_backends:
+        raise SystemExit(
+            f"--backend {backend} unsupported for {model.name} "
+            f"(family {model.family}): supported = "
+            f"{', '.join(arch.serve_backends)}")
     params = schema_lib.init_params(arch.schema(), jax.random.key(0))
     ec = EngineConfig(slots=args.slots, max_len=args.max_len,
                       admit_window=args.admit_window,
                       admit_batch=args.admit_batch,
                       greedy=args.temperature <= 0,
                       temperature=max(args.temperature, 1e-6),
-                      block_len=args.block_len, num_blocks=args.num_blocks)
-    engine_cls = {"batched": BatchedServeEngine,
-                  "paged": PagedServeEngine,
-                  "reference": ServeEngine}[args.engine]
-    engine = engine_cls(arch, params, ec)
+                      block_len=args.block_len, num_blocks=args.num_blocks,
+                      backend=backend, scheduler=args.scheduler,
+                      rt_window=args.rt_window)
+    engine = LLMEngine(arch, params, ec)
     rng = np.random.default_rng(0)
+    handles = []
     for rid in range(args.requests):
-        engine.submit(Request(
-            rid=rid,
-            prompt=rng.integers(0, model.vocab,
-                                size=rng.integers(4, 32)).astype(np.int32),
-            max_new_tokens=args.max_new))
+        handles.append(engine.add_request(
+            rng.integers(0, model.vocab,
+                         size=rng.integers(4, 32)).astype(np.int32),
+            max_new_tokens=args.max_new,
+            qos="rt" if rng.random() < args.rt_fraction else "be"))
     done = engine.run_until_drained()
     print(metrics(done))
+    by_class = {}
+    for h in handles:
+        r = engine.request(h)
+        if r.first_token_at is not None:
+            by_class.setdefault(r.qos, []).append(
+                r.first_token_at - r.submitted_at)
+    for qos, ttfts in sorted(by_class.items()):
+        print(f"ttft[{qos}]: avg {np.mean(ttfts) * 1e3:.1f} ms "
+              f"p99 {np.percentile(ttfts, 99) * 1e3:.1f} ms "
+              f"({len(ttfts)} requests)")
     print(f"iters={engine.iterations} dispatches={engine.decode_dispatches} "
           f"transfers={engine.transfers} "
           f"traces(decode/prefill)={engine.decode_traces}/"

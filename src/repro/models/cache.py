@@ -223,6 +223,11 @@ class BlockAllocator:
         reserved)."""
         return max_blocks <= self.available_blocks + self._reserved.get(rid, 0)
 
+    def reservation(self, rid: int) -> int:
+        """``rid``'s outstanding reservation (0 if not admitted) — what a
+        release would return to the available pool."""
+        return self._reserved.get(rid, 0)
+
     def admit(self, rid: int, now_blocks: int, max_blocks: int) -> List[int]:
         """Reserve ``max_blocks`` for ``rid`` and allocate the first
         ``now_blocks`` of them; returns the allocated block ids."""

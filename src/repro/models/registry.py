@@ -60,6 +60,23 @@ class Arch:
         return self.supports_paged and self.paged_int8_kv
 
     @property
+    def serve_backends(self) -> tuple:
+        """Execution backends (``repro.serve.backends``) this arch can
+        serve on — the capability flags ``LLMEngine`` construction and the
+        launchers select from. Every family decodes on the sequential
+        per-slot reference (``slot``) and the dense batched arena
+        (``arena``); ``paged`` additionally needs the family's paged
+        decode *and* paged prefill entry points (recurrent state has no
+        growing KV cache to page). Quantized (``serve_quant``) archs on
+        the paged backend are further gated on int8 block-pool support by
+        ``repro.serve.backends.validate_paged_config`` at construction.
+        """
+        out = ["slot", "arena"]
+        if self.supports_paged and self.supports_paged_prefill:
+            out.append("paged")
+        return tuple(out)
+
+    @property
     def name(self) -> str:
         return self.cfg.name
 

@@ -1,0 +1,41 @@
+"""Serve layer: ``LLMEngine`` front-end, pluggable QoS traffic-class
+schedulers, and execution backends behind the ``CacheBackend`` protocol.
+
+Construction path::
+
+    from repro.serve import EngineConfig, LLMEngine
+    eng = LLMEngine(arch, params,
+                    EngineConfig(backend="paged", scheduler="qos"))
+
+Legacy engine classes (``ServeEngine`` / ``BatchedServeEngine`` /
+``PagedServeEngine``) remain importable from here and from
+``repro.serve.engine`` as deprecation shims.
+"""
+
+from repro.serve.api import LLMEngine, metrics
+from repro.serve.backends import (
+    ArenaBackend, PagedBackend, SlotBackend, make_backend,
+    sample_tokens_per_slot, validate_paged_config,
+)
+from repro.serve.config import BACKENDS, SCHEDULERS, EngineConfig
+from repro.serve.engine import (
+    BatchedServeEngine, PagedServeEngine, ServeEngine,
+)
+from repro.serve.request import (
+    FinishReason, Request, RequestState, StepOutput,
+)
+from repro.serve.scheduler import (
+    BoundedPriorityScheduler, FCFSScheduler, QoSTrafficClassScheduler,
+    Scheduler, make_scheduler,
+)
+
+__all__ = [
+    "LLMEngine", "metrics",
+    "ArenaBackend", "PagedBackend", "SlotBackend", "make_backend",
+    "sample_tokens_per_slot", "validate_paged_config",
+    "BACKENDS", "SCHEDULERS", "EngineConfig",
+    "BatchedServeEngine", "PagedServeEngine", "ServeEngine",
+    "FinishReason", "Request", "RequestState", "StepOutput",
+    "BoundedPriorityScheduler", "FCFSScheduler",
+    "QoSTrafficClassScheduler", "Scheduler", "make_scheduler",
+]

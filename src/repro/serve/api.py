@@ -1,0 +1,503 @@
+"""``LLMEngine`` — the one serve front-end.
+
+Construction names the execution backend and the admission policy; there
+is exactly one engine class::
+
+    from repro.serve import EngineConfig, LLMEngine
+
+    eng = LLMEngine(arch, params,
+                    EngineConfig(backend="paged", scheduler="qos"))
+    h = eng.add_request(prompt, max_new_tokens=32, qos="rt",
+                        stop_sequences=[[13, 13]], eos_token=2)
+    for out in eng.stream(h):        # steps the engine until h finishes
+        print(out.token, out.finish_reason)
+    eng.abort(h)                     # from anywhere: frees the slot AND
+                                     # returns its pool blocks immediately
+
+The engine owns queue + slots + lifecycle (``serve.request``), delegates
+*when/who to admit or preempt* to a :class:`~repro.serve.scheduler
+.Scheduler`, and *where KV lives / how tokens are computed* to a
+:class:`~repro.serve.backends.CacheBackend`. One engine iteration
+(``step()``) keeps the QoS dataflow contract of the vectorized backends:
+exactly one batched decode dispatch, at most ``admit_batch`` admission
+prefill dispatches, one device→host token fetch — stop-sequence / EOS /
+length finishes are host-side checks riding that single fetch.
+
+The legacy classes (``ServeEngine``, ``BatchedServeEngine``,
+``PagedServeEngine`` in ``repro.serve.engine``) are thin deprecation
+shims over this class and stay token-identical to it.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Dict, Iterator, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.serve.backends import make_backend
+from repro.serve.config import EngineConfig
+from repro.serve.request import (
+    FinishReason, Request, RequestState, StepOutput, normalize_stop_sequences,
+)
+from repro.serve.scheduler import QOS_CLASSES, Scheduler, make_scheduler
+
+Handle = int
+
+
+class LLMEngine:
+    """Continuous-batching serve engine with pluggable scheduler/backend."""
+
+    def __init__(self, arch: registry.Arch, params,
+                 config: Optional[EngineConfig] = None, *,
+                 backend=None, scheduler: Optional[Scheduler] = None):
+        """``backend`` / ``scheduler`` inject pre-built instances (any
+        object honoring the ``CacheBackend`` / ``Scheduler`` protocols —
+        how the scheduler unit tests run against a fake backend);
+        normally both are constructed from ``config``."""
+        ec = config if config is not None else EngineConfig()
+        # (admit_batch/scheduler/backend-name validation lives in
+        # EngineConfig.__post_init__; only the cross-field check that
+        # depends on the shim-pinned backend happens here)
+        if ec.attn_backend is not None and ec.backend != "paged":
+            raise ValueError(
+                f"attn_backend={ec.attn_backend!r} applies to the paged "
+                f"backend only — the dense-arena backends do not dispatch "
+                f"through kernels.paged_attention")
+        self.arch = arch
+        self.ec = ec
+        self.params = params
+        self.scheduler: Scheduler = (scheduler if scheduler is not None
+                                     else make_scheduler(ec))
+        self.backend = (backend if backend is not None
+                        else make_backend(ec.backend, arch, params, ec))
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * ec.slots
+        self.iterations = 0
+        self.max_concurrent = 0           # peak active slots (capacity proof)
+        self._requests: Dict[int, Request] = {}
+        # finished handles in completion order — the pruning queue when
+        # ec.retain_finished bounds the registry (long-running servers)
+        self._finished_order: deque[int] = deque()
+        self._next_rid = 0
+
+    # Legacy observability (decode_dispatches, transfers, traces) and the
+    # backend-specific surface (alloc, layout, ring tables, pool_bytes,
+    # qparams, cache, ...) live on the backend; delegate reads so both the
+    # deprecation shims and existing benchmarks keep working unchanged.
+    def __getattr__(self, name):
+        backend = self.__dict__.get("backend")
+        if backend is not None and hasattr(backend, name):
+            return getattr(backend, name)
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")
+
+    # -- request intake ----------------------------------------------------
+
+    def add_request(self, prompt, *, max_new_tokens: int = 16,
+                    qos: str = "be", temperature: Optional[float] = None,
+                    top_k: int = 0,
+                    stop_sequences=None, eos_token: Optional[int] = None,
+                    embeds: Optional[np.ndarray] = None,
+                    rid: Optional[int] = None) -> Handle:
+        """Queue a generation request; returns its handle (the rid)."""
+        if rid is None:
+            rid = self._next_rid
+        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, qos=qos,
+                      temperature=temperature, top_k=top_k,
+                      stop_sequences=stop_sequences, eos_token=eos_token,
+                      embeds=embeds)
+        return self.submit(req)
+
+    def submit(self, req: Request) -> Handle:
+        """Queue a fully-built :class:`Request`; returns its handle."""
+        if len(req.prompt) + req.max_new_tokens > self.ec.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds "
+                f"max_len={self.ec.max_len}")
+        if req.qos not in QOS_CLASSES:
+            raise ValueError(
+                f"request {req.rid}: unknown qos class {req.qos!r} "
+                f"(supported: {', '.join(QOS_CLASSES)})")
+        live = self._requests.get(req.rid)
+        if live is not None and not live.finished and live is not req:
+            raise ValueError(
+                f"request id {req.rid} is already live on this engine")
+        if live is not None and live.finished:
+            # rid reuse: drop the finished predecessor's retention entry,
+            # or a later prune would pop it against the *new* occupant —
+            # each rid appears at most once in the finished order
+            try:
+                self._finished_order.remove(req.rid)
+            except ValueError:
+                pass
+        req.stop_sequences = normalize_stop_sequences(req.stop_sequences)
+        self.backend.validate_request(req)
+        req.state = RequestState.WAITING
+        req.waiting_iters = 0
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+        self._requests[req.rid] = req
+        self._next_rid = max(self._next_rid, req.rid + 1)
+        return req.rid
+
+    def request(self, handle: Union[Handle, Request]) -> Request:
+        if isinstance(handle, Request):
+            return handle
+        try:
+            return self._requests[handle]
+        except KeyError:
+            raise KeyError(f"unknown request handle {handle!r}") from None
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(r is None for r in self.slots)
+
+    def abort(self, handle: Union[Handle, Request]) -> bool:
+        """Abort a request wherever it is. Waiting/preempted requests
+        leave the queue; a running request's slot is vacated and — on the
+        paged backend — its full-arena *and* ring-arena blocks return to
+        the allocators immediately. Returns False if it already finished.
+        """
+        req = self.request(handle)
+        if req.finished:
+            return False
+        if req in self.queue:
+            self.queue.remove(req)
+        else:
+            for i, r in enumerate(self.slots):
+                if r is req:
+                    self.backend.release(i, req)
+                    self.slots[i] = None
+                    break
+        req.state = RequestState.ABORTED
+        req.finish_reason = FinishReason.ABORT
+        req.done_at = time.perf_counter()
+        self._note_finished(req)
+        return True
+
+    def _note_finished(self, req: Request) -> None:
+        """Record completion; with ``ec.retain_finished`` set, drop the
+        oldest finished handles so the registry stays bounded in a
+        long-running serve loop."""
+        self._finished_order.append(req.rid)
+        keep = self.ec.retain_finished
+        if keep is None:
+            return
+        while len(self._finished_order) > keep:
+            old = self._finished_order.popleft()
+            stale = self._requests.get(old)
+            if stale is not None and stale.finished:
+                del self._requests[old]
+
+    # -- sampling vectors (vectorized backends) ----------------------------
+
+    def _req_temperature(self, req: Request) -> float:
+        """Effective decode temperature (``ec.effective_temperature``)."""
+        return self.ec.effective_temperature(req.temperature)
+
+    def _sampling_vectors(self):
+        """(per-slot (temps, topks, rids, steps), any_sampling) for this
+        iteration's decode dispatch. Empty slots sample greedily into
+        garbage rows that are ignored host-side; ``steps`` is each
+        request's output-token index (the stateless-PRNG coordinate).
+        ``any_sampling`` is the static hot-path switch: False (the common
+        all-greedy case) compiles to a plain argmax."""
+        n = self.ec.slots
+        temps = np.zeros((n,), np.float32)
+        topks = np.zeros((n,), np.int32)
+        rids = np.zeros((n,), np.int32)
+        steps = np.zeros((n,), np.int32)
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            temps[i] = self._req_temperature(r)
+            topks[i] = r.top_k
+            rids[i] = r.rid
+            steps[i] = len(r.output)
+        vecs = (jnp.asarray(temps), jnp.asarray(topks),
+                jnp.asarray(rids), jnp.asarray(steps))
+        return vecs, bool(temps.max(initial=0.0) > 0)
+
+    def _admission_vectors(self, req: Request):
+        """(length-1 sampling vectors, any_sampling) for an admission
+        prefill's first token (same stateless coordinates as decode)."""
+        temp = self._req_temperature(req)
+        vecs = (jnp.asarray([temp], jnp.float32),
+                jnp.asarray([req.top_k], jnp.int32),
+                jnp.asarray([req.rid], jnp.int32),
+                jnp.asarray([len(req.output)], jnp.int32))
+        return vecs, temp > 0
+
+    # -- one iteration -----------------------------------------------------
+
+    def _dispatch_admission(self, req: Request, slot: int):
+        """One admission prefill dispatch for ``req`` into ``slot``."""
+        req.state = RequestState.PREFILL
+        req.waiting_iters = 0
+        if self.backend.vectorized:
+            samp, any_sampling = self._admission_vectors(req)
+        else:
+            samp, any_sampling = None, False
+        tok = self.backend.prefill(req, slot, samp, any_sampling)
+        self.slots[slot] = req
+        return tok
+
+    def step(self) -> List[StepOutput]:
+        """One engine iteration → every request's progress this step."""
+        outputs, _ = self._step()
+        return outputs
+
+    def _step(self):
+        """One engine iteration. Exactly one decode pass (if any slot is
+        active), up to ``admit_batch`` admission dispatches (plus at most
+        one forced admission), then a single device→host fetch of the
+        sampled tokens; every finish condition is a host-side check on
+        that fetch. Which requests finish *by length* is known before the
+        fetch, so their resources are recycled in time for this
+        iteration's admissions; stop/EOS finishes release on the fetch.
+        """
+        self.iterations += 1
+        outputs: List[StepOutput] = []
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        at_dispatch = list(self.slots)  # snapshot: who owns each decode row
+        self.max_concurrent = max(self.max_concurrent, len(active))
+        self.backend.begin_iteration(active, self.slots)
+
+        dec_tok = None
+        if active:
+            if self.backend.vectorized:
+                samp, any_sampling = self._sampling_vectors()
+            else:
+                samp, any_sampling = None, False
+            dec_tok = self.backend.decode(active, self.slots, samp,
+                                          any_sampling)
+
+        # length-determined finishes free their resources *now* so this
+        # iteration's admissions can reuse them (the decode dispatch that
+        # read them is already ordered before any insert)
+        will_free = [i for i in active
+                     if len(self.slots[i].output) + 1
+                     >= self.slots[i].max_new_tokens]
+        for i in will_free:
+            self.backend.release(i, self.slots[i])
+        pre_released = set(will_free)
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        avail = free + will_free
+
+        # scheduler-ordered admissions into free (or freeing) slots; stop
+        # at the first capacity-blocked request (head-of-line credit)
+        admitted: List[tuple] = []      # (request, slot, first token)
+        limit = min(self.ec.admit_batch,
+                    self.backend.max_admit or self.ec.admit_batch)
+        for req in self.scheduler.admit_order(list(self.queue)):
+            if not avail or len(admitted) >= limit:
+                break
+            if not self.backend.can_admit(req):
+                break
+            slot = avail.pop(0)
+            self.queue.remove(req)
+            tok = self._dispatch_admission(req, slot)
+            admitted.append((req, slot, tok))
+
+        # forced admission (bounded-priority / QoS rt guarantee): a slot
+        # still free after the admission pass is used first — the
+        # guarantee outranks the admit_batch cap, and evicting a running
+        # request while a slot sits empty would throw its KV away for no
+        # capacity reason. Only then preempt victims — never a slot that
+        # is finishing or was admitted this iteration — until the forced
+        # request fits.
+        forced = self.scheduler.forced_request(
+            list(self.queue), [r for r, _, _ in admitted])
+        if forced is not None and avail and self.backend.can_admit(forced):
+            slot = avail.pop(0)
+            self.queue.remove(forced)
+            tok = self._dispatch_admission(forced, slot)
+            admitted.append((forced, slot, tok))
+            forced = None
+        if forced is not None:
+            taken = {slot for _, slot, _ in admitted}
+            running = [(i, r) for i, r in enumerate(self.slots)
+                       if r is not None and i not in pre_released
+                       and i not in taken]
+            if running:
+                candidates = self.scheduler.victim_order(running)
+                evict = self.backend.evict_for(forced, candidates,
+                                               self.slots)
+                victims: List[Request] = []
+                for s in evict:
+                    v = self.slots[s]
+                    v.preemptions += 1
+                    v.state = RequestState.PREEMPTED
+                    v.waiting_iters = 0
+                    self.slots[s] = None
+                    victims.append(v)
+                if victims:
+                    for v in reversed(victims):
+                        self.queue.appendleft(v)  # re-admitted at queue head
+                    # re-check capacity post-eviction: evict_for's
+                    # feasibility check makes this always true today, but
+                    # a dispatch on a stale answer would raise out of
+                    # step() with the request half-admitted — never risk it
+                    if self.backend.can_admit(forced):
+                        self.queue.remove(forced)
+                        slot = evict[0]
+                        tok = self._dispatch_admission(forced, slot)
+                        admitted.append((forced, slot, tok))
+
+        finished = self._fetch_and_finish(dec_tok, active, at_dispatch,
+                                          admitted, pre_released, outputs)
+        self.scheduler.note_iteration([r for r, _, _ in admitted],
+                                      list(self.queue))
+        return outputs, finished
+
+    # -- fetch + host-side finish bookkeeping ------------------------------
+
+    def _finish(self, req: Request, slot: Optional[int], reason: str,
+                now: float, already_released: bool,
+                finished: List[Request]) -> None:
+        req.finish_reason = reason
+        req.state = RequestState.DONE
+        req.done_at = now
+        if slot is not None:
+            if not already_released:
+                self.backend.release(slot, req)
+            if self.slots[slot] is req:
+                self.slots[slot] = None
+        self._note_finished(req)
+        finished.append(req)
+
+    def _fetch_and_finish(self, dec_tok, active, at_dispatch, admitted,
+                          pre_released, outputs) -> List[Request]:
+        """One async device→host fetch of this iteration's sampled tokens
+        (decode batch + every admitted request's first token), then the
+        host-side finish bookkeeping: stop sequences, EOS, length.
+
+        ``admitted`` is this iteration's admission list — ``(request, slot,
+        first token)`` triples.
+        """
+        finished: List[Request] = []
+        if self.backend.vectorized:
+            fetch = {}
+            if dec_tok is not None:
+                fetch["dec"] = dec_tok
+            if admitted:
+                fetch["adm"] = [tok for _, _, tok in admitted]
+            if not fetch:
+                return finished
+            jax.tree.map(lambda a: a.copy_to_host_async(), fetch)
+            got = jax.device_get(fetch)
+            self.backend.transfers += 1
+            dec_vals = got.get("dec")
+            adm_vals = got.get("adm", [])
+        else:
+            if dec_tok is None and not admitted:
+                return finished
+            dec_vals = dec_tok                     # {slot: host int}
+            adm_vals = [tok for _, _, tok in admitted]
+        now = time.perf_counter()
+        if dec_vals is not None:
+            for i in active:
+                r = at_dispatch[i]
+                r.output.append(int(dec_vals[i]))
+                reason = r.check_finish()
+                if reason:
+                    # a victim preempted this very iteration may finish on
+                    # the token it decoded before eviction: it holds no
+                    # slot/blocks anymore — just pull it off the queue
+                    if r.state == RequestState.PREEMPTED:
+                        if r in self.queue:
+                            self.queue.remove(r)
+                        self._finish(r, None, reason, now, True, finished)
+                    else:
+                        self._finish(r, i, reason, now, i in pre_released,
+                                     finished)
+                outputs.append(StepOutput(
+                    rid=r.rid, token=r.output[-1], state=r.state,
+                    finish_reason=r.finish_reason if reason else None,
+                    qos=r.qos))
+        for (req, slot, _), tok in zip(admitted, adm_vals):
+            req.output.append(int(tok))
+            if req.first_token_at is None:
+                req.first_token_at = now
+            req.state = RequestState.RUNNING
+            reason = req.check_finish()
+            if reason:
+                # finished at its admission prefill: recycle before the
+                # slot is vacated
+                self._finish(req, slot, reason, now, False, finished)
+            outputs.append(StepOutput(
+                rid=req.rid, token=req.output[-1], state=req.state,
+                finish_reason=req.finish_reason if reason else None,
+                qos=req.qos))
+        return finished
+
+    # -- drivers -----------------------------------------------------------
+
+    def run_until_drained(self, max_iters: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_iters):
+            _, finished = self._step()
+            done.extend(finished)
+            if self.idle:
+                break
+        return done
+
+    def stream(self, handle: Union[Handle, Request]) -> Iterator[StepOutput]:
+        """Step the engine and yield ``handle``'s tokens as they land.
+        Terminates after the final token (its ``finish_reason`` set), or
+        with a token-less terminal StepOutput if the request was aborted
+        between tokens. Other requests keep being served by the same
+        ``step()`` calls — interleave multiple ``stream()`` generators
+        freely."""
+        req = self.request(handle)
+        cursor = 0
+        reason_delivered = False
+        while True:
+            while cursor < len(req.output):
+                cursor += 1
+                final = req.finished and cursor == len(req.output)
+                if final:
+                    reason_delivered = True
+                yield StepOutput(
+                    rid=req.rid, token=req.output[cursor - 1],
+                    state=req.state,
+                    finish_reason=req.finish_reason if final else None,
+                    qos=req.qos)
+            if req.finished:
+                if not reason_delivered:
+                    yield StepOutput(rid=req.rid, token=None,
+                                     state=req.state,
+                                     finish_reason=req.finish_reason,
+                                     qos=req.qos)
+                return
+            if self.idle:
+                return
+            self.step()
+
+
+def metrics(done: List[Request]) -> Dict[str, float]:
+    finished = [r for r in done if r.done_at is not None]
+    if not finished:
+        return {"requests": 0, "ttft_avg_s": 0.0, "latency_avg_s": 0.0,
+                "tokens_per_s": 0.0}
+    ttft = [r.first_token_at - r.submitted_at
+            for r in finished if r.first_token_at is not None]
+    lat = [r.done_at - r.submitted_at for r in finished]
+    toks = sum(len(r.output) for r in finished)
+    wall = (max(r.done_at for r in finished)
+            - min(r.submitted_at for r in finished))
+    return {
+        "requests": len(finished),
+        "ttft_avg_s": float(np.mean(ttft)) if ttft else 0.0,
+        "latency_avg_s": float(np.mean(lat)) if lat else 0.0,
+        "tokens_per_s": toks / wall if wall > 0 else 0.0,
+    }

@@ -1,0 +1,749 @@
+"""Execution backends behind the ``CacheBackend`` protocol.
+
+A backend owns *where KV state lives and how a token gets computed*; it
+knows nothing about queues, QoS classes, lifecycle states, stop
+sequences, or streaming — that is ``repro.serve.api.LLMEngine``'s job,
+with policy delegated to ``repro.serve.scheduler``.
+
+Three implementations (selected by ``EngineConfig.backend``):
+
+  * ``slot``  — :class:`SlotBackend`: the sequential per-slot reference.
+    One batch-1 jitted decode per slot with a host argmax sync per token;
+    greedy-only. The numerical baseline the vectorized backends are
+    measured against.
+  * ``arena`` — :class:`ArenaBackend`: the vectorized dense arena. All
+    slots share one fixed-shape ``[slots, max_len, ...]`` cache with
+    per-slot position vectors; one jitted batched decode dispatch and one
+    device→host token fetch per iteration; pow2-bucketed prefill.
+  * ``paged`` — :class:`PagedBackend`: continuous batching over a shared
+    pool of fixed-size KV blocks (``models.cache.PagedLayout``) with
+    host-owned block tables, ring blocks for sliding-window layers,
+    paged prefill straight into pool blocks, and native int8 block
+    storage (+ per-block scales) for quantized archs.
+
+The CacheBackend protocol (duck-typed; see ``_BackendBase``):
+
+  ``vectorized``            — True: decode/prefill return on-device token
+                              arrays fetched once per iteration by the
+                              engine; False: they return host ints and the
+                              backend counts its own transfers.
+  ``max_admit``             — per-iteration admission cap (None → the
+                              engine's ``admit_batch``).
+  ``validate_request(req)``    — submit-time checks (capacity, support).
+  ``begin_iteration(active, slots)`` — host bookkeeping before the decode
+                              dispatch (paged: block growth, ring rotate).
+  ``decode(active, slots, samp, any_sampling)`` — one decode pass over
+                              the slots.
+  ``prefill(req, slot, samp, any_sampling)`` — admit ``req``'s
+                              continuation into ``slot``; returns its
+                              first sampled token.
+  ``can_admit(req)``        — capacity check for admitting ``req`` now.
+  ``release(slot, req)``    — recycle a slot's resources (paged: return
+                              full-arena *and* ring-arena blocks to the
+                              allocators — also the abort path).
+  ``evict_for(req, candidates, slots)`` — forced-admission eviction:
+                              release as many candidate slots (in order)
+                              as ``req`` needs; returns the evicted slots.
+
+INT8 serving (``serve_quant``): K/V are requantized *at write time* on
+every path — prefill fill, dense-arena decode write, paged block writes —
+so all backends hold the same integers. The dense arenas keep
+``compute_dtype`` storage (the requantized integers are exactly
+representable), while the paged pool stores the same integers natively as
+int8 blocks plus per-block scales — half the resident bytes per token —
+and decodes them through ``kernels.paged_attention.paged_attention_int8``.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.models.cache import (
+    BlockAllocator, PagedLayout, blocks_for, bucket_for, cache_insert,
+    ring_blocks_for, ring_table_row,
+)
+from repro.serve.config import EngineConfig
+from repro.serve.request import Request
+
+
+def sample_tokens_per_slot(logits: jax.Array, temps: jax.Array,
+                           topks: jax.Array, rids: jax.Array,
+                           steps: jax.Array, base_key, *,
+                           any_sampling: bool = True) -> jax.Array:
+    """[B, V] logits + per-slot sampling vectors → [B] int32 tokens.
+
+    Per-request decode-time sampling, fused into the jitted step:
+    ``temps[i] <= 0`` decodes row ``i`` greedily; ``topks[i] > 0``
+    restricts sampling to the top-k logits (ties at the threshold are
+    kept — deterministic and batch-size independent). The PRNG is
+    stateless: row ``i`` draws with ``fold_in(fold_in(base_key, rids[i]),
+    steps[i])`` where ``steps[i]`` is the request's output-token index, so
+    a request's sequence is a pure function of (seed, rid, index) —
+    identical whether it decodes alone, in any mixed batch, on either
+    vectorized backend, or across a preemption's re-prefill continuation.
+
+    ``any_sampling`` is a *static* host-known flag: the engine sets it
+    False when every dispatched row is greedy (the default workload), so
+    the all-greedy hot path stays a plain argmax — no full-vocab sort, no
+    discarded categorical draw.
+    """
+    f = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(f, axis=-1).astype(jnp.int32)
+    if not any_sampling:
+        return greedy_tok
+    vocab = f.shape[-1]
+    k_eff = jnp.where(topks > 0, jnp.clip(topks, 1, vocab), vocab)
+    sorted_desc = jnp.flip(jnp.sort(f, axis=-1), axis=-1)
+    thresh = jnp.take_along_axis(sorted_desc, (k_eff - 1)[:, None], axis=-1)
+    masked = jnp.where(f >= thresh, f, -jnp.inf)
+    scaled = masked / jnp.maximum(temps, 1e-6)[:, None]
+    keys = jax.vmap(
+        lambda r, s: jax.random.fold_in(jax.random.fold_in(base_key, r), s)
+    )(jnp.asarray(rids, jnp.int32), jnp.asarray(steps, jnp.int32))
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy_tok)
+
+
+def _build_qparams(arch: registry.Arch, params):
+    if arch.cfg.serve_quant and arch.quantize_params is not None and (
+            arch.cfg.family in ("dense", "vlm-dense")):
+        return arch.quantize_params(params)
+    return None
+
+
+def continuation_tokens(req: Request) -> np.ndarray:
+    """Prompt plus already-generated tokens — the re-prefill input after a
+    preemption (greedy decode resumes token-identically)."""
+    return np.concatenate([np.asarray(req.prompt, np.int32),
+                           np.asarray(req.output, np.int32)])
+
+
+class _BackendBase:
+    """State + counters shared by all backends."""
+
+    vectorized = True
+    max_admit: Optional[int] = None   # None → EngineConfig.admit_batch
+
+    def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
+        self.arch = arch
+        self.params = params
+        self.ec = ec
+        self.qparams = _build_qparams(arch, params)
+        # observability: the one-dispatch / one-transfer / bucketed-trace
+        # contract is asserted from these in benchmarks and tests
+        self.decode_dispatches = 0
+        self.transfers = 0
+        self.decode_traces = 0
+        self.prefill_traces = 0
+
+    # -- protocol defaults -------------------------------------------------
+
+    def validate_request(self, req: Request) -> None:
+        """Submit-time backend checks (engine already checked max_len)."""
+
+    def begin_iteration(self, active: List[int],
+                        slots: Sequence[Optional[Request]]) -> None:
+        """Host bookkeeping before this iteration's decode dispatch."""
+
+    def can_admit(self, req: Request) -> bool:
+        return True
+
+    def release(self, slot: int, req: Request) -> None:
+        """Recycle ``slot``'s resources (finish, preemption, abort)."""
+
+    def evict_for(self, req: Request, candidates: List[int],
+                  slots: Sequence[Optional[Request]]) -> List[int]:
+        """Release candidate slots (in preference order) until ``req``
+        fits; returns the slots evicted. Dense backends need exactly one
+        victim — capacity is per-slot."""
+        victim = candidates[0]
+        self.release(victim, slots[victim])
+        return [victim]
+
+
+class ArenaBackend(_BackendBase):
+    """Vectorized dense-arena backend (the default).
+
+    One fixed-shape ``[slots, max_len, ...]`` batched cache with a
+    per-slot position vector; one jitted batched decode over the whole
+    batch per iteration; on-device sampling; pow2 length-bucketed prefill
+    spliced into the arena with ``models.cache.cache_insert``. Free slots
+    keep computing — the decode shape never changes; finished or empty
+    slots produce garbage rows that are ignored host-side and overwritten
+    by the next admission.
+
+    Under ``serve_quant`` every write path (prefill fill + decode write)
+    requantizes first, so the arena holds exactly the integers the int8
+    paged pool stores natively — this backend is the numerical reference
+    for both.
+    """
+
+    name = "arena"
+
+    def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
+        super().__init__(arch, params, ec)
+        self.cache = arch.init_cache(ec.slots, ec.max_len, quantized=False)
+        self.last_tok = jnp.zeros((ec.slots,), jnp.int32)
+        base_key = jax.random.key(ec.seed)
+        self._bucketing = ec.prefill_buckets and arch.supports_padded_prefill
+
+        def _dec(p, qp, cache, last_tok, samp, any_sampling):
+            self.decode_traces += 1  # runs at trace time only
+            if qp is None:
+                logits, cache = arch.decode_step(p, cache, last_tok)
+            else:
+                logits, cache = arch.decode_step(p, cache, last_tok,
+                                                 qparams=qp)
+            # fused per-slot sampling (stateless PRNG: see above)
+            tok = sample_tokens_per_slot(logits, *samp, base_key,
+                                         any_sampling=any_sampling)
+            return tok, cache
+
+        def _insert_and_sample(logits, c1, slot, cache, last_tok, samp,
+                               any_sampling):
+            cache = cache_insert(cache, c1, slot)
+            tok = sample_tokens_per_slot(logits, *samp, base_key,
+                                         any_sampling=any_sampling)  # [1]
+            last_tok = jax.lax.dynamic_update_slice(last_tok, tok, (slot,))
+            return tok[0], cache, last_tok
+
+        def _pre_bucketed(p, tokens, true_len, slot, cache, last_tok, samp,
+                          embeds, any_sampling):
+            self.prefill_traces += 1  # one trace per bucket, not per length
+            logits, c1 = arch.prefill(p, tokens, ec.max_len,
+                                      true_len=true_len, embeds=embeds)
+            return _insert_and_sample(logits, c1, slot, cache, last_tok,
+                                      samp, any_sampling)
+
+        def _pre_exact(p, tokens, slot, cache, last_tok, samp, embeds,
+                       any_sampling):
+            self.prefill_traces += 1
+            logits, c1 = arch.prefill(p, tokens, ec.max_len, embeds=embeds)
+            return _insert_and_sample(logits, c1, slot, cache, last_tok,
+                                      samp, any_sampling)
+
+        # Donate the cache arena: in-place slot updates instead of a whole-
+        # arena copy per token. last_tok is NOT donated — it is fetched
+        # (device_get) after the next dispatch has already consumed it.
+        # any_sampling is static: the all-greedy workload compiles to a
+        # plain argmax (one extra trace only when sampling rows appear).
+        self._decode_fn = jax.jit(_dec, donate_argnums=(2,),
+                                  static_argnums=(5,))
+        self._prefill_bucketed = jax.jit(_pre_bucketed, donate_argnums=(4,),
+                                         static_argnums=(8,))
+        self._prefill_exact = jax.jit(_pre_exact, donate_argnums=(3,),
+                                      static_argnums=(7,))
+
+    def _bucket_ok(self, bucket: int) -> bool:
+        # ring (sliding-window) caches drop leading positions once the
+        # prefill length exceeds the window — only bucket under it
+        cfg = self.arch.cfg
+        return "L" not in cfg.pattern or bucket <= cfg.local_window
+
+    def decode(self, active, slots, samp, any_sampling):
+        tok, self.cache = self._decode_fn(
+            self.params, self.qparams, self.cache, self.last_tok,
+            samp, any_sampling)
+        self.last_tok = tok
+        self.decode_dispatches += 1
+        return tok
+
+    def prefill(self, req: Request, slot: int, samp, any_sampling):
+        """One prefill dispatch for ``req`` into ``slot``; returns the
+        on-device sampled first token (fetched later, with the batch)."""
+        toks = continuation_tokens(req)
+        n = toks.size
+        embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
+        bucket = bucket_for(n, self.ec.min_bucket, self.ec.max_len)
+        if self._bucketing and self._bucket_ok(bucket):
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :n] = toks
+            tok, self.cache, self.last_tok = self._prefill_bucketed(
+                self.params, jnp.asarray(padded),
+                jnp.asarray(n, jnp.int32), jnp.asarray(slot, jnp.int32),
+                self.cache, self.last_tok, samp, embeds, any_sampling)
+        else:
+            tok, self.cache, self.last_tok = self._prefill_exact(
+                self.params, jnp.asarray(toks[None, :]),
+                jnp.asarray(slot, jnp.int32),
+                self.cache, self.last_tok, samp, embeds, any_sampling)
+        return tok
+
+
+class SlotBackend(_BackendBase):
+    """Sequential per-slot reference backend (pre-batching baseline).
+
+    Decodes each slot with a batch-1 jitted call and syncs to host for the
+    argmax of every token of every slot — kept as the numerical reference
+    for the vectorized backends and as the benchmark baseline. Prefill is
+    jitted per prompt length (the retrace cost the bucketed path removes).
+    Greedy-only; admits at most one request per iteration.
+    """
+
+    name = "slot"
+    vectorized = False
+    max_admit = 1
+
+    def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
+        super().__init__(arch, params, ec)
+        if not ec.greedy:
+            raise NotImplementedError(
+                "reference engine is greedy-only; use the arena backend")
+        self.caches = [None] * ec.slots
+
+        def _dec(p, c, t):
+            self.decode_traces += 1  # runs at trace time only
+            if self.qparams is None:
+                return arch.decode_step(p, c, t)
+            return arch.decode_step(p, c, t, qparams=self.qparams)
+
+        def _pre(p, t, embeds):
+            self.prefill_traces += 1  # retraces for every new prompt length
+            return arch.prefill(p, t, ec.max_len, embeds=embeds)
+
+        self._decode = jax.jit(_dec)
+        self._prefill = jax.jit(_pre)
+
+    def validate_request(self, req: Request) -> None:
+        # greedy-only reference: refuse rather than silently decode a
+        # sampling request with argmax
+        if self.ec.effective_temperature(req.temperature) > 0 \
+                or req.top_k > 0:
+            raise NotImplementedError(
+                f"reference engine is greedy-only and would ignore request "
+                f"{req.rid}'s temperature/top_k; use the arena backend")
+
+    def decode(self, active, slots, samp, any_sampling):
+        """Batch-1 decode per active slot, host argmax sync per token —
+        returns ``{slot: host token}`` (the engine skips the device fetch
+        for non-vectorized backends)."""
+        out = {}
+        for slot in active:
+            req = slots[slot]
+            last = jnp.asarray([req.output[-1]], jnp.int32)
+            logits, self.caches[slot] = self._decode(
+                self.params, self.caches[slot], last)
+            self.decode_dispatches += 1
+            out[slot] = int(jnp.argmax(logits[0]))  # host sync (counted)
+            self.transfers += 1
+        return out
+
+    def prefill(self, req: Request, slot: int, samp, any_sampling):
+        toks = jnp.asarray(continuation_tokens(req)[None, :], jnp.int32)
+        embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
+        logits, cache = self._prefill(self.params, toks, embeds)
+        tok = int(jnp.argmax(logits[0]))  # host sync (counted)
+        self.transfers += 1
+        self.caches[slot] = cache
+        return tok
+
+    def release(self, slot: int, req: Request) -> None:
+        self.caches[slot] = None
+
+
+def validate_paged_config(arch: registry.Arch, attn_backend: str = "xla"):
+    """Config validation for the paged backend. After ring blocks + paged
+    prefill, every attention-cache family serves on the paged path for any
+    ``local_window``; what remains unsupported is recurrent state (no
+    growing KV to page). Quantized (``serve_quant``) archs additionally
+    need int8 block-pool support — both in the family (write-time
+    requantization + int8 decode) and in the configured attention backend
+    (the fused int8 kernel / ITA oracle). All of it fails *here*, at
+    construction, with the arch named in the error — never mid-serve
+    inside a jitted step."""
+    from repro.kernels.paged_attention import ops as paged_ops
+
+    cfg = arch.cfg
+    if not arch.supports_paged:
+        bad = "".join(sorted(set(cfg.pattern) - set("GLB")))
+        why = (f"layer kinds {bad!r} keep recurrent state, which has no "
+               f"growing KV cache to page" if bad else
+               "the family does not implement paged_decode_step")
+        raise ValueError(
+            f"paged serving: family {cfg.family!r} (layer pattern "
+            f"{cfg.pattern!r}) has no paged decode path — {why}; use "
+            f"the arena backend for this arch")
+    if not arch.supports_paged_prefill:
+        raise ValueError(
+            f"paged serving: family {cfg.family!r} has a paged decode path "
+            f"but no paged prefill — implement `paged_prefill` next to its "
+            f"`paged_decode_step`")
+    if cfg.serve_quant:
+        if not arch.supports_paged_int8:
+            raise ValueError(
+                f"paged serving: arch {cfg.name!r} (family {cfg.family!r}) "
+                f"is quantized (serve_quant) but the family does not "
+                f"support int8 block pools — set serve_quant=False or add "
+                f"write-time requantization + PAGED_INT8_KV to the family")
+        if attn_backend not in paged_ops.INT8_BACKENDS:
+            raise ValueError(
+                f"paged serving: arch {cfg.name!r} is quantized "
+                f"(serve_quant) but attention backend {attn_backend!r} "
+                f"does not implement the int8 paged-attention kernel "
+                f"(supported: {', '.join(paged_ops.INT8_BACKENDS)}) — "
+                f"pick one of those or serve the float path")
+    elif attn_backend not in paged_ops.BACKENDS:
+        raise ValueError(
+            f"paged serving: unknown attention backend {attn_backend!r} "
+            f"(supported: {', '.join(paged_ops.BACKENDS)})")
+
+
+class PagedBackend(_BackendBase):
+    """Continuous batching over a paged block-pool KV cache.
+
+    The dense arena reserves ``max_len`` KV rows per slot, so short
+    requests strand arena capacity that long ones need — the fragmentation
+    that CHIMERA's *banked, interleaved* shared-L2 island avoids in
+    hardware. Here KV state lives in a shared pool of fixed-size blocks
+    (``models.cache.PagedLayout``); each slot holds a block table mapping
+    position ``p`` to pool block ``table[slot, p // block_len]``. A
+    host-side free-list allocator (``models.cache.BlockAllocator``) admits
+    against *worst-case* block reservations, grows slots lazily at block
+    boundaries, and recycles blocks on completion, preemption and abort —
+    so at a fixed KV-memory budget the paged backend admits every mix of
+    lengths the budget can actually hold, not ``budget / max_len`` slots.
+
+    **Ring blocks** (sliding-window "L" layers with ``local_window <
+    max_len``): L-layer pools are a separate, much smaller arena — each
+    slot owns a fixed ring of ``ceil(window/block_len) + 1`` blocks and
+    reuses them circularly. The host rotates the per-slot ring table as
+    the window slides (entry 0 = oldest live block) and passes its
+    block-aligned absolute start position into the step, so the kernel
+    masks by absolute position and wrapped blocks attend correctly.
+
+    **Paged prefill**: admission runs ``arch.paged_prefill``, which writes
+    K/V straight into pool blocks (full blocks in bulk, the tail at block
+    granularity) — no dense bucket cache, no splice dispatch.
+
+    **Int8 blocks** (``serve_quant`` archs): pools store K/V natively as
+    int8 plus per-block scales — roughly half the resident bytes per token
+    of a bf16 pool — and decode runs ``paged_attention_int8`` over the
+    blocks (ITA gather oracle on ``xla``, token-identical to the dense
+    int8 reference; fused dequantizing kernel on ``pallas``/``interpret``).
+
+    The dataflow contract is preserved: one jitted paged decode dispatch
+    over all rows per iteration, up to ``admit_batch`` admission
+    dispatches, one device→host token fetch. Tables are host-owned and
+    passed into the jitted step each call (fixed shapes — no retrace);
+    empty rows decode against the dedicated trash block and are ignored
+    host-side.
+    """
+
+    name = "paged"
+
+    def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
+        super().__init__(arch, params, ec)
+        cfg = arch.cfg
+        from repro.kernels.paged_attention import ops as paged_ops
+
+        self.attn_backend = (paged_ops.DEFAULT_BACKEND
+                             if ec.attn_backend is None else ec.attn_backend)
+        validate_paged_config(arch, self.attn_backend)
+        num_blocks = ec.num_blocks
+        if num_blocks is None:  # match the dense arena's token budget
+            num_blocks = blocks_for(ec.slots * ec.max_len, ec.block_len) + 1
+        # ring blocks when sliding-window layers can't hold full history
+        self.ring = ("L" in cfg.pattern
+                     and cfg.local_window < ec.max_len
+                     and cfg.family != "encdec")
+        wb = ring_blocks_for(cfg.local_window, ec.block_len) if self.ring \
+            else 0
+        self.layout = PagedLayout(
+            ec.block_len, num_blocks, ec.max_len,
+            window=cfg.local_window if self.ring else None,
+            ring_num_blocks=(1 + ec.slots * wb) if self.ring else 0)
+        self.alloc = BlockAllocator(self.layout)
+        # full-history blocks are consumed by non-L layers only; an all-L
+        # pattern reserves none of them
+        self._has_full = (not self.ring) or any(k != "L" for k in cfg.pattern)
+        self.table = np.zeros((ec.slots, self.layout.max_blocks), np.int32)
+        if self.ring:
+            # the ring arena always fits every slot's ring (sized above),
+            # but runs through an allocator so leaks/double-frees surface
+            self.ring_alloc = BlockAllocator(PagedLayout(
+                ec.block_len, self.layout.ring_num_blocks, ec.max_len))
+            self.ring_table = np.zeros((ec.slots, wb), np.int32)
+            self.ring_start = np.zeros((ec.slots,), np.int32)
+            self._ring_first = [0] * ec.slots   # abs block idx of entry 0
+            self._ring_ids: List = [None] * ec.slots
+        self._slot_len = [0] * ec.slots   # host mirror of active rows' len
+        # quantized archs get int8 block pools (+ per-block scales) — the
+        # family default; float archs keep compute_dtype pools
+        self.quantized = bool(cfg.serve_quant)
+        self.cache = arch.init_paged_cache(ec.slots, self.layout)
+        self.last_tok = jnp.zeros((ec.slots,), jnp.int32)
+        base_key = jax.random.key(ec.seed)
+        self._bucketing = ec.prefill_buckets and arch.supports_padded_prefill
+        backend = self.attn_backend
+
+        def _dec(p, qp, cache, table, last_tok, samp, any_sampling):
+            self.decode_traces += 1  # runs at trace time only
+            logits, cache = arch.paged_decode_step(
+                p, cache, last_tok, table, qparams=qp, attn_backend=backend)
+            tok = sample_tokens_per_slot(logits, *samp, base_key,
+                                         any_sampling=any_sampling)
+            return tok, cache
+
+        def _pre(p, tokens, true_len, slot, block_ids, ring_ids, cache,
+                 last_tok, samp, embeds, any_sampling):
+            self.prefill_traces += 1  # one trace per (bucket, block count)
+            logits, cache = arch.paged_prefill(
+                p, tokens, cache, slot, block_ids, ring_ids=ring_ids,
+                true_len=true_len, embeds=embeds)
+            tok = sample_tokens_per_slot(logits, *samp, base_key,
+                                         any_sampling=any_sampling)  # [1]
+            last_tok = jax.lax.dynamic_update_slice(last_tok, tok, (slot,))
+            return tok[0], cache, last_tok
+
+        self._decode_fn = jax.jit(_dec, donate_argnums=(2,),
+                                  static_argnums=(6,))
+        self._prefill_fn = jax.jit(_pre, donate_argnums=(6,),
+                                   static_argnums=(10,))
+
+    # -- capacity bookkeeping ----------------------------------------------
+
+    def _pre_len(self, req: Request) -> int:
+        """Prefill cache length for ``req``'s continuation (block multiple;
+        pow2 bucket when bucketing). The bucket is capped at the request's
+        worst-case decode extent so the block reservation is *invariant
+        across preemptions* — a pow2 bucket of a grown continuation must
+        never demand more blocks than ``submit`` admitted against, or a
+        preempted request could become unreadmittable."""
+        blk = self.ec.block_len
+        n = len(req.prompt) + len(req.output)
+        if self._bucketing:
+            bucket = bucket_for(n, max(self.ec.min_bucket, blk),
+                                self.ec.max_len)
+        else:
+            bucket = n
+        cap = blocks_for(len(req.prompt) + req.max_new_tokens - 1, blk) * blk
+        # round the (possibly max_len-clamped, non-pow2) bucket up to a
+        # block multiple; the roundup never exceeds cap because cap is one
+        return max(blocks_for(n, blk) * blk,
+                   blocks_for(min(bucket, cap), blk) * blk)
+
+    def _max_blocks_needed(self, req: Request) -> int:
+        """Worst-case full-history block reservation: the prefill extent
+        now, or the final decode position, whichever is larger. An all-L
+        pattern consumes no full-history blocks (its ring reservation is a
+        fixed ``ring_blocks`` per slot, accounted separately)."""
+        if not self._has_full:
+            return 0
+        final_pos = len(req.prompt) + req.max_new_tokens - 1
+        return blocks_for(max(self._pre_len(req), final_pos),
+                          self.ec.block_len)
+
+    def validate_request(self, req: Request) -> None:
+        need = self._max_blocks_needed(req)
+        if need > self.layout.usable_blocks:
+            raise ValueError(
+                f"request {req.rid} needs {need} blocks; pool has "
+                f"{self.layout.usable_blocks}")
+
+    def can_admit(self, req: Request) -> bool:
+        if not self.alloc.can_admit(self._max_blocks_needed(req)):
+            return False
+        if self.ring and not self.ring_alloc.can_admit(
+                self.layout.ring_blocks):
+            return False
+        return True
+
+    def release(self, slot: int, req: Request) -> None:
+        """Recycle a slot's blocks (full + ring) and point its table rows
+        at trash. Also the ``abort()`` path — blocks return to the
+        allocators immediately, not at the next drain."""
+        self.alloc.release(req.rid)
+        self.table[slot, :] = 0
+        if self.ring:
+            self.ring_alloc.release(req.rid)
+            self.ring_table[slot, :] = 0
+            self.ring_start[slot] = 0
+            self._ring_first[slot] = 0
+            self._ring_ids[slot] = None
+        self._slot_len[slot] = 0
+
+    def evict_for(self, req, candidates, slots):
+        need = self._max_blocks_needed(req)
+        # Feasibility first: when an admission *this iteration* already
+        # reserved blocks (possible under the QoS scheduler, whose forced
+        # path fires even alongside admissions), the candidate slots may
+        # not hold enough between them — the just-admitted slot is never
+        # a victim. Evicting anybody would then be pure waste: bail out
+        # and let the request retry next iteration, when the blocker is
+        # a normal (evictable) running slot.
+        if need > self.alloc.available_blocks + sum(
+                self.alloc.reservation(slots[i].rid) for i in candidates):
+            return []
+        # evict victims (in the scheduler's preference order) until the
+        # request's reservation fits; multiple small slots may need to go,
+        # since the bounded-priority guarantee must not hinge on any
+        # single victim being block-rich enough. Evicting every slot
+        # always suffices: validate_request guarantees need ≤
+        # usable_blocks, and queued requests hold no blocks.
+        single = next(
+            (i for i in candidates if self.alloc.can_admit_after_release(
+                need, slots[i].rid)), None)
+        order = [single] if single is not None else candidates
+        evicted: List[int] = []
+        for victim_slot in order:
+            if evicted and self.can_admit(req):
+                break
+            self.release(victim_slot, slots[victim_slot])
+            evicted.append(victim_slot)
+        return evicted
+
+    def _tables(self):
+        """Device view of the host-owned block tables for this iteration."""
+        if not self.ring:
+            return jnp.asarray(self.table)
+        return {"full": jnp.asarray(self.table),
+                "ring": jnp.asarray(self.ring_table),
+                "start": jnp.asarray(self.ring_start)}
+
+    def pool_leaves(self):
+        """KV pool leaves (k/v block pools + per-block scale vectors) of
+        the paged cache — per-slot arenas (encdec cross K/V, positions)
+        excluded."""
+        out = []
+
+        def grab(d):
+            for key in ("k", "v", "kscale", "vscale"):
+                if key in d:
+                    out.append(d[key])
+
+        if "stacks" in self.cache:
+            for d in self.cache["stacks"]:
+                grab(d)
+            for d in self.cache.get("tail", []):
+                grab(d)
+        else:
+            grab(self.cache)
+        return out
+
+    @property
+    def pool_bytes(self) -> int:
+        """Total resident bytes of the KV block pools (full + ring arenas,
+        scale vectors included) — the quantity the int8 layout halves."""
+        return int(sum(leaf.nbytes for leaf in self.pool_leaves()))
+
+    @property
+    def pool_bytes_per_token(self) -> float:
+        """Pool bytes per token of full-history capacity. (Ring arenas are
+        counted in the numerator; for windowed models their capacity is
+        window-bounded, so compare like layouts.)"""
+        return self.pool_bytes / self.layout.usable_tokens
+
+    # -- iteration hooks ---------------------------------------------------
+
+    def begin_iteration(self, active, slots):
+        blk = self.ec.block_len
+        for i in active:
+            req = slots[i]
+            if self._has_full:
+                # grow any slot whose next write position crosses a block
+                # boundary (drawn from its admission-time reservation —
+                # can never fail)
+                needed = self._slot_len[i] // blk + 1
+                owned = self.alloc.owned(req.rid)
+                while len(owned) < needed:
+                    b = self.alloc.grow(req.rid)
+                    self.table[i, len(owned)] = b
+                    owned.append(b)
+            if self.ring:
+                # rotate the ring table when the next write position enters
+                # a block past the current ring: the evicted oldest block
+                # is entirely below the window by construction
+                wb = self.layout.ring_blocks
+                next_bi = self._slot_len[i] // blk
+                if next_bi > self._ring_first[i] + wb - 1:
+                    first = next_bi - (wb - 1)
+                    self._ring_first[i] = first
+                    self.ring_table[i, :] = ring_table_row(
+                        self._ring_ids[i], first)
+                    self.ring_start[i] = first * blk
+
+    def decode(self, active, slots, samp, any_sampling):
+        tok, self.cache = self._decode_fn(
+            self.params, self.qparams, self.cache,
+            self._tables(), self.last_tok, samp, any_sampling)
+        self.last_tok = tok
+        self.decode_dispatches += 1
+        for i in active:
+            self._slot_len[i] += 1
+        return tok
+
+    def prefill(self, req: Request, slot: int, samp, any_sampling):
+        """Reserve blocks, set up tables, and run one paged-prefill
+        dispatch (K/V written straight into pool blocks); returns the
+        on-device sampled first token."""
+        toks = continuation_tokens(req)
+        n = toks.size
+        pre_len = self._pre_len(req)
+        now_blocks = pre_len // self.ec.block_len if self._has_full else 0
+        block_ids = np.asarray(
+            self.alloc.admit(req.rid, now_blocks,
+                             self._max_blocks_needed(req)),
+            np.int32)
+        self.table[slot, :] = 0
+        self.table[slot, :block_ids.size] = block_ids
+        ring_ids = None
+        if self.ring:
+            wb = self.layout.ring_blocks
+            ring_ids = np.asarray(
+                self.ring_alloc.admit(req.rid, wb, wb), np.int32)
+            first = max(0, (n - 1) // self.ec.block_len - (wb - 1))
+            self._ring_first[slot] = first
+            self._ring_ids[slot] = ring_ids
+            self.ring_table[slot, :] = ring_table_row(ring_ids, first)
+            self.ring_start[slot] = first * self.ec.block_len
+        self._slot_len[slot] = n
+        if self._bucketing:
+            padded = np.zeros((1, pre_len), np.int32)
+            padded[0, :n] = toks
+            tokens = jnp.asarray(padded)
+            true_len = jnp.asarray(n, jnp.int32)
+        else:
+            # exact prompt, no pad tokens (MoE routing capacity depends on
+            # token count); K/V writes pad to block granularity internally
+            tokens = jnp.asarray(toks[None, :])
+            true_len = None
+        embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
+        tok, self.cache, self.last_tok = self._prefill_fn(
+            self.params, tokens, true_len, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(block_ids),
+            None if ring_ids is None else jnp.asarray(ring_ids),
+            self.cache, self.last_tok, samp, embeds, any_sampling)
+        return tok
+
+
+_BACKENDS = {
+    "slot": SlotBackend,
+    "arena": ArenaBackend,
+    "paged": PagedBackend,
+}
+
+# config.BACKENDS is the single source of truth for valid names
+# (EngineConfig canonicalizes + validates at construction); this dispatch
+# table must cover it exactly — drift fails at import, not at serve time
+from repro.serve.config import BACKENDS as _NAMES  # noqa: E402
+
+if set(_BACKENDS) != set(_NAMES):
+    raise ImportError(
+        f"backend registry drift: config.BACKENDS={_NAMES} vs "
+        f"dispatch table {tuple(_BACKENDS)}")
+
+
+def make_backend(name: str, arch: registry.Arch, params,
+                 ec: EngineConfig) -> _BackendBase:
+    try:
+        cls = _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown serve backend {name!r} "
+            f"(supported: {', '.join(_NAMES)})") from None
+    return cls(arch, params, ec)

@@ -1,0 +1,118 @@
+"""Engine configuration for the serve layer.
+
+``EngineConfig`` is the single construction surface of
+:class:`repro.serve.api.LLMEngine`: it names the execution backend
+(``backend``), the admission policy (``scheduler``), and every capacity /
+sampling knob the backends share. The legacy engine classes in
+``repro.serve.engine`` are shims that pin ``backend`` and keep the rest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# execution backends (repro.serve.backends) and their legacy aliases
+BACKENDS = ("slot", "arena", "paged")
+_BACKEND_ALIASES = {
+    "reference": "slot",     # sequential per-slot baseline (ServeEngine)
+    "batched": "arena",      # dense [slots, max_len] arena (BatchedServeEngine)
+    "dense": "arena",
+}
+
+# admission schedulers (repro.serve.scheduler)
+SCHEDULERS = ("fcfs", "bounded", "qos")
+
+
+def canonical_backend(name: str) -> str:
+    name = _BACKEND_ALIASES.get(name, name)
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown serve backend {name!r} "
+            f"(supported: {', '.join(BACKENDS)}; legacy aliases: "
+            f"{', '.join(sorted(_BACKEND_ALIASES))})")
+    return name
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    slots: int = 4               # decode batch size
+    max_len: int = 256
+    admit_window: int = 8        # bounded-priority window (see scheduler.py)
+    admit_batch: int = 1         # max admissions per iteration (cold-start
+    #                              ramp: `slots` concurrency is reached in
+    #                              ceil(slots/admit_batch) iterations)
+    greedy: bool = True
+    temperature: float = 1.0     # used when greedy=False
+    seed: int = 0                # sampling PRNG seed (vectorized backends)
+    prefill_buckets: bool = True  # pad admission prompts to pow2 buckets
+    min_bucket: int = 8
+    # paged backend: KV block size and pool size. With num_blocks=None the
+    # pool matches the dense arena's token budget (slots · max_len) — same
+    # memory, strictly more admissible requests.
+    block_len: int = 16
+    num_blocks: Optional[int] = None
+    # paged attention backend (None → kernels.paged_attention default,
+    # env-overridable via REPRO_PAGED_ATTN_BACKEND). Validated at engine
+    # construction: quantized archs must name a backend that implements
+    # int8 block pools.
+    attn_backend: Optional[str] = None
+    # -- the LLMEngine construction surface --------------------------------
+    # execution backend: "slot" (sequential per-slot reference), "arena"
+    # (dense batched arena, the default), "paged" (shared block pool)
+    backend: str = "arena"
+    # admission policy: "fcfs" (arrival order, never preempts), "bounded"
+    # (the legacy bounded-priority forced-admission path, the default),
+    # "qos" (two traffic classes: "rt" gets a bounded admission window,
+    # "be" fills the remaining slots — the memory island's arbiter twin)
+    scheduler: str = "bounded"
+    # qos scheduler: max iterations an "rt" lane head may wait before a
+    # forced (preempting) admission — the software twin of the island
+    # arbiter's bounded narrow-priority window
+    rt_window: int = 2
+    # qos scheduler: after this many consecutive rt admissions while a
+    # "be" request waits, the next free-slot admission is granted to "be"
+    # (the arbiter's guaranteed wide beat — rt priority is bounded, so
+    # best-effort traffic is never starved of *grants*; it is never
+    # preempted by this path)
+    be_grant_window: int = 8
+    # how many *finished* (done/aborted) requests the engine keeps
+    # addressable by handle after completion. None keeps all — right for
+    # batch jobs that read results after run_until_drained(); a
+    # long-running server loop should set a bound, or the per-request
+    # registry grows without limit. Oldest-finished are dropped first;
+    # a dropped handle raises KeyError from request()/stream()/abort().
+    retain_finished: Optional[int] = None
+
+    def effective_temperature(self, temperature: Optional[float]) -> float:
+        """Resolve a request's decode temperature against the engine
+        defaults: the request's own when set, else 0 (greedy) under
+        ``greedy=True``, else the engine ``temperature``. The single
+        definition both the sampling vectors and the slot backend's
+        greedy-only gate resolve through."""
+        if temperature is not None:
+            return float(temperature)
+        return 0.0 if self.greedy else float(self.temperature)
+
+    def __post_init__(self):
+        self.backend = canonical_backend(self.backend)
+        if self.scheduler not in SCHEDULERS:
+            raise ValueError(
+                f"unknown scheduler {self.scheduler!r} "
+                f"(supported: {', '.join(SCHEDULERS)})")
+        if self.admit_batch < 1:
+            raise ValueError(
+                f"admit_batch must be >= 1, got {self.admit_batch} "
+                f"(0 would starve admission and break the bounded-priority "
+                f"forced path)")
+        if self.rt_window < 1:
+            raise ValueError(f"rt_window must be >= 1, got {self.rt_window}")
+        if self.be_grant_window < 1:
+            raise ValueError(
+                f"be_grant_window must be >= 1, got {self.be_grant_window} "
+                f"(0 would promote the be lane every iteration, inverting "
+                f"rt priority)")
+        # NOTE: attn_backend × backend compatibility is validated by
+        # LLMEngine, not here — the legacy shims pin `backend` *after*
+        # config construction (dataclasses.replace), so a config carrying
+        # attn_backend may legitimately exist before the backend is final.

@@ -1,1041 +1,84 @@
-"""Continuous-batching serve engine: one jitted decode step over all slots.
+"""Deprecated legacy engine classes — thin shims over ``serve.api``.
 
-The CHIMERA QoS principle carried up the stack: *latency-critical decode
-steps are never blocked behind bulk prefill work*, and bulk admissions are
-*bounded-priority* — decode has priority, but after ``admit_window``
-consecutive iterations in which a request was left waiting, one admission
-is forced through (preempting the decode slot with the most remaining work
-if none is free), mirroring the memory island's bounded-priority arbiter.
-Cold starts ramp faster than the forced path: up to ``admit_batch``
-requests are admitted per iteration into free slots, so full concurrency
-is reached in ``ceil(slots / admit_batch)`` iterations while the
-``admit_window`` bound is unchanged (the forced path still admits one).
+The serve layer was split into a package (this PR's tentpole):
 
-Batched dataflow (``BatchedServeEngine``, the default):
+  * ``repro.serve.request``   — Request lifecycle (states, finish
+    reasons, QoS traffic classes, stop sequences).
+  * ``repro.serve.config``    — ``EngineConfig`` (backend + scheduler
+    selection and every shared knob).
+  * ``repro.serve.scheduler`` — pluggable admission policies (``fcfs`` /
+    ``bounded`` / ``qos``), the software twins of the memory island's
+    arbiters in ``repro.core.qos``.
+  * ``repro.serve.backends``  — execution backends behind the
+    ``CacheBackend`` protocol (``slot`` / ``arena`` / ``paged``).
+  * ``repro.serve.api``       — the one front-end: ``LLMEngine``
+    (``add_request`` → handle, ``step``, ``stream``, ``abort``).
 
-  * **One decode dispatch per iteration.** All ``slots`` requests live in a
-    single fixed-shape batched cache (``[slots, max_len, ...]`` per leaf)
-    with a per-slot position vector ``cache["len"]``; each engine iteration
-    runs exactly one jitted ``decode_step`` over the whole batch, so the
-    accelerator's inner loop never re-dispatches per request.
-  * **On-device sampling, one device→host fetch per iteration.** Greedy /
-    temperature sampling is fused into the jitted step; sampled tokens stay
-    on device and are fetched asynchronously as one array per iteration
-    (instead of one ``argmax`` sync per slot per token).
-  * **Length-bucketed prefill.** Admission pads prompts to power-of-two
-    buckets (``models.cache.bucket_for``) and passes the true length into
-    ``prefill(..., true_len=...)``, so prefill traces once per bucket, not
-    once per distinct prompt length. The prefilled batch-1 cache is spliced
-    into the batched arena with ``models.cache.cache_insert`` — the
-    per-slot reset+insert primitive.
-  * **Free slots keep computing.** The decode shape never changes; finished
-    or empty slots produce garbage rows that are ignored host-side and
-    overwritten by the next admission. Constant shapes beat masked
-    dispatch on every backend we target.
-
-``ServeEngine`` remains as the sequential per-slot reference (batch-1
-jitted decode per slot + host argmax sync per token): it is the numerical
-reference for token-identity tests and the baseline for
-``benchmarks/serve_bench.py``. Both engines expose dispatch / transfer /
-retrace counters so the one-dispatch-one-transfer contract is measurable.
-
-**Per-request sampling** (vectorized engines): each ``Request`` may carry
-its own ``temperature`` / ``top_k``; the engines thread them as per-slot
-vectors into the jitted sampling step, and the PRNG is *stateless* — row
-``i``'s draw keys on ``fold_in(fold_in(seed, rid), token_index)`` — so a
-request's token sequence is a pure function of (seed, rid, index),
-identical across engines, batch compositions, slot placement and
-preemptions. A mixed greedy+temperature batch therefore matches per-slot
-single-engine runs token-for-token.
-
-INT8 serving (``serve_quant``): K/V are requantized *at write time* on
-every path — prefill fill, dense-arena decode write, paged block writes —
-so all engines hold the same integers. The dense arenas keep
-``compute_dtype`` storage (the requantized integers are exactly
-representable; layout unchanged), while the paged pool stores the same
-integers natively as int8 blocks plus per-block scales — half the resident
-bytes per token — and decodes them through ``kernels.paged_attention
-.paged_attention_int8`` (ITA gather oracle on ``xla``, fused dequantizing
-kernel on ``pallas``/``interpret``). The old detour — float-dtype blocks
-densely gathered before the ITA pipeline — is gone.
+New code should construct ``LLMEngine(arch, params,
+EngineConfig(backend=..., scheduler=...))``. The three classes below are
+*deprecation shims*: each pins the backend its old name implied, keeps
+the legacy ``bounded`` scheduler, returns finished ``Request`` objects
+from ``step()`` (the old contract), and re-exposes the old attribute
+surface (``slots``, ``queue``, counters, ``alloc``/``layout``/ring
+tables on the paged shim) by delegation — token-identical to
+``LLMEngine`` by construction, since they *are* ``LLMEngine``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
-from collections import deque
-from typing import Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import List
 
 from repro.models import registry
-from repro.models.cache import (
-    BlockAllocator, PagedLayout, blocks_for, bucket_for, cache_insert,
-    ring_blocks_for, ring_table_row,
+from repro.serve.api import LLMEngine, metrics  # noqa: F401 (re-export)
+from repro.serve.backends import (  # noqa: F401 (re-export)
+    sample_tokens_per_slot, validate_paged_config,
+)
+from repro.serve.config import EngineConfig  # noqa: F401 (re-export)
+from repro.serve.request import (  # noqa: F401 (re-export)
+    FinishReason, Request, RequestState, StepOutput,
 )
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray           # [S] int32
-    max_new_tokens: int = 16
-    # per-request decode-time sampling params (vectorized engines):
-    # temperature None → the engine default (0 when ec.greedy, else
-    # ec.temperature); 0 → greedy. top_k 0 → full vocab.
-    temperature: Optional[float] = None
-    top_k: int = 0
-    # frame embeddings [enc_seq, d] for encoder-decoder archs (stub input)
-    embeds: Optional[np.ndarray] = None
-    submitted_at: float = 0.0
-    first_token_at: Optional[float] = None
-    done_at: Optional[float] = None
-    output: List[int] = dataclasses.field(default_factory=list)
-    preemptions: int = 0         # times evicted by a forced admission
+class _LegacyShim(LLMEngine):
+    """Pins the execution backend; ``step()`` returns finished requests."""
 
-
-@dataclasses.dataclass
-class EngineConfig:
-    slots: int = 4               # decode batch size
-    max_len: int = 256
-    admit_window: int = 8        # bounded priority (see module docstring)
-    admit_batch: int = 1         # max admissions per iteration (cold-start
-    #                              ramp: `slots` concurrency is reached in
-    #                              ceil(slots/admit_batch) iterations)
-    greedy: bool = True
-    temperature: float = 1.0     # used when greedy=False
-    seed: int = 0                # sampling PRNG seed (batched engine)
-    prefill_buckets: bool = True  # pad admission prompts to pow2 buckets
-    min_bucket: int = 8
-    # paged engine (PagedServeEngine): KV block size and pool size. With
-    # num_blocks=None the pool matches the dense arena's token budget
-    # (slots · max_len) — same memory, strictly more admissible requests.
-    block_len: int = 16
-    num_blocks: Optional[int] = None
-    # paged attention backend (None → kernels.paged_attention default,
-    # env-overridable via REPRO_PAGED_ATTN_BACKEND). Validated at engine
-    # construction: quantized archs must name a backend that implements
-    # int8 block pools.
-    attn_backend: Optional[str] = None
-
-
-def sample_tokens_per_slot(logits: jax.Array, temps: jax.Array,
-                           topks: jax.Array, rids: jax.Array,
-                           steps: jax.Array, base_key, *,
-                           any_sampling: bool = True) -> jax.Array:
-    """[B, V] logits + per-slot sampling vectors → [B] int32 tokens.
-
-    Per-request decode-time sampling, fused into the jitted step:
-    ``temps[i] <= 0`` decodes row ``i`` greedily; ``topks[i] > 0``
-    restricts sampling to the top-k logits (ties at the threshold are
-    kept — deterministic and batch-size independent). The PRNG is
-    stateless: row ``i`` draws with ``fold_in(fold_in(base_key, rids[i]),
-    steps[i])`` where ``steps[i]`` is the request's output-token index, so
-    a request's sequence is a pure function of (seed, rid, index) —
-    identical whether it decodes alone, in any mixed batch, on either
-    vectorized engine, or across a preemption's re-prefill continuation.
-
-    ``any_sampling`` is a *static* host-known flag: the engines set it
-    False when every dispatched row is greedy (the default workload), so
-    the all-greedy hot path stays a plain argmax — no full-vocab sort, no
-    discarded categorical draw.
-    """
-    f = logits.astype(jnp.float32)
-    greedy_tok = jnp.argmax(f, axis=-1).astype(jnp.int32)
-    if not any_sampling:
-        return greedy_tok
-    vocab = f.shape[-1]
-    k_eff = jnp.where(topks > 0, jnp.clip(topks, 1, vocab), vocab)
-    sorted_desc = jnp.flip(jnp.sort(f, axis=-1), axis=-1)
-    thresh = jnp.take_along_axis(sorted_desc, (k_eff - 1)[:, None], axis=-1)
-    masked = jnp.where(f >= thresh, f, -jnp.inf)
-    scaled = masked / jnp.maximum(temps, 1e-6)[:, None]
-    keys = jax.vmap(
-        lambda r, s: jax.random.fold_in(jax.random.fold_in(base_key, r), s)
-    )(jnp.asarray(rids, jnp.int32), jnp.asarray(steps, jnp.int32))
-    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
-    return jnp.where(temps > 0, sampled, greedy_tok)
-
-
-def _build_qparams(arch: registry.Arch, params):
-    if arch.cfg.serve_quant and arch.quantize_params is not None and (
-            arch.cfg.family in ("dense", "vlm-dense")):
-        return arch.quantize_params(params)
-    return None
-
-
-def _continuation_tokens(req: Request) -> np.ndarray:
-    """Prompt plus already-generated tokens — the re-prefill input after a
-    preemption (greedy decode resumes token-identically)."""
-    return np.concatenate([np.asarray(req.prompt, np.int32),
-                           np.asarray(req.output, np.int32)])
-
-
-class _EngineBase:
-    """Queue/QoS bookkeeping shared by both engines."""
+    _backend_name: str = "arena"
 
     def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
-        if ec.admit_batch < 1:
-            raise ValueError(
-                f"admit_batch must be >= 1, got {ec.admit_batch} "
-                f"(0 would starve admission and break the bounded-priority "
-                f"forced path)")
-        if ec.attn_backend is not None and not isinstance(
-                self, PagedServeEngine):
-            raise ValueError(
-                f"attn_backend={ec.attn_backend!r} applies to "
-                f"PagedServeEngine only — the dense-arena engines do not "
-                f"dispatch through kernels.paged_attention")
-        self.arch = arch
-        self.ec = ec
-        self.params = params
-        self.qparams = _build_qparams(arch, params)
-        self.queue: deque[Request] = deque()
-        self.slots: List[Optional[Request]] = [None] * ec.slots
-        self._decode_only_iters = 0
-        # observability: the one-dispatch / one-transfer / bucketed-trace
-        # contract is asserted from these in benchmarks and tests
-        self.iterations = 0
-        self.decode_dispatches = 0
-        self.transfers = 0
-        self.decode_traces = 0
-        self.prefill_traces = 0
+        super().__init__(arch, params,
+                         dataclasses.replace(ec, backend=self._backend_name))
 
-    def submit(self, req: Request):
-        if len(req.prompt) + req.max_new_tokens > self.ec.max_len:
-            raise ValueError(
-                f"request {req.rid}: prompt ({len(req.prompt)}) + "
-                f"max_new_tokens ({req.max_new_tokens}) exceeds "
-                f"max_len={self.ec.max_len}")
-        req.submitted_at = time.perf_counter()
-        self.queue.append(req)
-
-    @property
-    def idle(self) -> bool:
-        return not self.queue and all(r is None for r in self.slots)
-
-    def _req_temperature(self, req: Request) -> float:
-        """Effective decode temperature: the request's own, else the engine
-        default (0 — greedy — when ``ec.greedy``)."""
-        if req.temperature is not None:
-            return float(req.temperature)
-        return 0.0 if self.ec.greedy else float(self.ec.temperature)
-
-    def _sampling_vectors(self):
-        """(per-slot (temps, topks, rids, steps), any_sampling) for this
-        iteration's decode dispatch. Empty slots sample greedily into
-        garbage rows that are ignored host-side; ``steps`` is each
-        request's output-token index (the stateless-PRNG coordinate).
-        ``any_sampling`` is the static hot-path switch: False (the common
-        all-greedy case) compiles to a plain argmax."""
-        n = self.ec.slots
-        temps = np.zeros((n,), np.float32)
-        topks = np.zeros((n,), np.int32)
-        rids = np.zeros((n,), np.int32)
-        steps = np.zeros((n,), np.int32)
-        for i, r in enumerate(self.slots):
-            if r is None:
-                continue
-            temps[i] = self._req_temperature(r)
-            topks[i] = r.top_k
-            rids[i] = r.rid
-            steps[i] = len(r.output)
-        vecs = (jnp.asarray(temps), jnp.asarray(topks),
-                jnp.asarray(rids), jnp.asarray(steps))
-        return vecs, bool(temps.max(initial=0.0) > 0)
-
-    def _admission_vectors(self, req: Request):
-        """(length-1 sampling vectors, any_sampling) for an admission
-        prefill's first token (same stateless coordinates as decode)."""
-        temp = self._req_temperature(req)
-        vecs = (jnp.asarray([temp], jnp.float32),
-                jnp.asarray([req.top_k], jnp.int32),
-                jnp.asarray([req.rid], jnp.int32),
-                jnp.asarray([len(req.output)], jnp.int32))
-        return vecs, temp > 0
-
-    def _pick_victim(self) -> int:
-        """Slot to preempt on a forced admission: most remaining work."""
-        remaining = [
-            (r.max_new_tokens - len(r.output), i)
-            for i, r in enumerate(self.slots) if r is not None
-        ]
-        return max(remaining)[1]
-
-    def _note_admission(self, admitted: bool):
-        if admitted:
-            self._decode_only_iters = 0
-        elif self.queue:  # a request was left waiting this iteration
-            self._decode_only_iters += 1
-        else:
-            self._decode_only_iters = 0
-
-    def _forced_admission_due(self) -> bool:
-        return (bool(self.queue)
-                and self._decode_only_iters >= self.ec.admit_window)
-
-    def run_until_drained(self, max_iters: int = 10_000) -> List[Request]:
-        done: List[Request] = []
-        for _ in range(max_iters):
-            done.extend(self.step())
-            if self.idle:
-                break
-        return done
-
-    def _on_admitted_finish(self, req: Request, slot: int):
-        """Hook: a request finished at its admission prefill (paged engine
-        recycles its blocks here). Runs before the slot is vacated."""
-
-    def _fetch_and_finish(self, dec_tok, active, at_dispatch,
-                          admitted) -> List[Request]:
-        """One async device→host fetch of this iteration's sampled tokens
-        (decode batch + every admitted request's first token), then the
-        host-side finish bookkeeping. Shared by both vectorized engines.
-
-        ``admitted`` is this iteration's admission list — ``(request, slot,
-        on-device first token)`` triples, at most ``admit_batch`` of them.
-        """
-        fetch = {}
-        if dec_tok is not None:
-            fetch["dec"] = dec_tok
-        if admitted:
-            fetch["adm"] = [tok for _, _, tok in admitted]
-        finished: List[Request] = []
-        if not fetch:
-            return finished
-        jax.tree.map(lambda a: a.copy_to_host_async(), fetch)
-        got = jax.device_get(fetch)
-        self.transfers += 1
-        now = time.perf_counter()
-        if dec_tok is not None:
-            for i in active:
-                r = at_dispatch[i]
-                r.output.append(int(got["dec"][i]))
-                if len(r.output) >= r.max_new_tokens:
-                    r.done_at = now
-                    finished.append(r)
-                    if self.slots[i] is r:
-                        self.slots[i] = None
-        if admitted:
-            for (req, slot, _), tok in zip(admitted, got["adm"]):
-                req.output.append(int(tok))
-                if req.first_token_at is None:
-                    req.first_token_at = now
-                if len(req.output) >= req.max_new_tokens:
-                    req.done_at = now
-                    finished.append(req)
-                    self._on_admitted_finish(req, slot)
-                    self.slots[slot] = None
+    def step(self) -> List[Request]:  # legacy contract
+        _, finished = self._step()
         return finished
 
 
-class ServeEngine(_EngineBase):
-    """Sequential per-slot reference engine (pre-batching baseline).
+class ServeEngine(_LegacyShim):
+    """Deprecated: ``LLMEngine(..., EngineConfig(backend="slot"))``.
 
-    Decodes each slot with a batch-1 jitted call and syncs to host for the
-    argmax of every token of every slot — kept as the numerical reference
-    for the batched engine and as the benchmark baseline. Prefill is jitted
-    per prompt length (the retrace cost the bucketed path removes).
+    Sequential per-slot reference engine (pre-batching baseline): batch-1
+    jitted decode per slot, host argmax sync per token, greedy-only.
     """
 
-    def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
-        super().__init__(arch, params, ec)
-        if not ec.greedy:
-            raise NotImplementedError(
-                "reference engine is greedy-only; use BatchedServeEngine")
-        self.caches = [None] * ec.slots
-
-        def _dec(p, c, t):
-            self.decode_traces += 1  # runs at trace time only
-            if self.qparams is None:
-                return arch.decode_step(p, c, t)
-            return arch.decode_step(p, c, t, qparams=self.qparams)
-
-        def _pre(p, t, embeds):
-            self.prefill_traces += 1  # retraces for every new prompt length
-            return arch.prefill(p, t, ec.max_len, embeds=embeds)
-
-        self._decode = jax.jit(_dec)
-        self._prefill = jax.jit(_pre)
-
-    def submit(self, req: Request):
-        # greedy-only reference: refuse rather than silently decode a
-        # sampling request with argmax
-        if self._req_temperature(req) > 0 or req.top_k > 0:
-            raise NotImplementedError(
-                f"reference engine is greedy-only and would ignore request "
-                f"{req.rid}'s temperature/top_k; use BatchedServeEngine")
-        super().submit(req)
-
-    def _admit_one(self, forced: bool = False) -> Optional[Request]:
-        """Admit the queue head; returns the request if prefill finished it
-        (max_new_tokens reached on the first token), else None."""
-        req = self.queue.popleft()
-        if None not in self.slots:
-            assert forced
-            victim = self._pick_victim()
-            evicted = self.slots[victim]
-            evicted.preemptions += 1
-            self.slots[victim] = None
-            self.caches[victim] = None
-            self.queue.appendleft(evicted)  # re-admitted at queue head
-        toks = jnp.asarray(_continuation_tokens(req)[None, :], jnp.int32)
-        embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
-        logits, cache = self._prefill(self.params, toks, embeds)
-        tok = int(jnp.argmax(logits[0]))  # host sync (counted)
-        self.transfers += 1
-        req.output.append(tok)
-        if req.first_token_at is None:
-            req.first_token_at = time.perf_counter()
-        if len(req.output) >= req.max_new_tokens:
-            req.done_at = time.perf_counter()  # prefill already finished it
-            return req
-        slot = self.slots.index(None)
-        self.slots[slot] = req
-        self.caches[slot] = cache
-        return None
-
-    def _decode_active(self):
-        for slot, req in enumerate(self.slots):
-            if req is None:
-                continue
-            last = jnp.asarray([req.output[-1]], jnp.int32)
-            logits, self.caches[slot] = self._decode(
-                self.params, self.caches[slot], last)
-            self.decode_dispatches += 1
-            tok = int(jnp.argmax(logits[0]))  # per-slot host sync (counted)
-            self.transfers += 1
-            req.output.append(tok)
-            if len(req.output) >= req.max_new_tokens:
-                req.done_at = time.perf_counter()
-                self.slots[slot] = None
-                self.caches[slot] = None
-                yield req
-
-    def step(self) -> List[Request]:
-        """One engine iteration → list of finished requests.
-
-        Decode (latency class) always runs first; at most one admission
-        (bulk class) per iteration. After ``admit_window`` consecutive
-        iterations with a request waiting, an admission is forced through —
-        preempting the busiest slot if none is free — the bounded-priority
-        guarantee.
-        """
-        self.iterations += 1
-        finished = list(self._decode_active())
-        admitted = False
-        if self.queue and None in self.slots:
-            done = self._admit_one()
-            admitted = True
-        elif self._forced_admission_due():
-            done = self._admit_one(forced=True)
-            admitted = True
-        if admitted and done is not None:
-            finished.append(done)
-        self._note_admission(admitted)
-        return finished
+    _backend_name = "slot"
 
 
-class BatchedServeEngine(_EngineBase):
-    """Vectorized continuous-batching engine (see module docstring)."""
+class BatchedServeEngine(_LegacyShim):
+    """Deprecated: ``LLMEngine(..., EngineConfig(backend="arena"))``.
 
-    def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
-        super().__init__(arch, params, ec)
-        cfg = arch.cfg
-        # Dense arena in compute_dtype storage: under serve_quant every
-        # write path (prefill fill + decode write) requantizes first, so
-        # the arena holds exactly the integers the int8 paged pool stores
-        # natively — this engine is the numerical reference for both.
-        self.cache = arch.init_cache(ec.slots, ec.max_len, quantized=False)
-        self.last_tok = jnp.zeros((ec.slots,), jnp.int32)
-        base_key = jax.random.key(ec.seed)
-        self._bucketing = ec.prefill_buckets and arch.supports_padded_prefill
-
-        def _dec(p, qp, cache, last_tok, samp, any_sampling):
-            self.decode_traces += 1  # runs at trace time only
-            if qp is None:
-                logits, cache = arch.decode_step(p, cache, last_tok)
-            else:
-                logits, cache = arch.decode_step(p, cache, last_tok,
-                                                 qparams=qp)
-            # fused per-slot sampling (stateless PRNG: see module docstring)
-            tok = sample_tokens_per_slot(logits, *samp, base_key,
-                                         any_sampling=any_sampling)
-            return tok, cache
-
-        def _insert_and_sample(logits, c1, slot, cache, last_tok, samp,
-                               any_sampling):
-            cache = cache_insert(cache, c1, slot)
-            tok = sample_tokens_per_slot(logits, *samp, base_key,
-                                         any_sampling=any_sampling)  # [1]
-            last_tok = jax.lax.dynamic_update_slice(last_tok, tok, (slot,))
-            return tok[0], cache, last_tok
-
-        def _pre_bucketed(p, tokens, true_len, slot, cache, last_tok, samp,
-                          embeds, any_sampling):
-            self.prefill_traces += 1  # one trace per bucket, not per length
-            logits, c1 = arch.prefill(p, tokens, ec.max_len,
-                                      true_len=true_len, embeds=embeds)
-            return _insert_and_sample(logits, c1, slot, cache, last_tok,
-                                      samp, any_sampling)
-
-        def _pre_exact(p, tokens, slot, cache, last_tok, samp, embeds,
-                       any_sampling):
-            self.prefill_traces += 1
-            logits, c1 = arch.prefill(p, tokens, ec.max_len, embeds=embeds)
-            return _insert_and_sample(logits, c1, slot, cache, last_tok,
-                                      samp, any_sampling)
-
-        # Donate the cache arena: in-place slot updates instead of a whole-
-        # arena copy per token. last_tok is NOT donated — it is fetched
-        # (device_get) after the next dispatch has already consumed it.
-        # any_sampling is static: the all-greedy workload compiles to a
-        # plain argmax (one extra trace only when sampling rows appear).
-        self._decode_fn = jax.jit(_dec, donate_argnums=(2,),
-                                  static_argnums=(5,))
-        self._prefill_bucketed = jax.jit(_pre_bucketed, donate_argnums=(4,),
-                                         static_argnums=(8,))
-        self._prefill_exact = jax.jit(_pre_exact, donate_argnums=(3,),
-                                      static_argnums=(7,))
-
-    # -- admission ---------------------------------------------------------
-
-    def _bucket_ok(self, bucket: int) -> bool:
-        # ring (sliding-window) caches drop leading positions once the
-        # prefill length exceeds the window — only bucket under it
-        cfg = self.arch.cfg
-        return "L" not in cfg.pattern or bucket <= cfg.local_window
-
-    def _dispatch_admission(self, req: Request, slot: int):
-        """One prefill dispatch for ``req`` into ``slot``; returns the
-        on-device sampled first token (fetched later, with the batch)."""
-        toks = _continuation_tokens(req)
-        n = toks.size
-        samp, any_sampling = self._admission_vectors(req)
-        embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
-        bucket = bucket_for(n, self.ec.min_bucket, self.ec.max_len)
-        if self._bucketing and self._bucket_ok(bucket):
-            padded = np.zeros((1, bucket), np.int32)
-            padded[0, :n] = toks
-            tok, self.cache, self.last_tok = self._prefill_bucketed(
-                self.params, jnp.asarray(padded),
-                jnp.asarray(n, jnp.int32), jnp.asarray(slot, jnp.int32),
-                self.cache, self.last_tok, samp, embeds, any_sampling)
-        else:
-            tok, self.cache, self.last_tok = self._prefill_exact(
-                self.params, jnp.asarray(toks[None, :]),
-                jnp.asarray(slot, jnp.int32),
-                self.cache, self.last_tok, samp, embeds, any_sampling)
-        return tok
-
-    # -- one iteration -----------------------------------------------------
-
-    def step(self) -> List[Request]:
-        """One engine iteration → list of finished requests.
-
-        Exactly one batched decode dispatch (if any slot is active), up to
-        ``admit_batch`` admission dispatches, then a single device→host
-        fetch of the sampled tokens. Which requests finish is
-        length-determined, so all host bookkeeping that gates dispatch
-        happens *before* the fetch.
-        """
-        self.iterations += 1
-        active = [i for i, r in enumerate(self.slots) if r is not None]
-        at_dispatch = list(self.slots)  # snapshot: who owns each decode row
-
-        dec_tok = None
-        if active:
-            samp, any_sampling = self._sampling_vectors()
-            dec_tok, self.cache = self._decode_fn(
-                self.params, self.qparams, self.cache, self.last_tok,
-                samp, any_sampling)
-            self.last_tok = dec_tok
-            self.decode_dispatches += 1
-
-        # admission decision (host-side; finishes are length-determined):
-        # admit up to admit_batch waiting requests into free (or freeing)
-        # slots — the cold-start concurrency ramp
-        will_free = [i for i in active
-                     if len(self.slots[i].output) + 1
-                     >= self.slots[i].max_new_tokens]
-        free = [i for i, r in enumerate(self.slots) if r is None]
-        avail = free + will_free
-        admitted: List[tuple] = []      # (request, slot, on-device token)
-        while self.queue and avail and len(admitted) < self.ec.admit_batch:
-            slot = avail.pop(0)
-            req = self.queue.popleft()
-            tok = self._dispatch_admission(req, slot)
-            self.slots[slot] = req
-            admitted.append((req, slot, tok))
-        if not admitted and self._forced_admission_due():
-            slot = self._pick_victim()  # preempt: bounded priority
-            victim = self.slots[slot]
-            victim.preemptions += 1
-            req = self.queue.popleft()
-            self.queue.appendleft(victim)
-            tok = self._dispatch_admission(req, slot)
-            self.slots[slot] = req
-            admitted.append((req, slot, tok))
-
-        # single async fetch per iteration: decode tokens (+ the admitted
-        # requests' first tokens when admissions happened)
-        finished = self._fetch_and_finish(dec_tok, active, at_dispatch,
-                                          admitted)
-        self._note_admission(bool(admitted))
-        return finished
-
-
-def validate_paged_config(arch: registry.Arch, attn_backend: str = "xla"):
-    """Config validation for the paged engine. After ring blocks + paged
-    prefill, every attention-cache family serves on the paged path for any
-    ``local_window``; what remains unsupported is recurrent state (no
-    growing KV to page). Quantized (``serve_quant``) archs additionally
-    need int8 block-pool support — both in the family (write-time
-    requantization + int8 decode) and in the configured attention backend
-    (the fused int8 kernel / ITA oracle). All of it fails *here*, at
-    construction, with the arch named in the error — never mid-serve
-    inside a jitted step."""
-    from repro.kernels.paged_attention import ops as paged_ops
-
-    cfg = arch.cfg
-    if not arch.supports_paged:
-        bad = "".join(sorted(set(cfg.pattern) - set("GLB")))
-        why = (f"layer kinds {bad!r} keep recurrent state, which has no "
-               f"growing KV cache to page" if bad else
-               "the family does not implement paged_decode_step")
-        raise ValueError(
-            f"paged serving: family {cfg.family!r} (layer pattern "
-            f"{cfg.pattern!r}) has no paged decode path — {why}; use "
-            f"BatchedServeEngine for this arch")
-    if not arch.supports_paged_prefill:
-        raise ValueError(
-            f"paged serving: family {cfg.family!r} has a paged decode path "
-            f"but no paged prefill — implement `paged_prefill` next to its "
-            f"`paged_decode_step`")
-    if cfg.serve_quant:
-        if not arch.supports_paged_int8:
-            raise ValueError(
-                f"paged serving: arch {cfg.name!r} (family {cfg.family!r}) "
-                f"is quantized (serve_quant) but the family does not "
-                f"support int8 block pools — set serve_quant=False or add "
-                f"write-time requantization + PAGED_INT8_KV to the family")
-        if attn_backend not in paged_ops.INT8_BACKENDS:
-            raise ValueError(
-                f"paged serving: arch {cfg.name!r} is quantized "
-                f"(serve_quant) but attention backend {attn_backend!r} "
-                f"does not implement the int8 paged-attention kernel "
-                f"(supported: {', '.join(paged_ops.INT8_BACKENDS)}) — "
-                f"pick one of those or serve the float path")
-    elif attn_backend not in paged_ops.BACKENDS:
-        raise ValueError(
-            f"paged serving: unknown attention backend {attn_backend!r} "
-            f"(supported: {', '.join(paged_ops.BACKENDS)})")
-
-
-class PagedServeEngine(_EngineBase):
-    """Continuous batching over a paged block-pool KV cache.
-
-    The dense ``BatchedServeEngine`` reserves ``max_len`` KV rows per slot,
-    so short requests strand arena capacity that long ones need — the
-    fragmentation that CHIMERA's *banked, interleaved* shared-L2 island
-    avoids in hardware. Here KV state lives in a shared pool of fixed-size
-    blocks (``models.cache.PagedLayout``); each slot holds a block table
-    mapping position ``p`` to pool block ``table[slot, p // block_len]``.
-    A host-side free-list allocator (``models.cache.BlockAllocator``)
-    admits against *worst-case* block reservations, grows slots lazily at
-    block boundaries, and recycles blocks on completion and preemption —
-    so at a fixed KV-memory budget the paged engine admits every mix of
-    lengths the budget can actually hold, not ``budget / max_len`` slots.
-
-    **Ring blocks** (sliding-window "L" layers with ``local_window <
-    max_len``): L-layer pools are a separate, much smaller arena — each
-    slot owns a fixed ring of ``ceil(window/block_len) + 1`` blocks and
-    reuses them circularly. The host rotates the per-slot ring table as
-    the window slides (entry 0 = oldest live block) and passes its
-    block-aligned absolute start position into the step, so the kernel
-    masks by absolute position and wrapped blocks attend correctly.
-
-    **Paged prefill**: admission runs ``arch.paged_prefill``, which writes
-    K/V straight into pool blocks (full blocks in bulk, the tail at block
-    granularity) — no dense bucket cache, no splice dispatch.
-
-    **Int8 blocks** (``serve_quant`` archs): pools store K/V natively as
-    int8 plus per-block scales — roughly half the resident bytes per token
-    of a bf16 pool, so a fixed byte budget admits ~2x the concurrent
-    requests — and decode runs ``paged_attention_int8`` over the blocks
-    (ITA gather oracle on ``xla``, token-identical to the dense int8
-    reference; fused dequantizing kernel on ``pallas``/``interpret``).
-    Every write path requantizes at write time, so no dense gather or
-    float copy of the history ever exists.
-
-    The PR-1 dataflow contract is preserved: one jitted paged decode
-    dispatch over all rows per iteration, up to ``admit_batch`` admission
-    dispatches, one device→host token fetch. Tables are host-owned and
-    passed into the jitted step each call (fixed shapes — no retrace);
-    empty rows decode against the dedicated trash block and are ignored
-    host-side.
-
-    Pool exhaustion *defers* admission (the waiting request then rides the
-    bounded-priority QoS path: after ``admit_window`` iterations a victim
-    is preempted and its blocks recycled); a request that could never fit
-    the pool is rejected at ``submit``.
+    Vectorized continuous-batching engine over the dense
+    ``[slots, max_len, ...]`` KV arena.
     """
 
-    def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
-        super().__init__(arch, params, ec)
-        cfg = arch.cfg
-        from repro.kernels.paged_attention import ops as paged_ops
-
-        self.attn_backend = (paged_ops.DEFAULT_BACKEND
-                             if ec.attn_backend is None else ec.attn_backend)
-        validate_paged_config(arch, self.attn_backend)
-        num_blocks = ec.num_blocks
-        if num_blocks is None:  # match the dense arena's token budget
-            num_blocks = blocks_for(ec.slots * ec.max_len, ec.block_len) + 1
-        # ring blocks when sliding-window layers can't hold full history
-        self.ring = ("L" in cfg.pattern
-                     and cfg.local_window < ec.max_len
-                     and cfg.family != "encdec")
-        wb = ring_blocks_for(cfg.local_window, ec.block_len) if self.ring \
-            else 0
-        self.layout = PagedLayout(
-            ec.block_len, num_blocks, ec.max_len,
-            window=cfg.local_window if self.ring else None,
-            ring_num_blocks=(1 + ec.slots * wb) if self.ring else 0)
-        self.alloc = BlockAllocator(self.layout)
-        # full-history blocks are consumed by non-L layers only; an all-L
-        # pattern reserves none of them
-        self._has_full = (not self.ring) or any(k != "L" for k in cfg.pattern)
-        self.table = np.zeros((ec.slots, self.layout.max_blocks), np.int32)
-        if self.ring:
-            # the ring arena always fits every slot's ring (sized above),
-            # but runs through an allocator so leaks/double-frees surface
-            self.ring_alloc = BlockAllocator(PagedLayout(
-                ec.block_len, self.layout.ring_num_blocks, ec.max_len))
-            self.ring_table = np.zeros((ec.slots, wb), np.int32)
-            self.ring_start = np.zeros((ec.slots,), np.int32)
-            self._ring_first = [0] * ec.slots   # abs block idx of entry 0
-            self._ring_ids: List = [None] * ec.slots
-        self._slot_len = [0] * ec.slots   # host mirror of active rows' len
-        # quantized archs get int8 block pools (+ per-block scales) — the
-        # family default; float archs keep compute_dtype pools
-        self.quantized = bool(cfg.serve_quant)
-        self.cache = arch.init_paged_cache(ec.slots, self.layout)
-        self.last_tok = jnp.zeros((ec.slots,), jnp.int32)
-        base_key = jax.random.key(ec.seed)
-        self._bucketing = ec.prefill_buckets and arch.supports_padded_prefill
-        self.max_concurrent = 0           # peak active slots (capacity proof)
-        backend = self.attn_backend
-
-        def _dec(p, qp, cache, table, last_tok, samp, any_sampling):
-            self.decode_traces += 1  # runs at trace time only
-            logits, cache = arch.paged_decode_step(
-                p, cache, last_tok, table, qparams=qp, attn_backend=backend)
-            tok = sample_tokens_per_slot(logits, *samp, base_key,
-                                         any_sampling=any_sampling)
-            return tok, cache
-
-        def _pre(p, tokens, true_len, slot, block_ids, ring_ids, cache,
-                 last_tok, samp, embeds, any_sampling):
-            self.prefill_traces += 1  # one trace per (bucket, block count)
-            logits, cache = arch.paged_prefill(
-                p, tokens, cache, slot, block_ids, ring_ids=ring_ids,
-                true_len=true_len, embeds=embeds)
-            tok = sample_tokens_per_slot(logits, *samp, base_key,
-                                         any_sampling=any_sampling)  # [1]
-            last_tok = jax.lax.dynamic_update_slice(last_tok, tok, (slot,))
-            return tok[0], cache, last_tok
-
-        self._decode_fn = jax.jit(_dec, donate_argnums=(2,),
-                                  static_argnums=(6,))
-        self._prefill_fn = jax.jit(_pre, donate_argnums=(6,),
-                                   static_argnums=(10,))
-
-    # -- capacity bookkeeping ----------------------------------------------
-
-    def _pre_len(self, req: Request) -> int:
-        """Prefill cache length for ``req``'s continuation (block multiple;
-        pow2 bucket when bucketing). The bucket is capped at the request's
-        worst-case decode extent so the block reservation is *invariant
-        across preemptions* — a pow2 bucket of a grown continuation must
-        never demand more blocks than ``submit`` admitted against, or a
-        preempted request could become unreadmittable."""
-        blk = self.ec.block_len
-        n = len(req.prompt) + len(req.output)
-        if self._bucketing:
-            bucket = bucket_for(n, max(self.ec.min_bucket, blk),
-                                self.ec.max_len)
-        else:
-            bucket = n
-        cap = blocks_for(len(req.prompt) + req.max_new_tokens - 1, blk) * blk
-        # round the (possibly max_len-clamped, non-pow2) bucket up to a
-        # block multiple; the roundup never exceeds cap because cap is one
-        return max(blocks_for(n, blk) * blk,
-                   blocks_for(min(bucket, cap), blk) * blk)
-
-    def _max_blocks_needed(self, req: Request) -> int:
-        """Worst-case full-history block reservation: the prefill extent
-        now, or the final decode position, whichever is larger. An all-L
-        pattern consumes no full-history blocks (its ring reservation is a
-        fixed ``ring_blocks`` per slot, accounted separately)."""
-        if not self._has_full:
-            return 0
-        final_pos = len(req.prompt) + req.max_new_tokens - 1
-        return blocks_for(max(self._pre_len(req), final_pos),
-                          self.ec.block_len)
-
-    def submit(self, req: Request):
-        need = self._max_blocks_needed(req)
-        if need > self.layout.usable_blocks:
-            raise ValueError(
-                f"request {req.rid} needs {need} blocks; pool has "
-                f"{self.layout.usable_blocks}")
-        super().submit(req)
-
-    def _release_slot(self, slot: int):
-        """Recycle a slot's blocks (full + ring) and point its table rows
-        at trash."""
-        req = self.slots[slot]
-        self.alloc.release(req.rid)
-        self.table[slot, :] = 0
-        if self.ring:
-            self.ring_alloc.release(req.rid)
-            self.ring_table[slot, :] = 0
-            self.ring_start[slot] = 0
-            self._ring_first[slot] = 0
-            self._ring_ids[slot] = None
-        self._slot_len[slot] = 0
-
-    def _can_admit(self, req: Request) -> bool:
-        if not self.alloc.can_admit(self._max_blocks_needed(req)):
-            return False
-        if self.ring and not self.ring_alloc.can_admit(
-                self.layout.ring_blocks):
-            return False
-        return True
-
-    def _tables(self):
-        """Device view of the host-owned block tables for this iteration."""
-        if not self.ring:
-            return jnp.asarray(self.table)
-        return {"full": jnp.asarray(self.table),
-                "ring": jnp.asarray(self.ring_table),
-                "start": jnp.asarray(self.ring_start)}
-
-    def pool_leaves(self):
-        """KV pool leaves (k/v block pools + per-block scale vectors) of
-        the paged cache — per-slot arenas (encdec cross K/V, positions)
-        excluded."""
-        out = []
-
-        def grab(d):
-            for key in ("k", "v", "kscale", "vscale"):
-                if key in d:
-                    out.append(d[key])
-
-        if "stacks" in self.cache:
-            for d in self.cache["stacks"]:
-                grab(d)
-            for d in self.cache.get("tail", []):
-                grab(d)
-        else:
-            grab(self.cache)
-        return out
-
-    @property
-    def pool_bytes(self) -> int:
-        """Total resident bytes of the KV block pools (full + ring arenas,
-        scale vectors included) — the quantity the int8 layout halves."""
-        return int(sum(leaf.nbytes for leaf in self.pool_leaves()))
-
-    @property
-    def pool_bytes_per_token(self) -> float:
-        """Pool bytes per token of full-history capacity. (Ring arenas are
-        counted in the numerator; for windowed models their capacity is
-        window-bounded, so compare like layouts.)"""
-        return self.pool_bytes / self.layout.usable_tokens
-
-    # -- one iteration -----------------------------------------------------
-
-    def _dispatch_admission(self, req: Request, slot: int):
-        """Reserve blocks, set up tables, and run one paged-prefill
-        dispatch (K/V written straight into pool blocks); returns the
-        on-device sampled first token."""
-        toks = _continuation_tokens(req)
-        n = toks.size
-        pre_len = self._pre_len(req)
-        now_blocks = pre_len // self.ec.block_len if self._has_full else 0
-        block_ids = np.asarray(
-            self.alloc.admit(req.rid, now_blocks,
-                             self._max_blocks_needed(req)),
-            np.int32)
-        self.table[slot, :] = 0
-        self.table[slot, :block_ids.size] = block_ids
-        ring_ids = None
-        if self.ring:
-            wb = self.layout.ring_blocks
-            ring_ids = np.asarray(
-                self.ring_alloc.admit(req.rid, wb, wb), np.int32)
-            first = max(0, (n - 1) // self.ec.block_len - (wb - 1))
-            self._ring_first[slot] = first
-            self._ring_ids[slot] = ring_ids
-            self.ring_table[slot, :] = ring_table_row(ring_ids, first)
-            self.ring_start[slot] = first * self.ec.block_len
-        self._slot_len[slot] = n
-        if self._bucketing:
-            padded = np.zeros((1, pre_len), np.int32)
-            padded[0, :n] = toks
-            tokens = jnp.asarray(padded)
-            true_len = jnp.asarray(n, jnp.int32)
-        else:
-            # exact prompt, no pad tokens (MoE routing capacity depends on
-            # token count); K/V writes pad to block granularity internally
-            tokens = jnp.asarray(toks[None, :])
-            true_len = None
-        embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
-        samp, any_sampling = self._admission_vectors(req)
-        tok, self.cache, self.last_tok = self._prefill_fn(
-            self.params, tokens, true_len, jnp.asarray(slot, jnp.int32),
-            jnp.asarray(block_ids),
-            None if ring_ids is None else jnp.asarray(ring_ids),
-            self.cache, self.last_tok, samp, embeds, any_sampling)
-        return tok
-
-    def step(self) -> List[Request]:
-        """One engine iteration → finished requests (one paged decode
-        dispatch, ≤ admit_batch admission dispatches, one device→host
-        fetch)."""
-        self.iterations += 1
-        active = [i for i, r in enumerate(self.slots) if r is not None]
-        at_dispatch = list(self.slots)
-        self.max_concurrent = max(self.max_concurrent, len(active))
-
-        blk = self.ec.block_len
-        for i in active:
-            req = self.slots[i]
-            if self._has_full:
-                # grow any slot whose next write position crosses a block
-                # boundary (drawn from its admission-time reservation —
-                # can never fail)
-                needed = self._slot_len[i] // blk + 1
-                owned = self.alloc.owned(req.rid)
-                while len(owned) < needed:
-                    b = self.alloc.grow(req.rid)
-                    self.table[i, len(owned)] = b
-                    owned.append(b)
-            if self.ring:
-                # rotate the ring table when the next write position enters
-                # a block past the current ring: the evicted oldest block
-                # is entirely below the window by construction
-                wb = self.layout.ring_blocks
-                next_bi = self._slot_len[i] // blk
-                if next_bi > self._ring_first[i] + wb - 1:
-                    first = next_bi - (wb - 1)
-                    self._ring_first[i] = first
-                    self.ring_table[i, :] = ring_table_row(
-                        self._ring_ids[i], first)
-                    self.ring_start[i] = first * blk
-
-        dec_tok = None
-        if active:
-            samp, any_sampling = self._sampling_vectors()
-            dec_tok, self.cache = self._decode_fn(
-                self.params, self.qparams, self.cache,
-                self._tables(), self.last_tok, samp, any_sampling)
-            self.last_tok = dec_tok
-            self.decode_dispatches += 1
-            for i in active:
-                self._slot_len[i] += 1
-
-        # finishes are length-determined: recycle their blocks *now* so
-        # this iteration's admissions can reuse them (the decode dispatch
-        # that read them is already ordered before any insert)
-        will_free = [i for i in active
-                     if len(self.slots[i].output) + 1
-                     >= self.slots[i].max_new_tokens]
-        for i in will_free:
-            self._release_slot(i)
-        free = [i for i, r in enumerate(self.slots) if r is None]
-        avail = free + will_free
-
-        # admit up to admit_batch queue heads that fit the pool (FIFO —
-        # never skip the head: QoS credit is head-of-line)
-        admitted: List[tuple] = []      # (request, slot, on-device token)
-        while (self.queue and avail and len(admitted) < self.ec.admit_batch
-               and self._can_admit(self.queue[0])):
-            slot = avail.pop(0)
-            req = self.queue.popleft()
-            tok = self._dispatch_admission(req, slot)
-            self.slots[slot] = req
-            admitted.append((req, slot, tok))
-        # else: pool exhausted or slots busy — defer; the waiting request
-        # accrues bounded-priority credit and will preempt below
-        if not admitted and self._forced_admission_due():
-            head = self.queue[0]
-            need = self._max_blocks_needed(head)
-            # evict victims (most remaining work first — the dense engines'
-            # policy) until the head's reservation fits; multiple small
-            # slots may need to go, since the bounded-priority guarantee
-            # must not hinge on any single victim being block-rich enough.
-            # Evicting every slot always suffices: submit() guarantees
-            # need ≤ usable_blocks, and queued requests hold no blocks.
-            candidates = [i for _, i in sorted(
-                ((r.max_new_tokens - len(r.output), i)
-                 for i, r in enumerate(self.slots) if r is not None),
-                reverse=True)]
-            # one victim when one suffices (busiest-first); otherwise evict
-            # cumulatively until the head fits
-            single = next(
-                (i for i in candidates if self.alloc.can_admit_after_release(
-                    need, self.slots[i].rid)), None)
-            order = [single] if single is not None else candidates
-            evicted: List[tuple] = []   # (victim request, its slot)
-            for victim_slot in order:
-                if evicted and self.alloc.can_admit(need):
-                    break
-                victim = self.slots[victim_slot]
-                self._release_slot(victim_slot)
-                victim.preemptions += 1
-                self.slots[victim_slot] = None
-                evicted.append((victim, victim_slot))
-            if evicted:
-                req = self.queue.popleft()
-                for victim, _ in reversed(evicted):
-                    self.queue.appendleft(victim)
-                slot = evicted[0][1]
-                tok = self._dispatch_admission(req, slot)
-                self.slots[slot] = req
-                admitted.append((req, slot, tok))
-
-        # single async fetch per iteration (same shape as the dense engine)
-        finished = self._fetch_and_finish(dec_tok, active, at_dispatch,
-                                          admitted)
-        self._note_admission(bool(admitted))
-        return finished
-
-    def _on_admitted_finish(self, req: Request, slot: int):
-        # finished at its admission prefill: recycle before the slot is
-        # vacated (_release_slot reads self.slots[slot])
-        self._release_slot(slot)
+    _backend_name = "arena"
 
 
-def metrics(done: List[Request]) -> Dict[str, float]:
-    finished = [r for r in done if r.done_at is not None]
-    if not finished:
-        return {"requests": 0, "ttft_avg_s": 0.0, "latency_avg_s": 0.0,
-                "tokens_per_s": 0.0}
-    ttft = [r.first_token_at - r.submitted_at
-            for r in finished if r.first_token_at is not None]
-    lat = [r.done_at - r.submitted_at for r in finished]
-    toks = sum(len(r.output) for r in finished)
-    wall = (max(r.done_at for r in finished)
-            - min(r.submitted_at for r in finished))
-    return {
-        "requests": len(finished),
-        "ttft_avg_s": float(np.mean(ttft)) if ttft else 0.0,
-        "latency_avg_s": float(np.mean(lat)) if lat else 0.0,
-        "tokens_per_s": toks / wall if wall > 0 else 0.0,
-    }
+class PagedServeEngine(_LegacyShim):
+    """Deprecated: ``LLMEngine(..., EngineConfig(backend="paged"))``.
+
+    Continuous batching over the shared block-pool KV cache (ring blocks
+    for sliding-window layers, int8 block storage for quantized archs).
+    """
+
+    _backend_name = "paged"

@@ -1,0 +1,143 @@
+"""Request lifecycle for the serve layer.
+
+A :class:`Request` moves through an explicit state machine::
+
+    WAITING ──admission──▶ PREFILL ──first token──▶ RUNNING ──finish──▶ DONE
+       ▲                                              │
+       └────────────── PREEMPTED (forced admission evicted the slot;
+                        re-enters the queue and is re-prefilled from its
+                        prompt + generated tokens, token-identically)
+
+``abort()`` moves a request from any live state to ``ABORTED``.
+
+When a request finishes, ``finish_reason`` records why:
+
+  * ``"stop"``   — one of its ``stop_sequences`` matched the tail of the
+                   generated tokens (host-side check, one per iteration);
+  * ``"eos"``    — the generated token equals ``eos_token``;
+  * ``"length"`` — ``max_new_tokens`` generated;
+  * ``"abort"``  — the caller aborted the handle.
+
+Every request carries a QoS *traffic class* mirroring the CHIMERA memory
+island's two-lane arbiter: ``"rt"`` (latency-critical, the narrow-port
+analog — bounded admission latency under the QoS scheduler) or ``"be"``
+(best-effort bulk, the wide-DMA analog — fills whatever capacity is
+left). Schedulers other than ``"qos"`` ignore the class.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class RequestState:
+    """Lifecycle states (plain strings for cheap comparison / JSON)."""
+
+    WAITING = "waiting"        # queued, no slot
+    PREFILL = "prefill"        # admission dispatched, first token in flight
+    RUNNING = "running"        # holds a decode slot
+    PREEMPTED = "preempted"    # evicted by a forced admission; re-queued
+    DONE = "done"              # finished (see finish_reason)
+    ABORTED = "aborted"        # caller aborted
+
+    LIVE = (WAITING, PREFILL, RUNNING, PREEMPTED)
+    FINISHED = (DONE, ABORTED)
+
+
+class FinishReason:
+    STOP = "stop"
+    EOS = "eos"
+    LENGTH = "length"
+    ABORT = "abort"
+
+
+# eq=False: requests are identities, not value tuples — two requests with
+# identical prompts must not alias in queue membership tests / removal.
+@dataclasses.dataclass(eq=False)
+class Request:
+    rid: int
+    prompt: np.ndarray           # [S] int32
+    max_new_tokens: int = 16
+    # per-request decode-time sampling params (vectorized backends):
+    # temperature None → the engine default (0 when ec.greedy, else
+    # ec.temperature); 0 → greedy. top_k 0 → full vocab.
+    temperature: Optional[float] = None
+    top_k: int = 0
+    # frame embeddings [enc_seq, d] for encoder-decoder archs (stub input)
+    embeds: Optional[np.ndarray] = None
+    # QoS traffic class: "rt" (latency-critical) | "be" (best-effort)
+    qos: str = "be"
+    # host-side finish conditions (checked once per iteration, riding the
+    # single device→host token fetch): token-id sequences and EOS id
+    stop_sequences: Optional[Sequence[Sequence[int]]] = None
+    eos_token: Optional[int] = None
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    done_at: Optional[float] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    preemptions: int = 0         # times evicted by a forced admission
+    state: str = RequestState.WAITING
+    finish_reason: Optional[str] = None
+    # iterations spent waiting in the queue since submission / last
+    # preemption (the QoS scheduler's admission-credit coordinate)
+    waiting_iters: int = 0
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new_tokens - len(self.output)
+
+    @property
+    def finished(self) -> bool:
+        return self.state in RequestState.FINISHED
+
+    def check_finish(self) -> Optional[str]:
+        """Finish reason implied by the generated tokens, else None.
+
+        EOS wins over stop-sequence matches, which win over length — all
+        three are checked against ``output`` only (generated tokens; stop
+        sequences do not match across the prompt boundary).
+        """
+        if not self.output:
+            return None
+        if self.eos_token is not None and self.output[-1] == self.eos_token:
+            return FinishReason.EOS
+        for seq in self.stop_sequences or ():
+            n = len(seq)
+            if 0 < n <= len(self.output) and self.output[-n:] == list(seq):
+                return FinishReason.STOP
+        if len(self.output) >= self.max_new_tokens:
+            return FinishReason.LENGTH
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOutput:
+    """One request's progress from a single ``LLMEngine.step()``."""
+
+    rid: int
+    token: Optional[int]         # token appended this step (None: no token,
+    #                              e.g. the terminal abort marker)
+    state: str
+    finish_reason: Optional[str] = None
+    qos: str = "be"
+
+    @property
+    def finished(self) -> bool:
+        return self.state in RequestState.FINISHED
+
+
+def normalize_stop_sequences(
+        stop: Optional[Sequence[Sequence[int]]]) -> Optional[Tuple[Tuple[int, ...], ...]]:
+    """Validate + freeze stop sequences at submit time."""
+    if stop is None:
+        return None
+    out = []
+    for seq in stop:
+        toks = tuple(int(t) for t in seq)
+        if not toks:
+            raise ValueError("empty stop sequence")
+        out.append(toks)
+    return tuple(out)

@@ -1,0 +1,404 @@
+"""Scheduler policies (fcfs / bounded / qos) against a fake backend:
+unit tests for admission order, forced admission, victim preference and
+the be-grant bound, plus a property test that "rt" admission latency
+never exceeds the configured window under full "be" contention."""
+
+import numpy as np
+import pytest
+
+from repro.serve.api import LLMEngine
+from repro.serve.config import EngineConfig
+from repro.serve.request import Request, RequestState
+from repro.serve.scheduler import (
+    BoundedPriorityScheduler, FCFSScheduler, QoSTrafficClassScheduler,
+    make_scheduler,
+)
+
+
+class FakeBackend:
+    """CacheBackend protocol stand-in: no JAX, deterministic host tokens.
+
+    Decode "computes" token ``base + len(output)`` per slot; prefill
+    returns ``base``. Capacity is optionally bounded by ``capacity``
+    (worst-case token reservations, a miniature of the paged allocator)
+    so head-of-line blocking is testable.
+    """
+
+    vectorized = False
+    max_admit = None
+
+    def __init__(self, capacity=None):
+        self.capacity = capacity
+        self.reserved = {}            # rid -> reservation
+        self.decode_dispatches = 0
+        self.transfers = 0
+        self.decode_traces = 0
+        self.prefill_traces = 0
+        self.released = []            # (slot, rid) log
+        self.prefills = []            # rid log (admission order record)
+
+    def _need(self, req):
+        return len(req.prompt) + req.max_new_tokens
+
+    def validate_request(self, req):
+        if self.capacity is not None and self._need(req) > self.capacity:
+            raise ValueError(f"request {req.rid} can never fit")
+
+    def begin_iteration(self, active, slots):
+        pass
+
+    def can_admit(self, req):
+        if self.capacity is None:
+            return True
+        return (self._need(req)
+                <= self.capacity - sum(self.reserved.values()))
+
+    def decode(self, active, slots, samp, any_sampling):
+        self.decode_dispatches += 1
+        return {i: 100 + len(slots[i].output) for i in active}
+
+    def prefill(self, req, slot, samp, any_sampling):
+        if self.capacity is not None:
+            self.reserved[req.rid] = self._need(req)
+        self.prefills.append(req.rid)
+        return 100
+
+    def release(self, slot, req):
+        self.reserved.pop(req.rid, None)
+        self.released.append((slot, req.rid))
+
+    def evict_for(self, req, candidates, slots):
+        evicted = []
+        for s in candidates:
+            if evicted and self.can_admit(req):
+                break
+            self.release(s, slots[s])
+            evicted.append(s)
+        return evicted
+
+
+def _engine(slots=2, scheduler="qos", capacity=None, **kw):
+    ec = EngineConfig(slots=slots, max_len=1024, scheduler=scheduler, **kw)
+    return LLMEngine(None, None, ec, backend=FakeBackend(capacity=capacity))
+
+
+def _req(rid, qos="be", max_new=64, prompt_len=4):
+    return Request(rid=rid, prompt=np.arange(prompt_len, dtype=np.int32),
+                   max_new_tokens=max_new, qos=qos)
+
+
+def _saturate_be(eng, n=None, max_new=64):
+    """Fill every slot with long-running best-effort requests."""
+    n = eng.ec.slots if n is None else n
+    for k in range(n):
+        eng.submit(_req(1000 + k, qos="be", max_new=max_new))
+    for _ in range(-(-n // eng.ec.admit_batch)):
+        eng.step()
+    assert all(r is not None for r in eng.slots)
+    return [r.rid for r in eng.slots]
+
+
+# ---------------------------------------------------------------------------
+# Unit: policy objects
+# ---------------------------------------------------------------------------
+
+
+def test_make_scheduler_names():
+    for name, cls in (("fcfs", FCFSScheduler),
+                      ("bounded", BoundedPriorityScheduler),
+                      ("qos", QoSTrafficClassScheduler)):
+        s = make_scheduler(EngineConfig(scheduler=name))
+        assert isinstance(s, cls) and s.name == name
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        EngineConfig(scheduler="strict-priority")
+
+
+def test_qos_admit_order_puts_rt_lane_first():
+    s = QoSTrafficClassScheduler(EngineConfig(scheduler="qos"))
+    q = [_req(0, "be"), _req(1, "rt"), _req(2, "be"), _req(3, "rt")]
+    assert [r.rid for r in s.admit_order(q)] == [1, 3, 0, 2]
+    # fcfs/bounded keep arrival order
+    for cls in (FCFSScheduler, BoundedPriorityScheduler):
+        assert [r.rid for r in cls(EngineConfig()).admit_order(q)] \
+            == [0, 1, 2, 3]
+
+
+def test_qos_victim_order_prefers_best_effort_slots():
+    s = QoSTrafficClassScheduler(EngineConfig(scheduler="qos"))
+    running = [(0, _req(0, "rt", max_new=50)),
+               (1, _req(1, "be", max_new=10)),
+               (2, _req(2, "be", max_new=40))]
+    # be slots first (most remaining work first), rt only as a last resort
+    assert s.victim_order(running) == [2, 1, 0]
+
+
+def test_bounded_forces_only_after_decode_only_window():
+    ec = EngineConfig(admit_window=3)
+    s = BoundedPriorityScheduler(ec)
+    q = [_req(0)]
+    for _ in range(3):
+        assert s.forced_request(q, []) is None
+        s.note_iteration([], q)
+    assert s.forced_request(q, []) is q[0]
+    # any admission resets the credit
+    s.note_iteration([_req(9)], q)
+    assert s.forced_request(q, []) is None
+
+
+# ---------------------------------------------------------------------------
+# Engine-level behavior on the fake backend
+# ---------------------------------------------------------------------------
+
+
+def test_fcfs_never_preempts_under_contention():
+    eng = _engine(slots=2, scheduler="fcfs")
+    _saturate_be(eng, max_new=32)
+    rt = _req(0, qos="rt", max_new=4)
+    eng.submit(rt)
+    for _ in range(12):
+        eng.step()
+    assert rt.state == RequestState.WAITING      # still queued
+    assert sum(r.preemptions for r in eng.slots if r) == 0
+    done = eng.run_until_drained()
+    assert {r.rid for r in done} >= {0}          # admitted once a slot freed
+
+
+def test_qos_rt_preempts_be_within_window():
+    eng = _engine(slots=2, scheduler="qos", rt_window=2)
+    be_rids = _saturate_be(eng, max_new=64)
+    rt = _req(0, qos="rt", max_new=4)
+    eng.submit(rt)
+    for _ in range(eng.ec.rt_window + 1):
+        eng.step()
+    assert rt in eng.slots                       # admitted within the bound
+    # exactly one be victim was preempted, never an rt slot
+    victims = [r for r in eng._requests.values()
+               if r.preemptions > 0]
+    assert len(victims) == 1 and victims[0].qos == "be"
+    assert victims[0].rid in be_rids
+
+
+def test_qos_rt_guarantee_holds_even_while_be_admits():
+    """The rt bound is a guarantee, not a priority hint: rt is forced in
+    within rt_window even when free slots keep appearing and being handed
+    out (admissions happening does not defer the forced path)."""
+    eng = _engine(slots=2, scheduler="qos", rt_window=2, admit_batch=1)
+    _saturate_be(eng, max_new=64)
+    # a steady stream of short be requests keeps the queue busy
+    for k in range(4):
+        eng.submit(_req(2000 + k, qos="be", max_new=2))
+    rt = _req(0, qos="rt", max_new=4)
+    eng.submit(rt)
+    for _ in range(eng.ec.rt_window + 1):
+        eng.step()
+    assert rt in eng.slots
+
+
+def test_qos_be_grant_window_bounds_rt_priority():
+    """After be_grant_window consecutive rt admissions with a be request
+    waiting, the next free-slot grant goes to be — the software twin of
+    the arbiter's guaranteed wide beat."""
+    eng = _engine(slots=1, scheduler="qos", rt_window=64,
+                  be_grant_window=2)
+    be = _req(500, qos="be", max_new=4)
+    eng.submit(be)
+    eng.step()                                    # be holds the only slot
+    assert eng.slots[0] is be
+    # rt requests finishing quickly: each free slot goes rt-first...
+    for k in range(8):
+        eng.submit(_req(k, qos="rt", max_new=2))
+    be2 = _req(501, qos="be", max_new=2)
+    eng.submit(be2)
+    order = []
+    seen = set()
+    for _ in range(60):
+        eng.step()
+        for i, r in enumerate(eng.slots):
+            if r is not None and r.rid not in seen:
+                seen.add(r.rid)
+                order.append(r.rid)
+        if be2.finished:
+            break
+    assert be2.finished
+    # be2 was granted a slot after at most be_grant_window rt admissions
+    rt_before_be2 = order.index(501)
+    assert rt_before_be2 - 1 <= eng.ec.be_grant_window, (
+        f"be waited through {rt_before_be2 - 1} rt grants: {order}")
+
+
+def test_capacity_blocked_head_stops_admissions():
+    """Head-of-line credit: a capacity-blocked queue head is never
+    skipped in favor of a smaller later request (fcfs/bounded)."""
+    eng = _engine(slots=4, scheduler="fcfs", capacity=100)
+    eng.submit(_req(0, max_new=80))               # reserves 84
+    eng.step()
+    eng.submit(_req(1, max_new=40))               # would fit alone: 44 > 16
+    eng.submit(_req(2, max_new=4))                # tiny: 8 < 16 free
+    eng.step()
+    assert eng.slots.count(None) == 3             # neither was admitted
+    assert all(r.state == RequestState.WAITING
+               for r in (eng._requests[1], eng._requests[2]))
+
+
+def test_scheduler_state_survives_preempt_requeue_cycle():
+    """A preempted be victim re-enters the queue at the head and is
+    re-admitted before younger be traffic (fairness of the legacy
+    requeue-at-head rule under the qos scheduler)."""
+    eng = _engine(slots=1, scheduler="qos", rt_window=1)
+    victim = _req(600, qos="be", max_new=8)
+    eng.submit(victim)
+    eng.step()
+    eng.submit(_req(601, qos="be", max_new=8))    # younger be waits
+    eng.submit(_req(0, qos="rt", max_new=2))
+    for _ in range(3):
+        eng.step()
+    assert victim.preemptions == 1
+    done = eng.run_until_drained()
+    rids = [r.rid for r in done]
+    assert rids.index(600) < rids.index(601)
+
+
+def test_forced_admission_prefers_leftover_free_slot():
+    """Regression: when the admit_batch cap leaves a free slot unused,
+    a forced (rt-guarantee) admission takes that slot instead of evicting
+    a running request — preemption only happens for capacity reasons."""
+    eng = _engine(slots=4, scheduler="qos", rt_window=2, admit_batch=1)
+    eng.submit(_req(1000, qos="be", max_new=12))  # 2 running be,
+    eng.step()                                    # 2 slots stay free
+    eng.submit(_req(1001, qos="be", max_new=12))
+    eng.step()
+    assert eng.slots.count(None) == 2
+    # two rt requests age past the window; admit_batch=1 lets only one in
+    # per iteration, so the second rides the forced path while a free
+    # slot still exists
+    eng.submit(_req(0, qos="rt", max_new=8))
+    eng.submit(_req(1, qos="rt", max_new=8))
+    for _ in range(eng.ec.rt_window + 2):
+        eng.step()
+    rts = [eng._requests[0], eng._requests[1]]
+    assert all(r.state != RequestState.WAITING for r in rts)
+    # free slots existed throughout — nobody was evicted
+    assert all(r.preemptions == 0 for r in eng._requests.values())
+
+
+def test_retain_finished_bounds_request_registry():
+    """A long-running serve loop with ec.retain_finished keeps only the
+    N most recently finished handles; live requests are never pruned."""
+    eng = _engine(slots=2, scheduler="fcfs", retain_finished=3)
+    for k in range(12):
+        eng.submit(_req(k, max_new=2))
+    done = eng.run_until_drained()
+    assert len(done) == 12
+    finished_kept = [r for r in eng._requests.values() if r.finished]
+    assert len(finished_kept) == 3                # oldest 9 pruned
+    assert sorted(r.rid for r in finished_kept) == [9, 10, 11]
+    with pytest.raises(KeyError):
+        eng.request(0)                            # pruned handle
+    # default (None) keeps everything — batch jobs read results after
+    # draining
+    eng2 = _engine(slots=2, scheduler="fcfs")
+    for k in range(6):
+        eng2.submit(_req(k, max_new=2))
+    eng2.run_until_drained()
+    assert len(eng2._requests) == 6
+
+
+def test_retain_finished_survives_rid_reuse():
+    """Regression: reusing a finished rid must not leave a stale entry in
+    the finished order — a later prune would otherwise pop it against the
+    NEW occupant and delete the most recently finished request."""
+    eng = _engine(slots=2, scheduler="fcfs", retain_finished=3)
+    for k in range(3):
+        eng.submit(_req(k, max_new=2))
+    eng.run_until_drained()                       # finished order: 0,1,2
+    eng.submit(_req(0, max_new=2))                # rid 0 reused
+    eng.run_until_drained()                       # finishes again
+    assert eng.request(0).finished                # newest rid-0 retained
+    kept = sorted(r.rid for r in eng._requests.values() if r.finished)
+    assert kept == [0, 1, 2]
+    # push two more finishes: the oldest entries (1, 2) prune first
+    eng.submit(_req(7, max_new=2))
+    eng.submit(_req(8, max_new=2))
+    eng.run_until_drained()
+    kept = sorted(r.rid for r in eng._requests.values() if r.finished)
+    assert kept == [0, 7, 8]
+    with pytest.raises(KeyError):
+        eng.request(1)
+
+
+# ---------------------------------------------------------------------------
+# Property: rt admission latency is bounded under full be contention
+# ---------------------------------------------------------------------------
+
+
+def _drive_rt_latency(rt_window, arrivals, seed):
+    """Saturate slots with be traffic, inject rt requests per ``arrivals``
+    (gaps in iterations), and record each rt request's admission wait and
+    its rt-lane queue position at submission. Returns [(wait, position)].
+    """
+    rng = np.random.default_rng(seed)
+    eng = _engine(slots=2, scheduler="qos", rt_window=rt_window)
+    _saturate_be(eng, max_new=200)
+    # endless be pressure: the queue always holds more be work
+    for k in range(4):
+        eng.submit(_req(3000 + k, qos="be", max_new=200))
+    pending = list(arrivals)
+    submitted = {}                    # rid -> (submit_iter, lane_position)
+    waits = []
+    rid = 0
+    gap = pending.pop(0) if pending else 0
+    for it in range(400):
+        if gap == 0 and (pending or rid == 0):
+            lane = [r for r in eng.queue if r.qos == "rt"]
+            r = _req(rid, qos="rt", max_new=int(rng.integers(2, 5)))
+            eng.submit(r)
+            submitted[rid] = (it, len(lane))
+            rid += 1
+            gap = pending.pop(0) if pending else None
+        elif gap is not None and gap > 0:
+            gap -= 1
+        eng.step()
+        for h, (t0, pos) in list(submitted.items()):
+            req = eng._requests[h]
+            if req.state != RequestState.WAITING:
+                waits.append((it - t0 + 1, pos))
+                del submitted[h]
+        if gap is None and not submitted:
+            break
+    assert not submitted, "an rt request was never admitted"
+    return waits
+
+
+def _check_rt_bound(rt_window, arrivals, seed):
+    for wait, pos in _drive_rt_latency(rt_window, arrivals, seed):
+        # the rt lane head is forced in within rt_window iterations; each
+        # queued-behind rt request waits at most one forced admission more
+        # per position (plus the submission-iteration offset)
+        bound = rt_window + 1 + pos
+        assert wait <= bound, (
+            f"rt admission took {wait} iters (lane position {pos}, "
+            f"window {rt_window})")
+
+
+def test_rt_admission_latency_bounded_seeded():
+    """Always-on seeded fallback for the Hypothesis property below."""
+    rng = np.random.default_rng(0)
+    for case in range(25):
+        rt_window = int(rng.integers(1, 5))
+        arrivals = [int(g) for g in rng.integers(0, 4,
+                                                 size=rng.integers(1, 6))]
+        _check_rt_bound(rt_window, arrivals, seed=case)
+
+
+def test_rt_admission_latency_bounded_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(rt_window=st.integers(1, 6),
+           arrivals=st.lists(st.integers(0, 5), min_size=1, max_size=8),
+           seed=st.integers(0, 2**16))
+    def run(rt_window, arrivals, seed):
+        _check_rt_bound(rt_window, arrivals, seed)
+
+    run()

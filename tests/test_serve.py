@@ -57,3 +57,21 @@ def test_int8_path_selected_for_dense(engine_setup):
     cfg, arch, params = engine_setup
     eng = ServeEngine(arch, params, EngineConfig(slots=1, max_len=32))
     assert eng.qparams is not None  # serve_quant dense → paper path active
+
+
+def test_legacy_engine_is_an_llm_engine_shim(engine_setup):
+    """ServeEngine is a deprecation shim over the new front-end: it IS an
+    LLMEngine pinned to the slot backend with the bounded scheduler, and
+    finished requests carry the new lifecycle fields."""
+    from repro.serve import LLMEngine
+    from repro.serve.request import FinishReason, RequestState
+
+    cfg, arch, params = engine_setup
+    eng = ServeEngine(arch, params, EngineConfig(slots=1, max_len=48))
+    assert isinstance(eng, LLMEngine)
+    assert eng.ec.backend == "slot" and eng.ec.scheduler == "bounded"
+    eng.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=3))
+    (done,) = eng.run_until_drained()
+    assert done.state == RequestState.DONE
+    assert done.finish_reason == FinishReason.LENGTH

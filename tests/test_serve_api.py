@@ -1,0 +1,305 @@
+"""LLMEngine front-end: add_request/stream/abort lifecycle, stop-sequence
+/ EOS / length / abort finish reasons, immediate block recycling on abort
+(full + ring arenas, allocator-invariant regression under interleaved
+add/abort/preempt), and the legacy-shim-vs-LLMEngine token-identity
+matrix across {dense, paged} × {float, int8}."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro import configs
+from repro.models import registry, schema as schema_lib
+from repro.serve import (
+    BatchedServeEngine, EngineConfig, LLMEngine, PagedServeEngine, Request,
+)
+from repro.serve.request import FinishReason, RequestState
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = configs.smoke_config("phi3-mini-3.8b")
+    arch = registry.build(cfg)
+    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+    return cfg, arch, params
+
+
+@pytest.fixture(scope="module")
+def sliding_setup():
+    cfg = configs.smoke_config("gemma3-4b")      # LLLLLG, window 16
+    arch = registry.build(cfg)
+    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+    return cfg, arch, params
+
+
+def _prompt(cfg, n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle + finish reasons
+# ---------------------------------------------------------------------------
+
+
+def test_add_request_step_and_states(engine_setup):
+    cfg, arch, params = engine_setup
+    eng = LLMEngine(arch, params, EngineConfig(slots=2, max_len=48))
+    h = eng.add_request(_prompt(cfg), max_new_tokens=4)
+    req = eng.request(h)
+    assert req.state == RequestState.WAITING
+    outs = eng.step()                             # admission + first token
+    assert [o.rid for o in outs] == [h]
+    assert outs[0].token == req.output[0]
+    assert req.state == RequestState.RUNNING
+    done = eng.run_until_drained()
+    assert [r.rid for r in done] == [h]
+    assert req.state == RequestState.DONE
+    assert req.finish_reason == FinishReason.LENGTH
+    assert len(req.output) == 4
+
+
+def test_eos_and_stop_sequences_finish_early(engine_setup):
+    """Host-side finish checks ride the per-iteration fetch: eos_token
+    ends the request at that token; a multi-token stop sequence ends it
+    when the output tail matches; finish reasons are recorded."""
+    cfg, arch, params = engine_setup
+    ec = EngineConfig(slots=1, max_len=48)
+    ref = LLMEngine(arch, params, ec)
+    ref.add_request(_prompt(cfg), max_new_tokens=8, rid=0)
+    (ref_done,) = ref.run_until_drained()
+    toks = list(ref_done.output)                  # greedy → deterministic
+    assert len(toks) == 8
+
+    eos = LLMEngine(arch, params, ec)
+    eos.add_request(_prompt(cfg), max_new_tokens=8, rid=0,
+                    eos_token=toks[2])
+    (eos_done,) = eos.run_until_drained()
+    assert eos_done.output == toks[:toks.index(toks[2]) + 1]
+    assert eos_done.finish_reason == FinishReason.EOS
+
+    stop = LLMEngine(arch, params, ec)
+    stop.add_request(_prompt(cfg), max_new_tokens=8, rid=0,
+                     stop_sequences=[toks[3:5], [cfg.vocab + 5]])
+    (stop_done,) = stop.run_until_drained()
+    assert stop_done.output == toks[:5]
+    assert stop_done.finish_reason == FinishReason.STOP
+
+    # eos landing at (or before) max_new_tokens still reports "eos", not
+    # "length" — the value-determined reason wins over the length bound
+    edge = LLMEngine(arch, params, ec)
+    edge.add_request(_prompt(cfg), max_new_tokens=8, rid=0,
+                     eos_token=toks[7])
+    (edge_done,) = edge.run_until_drained()
+    assert edge_done.finish_reason == FinishReason.EOS
+    assert edge_done.output == toks[:toks.index(toks[7]) + 1]
+
+
+def test_stop_on_admission_first_token(engine_setup):
+    """A request whose very first (prefill-sampled) token is EOS finishes
+    at admission, with its resources released."""
+    cfg, arch, params = engine_setup
+    ec = EngineConfig(slots=1, max_len=48)
+    ref = LLMEngine(arch, params, ec)
+    ref.add_request(_prompt(cfg), max_new_tokens=4, rid=0)
+    first = ref.run_until_drained()[0].output[0]
+
+    eng = LLMEngine(arch, params, EngineConfig(slots=1, max_len=48,
+                                               backend="paged", block_len=8))
+    eng.add_request(_prompt(cfg), max_new_tokens=4, rid=0, eos_token=first)
+    (done,) = eng.run_until_drained()
+    assert done.output == [first]
+    assert done.finish_reason == FinishReason.EOS
+    assert eng.alloc.free_blocks == eng.layout.usable_blocks
+
+
+def test_stream_yields_tokens_and_reason(engine_setup):
+    cfg, arch, params = engine_setup
+    eng = LLMEngine(arch, params, EngineConfig(slots=2, max_len=48))
+    h0 = eng.add_request(_prompt(cfg, seed=1), max_new_tokens=5)
+    h1 = eng.add_request(_prompt(cfg, seed=2), max_new_tokens=3)
+    seen = list(eng.stream(h0))
+    assert [o.token for o in seen] == eng.request(h0).output
+    assert seen[-1].finish_reason == FinishReason.LENGTH
+    assert all(o.rid == h0 for o in seen)
+    # h1 was served by the same step() calls; draining emits the rest
+    rest = list(eng.stream(h1))
+    assert [o.token for o in rest] == eng.request(h1).output
+    assert rest[-1].finish_reason == FinishReason.LENGTH
+    assert eng.idle
+
+
+def test_abort_waiting_and_running(engine_setup):
+    cfg, arch, params = engine_setup
+    eng = LLMEngine(arch, params, EngineConfig(slots=1, max_len=48))
+    h0 = eng.add_request(_prompt(cfg, seed=1), max_new_tokens=12)
+    h1 = eng.add_request(_prompt(cfg, seed=2), max_new_tokens=12)
+    eng.step()                                    # h0 running, h1 queued
+    assert eng.abort(h1)                          # waiting abort
+    assert eng.request(h1).state == RequestState.ABORTED
+    assert eng.request(h1).finish_reason == FinishReason.ABORT
+    eng.step()
+    assert eng.abort(h0)                          # running abort
+    assert eng.slots[0] is None
+    assert eng.idle                               # both gone immediately
+    assert not eng.abort(h0)                      # double abort is a no-op
+    # an aborted stream terminates with a token-less reason marker
+    outs = list(eng.stream(h0))
+    assert outs[-1].finish_reason == FinishReason.ABORT
+
+
+# ---------------------------------------------------------------------------
+# Abort returns paged blocks (full + ring) immediately; allocator
+# invariants under interleaved add/abort/preempt
+# ---------------------------------------------------------------------------
+
+
+def test_abort_returns_full_and_ring_blocks_immediately(sliding_setup):
+    cfg, arch, params = sliding_setup
+    eng = LLMEngine(arch, params,
+                    EngineConfig(slots=2, max_len=64, block_len=8,
+                                 backend="paged"))
+    assert eng.ring                               # both arenas in play
+    h0 = eng.add_request(_prompt(cfg, n=20, seed=1), max_new_tokens=30)
+    h1 = eng.add_request(_prompt(cfg, n=12, seed=2), max_new_tokens=30)
+    for _ in range(4):
+        eng.step()
+    assert all(r is not None for r in eng.slots)
+    full_free = eng.alloc.free_blocks
+    ring_free = eng.ring_alloc.free_blocks
+    assert eng.abort(h0)
+    # blocks are back the moment abort returns — not at the next drain
+    assert eng.alloc.free_blocks > full_free
+    assert eng.ring_alloc.free_blocks == ring_free + eng.layout.ring_blocks
+    assert eng.alloc.reserved_unallocated >= 0
+    (done,) = eng.run_until_drained()
+    assert done.rid == h1 and len(done.output) == 30
+    assert eng.alloc.free_blocks == eng.layout.usable_blocks
+    assert eng.ring_alloc.free_blocks == eng.layout.ring_num_blocks - 1
+
+
+def test_allocator_invariant_under_interleaved_add_abort_preempt(
+        sliding_setup):
+    """Regression: no block leak (full or ring arena) after a randomized
+    interleave of submissions, aborts of waiting/running/preempted
+    requests, forced-admission preemptions, and early stop finishes."""
+    cfg, arch, params = sliding_setup
+    eng = LLMEngine(arch, params,
+                    EngineConfig(slots=2, max_len=64, block_len=8,
+                                 backend="paged", scheduler="qos",
+                                 rt_window=2, admit_window=3))
+    rng = np.random.default_rng(7)
+    rid = 0
+    live = []
+    for it in range(120):
+        roll = rng.random()
+        if roll < 0.25 and rid < 24:
+            h = eng.add_request(
+                _prompt(cfg, n=int(rng.integers(3, 24)), seed=rid),
+                max_new_tokens=int(rng.integers(2, 24)),
+                qos="rt" if rng.random() < 0.4 else "be",
+                eos_token=(int(rng.integers(0, cfg.vocab))
+                           if rng.random() < 0.3 else None),
+                rid=rid)
+            live.append(h)
+            rid += 1
+        elif roll < 0.35 and live:
+            h = live[int(rng.integers(len(live)))]
+            eng.abort(h)                          # any state, incl. finished
+        eng.step()
+        live = [h for h in live if not eng.request(h).finished]
+        # mid-flight invariant: reservations never go negative and the
+        # two arenas never leak into each other
+        assert eng.alloc.reserved_unallocated >= 0
+        assert 0 <= eng.alloc.free_blocks <= eng.layout.usable_blocks
+    done = eng.run_until_drained()
+    assert eng.idle
+    # every request either finished or was aborted; all blocks recycled
+    assert eng.alloc.free_blocks == eng.layout.usable_blocks
+    assert eng.alloc.reserved_unallocated == 0
+    assert eng.ring_alloc.free_blocks == eng.layout.ring_num_blocks - 1
+    states = {r.state for r in eng._requests.values()}
+    assert states <= {RequestState.DONE, RequestState.ABORTED}
+    assert sum(r.preemptions for r in eng._requests.values()) > 0, (
+        "the interleave never exercised the preemption path")
+
+
+# ---------------------------------------------------------------------------
+# Legacy shims are token-identical to LLMEngine: {dense, paged} × {float,
+# int8}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("quant", ["float", "int8"])
+@pytest.mark.parametrize("backend", ["arena", "paged"])
+def test_legacy_shims_match_llm_engine(engine_setup, backend, quant):
+    cfg, arch, params = engine_setup
+    if quant == "float":
+        arch = registry.build(dataclasses.replace(cfg, serve_quant=False))
+    ec = EngineConfig(slots=2, max_len=48, block_len=8, backend=backend)
+
+    def work(eng):
+        for rid in range(3):
+            eng.submit(Request(
+                rid=rid, prompt=_prompt(cfg, n=4 + 3 * rid, seed=rid),
+                max_new_tokens=4))
+        return {r.rid: list(r.output) for r in eng.run_until_drained()}
+
+    new_out = work(LLMEngine(arch, params, ec))
+    shim_cls = {"arena": BatchedServeEngine, "paged": PagedServeEngine}
+    legacy = shim_cls[backend](arch, params, ec)
+    assert isinstance(legacy, LLMEngine)          # shims ARE the new engine
+    legacy_out = work(legacy)
+    assert legacy_out == new_out
+    assert len(new_out) == 3
+
+
+def test_qos_forced_admission_defers_when_same_iteration_admission_blocks(
+        engine_setup):
+    """Regression: the QoS forced path can fire in the same iteration an
+    admission already reserved pool blocks (the bounded scheduler never
+    could — it forces only when nothing was admitted). If evicting every
+    candidate still can't cover the forced request — the just-admitted
+    slot is never a victim — the engine must defer (no eviction, no
+    dispatch, request stays queued with its credit), not raise
+    `pool exhausted` out of step() with the request half-admitted."""
+    cfg, arch, params = engine_setup
+    ec = EngineConfig(slots=2, max_len=64, block_len=16, num_blocks=5,
+                      backend="paged", scheduler="qos", rt_window=2,
+                      be_grant_window=1, min_bucket=8, admit_batch=2)
+    eng = LLMEngine(arch, params, ec)
+
+    def p(n):
+        return np.arange(n, dtype=np.int32)
+
+    eng.add_request(p(8), max_new_tokens=24, qos="be", rid=0)   # 2 blocks
+    eng.add_request(p(8), max_new_tokens=24, qos="be", rid=10)  # 2 blocks
+    eng.step()                                   # both admitted: pool full
+    eng.add_request(p(8), max_new_tokens=24, qos="be", rid=2)   # waits
+    eng.add_request(p(4), max_new_tokens=4, qos="rt", rid=1)    # 1 block
+    for _ in range(3):
+        eng.step()                               # rt1 forced in (be victim)
+    assert eng.request(1).state == RequestState.RUNNING
+    # rt3 needs 3 blocks; the crash window is the iteration where rt1
+    # frees, the be-grant promotes rid 2 into that slot (reserving its
+    # blocks), and rt3's forced admission fires alongside it
+    eng.add_request(p(8), max_new_tokens=40, qos="rt", rid=3)
+    done = eng.run_until_drained(max_iters=400)
+    assert eng.idle
+    assert {r.rid for r in eng._requests.values()
+            if r.state == RequestState.DONE} == {0, 10, 2, 1, 3}
+    assert all(len(eng.request(r).output) == eng.request(r).max_new_tokens
+               for r in (0, 10, 2, 1, 3))
+    assert eng.alloc.free_blocks == eng.layout.usable_blocks
+    assert eng.alloc.reserved_unallocated == 0
+
+
+def test_registry_backend_capability_flags(engine_setup):
+    cfg, arch, params = engine_setup
+    assert arch.serve_backends == ("slot", "arena", "paged")
+    rec = registry.build(configs.smoke_config("recurrentgemma-9b"))
+    assert rec.serve_backends == ("slot", "arena")
+    with pytest.raises(ValueError, match="unknown serve backend"):
+        EngineConfig(backend="tpu")

@@ -236,6 +236,32 @@ def test_top_k_restricts_support(engine_setup):
     assert outs[0] == outs[1] == list(greedy_done.output)
 
 
+def test_stop_sequence_frees_arena_slot_early(engine_setup):
+    """A stop-sequence finish is not length-determined: the slot frees on
+    the fetch that detected it, and the next queued request takes the
+    slot the following iteration (same tokens as its solo run)."""
+    cfg, arch, params = engine_setup
+    ec = EngineConfig(slots=1, max_len=48)
+    solo = BatchedServeEngine(arch, params, ec)
+    solo.submit(Request(rid=0, prompt=np.arange(5, dtype=np.int32) + 2,
+                        max_new_tokens=10))
+    toks = list(solo.run_until_drained()[0].output)
+
+    eng = BatchedServeEngine(arch, params, ec)
+    r0 = Request(rid=0, prompt=np.arange(5, dtype=np.int32) + 2,
+                 max_new_tokens=10, stop_sequences=[toks[2:4]])
+    r1 = Request(rid=1, prompt=np.arange(4, dtype=np.int32) + 9,
+                 max_new_tokens=3)
+    eng.submit(r0)
+    eng.submit(r1)
+    done = {r.rid: r for r in eng.run_until_drained()}
+    stop_at = next(i for i in range(2, len(toks))
+                   if toks[i - 1:i + 1] == toks[2:4])
+    assert done[0].output == toks[:stop_at + 1]
+    assert done[0].finish_reason == "stop"
+    assert len(done[1].output) == 3
+
+
 def test_metrics_empty_and_partial():
     assert metrics([]) == {"requests": 0, "ttft_avg_s": 0.0,
                            "latency_avg_s": 0.0, "tokens_per_s": 0.0}
