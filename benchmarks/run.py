@@ -52,14 +52,39 @@ SERVE_MODULES = [
 
 def smoke() -> None:
     """Import-check every benchmark module without running it, plus the
-    serve package modules (and their public entry points)."""
+    serve package modules (and their public entry points) and the
+    prefix-caching allocator surface."""
     failures = 0
+    try:
+        from repro.models import cache as _cache
+        alloc = _cache.BlockAllocator(
+            _cache.PagedLayout(block_len=4, num_blocks=4, max_len=16),
+            prefix_cache=True)
+        keys = _cache.prefix_chain_keys(list(range(8)), 4)
+        for attr in ("lookup", "register", "ensure_writable", "incref",
+                     "decref", "cached_blocks", "live_blocks",
+                     "reclaimable_blocks", "hit_blocks", "cow_copies",
+                     "evictions"):
+            if not hasattr(alloc, attr):
+                raise AttributeError(f"BlockAllocator.{attr} missing")
+        if len(keys) != 2 or not callable(_cache.gather_prefix_kv):
+            raise AttributeError("prefix-cache key/gather surface broken")
+        print("repro.models.cache.prefix,0.0,import_ok")
+    except Exception as e:  # noqa: BLE001
+        failures += 1
+        print(f"prefix_cache_IMPORT_ERROR,0.0,{type(e).__name__}:{e}")
+        traceback.print_exc(file=sys.stderr, limit=3)
     for mod in SERVE_MODULES:
         try:
             m = importlib.import_module(mod)
             if mod == "repro.serve.api" and not callable(
                     getattr(m, "LLMEngine", None)):
                 raise AttributeError("repro.serve.api.LLMEngine missing")
+            if mod == "repro.serve.config":
+                for field in ("prefix_cache", "be_token_share"):
+                    if not hasattr(m.EngineConfig(), field):
+                        raise AttributeError(
+                            f"EngineConfig.{field} missing")
             if mod == "repro.serve.engine":
                 for legacy in ("ServeEngine", "BatchedServeEngine",
                                "PagedServeEngine"):

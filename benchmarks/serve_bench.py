@@ -26,6 +26,15 @@ Claims validated:
     *same pool byte budget* the int8 pool admits ≥ 1.8x the concurrent
     requests, token-identical to the dense int8 reference throughout.
 
+  * **prefix caching** (ISSUE 6): on a workload where ≥ 50% of requests
+    share a 256-token system prompt, content-addressed block reuse
+    (refcounted, copy-on-write, LRU) prefills only the uncached suffix —
+    mean TTFT drops ≥ 1.5x while outputs stay identical to the
+    non-caching engine up to certified float near-ties (the
+    suffix-resume attention sums in a different order than the wide full
+    prefill, so an argmax may flip only where the reference top-2 logits
+    are within rounding distance);
+
   * **QoS traffic classes** (ISSUE 5 scheduler/engine split): with every
     slot saturated by best-effort (``"be"``) traffic, the two-class QoS
     scheduler holds latency-critical (``"rt"``) p99 TTFT ≥ 4x below FCFS
@@ -35,8 +44,9 @@ Claims validated:
 Emits ``BENCH_serve.json`` with the batched/paged throughputs, the
 paged-vs-dense concurrency comparison, the sliding-window (ring-block)
 capacity entry, the ``paged.int8_blocks`` entry (bytes/token, capacity
-ratio, tokens/s) and the ``qos_classes`` rt-vs-be TTFT contrast so future
-PRs can track all five.
+ratio, tokens/s), the ``paged.prefix_cache`` entry (TTFT reduction, hit
+rate, prefill tokens skipped) and the ``qos_classes`` rt-vs-be TTFT
+contrast so future PRs can track all six.
 
 The three engine runs drive the deprecated shim classes on purpose — they
 are thin wrappers over ``repro.serve.LLMEngine`` and this keeps the
@@ -103,6 +113,153 @@ def _drive(engine, requests):
     assert engine.idle, "engine failed to drain within 10k iterations"
     wall = time.perf_counter() - t0
     return done, wall, np.asarray(iter_s)
+
+
+PFX_SLOTS = 4
+PFX_REQUESTS = 24
+PFX_SHARED = 18          # 75% of the workload shares the system prompt
+PFX_SYS_BLOCKS = 32      # 256-token shared prefix at block_len 8
+PFX_MAX_LEN = 320        # prompt (≤267) + decode under the pool cap
+PFX_NEW = 1              # TTFT gate: the first token comes out of the
+#                          prefill dispatch itself, so decode iterations
+#                          (identical cost in both settings — the decode
+#                          path is pinned token-identical by the test
+#                          matrix) would only dilute the contrast
+
+
+def _prefix_workload(cfg):
+    """Deterministic shared-system-prompt workload: (sys_prompt, prompts).
+    First ``PFX_SHARED`` prompts are sys_prompt + a random 3..11-token
+    tail, the rest are unshared short prompts."""
+    rng = np.random.default_rng(6)
+    sys_prompt = rng.integers(
+        0, cfg.vocab, size=PFX_SYS_BLOCKS * BLOCK_LEN).astype(np.int32)
+    prompts = {}
+    for rid in range(PFX_REQUESTS):
+        tail = rng.integers(0, cfg.vocab,
+                            size=int(rng.integers(3, 12))).astype(np.int32)
+        prompts[rid] = (np.concatenate([sys_prompt, tail])
+                        if rid < PFX_SHARED else tail)
+    return sys_prompt, prompts
+
+
+def _prefix_cache_run(arch, params, cfg, prompts, sys_prompt, enabled):
+    """One warmed run of the shared-system-prompt workload with prefix
+    caching on or off; returns (outputs, mean TTFT, engine)."""
+    from repro.serve import EngineConfig, LLMEngine
+
+    ec = EngineConfig(slots=PFX_SLOTS, max_len=PFX_MAX_LEN,
+                      block_len=BLOCK_LEN, backend="paged",
+                      prefix_cache=enabled, admit_batch=2)
+    eng = LLMEngine(arch, params, ec)
+    # warm every prefill trace the timed phase can hit — shared prompts
+    # pad to width 264 or 272 (block-rounded decode extent) when cold,
+    # and to suffix width 8 / 16 over a 32-block hit when cached;
+    # unshared prompts bucket to 8 / 16 — so the timed section
+    # measures serving, not tracing. On the caching engine the first warm
+    # request also publishes the system prompt, which is exactly the
+    # steady state the claim is about. (The retrace assert below keeps
+    # this warm set honest if the workload shape ever changes.)
+    for i, tail_n in enumerate((4, 8, 5)):
+        eng.add_request(
+            np.concatenate([sys_prompt,
+                            np.arange(tail_n, dtype=np.int32)]),
+            max_new_tokens=2, rid=10_000 + i)
+    # plain warms must not share full blocks with each other (arange
+    # prefixes would: the 8-token warm's block is a prefix of the 9-token
+    # one, turning the second into an unintended cache hit with a suffix
+    # trace instead of the plain bucket-16 trace the timed phase needs)
+    wrng = np.random.default_rng(7)
+    for i, n in enumerate((4, 8, 9)):
+        eng.add_request(wrng.integers(0, cfg.vocab, size=n).astype(np.int32),
+                        max_new_tokens=2, rid=10_010 + i)
+    eng.run_until_drained()
+    traces_after_warm = eng.prefill_traces
+
+    for rid in range(PFX_REQUESTS):
+        eng.add_request(prompts[rid], max_new_tokens=PFX_NEW, rid=rid)
+    eng.run_until_drained()
+    assert eng.prefill_traces == traces_after_warm, (
+        "timed phase retraced a prefill shape the warm set missed: "
+        f"{traces_after_warm} -> {eng.prefill_traces}")
+    reqs = [eng.request(r) for r in range(PFX_REQUESTS)]
+    assert all(len(r.output) == PFX_NEW for r in reqs)
+    ttft = np.asarray([r.first_token_at - r.submitted_at for r in reqs])
+    return {r.rid: list(r.output) for r in reqs}, float(ttft.mean()), eng
+
+
+def _certify_near_tie(arch, params, prompt, out_off, out_on, tol=2e-2):
+    """Certify a cache-on/off divergence as a floating-point near-tie.
+
+    The suffix-resume prefill attends over (gathered prefix K/V + small
+    suffix bucket) where the full prefill runs one wide masked attention —
+    same math, different reduction order, so argmax can flip when the
+    top-2 logits are within rounding distance. At the *first* differing
+    position (everything after it legitimately diverges via feedback),
+    both chosen tokens must sit within ``tol`` of each other and of the
+    reference top logit, computed by the plain (non-paged) forward."""
+    import jax.numpy as jnp
+
+    k = next(i for i in range(min(len(out_off), len(out_on)))
+             if out_off[i] != out_on[i])
+    ids = np.concatenate([prompt, out_off[:k]]).astype(np.int32)
+    logits = np.asarray(
+        arch.forward(params, jnp.asarray(ids)[None])[0, -1], np.float64)
+    a, b = logits[out_off[k]], logits[out_on[k]]
+    top = float(logits.max())
+    assert abs(a - b) <= tol and top - min(a, b) <= tol, (
+        f"cache-on/off divergence is NOT a near-tie: first flip at +{k}, "
+        f"off tok logit {a:.6f}, on tok logit {b:.6f}, top {top:.6f}")
+    return k
+
+
+def _prefix_cache_contrast(arch, params, cfg):
+    """Cache-on vs cache-off on the shared-prefix workload.
+
+    Token contract: outputs are identical except for certified
+    floating-point near-ties — any request whose greedy tokens differ
+    must flip at a position where the reference top-2 logits are within
+    rounding distance (the suffix-resume prefill sums attention in a
+    different order than the wide full prefill). Mean TTFT uses the best
+    of three timed runs per setting (tokens are deterministic; wall clock
+    is not)."""
+    sys_prompt, prompts = _prefix_workload(cfg)
+    outs, ttfts, engs = {}, {}, {}
+    for enabled in (False, True):
+        trials = [_prefix_cache_run(arch, params, cfg, prompts, sys_prompt,
+                                    enabled) for _ in range(3)]
+        assert all(t[0] == trials[0][0] for t in trials)
+        outs[enabled] = trials[0][0]
+        ttfts[enabled] = min(t[1] for t in trials)
+        engs[enabled] = trials[0][2]
+    flips = []
+    for rid in range(PFX_REQUESTS):
+        if outs[True][rid] != outs[False][rid]:
+            k = _certify_near_tie(arch, params, prompts[rid],
+                                  outs[False][rid], outs[True][rid])
+            flips.append({"rid": rid, "position": k})
+    assert len(flips) <= PFX_REQUESTS // 4, (
+        f"too many near-tie flips ({len(flips)}/{PFX_REQUESTS}) — "
+        "that is a numerics bug, not rounding noise")
+    m = engs[True].metrics()
+    m_off = engs[False].metrics()
+    assert "prefix_cache_hit_blocks" not in m_off
+    return {
+        "arch": cfg.name,
+        "block_len": BLOCK_LEN,
+        "requests": PFX_REQUESTS,
+        "shared_fraction": PFX_SHARED / PFX_REQUESTS,
+        "shared_prefix_tokens": PFX_SYS_BLOCKS * BLOCK_LEN,
+        "ttft_avg_ms_off": ttfts[False] * 1e3,
+        "ttft_avg_ms_on": ttfts[True] * 1e3,
+        "ttft_reduction": ttfts[False] / ttfts[True],
+        "hit_rate": m["prefix_cache_hit_rate"],
+        "prefill_tokens_skipped": m["prefill_tokens_skipped"],
+        "prefill_skip_rate": m["prefill_skip_rate"],
+        "evictions": m["prefix_cache_evictions"],
+        "near_tie_flips": len(flips),
+        "token_identity": "exact or certified near-tie (float)",
+    }
 
 
 QOS_SLOTS = 4
@@ -389,6 +546,28 @@ def main(csv: bool = True):
         f"({i8_ratio:.2f}x, claim: >=1.8x)|identical=yes",
     ))
 
+    # prefix caching: shared-system-prompt workload, cache-on vs
+    # cache-off, on the float arch (int8 resumes attend over dequantized
+    # prefix K/V, a larger documented numerics caveat pinned by its own
+    # tests) — admission prefills only the uncached suffix, and TTFT is
+    # prefill-bound so skipping the shared blocks shows up directly.
+    # Outputs are identical up to certified float near-ties (the
+    # suffix-resume attention sums in a different order than the wide
+    # full prefill).
+    prefix_cache = _prefix_cache_contrast(arch_f, params, cfg)
+    rows.append((
+        "serve_paged_prefix_cache", 0.0,
+        f"shared={prefix_cache['shared_fraction']:.0%} of "
+        f"{PFX_REQUESTS} reqs x "
+        f"{prefix_cache['shared_prefix_tokens']}-tok prefix|"
+        f"ttft_ms={prefix_cache['ttft_avg_ms_off']:.1f}->"
+        f"{prefix_cache['ttft_avg_ms_on']:.1f} "
+        f"({prefix_cache['ttft_reduction']:.2f}x lower, claim: >=1.5x)|"
+        f"hit_rate={prefix_cache['hit_rate']:.2f}|"
+        f"skipped={prefix_cache['prefill_tokens_skipped']:.0f} tok|"
+        f"near_tie_flips={prefix_cache['near_tie_flips']}",
+    ))
+
     # QoS traffic classes: rt-vs-be TTFT under full be contention, FCFS
     # vs the two-class QoS scheduler (same workload, same backend)
     qos_classes = _qos_contention(arch, params, cfg)
@@ -427,6 +606,7 @@ def main(csv: bool = True):
                 "capacity_ratio": capacity_ratio,
                 "sliding_window": sliding,
                 "int8_blocks": int8_blocks,
+                "prefix_cache": prefix_cache,
             },
             "qos_classes": qos_classes,
         }, f, indent=2)
@@ -449,6 +629,11 @@ def main(csv: bool = True):
     assert i8_ratio >= 1.8, (
         f"int8 block pool admitted only {i8_ratio:.2f}x the float-block "
         f"slots at an equal pool byte budget")
+    assert prefix_cache["ttft_reduction"] >= 1.5, (
+        f"prefix caching lowered mean TTFT only "
+        f"{prefix_cache['ttft_reduction']:.2f}x on a "
+        f"{prefix_cache['shared_fraction']:.0%}-shared workload "
+        f"(claim: >=1.5x)")
     assert qos_classes["rt_p99_improvement"] >= 4.0, (
         f"QoS scheduler lowered rt p99 TTFT only "
         f"{qos_classes['rt_p99_improvement']:.2f}x vs FCFS (claim: >=4x)")

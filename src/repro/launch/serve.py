@@ -64,6 +64,15 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 enables on-device sampling "
                          "(vectorized backends)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-addressed KV block reuse across "
+                         "requests (paged backend, full-history layouts)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared system-prompt tokens "
+                         "to every request (shows prefix-cache hits)")
+    ap.add_argument("--be-token-share", type=float, default=None,
+                    help="qos scheduler: cap the best-effort share of "
+                         "decode tokens while rt traffic waits (0, 1)")
     args = ap.parse_args()
 
     import jax
@@ -89,18 +98,30 @@ def main():
                       temperature=max(args.temperature, 1e-6),
                       block_len=args.block_len, num_blocks=args.num_blocks,
                       backend=backend, scheduler=args.scheduler,
-                      rt_window=args.rt_window)
+                      rt_window=args.rt_window,
+                      prefix_cache=args.prefix_cache,
+                      be_token_share=args.be_token_share)
     engine = LLMEngine(arch, params, ec)
     rng = np.random.default_rng(0)
+    shared = rng.integers(0, model.vocab,
+                          size=args.shared_prefix).astype(np.int32)
     handles = []
     for rid in range(args.requests):
+        prompt = rng.integers(0, model.vocab,
+                              size=rng.integers(4, 32)).astype(np.int32)
         handles.append(engine.add_request(
-            rng.integers(0, model.vocab,
-                         size=rng.integers(4, 32)).astype(np.int32),
+            np.concatenate([shared, prompt]),
             max_new_tokens=args.max_new,
             qos="rt" if rng.random() < args.rt_fraction else "be"))
     done = engine.run_until_drained()
     print(metrics(done))
+    if args.prefix_cache:
+        em = engine.metrics()
+        print("prefix_cache: " + " ".join(
+            f"{k.removeprefix('prefix_cache_')}="
+            f"{em[k]:.3f}" if isinstance(em[k], float) else
+            f"{k.removeprefix('prefix_cache_')}={em[k]}"
+            for k in sorted(em) if "prefix" in k or "prefill" in k))
     by_class = {}
     for h in handles:
         r = engine.request(h)

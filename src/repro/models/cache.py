@@ -20,10 +20,13 @@ family's cache as a fixed-shape ``[slots, ...]`` arena:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def batch_axis(leaf: jax.Array) -> int:
@@ -177,31 +180,124 @@ class PagedLayout:
         return ring_blocks_for(self.window, self.block_len)
 
 
+# ---------------------------------------------------------------------------
+# Content-addressed prefix keys: each *full* block of a token sequence gets
+# a chained digest key(b) = sha256(key(b-1) ++ tokens[b·blk : (b+1)·blk]),
+# so a key identifies the block's content AND its entire token prefix —
+# equal keys imply equal (position, history), which is exactly the
+# condition under which two requests may share the block's K/V.
+# ---------------------------------------------------------------------------
+
+
+def chain_seed(block_len: int, salt: bytes = b"") -> bytes:
+    """Root digest of the per-block-size hash chain (block size is part of
+    the chain identity: the same tokens split differently share nothing).
+    ``salt`` folds per-request conditioning into the chain — the encdec
+    family salts with the encoder input digest, since decoder K/V depends
+    on the cross-attended encoder states, not just the token prefix."""
+    return hashlib.sha256(
+        f"repro-prefix/{block_len}/".encode() + salt).digest()
+
+
+def chain_key(prev: bytes, block_tokens) -> bytes:
+    """Extend a chain digest by one full block of token ids."""
+    return hashlib.sha256(
+        prev + np.asarray(block_tokens, np.int32).tobytes()).digest()
+
+
+def prefix_chain_keys(tokens, block_len: int, limit: Optional[int] = None,
+                      salt: bytes = b"") -> List[bytes]:
+    """Chained content keys for every *full* block of ``tokens`` (partial
+    tail blocks are mutable and never shareable). ``limit`` caps the number
+    of keys — admission caps at ``(n-1)//block_len`` so the prefill suffix
+    always keeps at least one real token (the last-position logits must be
+    computed, not looked up)."""
+    toks = np.asarray(tokens, np.int32)
+    n_full = toks.size // block_len
+    if limit is not None:
+        n_full = min(n_full, limit)
+    keys: List[bytes] = []
+    d = chain_seed(block_len, salt)
+    for b in range(n_full):
+        d = chain_key(d, toks[b * block_len:(b + 1) * block_len])
+        keys.append(d)
+    return keys
+
+
 class BlockAllocator:
-    """Host-side free-list allocator with per-request worst-case reservation.
+    """Host-side refcounted block allocator with per-request worst-case
+    reservation and (optionally) a content-addressed prefix cache.
 
     Admission reserves a request's *maximum* block extent up front
     (``blocks_for(prompt + max_new_tokens)``), then draws physical blocks
     lazily (``grow``) as the sequence crosses block boundaries. Because the
-    free pool always covers every outstanding reservation, a growing
+    reclaimable pool always covers every outstanding reservation, a growing
     request can never hit exhaustion mid-decode — exhaustion surfaces only
     at admission time, where the engine defers (or preempts) instead.
 
+    Every allocated block carries a refcount. With ``prefix_cache=False``
+    (the default) refcounts are always 1 and the allocator behaves exactly
+    like the legacy free-list version. With ``prefix_cache=True``:
+
+      * ``register`` publishes a full, immutable block under its chained
+        content key (see ``prefix_chain_keys``); ``lookup`` finds the
+        longest cached prefix of a key chain.
+      * ``admit`` takes the chain keys and maps hits straight into the new
+        request's block list (incref — shared physical blocks, one copy).
+      * ``release`` decrefs; a block whose refcount reaches 0 moves to an
+        LRU of *cached* blocks (still holding reusable K/V) if it is
+        published, else back to the free list.
+      * Cached blocks count as reclaimable capacity: when the free list
+        runs dry, the LRU-oldest cached block is evicted (its key
+        retracted) and reused.
+      * ``ensure_writable`` is the copy-on-write guard: writing into a
+        shared block first detaches a private copy (the caller copies the
+        device-side pool contents); writing into a sole-owned published
+        block retracts its key and writes in place.
+
+    Pool partition invariant (every step): ``{live (ref>0)} ⊎ {cached
+    (ref=0, published, LRU)} ⊎ {free}`` covers exactly the non-trash pool.
+
     Invariants enforced (and unit-tested): no double-allocation, no
-    double-free, frees only of owned blocks, reservations never exceeded,
-    reserved blocks never oversubscribed.
+    double-free/decref, no block freed while referenced, reservations
+    never exceeded, reserved blocks never oversubscribed.
     """
 
-    def __init__(self, layout: PagedLayout):
+    def __init__(self, layout: PagedLayout, *, prefix_cache: bool = False):
         self.layout = layout
+        self.prefix_cache = bool(prefix_cache)
         self._free: List[int] = list(
             range(layout.num_blocks - 1, TRASH_BLOCK, -1))  # pop() → low ids
         self._owned: Dict[int, List[int]] = {}    # rid → allocated block ids
         self._reserved: Dict[int, int] = {}       # rid → max blocks reserved
+        self._ref: Dict[int, int] = {}            # block → refcount (> 0)
+        self._hash_of: Dict[int, bytes] = {}      # published block → key
+        self._block_of: Dict[bytes, int] = {}     # key → published block
+        self._lru: "OrderedDict[int, None]" = OrderedDict()  # ref-0 cached
+        # observability (LLMEngine.metrics / bench)
+        self.hit_blocks = 0
+        self.miss_blocks = 0
+        self.evictions = 0
+        self.cow_copies = 0
 
     @property
     def free_blocks(self) -> int:
         return len(self._free)
+
+    @property
+    def cached_blocks(self) -> int:
+        """Unreferenced blocks still holding published (reusable) K/V."""
+        return len(self._lru)
+
+    @property
+    def live_blocks(self) -> int:
+        """Blocks referenced by at least one admitted request."""
+        return len(self._ref)
+
+    @property
+    def reclaimable_blocks(self) -> int:
+        """Free + cached: what a fresh draw may consume."""
+        return len(self._free) + len(self._lru)
 
     @property
     def reserved_unallocated(self) -> int:
@@ -210,38 +306,85 @@ class BlockAllocator:
 
     @property
     def available_blocks(self) -> int:
-        """Blocks admittable *without* touching outstanding reservations."""
-        return len(self._free) - self.reserved_unallocated
+        """Blocks admittable *without* touching outstanding reservations
+        (cached-but-unreferenced blocks count — they are evictable)."""
+        return self.reclaimable_blocks - self.reserved_unallocated
 
-    def can_admit(self, max_blocks: int) -> bool:
-        return max_blocks <= self.available_blocks
+    def ref_of(self, block: int) -> int:
+        return self._ref.get(block, 0)
+
+    def is_cached(self, block: int) -> bool:
+        return block in self._lru
+
+    # -- content-addressed lookup ------------------------------------------
+
+    def lookup(self, keys: Sequence[bytes]) -> List[int]:
+        """Longest-prefix cache hit: published block ids for the leading
+        run of ``keys`` present in the index (no state change)."""
+        out: List[int] = []
+        for k in keys:
+            b = self._block_of.get(k)
+            if b is None:
+                break
+            out.append(b)
+        return out
+
+    def _live_hits(self, keys: Sequence[bytes]) -> int:
+        """Hits that cost no reclaimable capacity (still-referenced blocks;
+        LRU hits consume a reclaimable block just like a fresh draw)."""
+        return sum(1 for b in self.lookup(keys) if b in self._ref)
+
+    # -- admission ---------------------------------------------------------
+
+    def can_admit(self, max_blocks: int, keys: Sequence[bytes] = ()) -> bool:
+        return max_blocks - self._live_hits(keys) <= self.available_blocks
 
     def can_admit_after_release(self, max_blocks: int, rid: int) -> bool:
         """Would ``max_blocks`` fit if ``rid`` (a preemption victim) were
-        released first? Releasing returns exactly the victim's reservation
-        (allocated blocks rejoin the free list, the rest stop being
-        reserved)."""
-        return max_blocks <= self.available_blocks + self._reserved.get(rid, 0)
+        released first? Deliberately ignores prefix hits: a hit on the
+        victim's own sole-owned block would be double-counted (once as a
+        live-hit discount, once in the release gain), so the check stays
+        pessimistic — ``admit`` itself still gets the hit discount."""
+        return max_blocks <= self.available_blocks + self.reservation(rid)
 
     def reservation(self, rid: int) -> int:
-        """``rid``'s outstanding reservation (0 if not admitted) — what a
-        release would return to the available pool."""
-        return self._reserved.get(rid, 0)
+        """What releasing ``rid`` returns to the available pool: its
+        unallocated reservation plus its sole-owned blocks (shared blocks
+        survive the release under their other references)."""
+        owned = self._owned.get(rid)
+        if owned is None:
+            return 0
+        sole = sum(1 for b in owned if self._ref[b] == 1)
+        return self._reserved[rid] - len(owned) + sole
 
-    def admit(self, rid: int, now_blocks: int, max_blocks: int) -> List[int]:
+    def admit(self, rid: int, now_blocks: int, max_blocks: int,
+              keys: Sequence[bytes] = ()) -> List[int]:
         """Reserve ``max_blocks`` for ``rid`` and allocate the first
-        ``now_blocks`` of them; returns the allocated block ids."""
+        ``now_blocks`` of them; the leading cached run of ``keys`` maps to
+        shared (incref'd) blocks, the rest are drawn fresh. Returns the
+        block ids (hits first, in chain order)."""
         if rid in self._reserved:
             raise ValueError(f"request {rid} already admitted")
         if now_blocks > max_blocks:
             raise ValueError(f"now_blocks {now_blocks} > max {max_blocks}")
-        if not self.can_admit(max_blocks):
+        hit = self.lookup(keys)[:now_blocks]
+        if not self.can_admit(max_blocks, keys[:len(hit)]):
             raise RuntimeError(
                 f"pool exhausted: need {max_blocks} blocks, "
                 f"{self.available_blocks} available")
+        blocks: List[int] = []
+        for b in hit:
+            self._incref(b)
+            blocks.append(b)
+        for _ in range(now_blocks - len(hit)):
+            b = self._draw_fresh()
+            self._ref[b] = 1
+            blocks.append(b)
         self._reserved[rid] = max_blocks
-        self._owned[rid] = [self._free.pop() for _ in range(now_blocks)]
-        return list(self._owned[rid])
+        self._owned[rid] = blocks
+        self.hit_blocks += len(hit)
+        self.miss_blocks += now_blocks - len(hit)
+        return list(blocks)
 
     def grow(self, rid: int) -> int:
         """Allocate one more block from ``rid``'s reservation."""
@@ -252,25 +395,117 @@ class BlockAllocator:
             raise RuntimeError(
                 f"request {rid} exceeded its reservation "
                 f"of {self._reserved[rid]} blocks")
-        blk = self._free.pop()  # reservation math guarantees non-empty
+        blk = self._draw_fresh()  # reservation math guarantees success
+        self._ref[blk] = 1
         owned.append(blk)
         return blk
 
     def release(self, rid: int) -> List[int]:
-        """Free all of ``rid``'s blocks and drop its reservation
-        (completion or preemption); returns the freed ids."""
+        """Decref all of ``rid``'s blocks and drop its reservation
+        (completion, preemption or abort); returns the block ids. Blocks
+        reaching refcount 0 rejoin the free list, or the cached LRU if
+        published (their K/V stays reusable until evicted)."""
         owned = self._owned.pop(rid, None)
         if owned is None:
             raise KeyError(f"request {rid} not admitted (double release?)")
         del self._reserved[rid]
         for blk in owned:
-            if blk in self._free or blk == TRASH_BLOCK:
-                raise RuntimeError(f"double free of block {blk}")
-            self._free.append(blk)
+            self.decref(blk)
         return owned
 
     def owned(self, rid: int) -> List[int]:
         return list(self._owned.get(rid, ()))
+
+    # -- refcounts ---------------------------------------------------------
+
+    def incref(self, block: int) -> None:
+        """Add one reference to a live block (fork hook: beam search /
+        speculative branches share a table entry; tests use it to force
+        the copy-on-write path)."""
+        if block not in self._ref:
+            raise KeyError(f"block {block} is not live (ref 0)")
+        self._ref[block] += 1
+
+    def decref(self, block: int) -> None:
+        """Drop one reference; at 0 the block returns to the cached LRU
+        (if published) or the free list."""
+        ref = self._ref.get(block)
+        if ref is None:
+            raise RuntimeError(
+                f"double free/decref of block {block} (refcount already 0)")
+        if ref > 1:
+            self._ref[block] = ref - 1
+            return
+        del self._ref[block]
+        if block in self._hash_of:
+            self._lru[block] = None          # newest-released → LRU tail
+        else:
+            self._free.append(block)
+
+    def _incref(self, block: int) -> None:
+        """Internal: incref a published block, reviving it from the cached
+        LRU when its refcount is 0."""
+        if block in self._ref:
+            self._ref[block] += 1
+        else:
+            self._lru.pop(block)             # KeyError = internal corruption
+            self._ref[block] = 1
+
+    def _draw_fresh(self) -> int:
+        """One writable block: the free list first, else evict the
+        LRU-oldest cached block (retracting its published key)."""
+        if self._free:
+            return self._free.pop()
+        if self._lru:
+            blk, _ = self._lru.popitem(last=False)
+            del self._block_of[self._hash_of.pop(blk)]
+            self.evictions += 1
+            return blk
+        raise RuntimeError(
+            "pool exhausted mid-draw: reservation accounting violated")
+
+    # -- publishing + copy-on-write ----------------------------------------
+
+    def register(self, rid: int, index: int, key: bytes) -> int:
+        """Publish ``rid``'s ``index``-th block under content ``key`` (the
+        block must be full and will never be written again while the key
+        stands). First-wins: if another block already holds this key, the
+        duplicate stays private. Returns the block now serving the key."""
+        if not self.prefix_cache:
+            raise RuntimeError("register() requires prefix_cache=True")
+        owned = self._owned.get(rid)
+        if owned is None:
+            raise KeyError(f"request {rid} not admitted")
+        block = owned[index]
+        if block in self._hash_of:           # already published (idempotent)
+            return block
+        if key in self._block_of:            # duplicate content stays private
+            return self._block_of[key]
+        self._hash_of[block] = key
+        self._block_of[key] = block
+        return block
+
+    def ensure_writable(self, rid: int, index: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write guard before writing into ``rid``'s ``index``-th
+        block. A shared block (ref > 1) is detached: ``rid`` gets a fresh
+        private block and the caller must copy the device-side pool
+        contents old → new (returned as ``(old, new)``). A sole-owned
+        published block has its key retracted and is written in place
+        (returns ``None``, like the plain private case)."""
+        owned = self._owned.get(rid)
+        if owned is None:
+            raise KeyError(f"request {rid} not admitted")
+        block = owned[index]
+        if self._ref[block] > 1:
+            new = self._draw_fresh()
+            self._ref[new] = 1
+            self._ref[block] -= 1            # still > 0: others hold it
+            owned[index] = new
+            self.cow_copies += 1
+            return block, new
+        if block in self._hash_of:
+            del self._block_of[self._hash_of.pop(block)]
+        return None
 
 
 def paged_insert_kv(pool: jax.Array, single: jax.Array,
@@ -361,6 +596,30 @@ def ring_prefill_write_kv(pool: jax.Array, single: jax.Array,
         tgt = jnp.where(live, ring_ids[r], TRASH_BLOCK)
         pool = pool.at[:, tgt].set(src[:, 0].astype(pool.dtype))
     return pool if stacked else pool[0]
+
+
+def gather_prefix_kv(pool: jax.Array, prefix_ids: jax.Array,
+                     scale: Optional[jax.Array] = None) -> jax.Array:
+    """Gather cached prefix blocks into a contiguous batch-1 KV leaf.
+
+    ``pool`` [N, Hkv, blk, D] (one layer's block pool), ``prefix_ids``
+    [j] int32 (static length j — the prefill retraces per distinct hit
+    count, bounded by the bucket set). Returns [1, Hkv, j·blk, D] in
+    chain order — the keys/values a suffix-resume prefill attends to at
+    ``q_offset = j·blk``.
+
+    Int8 pools pass ``scale`` ([N] per-block f32): blocks are dequantized
+    to their float *values* (the suffix queries attend real K/V, while the
+    cache-off reference attends the pre-quantization floats — this is why
+    the int8 prefix-cache contract is token-level, not bit-level).
+    """
+    g = pool[prefix_ids]                           # [j, Hkv, blk, D]
+    if pool.dtype == jnp.int8:
+        if scale is None:
+            raise ValueError("int8 prefix gather needs per-block scales")
+        g = dequantize_kv(g, scale[prefix_ids][:, None, None, None])
+    j, hkv, blk, d = g.shape
+    return g.transpose(1, 0, 2, 3).reshape(1, hkv, j * blk, d)
 
 
 def ring_table_row(ring_ids, first_bi: int):

@@ -144,14 +144,25 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, quantized=None):
     }
 
 
-def _dec_prefill_layer(xc, p, enc, cfg: ModelConfig, positions):
-    """One decoder-layer prefill application; returns (x, k, v, xk, xv).
-    Shared by ``prefill`` and ``paged_prefill`` so the dense and paged
-    write paths can never diverge in how layers are applied."""
+def _dec_prefill_layer(xc, p, enc, cfg: ModelConfig, positions, *,
+                       kv_prefix=None):
+    """One decoder-layer prefill application; returns (x, k, v, xk, xv —
+    the newly computed positions only). Shared by ``prefill`` and
+    ``paged_prefill`` so the dense and paged write paths can never diverge
+    in how layers are applied. ``kv_prefix`` resumes a prefix-cache hit:
+    self-attention runs [prefix ++ suffix] at ``q_offset`` (cross
+    attention is position-free — unchanged)."""
     h = nn.rms_norm(xc, p["ln1"])
     q, k, v = dense._project_qkv(h, p, cfg, positions)
-    o = attn.chunked_attention(q, k, v, causal=True,
-                               chunk_q=min(cfg.attn_chunk_q, xc.shape[1]))
+    ka, va, q_off = k, v, 0
+    if kv_prefix is not None:
+        kp, vp = kv_prefix
+        ka = jnp.concatenate([kp.astype(k.dtype), k], axis=2)
+        va = jnp.concatenate([vp.astype(v.dtype), v], axis=2)
+        q_off = kp.shape[2]
+    o = attn.chunked_attention(q, ka, va, causal=True,
+                               chunk_q=min(cfg.attn_chunk_q, xc.shape[1]),
+                               q_offset=q_off)
     xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
     xk, xv = _enc_kv(p, enc, cfg)
     xc = _cross_attn(xc, p, (xk, xv), cfg)
@@ -248,14 +259,24 @@ def paged_insert(cache, single, slot, block_ids, cfg: ModelConfig):
 
 
 def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
-                  *, ring_ids=None, true_len=None, embeds=None):
+                  *, ring_ids=None, true_len=None, embeds=None,
+                  prefix_ids=None, start=0):
     """Encode audio + ingest decoder prompt straight into the paged cache:
     self-attention K/V lands in pool blocks (bulk block writes, tail at
     block granularity), cross-attention K/V and the position counter land
     in ``slot``'s dense rows. No intermediate dense cache, no splice.
     Int8 pools requantize before the block write (same write-time
-    requantization as the dense reference)."""
-    from repro.models.cache import prefill_write_kv, quantize_kv
+    requantization as the dense reference).
+
+    Prefix-cache resume (``prefix_ids``/``start``): ``tokens`` carries
+    only the uncached decoder-prompt suffix; each layer gathers the cached
+    prefix K/V from its pool and the suffix attends [prefix ++ suffix] at
+    ``q_offset=start``. The encoder and the per-slot cross K/V always run
+    in full — they are per-request (``embeds``-dependent), not shareable
+    block residency."""
+    from repro.models.cache import (
+        gather_prefix_kv, prefill_write_kv, quantize_kv,
+    )
 
     if ring_ids is not None:
         raise ValueError(
@@ -266,15 +287,28 @@ def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
     enc = encode(params, embeds, cfg)
     x = nn.embed(tokens, params["embed"], cfg.compute_dtype)
     b, s = x.shape[:2]
-    positions = jnp.arange(s)
+    start = int(start)
+    positions = start + jnp.arange(s)
     block_ids = jnp.asarray(block_ids, jnp.int32)
+    if prefix_ids is not None:
+        prefix_ids = jnp.asarray(prefix_ids, jnp.int32)
     slot = jnp.asarray(slot, jnp.int32)
-    n = jnp.asarray(s if true_len is None else true_len, jnp.int32)
+    n = jnp.asarray(start + s if true_len is None else true_len, jnp.int32)
+    L = cfg.n_layers
+    # per-layer scale rows ride the scan for the int8 prefix gather (the
+    # zeros fallback is never indexed on float pools)
+    ks_in = cache.get("kscale", jnp.zeros((L, 1), jnp.float32))
+    vs_in = cache.get("vscale", jnp.zeros((L, 1), jnp.float32))
 
     def body(carry, slices):
         xc = carry
-        p, kc, vc = slices
-        xc, k, v, xk, xv = _dec_prefill_layer(xc, p, enc, cfg, positions)
+        p, kc, vc, ksc, vsc = slices
+        kv_prefix = None
+        if prefix_ids is not None:
+            kv_prefix = (gather_prefix_kv(kc, prefix_ids, scale=ksc),
+                         gather_prefix_kv(vc, prefix_ids, scale=vsc))
+        xc, k, v, xk, xv = _dec_prefill_layer(xc, p, enc, cfg, positions,
+                                              kv_prefix=kv_prefix)
         if kc.dtype == jnp.int8:   # int8 block pool (serve_quant layout)
             k = quantize_kv(k, attn.KV_SCALE)
             v = quantize_kv(v, attn.KV_SCALE)
@@ -284,10 +318,10 @@ def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
                     xv.astype(cfg.compute_dtype))
 
     x, (ks, vs, xks, xvs) = jax.lax.scan(
-        body, x, (params["dec_stack"], cache["k"], cache["v"]))
+        body, x, (params["dec_stack"], cache["k"], cache["v"], ks_in, vs_in))
     x = nn.rms_norm(x, params["final_norm"])
     lens = jnp.broadcast_to(n, (b,))
-    last = x[jnp.arange(b), lens - 1][:, None]
+    last = x[jnp.arange(b), lens - 1 - start][:, None]
     logits = nn.unembed(last, params["unembed"])
     out = dict(cache, k=ks, v=vs)
     out["xk"] = jax.lax.dynamic_update_slice_in_dim(

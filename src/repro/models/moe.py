@@ -407,16 +407,29 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
     return logits[:, 0], dict(cache, len=cache["len"] + 1)
 
 
-def _prefill_layer(xc, p, kind, cfg: ModelConfig, positions):
-    """One prefill layer application; returns (x, this layer's k, v).
-    Shared by ``prefill`` and ``paged_prefill`` so the two write paths can
-    never diverge in how layers are applied."""
+def _prefill_layer(xc, p, kind, cfg: ModelConfig, positions, *,
+                   kv_prefix=None):
+    """One prefill layer application; returns (x, this layer's k, v — the
+    newly computed positions only). Shared by ``prefill`` and
+    ``paged_prefill`` so the two write paths can never diverge in how
+    layers are applied. ``kv_prefix`` resumes a prefix-cache hit exactly
+    as in the dense family (suffix queries attend [prefix ++ suffix] at
+    ``q_offset``); note the expert router below still only sees the
+    *suffix* tokens — cached-prefix tokens are never re-routed, which is
+    the point, but it means ``_capacity`` is sized to the suffix length."""
     h = nn.rms_norm(xc, p["ln1"])
     q, k, v = dense._project_qkv(h, p, cfg, positions)
+    ka, va, q_off = k, v, 0
+    if kv_prefix is not None:
+        kp, vp = kv_prefix
+        ka = jnp.concatenate([kp.astype(k.dtype), k], axis=2)
+        va = jnp.concatenate([vp.astype(v.dtype), v], axis=2)
+        q_off = kp.shape[2]
     o = attn.chunked_attention(
-        q, k, v, causal=kind != "B",
+        q, ka, va, causal=kind != "B",
         window=cfg.local_window if kind == "L" else None,
-        chunk_q=min(cfg.attn_chunk_q, xc.shape[1]))
+        chunk_q=min(cfg.attn_chunk_q, xc.shape[1]),
+        q_offset=q_off)
     xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
     xc = xc + moe_mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
     return xc, k, v
@@ -478,16 +491,24 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
 
 
 def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
-                  *, ring_ids=None, true_len=None, embeds=None):
+                  *, ring_ids=None, true_len=None, embeds=None,
+                  prefix_ids=None, start=0):
     """MoE prefill straight into pool blocks: the dense family's shared
     scaffold with this family's expert-FFN layer (see ``dense.
     _paged_prefill_impl`` for the write conventions). ``tokens`` should be
     the exact prompt (no bucket padding): pad tokens would enlarge the
     routing capacity ``_capacity(cfg, s)`` and could change which real
-    tokens overflow — the K/V writes pad to block granularity instead."""
+    tokens overflow — the K/V writes pad to block granularity instead.
+
+    Prefix-cache resume (``prefix_ids``/``start``): cached-prefix tokens
+    are not re-run through the router (their K/V comes from the pool), so
+    the routing capacity is sized to the *suffix* — identical routing to
+    the cache-off engine requires the capacity not to bind, which the
+    token-identity matrix pins down."""
     return dense._paged_prefill_impl(
         params, tokens, cfg, cache, slot, block_ids, layer_fn=_prefill_layer,
-        ring_ids=ring_ids, true_len=true_len, embeds=embeds)
+        ring_ids=ring_ids, true_len=true_len, embeds=embeds,
+        prefix_ids=prefix_ids, start=start)
 
 
 # ---------------------------------------------------------------------------

@@ -531,7 +531,8 @@ def paged_insert(cache, single, slot, block_ids, cfg: ModelConfig):
 
 
 def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
-                  *, ring_ids=None, true_len=None, embeds=None):
+                  *, ring_ids=None, true_len=None, embeds=None,
+                  prefix_ids=None, start=0):
     """Prefill straight into pool blocks: forward pass + per-layer K/V
     writes into the paged ``cache`` — no intermediate dense bucket cache,
     no splice dispatch. Returns ``(last-position logits, updated cache)``.
@@ -543,39 +544,59 @@ def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
     ring table (``ring_ids=None`` keeps every layer full-history — the
     PR-2 layout). ``true_len`` enables right-padded admission buckets
     exactly as in ``prefill``; ``slot``'s position counter is set to the
-    true length.
+    true length. ``prefix_ids``/``start`` resume a prefix-cache hit:
+    ``tokens`` carries only the uncached suffix and the cached blocks are
+    attended, not recomputed (see ``_paged_prefill_impl``).
     """
     return _paged_prefill_impl(
         params, tokens, cfg, cache, slot, block_ids, layer_fn=_prefill_layer,
-        ring_ids=ring_ids, true_len=true_len, embeds=embeds)
+        ring_ids=ring_ids, true_len=true_len, embeds=embeds,
+        prefix_ids=prefix_ids, start=start)
 
 
 def _paged_prefill_impl(params, tokens, cfg: ModelConfig, cache, slot,
                         block_ids, *, layer_fn, ring_ids=None, true_len=None,
-                        embeds=None):
+                        embeds=None, prefix_ids=None, start=0):
     """Shared paged-prefill scaffold (block writes, scan over groups, tail
     layers, last-real-token logits, slot position update). ``layer_fn`` is
     the family's per-layer prefill application — the MoE family reuses
     this whole function with its expert-FFN layer.
+
+    **Prefix-cache resume** (``prefix_ids``/``start``): the first ``start``
+    positions of the sequence already live in pool blocks ``prefix_ids``
+    (``start = len(prefix_ids) · block_len``, static). ``tokens`` then
+    carries only the *suffix*; each layer gathers the cached prefix K/V
+    from the pool, the suffix queries attend [prefix ++ suffix] at
+    ``q_offset=start``, and only the suffix blocks (``block_ids``) are
+    written. ``true_len`` stays the *total* true length. Ring layers
+    cannot resume (the skipped prefix would leave their ring unwritten) —
+    the backend disables prefix caching for ring layouts.
 
     Int8 block pools requantize K/V (``cache.quantize_kv``, static
     ``attn.KV_SCALE``) before the block write — the same write-time
     requantization the dense serving reference applies, so pool contents
     are bit-identical to what the dense arena holds."""
     from repro.models.cache import (
-        prefill_write_kv, quantize_kv, ring_prefill_write_kv,
+        gather_prefix_kv, prefill_write_kv, quantize_kv,
+        ring_prefill_write_kv,
     )
 
+    if prefix_ids is not None and ring_ids is not None:
+        raise ValueError("prefix-cache resume is incompatible with ring "
+                         "(sliding-window) prefill")
     pattern, n_groups, tail = cfg.layer_layout()
     x = embeds if embeds is not None else nn.embed(
         tokens, params["embed"], cfg.compute_dtype)
     b, s = x.shape[:2]
-    positions = jnp.arange(s)
+    start = int(start)
+    positions = start + jnp.arange(s)
     block_ids = jnp.asarray(block_ids, jnp.int32)
     if ring_ids is not None:
         ring_ids = jnp.asarray(ring_ids, jnp.int32)
+    if prefix_ids is not None:
+        prefix_ids = jnp.asarray(prefix_ids, jnp.int32)
     slot = jnp.asarray(slot, jnp.int32)
-    n = jnp.asarray(s if true_len is None else true_len, jnp.int32)
+    n = jnp.asarray(start + s if true_len is None else true_len, jnp.int32)
 
     def write(c_kv, k, v, kind):
         if c_kv["k"].dtype == jnp.int8:
@@ -589,11 +610,22 @@ def _paged_prefill_impl(params, tokens, cfg: ModelConfig, cache, slot,
                     k=prefill_write_kv(c_kv["k"], k, block_ids),
                     v=prefill_write_kv(c_kv["v"], v, block_ids))
 
+    def prefix_of(c_kv):
+        """Cached-prefix K/V for one layer (gathered *before* the suffix
+        write — prefix blocks are disjoint from ``block_ids`` anyway)."""
+        if prefix_ids is None:
+            return None
+        return (gather_prefix_kv(c_kv["k"], prefix_ids,
+                                 scale=c_kv.get("kscale")),
+                gather_prefix_kv(c_kv["v"], prefix_ids,
+                                 scale=c_kv.get("vscale")))
+
     def group_body(xc, slices):
         stacks_slice, cache_slice = slices
         new_caches = []
         for i, kind in enumerate(pattern):
-            xc, k, v = layer_fn(xc, stacks_slice[i], kind, cfg, positions)
+            xc, k, v = layer_fn(xc, stacks_slice[i], kind, cfg, positions,
+                                kv_prefix=prefix_of(cache_slice[i]))
             new_caches.append(write(cache_slice[i], k, v, kind))
         return xc, tuple(new_caches)
 
@@ -604,14 +636,15 @@ def _paged_prefill_impl(params, tokens, cfg: ModelConfig, cache, slot,
     for i, kind in enumerate(tail):
         p = jax.tree.map(lambda a: a[0], params["tail"][i])
         c_in = jax.tree.map(lambda a: a[0], cache["tail"][i])
-        x, k, v = layer_fn(x, p, kind, cfg, positions)
+        x, k, v = layer_fn(x, p, kind, cfg, positions,
+                           kv_prefix=prefix_of(c_in))
         cache["tail"][i] = jax.tree.map(
             lambda a: a[None], write(c_in, k, v, kind))
 
     x = nn.rms_norm(x, params["final_norm"])
     table_w = params["embed"] if cfg.tie_embeddings else params["unembed"]
     lens = jnp.broadcast_to(n, (b,))
-    last = x[jnp.arange(b), lens - 1][:, None]   # last *real* position
+    last = x[jnp.arange(b), lens - 1 - start][:, None]  # last *real* position
     logits = nn.unembed(last, table_w)
     new_len = jax.lax.dynamic_update_slice(
         cache["len"], n[None].astype(jnp.int32), (slot,))
@@ -630,16 +663,32 @@ SUPPORTS_PADDED_PREFILL = True
 PAGED_INT8_KV = True
 
 
-def _prefill_layer(xc, p, kind: str, cfg: ModelConfig, positions):
-    """One prefill layer application; returns (x, this layer's k, v).
-    Shared by ``prefill`` and ``paged_prefill`` so the dense and paged
-    write paths can never diverge in how layers are applied."""
+def _prefill_layer(xc, p, kind: str, cfg: ModelConfig, positions, *,
+                   kv_prefix=None):
+    """One prefill layer application; returns (x, this layer's k, v — the
+    *newly computed* positions only). Shared by ``prefill`` and
+    ``paged_prefill`` so the dense and paged write paths can never diverge
+    in how layers are applied.
+
+    ``kv_prefix`` (prefix-cache resume): ``(k, v)`` of the already-cached
+    prefix, gathered from the pool. The suffix queries attend
+    [prefix ++ suffix] with ``q_offset`` placing row 0 at the global
+    position right after the prefix — ``chunked_attention``'s causal and
+    window masks then bind by absolute position, so local ("L") layers
+    whose full-history window reaches into the prefix stay exact."""
     h = nn.rms_norm(xc, p["ln1"])
     q, k, v = _project_qkv(h, p, cfg, positions)
+    ka, va, q_off = k, v, 0
+    if kv_prefix is not None:
+        kp, vp = kv_prefix
+        ka = jnp.concatenate([kp.astype(k.dtype), k], axis=2)
+        va = jnp.concatenate([vp.astype(v.dtype), v], axis=2)
+        q_off = kp.shape[2]
     o = attn.chunked_attention(
-        q, k, v, causal=kind != "B",
+        q, ka, va, causal=kind != "B",
         window=cfg.local_window if kind == "L" else None,
         chunk_q=min(cfg.attn_chunk_q, xc.shape[1]),
+        q_offset=q_off,
     )
     xc = xc + nn.dense(_merge_heads(o), p["wo"])
     xc = xc + _mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)

@@ -440,6 +440,43 @@ class LLMEngine:
                 qos=req.qos))
         return finished
 
+    # -- observability -----------------------------------------------------
+
+    def metrics(self) -> Dict[str, float]:
+        """Engine-level serving counters (this instance method shadows the
+        backend's attributes via ``__getattr__`` precedence — the
+        module-level :func:`metrics` aggregates *finished requests*
+        instead). Always includes the dispatch/transfer contract counters;
+        on a prefix-caching paged backend it adds the cache economics:
+        cached-block hit rate and the prefill tokens skipped via cached
+        prefixes."""
+        b = self.backend
+        out: Dict[str, float] = {
+            "iterations": float(self.iterations),
+            "decode_dispatches": float(b.decode_dispatches),
+            "transfers": float(b.transfers),
+            "max_concurrent": float(self.max_concurrent),
+        }
+        alloc = getattr(b, "alloc", None)
+        if alloc is None or not getattr(b, "prefix_caching", False):
+            return out
+        looked = alloc.hit_blocks + alloc.miss_blocks
+        total = b.prefill_tokens_total
+        out.update({
+            "prefix_cache_hit_blocks": float(alloc.hit_blocks),
+            "prefix_cache_miss_blocks": float(alloc.miss_blocks),
+            "prefix_cache_hit_rate": (alloc.hit_blocks / looked
+                                      if looked else 0.0),
+            "prefix_cache_evictions": float(alloc.evictions),
+            "prefix_cache_cow_copies": float(alloc.cow_copies),
+            "prefix_cached_blocks": float(alloc.cached_blocks),
+            "prefill_tokens_total": float(total),
+            "prefill_tokens_skipped": float(b.prefill_tokens_skipped),
+            "prefill_skip_rate": (b.prefill_tokens_skipped / total
+                                  if total else 0.0),
+        })
+        return out
+
     # -- drivers -----------------------------------------------------------
 
     def run_until_drained(self, max_iters: int = 10_000) -> List[Request]:

@@ -56,6 +56,8 @@ and decodes them through ``kernels.paged_attention.paged_attention_int8``.
 
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -65,7 +67,8 @@ import numpy as np
 from repro.models import registry
 from repro.models.cache import (
     BlockAllocator, PagedLayout, blocks_for, bucket_for, cache_insert,
-    ring_blocks_for, ring_table_row,
+    chain_key, chain_seed, prefix_chain_keys, ring_blocks_for,
+    ring_table_row,
 )
 from repro.serve.config import EngineConfig
 from repro.serve.request import Request
@@ -457,7 +460,12 @@ class PagedBackend(_BackendBase):
             ec.block_len, num_blocks, ec.max_len,
             window=cfg.local_window if self.ring else None,
             ring_num_blocks=(1 + ec.slots * wb) if self.ring else 0)
-        self.alloc = BlockAllocator(self.layout)
+        # content-addressed prefix caching: full-history layouts only —
+        # a ring layout skipping its prefix prefill would leave the
+        # sliding-window pools unwritten for in-window prefix positions
+        self.prefix_caching = bool(ec.prefix_cache) and not self.ring
+        self.alloc = BlockAllocator(self.layout,
+                                    prefix_cache=self.prefix_caching)
         # full-history blocks are consumed by non-L layers only; an all-L
         # pattern reserves none of them
         self._has_full = (not self.ring) or any(k != "L" for k in cfg.pattern)
@@ -472,6 +480,19 @@ class PagedBackend(_BackendBase):
             self._ring_first = [0] * ec.slots   # abs block idx of entry 0
             self._ring_ids: List = [None] * ec.slots
         self._slot_len = [0] * ec.slots   # host mirror of active rows' len
+        # prefix cache: per-slot chain keys of the full blocks written so
+        # far (prompt at prefill, decode blocks as they complete), plus
+        # skip counters for metrics/bench
+        self._slot_keys: List[List[bytes]] = [[] for _ in range(ec.slots)]
+        # chain-key memo (rid -> (continuation_len, keys)): can_admit() runs
+        # for every queued request every iteration, and the sha256 chain over
+        # a long shared prefix is the dominant host cost of admission under
+        # load. Bounded LRU; entries are dropped at prefill/release and
+        # invalidated by continuation growth (preempted requeues).
+        self._key_memo: "OrderedDict[int, Tuple[int, List[bytes]]]" = \
+            OrderedDict()
+        self.prefill_tokens_skipped = 0
+        self.prefill_tokens_total = 0
         # quantized archs get int8 block pools (+ per-block scales) — the
         # family default; float archs keep compute_dtype pools
         self.quantized = bool(cfg.serve_quant)
@@ -490,20 +511,36 @@ class PagedBackend(_BackendBase):
             return tok, cache
 
         def _pre(p, tokens, true_len, slot, block_ids, ring_ids, cache,
-                 last_tok, samp, embeds, any_sampling):
+                 last_tok, samp, embeds, prefix_ids, any_sampling, start):
             self.prefill_traces += 1  # one trace per (bucket, block count)
             logits, cache = arch.paged_prefill(
                 p, tokens, cache, slot, block_ids, ring_ids=ring_ids,
-                true_len=true_len, embeds=embeds)
+                true_len=true_len, embeds=embeds, prefix_ids=prefix_ids,
+                start=start)
             tok = sample_tokens_per_slot(logits, *samp, base_key,
                                          any_sampling=any_sampling)  # [1]
             last_tok = jax.lax.dynamic_update_slice(last_tok, tok, (slot,))
             return tok[0], cache, last_tok
 
+        def _copy_block(cache, old, new):
+            # copy-on-write: duplicate one pool block (k/v + scales) so a
+            # diverging writer stops sharing it; per-slot leaves (encdec
+            # cross K/V, positions) are left untouched
+            def cp(path, leaf):
+                tail = path[-1]
+                name = tail.key if isinstance(tail, jax.tree_util.DictKey) \
+                    else None
+                if name in ("k", "v", "kscale", "vscale"):
+                    return leaf.at[:, new].set(leaf[:, old])
+                return leaf
+
+            return jax.tree_util.tree_map_with_path(cp, cache)
+
         self._decode_fn = jax.jit(_dec, donate_argnums=(2,),
                                   static_argnums=(6,))
         self._prefill_fn = jax.jit(_pre, donate_argnums=(6,),
-                                   static_argnums=(10,))
+                                   static_argnums=(11, 12))
+        self._copy_block_fn = jax.jit(_copy_block, donate_argnums=(0,))
 
     # -- capacity bookkeeping ----------------------------------------------
 
@@ -538,6 +575,45 @@ class PagedBackend(_BackendBase):
         return blocks_for(max(self._pre_len(req), final_pos),
                           self.ec.block_len)
 
+    # -- content-addressed prefix keys -------------------------------------
+
+    @staticmethod
+    def _chain_salt(req: Request) -> bytes:
+        """Per-request hash-chain salt: requests whose K/V depends on more
+        than the token prefix (encdec cross-attends its encoder states)
+        must never share blocks across different conditioning inputs."""
+        if req.embeds is None:
+            return b""
+        arr = np.ascontiguousarray(np.asarray(req.embeds, np.float32))
+        return hashlib.sha256(arr.tobytes()).digest()
+
+    _KEY_MEMO_CAP = 256
+
+    def _chain_keys(self, req: Request) -> List[bytes]:
+        """Chained content keys for every full block of ``req``'s
+        continuation (uncapped — slice with ``_hit_limit`` for lookup).
+        Memoized per rid on continuation length: a queued request is
+        re-keyed by ``can_admit`` every iteration, and the hash chain over
+        a long shared prefix would otherwise be recomputed each time."""
+        n = len(req.prompt) + len(req.output)
+        hit = self._key_memo.get(req.rid)
+        if hit is not None and hit[0] == n:
+            self._key_memo.move_to_end(req.rid)
+            return hit[1]
+        keys = prefix_chain_keys(continuation_tokens(req), self.ec.block_len,
+                                 salt=self._chain_salt(req))
+        self._key_memo[req.rid] = (n, keys)
+        self._key_memo.move_to_end(req.rid)
+        while len(self._key_memo) > self._KEY_MEMO_CAP:
+            self._key_memo.popitem(last=False)
+        return keys
+
+    def _hit_limit(self, req: Request) -> int:
+        """Max cache-hit blocks: the suffix must keep ≥ 1 real token (the
+        last-position logits are computed, never looked up)."""
+        n = len(req.prompt) + len(req.output)
+        return max(0, (n - 1) // self.ec.block_len)
+
     def validate_request(self, req: Request) -> None:
         need = self._max_blocks_needed(req)
         if need > self.layout.usable_blocks:
@@ -546,7 +622,10 @@ class PagedBackend(_BackendBase):
                 f"{self.layout.usable_blocks}")
 
     def can_admit(self, req: Request) -> bool:
-        if not self.alloc.can_admit(self._max_blocks_needed(req)):
+        keys: Sequence[bytes] = ()
+        if self.prefix_caching:
+            keys = self._chain_keys(req)[:self._hit_limit(req)]
+        if not self.alloc.can_admit(self._max_blocks_needed(req), keys):
             return False
         if self.ring and not self.ring_alloc.can_admit(
                 self.layout.ring_blocks):
@@ -555,8 +634,10 @@ class PagedBackend(_BackendBase):
 
     def release(self, slot: int, req: Request) -> None:
         """Recycle a slot's blocks (full + ring) and point its table rows
-        at trash. Also the ``abort()`` path — blocks return to the
-        allocators immediately, not at the next drain."""
+        at trash. Also the ``abort()`` path. With prefix caching the
+        release *decrefs*: shared blocks survive under their other
+        references, and published sole-owned blocks move to the cached LRU
+        (reusable K/V) instead of the free list."""
         self.alloc.release(req.rid)
         self.table[slot, :] = 0
         if self.ring:
@@ -566,6 +647,8 @@ class PagedBackend(_BackendBase):
             self._ring_first[slot] = 0
             self._ring_ids[slot] = None
         self._slot_len[slot] = 0
+        self._slot_keys[slot] = []
+        self._key_memo.pop(req.rid, None)
 
     def evict_for(self, req, candidates, slots):
         need = self._max_blocks_needed(req)
@@ -654,6 +737,35 @@ class PagedBackend(_BackendBase):
                     b = self.alloc.grow(req.rid)
                     self.table[i, len(owned)] = b
                     owned.append(b)
+            if self.prefix_caching:
+                # publish decode blocks as they complete: a preempted (or
+                # shared-prefix) continuation then re-prefills mostly from
+                # cache. Position p of the slot holds K/V of seq[p], and
+                # the engine appends fetched tokens before the next
+                # begin_iteration, so seq always covers _slot_len.
+                n_full = self._slot_len[i] // blk
+                keys = self._slot_keys[i]
+                if len(keys) < n_full:
+                    seq = continuation_tokens(req)
+                    salt = self._chain_salt(req)
+                    while len(keys) < n_full:
+                        idx = len(keys)
+                        prev = keys[idx - 1] if idx else chain_seed(blk, salt)
+                        key = chain_key(prev, seq[idx * blk:(idx + 1) * blk])
+                        keys.append(key)
+                        self.alloc.register(req.rid, idx, key)
+                # copy-on-write guard: if this iteration's decode write
+                # lands in a block another table still references (only
+                # possible after an explicit incref fork), duplicate it
+                # first so the sharer's K/V stays immutable
+                tail = self._slot_len[i] // blk
+                moved = self.alloc.ensure_writable(req.rid, tail)
+                if moved is not None:
+                    old, new = moved
+                    self.cache = self._copy_block_fn(
+                        self.cache, jnp.asarray(old, jnp.int32),
+                        jnp.asarray(new, jnp.int32))
+                    self.table[i, tail] = new
             if self.ring:
                 # rotate the ring table when the next write position enters
                 # a block past the current ring: the evicted oldest block
@@ -680,14 +792,28 @@ class PagedBackend(_BackendBase):
     def prefill(self, req: Request, slot: int, samp, any_sampling):
         """Reserve blocks, set up tables, and run one paged-prefill
         dispatch (K/V written straight into pool blocks); returns the
-        on-device sampled first token."""
+        on-device sampled first token.
+
+        With prefix caching: the longest published chain-key prefix maps
+        cached pool blocks straight into the slot's table (hits are
+        increfed, never rewritten), and the dispatch runs over only the
+        uncached *suffix* — the prefix K/V is gathered from the pool
+        inside the jitted step. The hit is capped so at least the last
+        token is always computed (its logits can't be looked up)."""
+        blk = self.ec.block_len
         toks = continuation_tokens(req)
         n = toks.size
         pre_len = self._pre_len(req)
-        now_blocks = pre_len // self.ec.block_len if self._has_full else 0
+        now_blocks = pre_len // blk if self._has_full else 0
+        j = 0
+        keys_full: List[bytes] = []
+        if self.prefix_caching:
+            keys_full = self._chain_keys(req)
+            j = len(self.alloc.lookup(keys_full[:self._hit_limit(req)]))
         block_ids = np.asarray(
             self.alloc.admit(req.rid, now_blocks,
-                             self._max_blocks_needed(req)),
+                             self._max_blocks_needed(req),
+                             keys=keys_full[:j]),
             np.int32)
         self.table[slot, :] = 0
         self.table[slot, :block_ids.size] = block_ids
@@ -696,28 +822,40 @@ class PagedBackend(_BackendBase):
             wb = self.layout.ring_blocks
             ring_ids = np.asarray(
                 self.ring_alloc.admit(req.rid, wb, wb), np.int32)
-            first = max(0, (n - 1) // self.ec.block_len - (wb - 1))
+            first = max(0, (n - 1) // blk - (wb - 1))
             self._ring_first[slot] = first
             self._ring_ids[slot] = ring_ids
             self.ring_table[slot, :] = ring_table_row(ring_ids, first)
-            self.ring_start[slot] = first * self.ec.block_len
+            self.ring_start[slot] = first * blk
         self._slot_len[slot] = n
+        start = j * blk   # static: one trace per (suffix bucket, hit depth)
         if self._bucketing:
-            padded = np.zeros((1, pre_len), np.int32)
-            padded[0, :n] = toks
+            padded = np.zeros((1, pre_len - start), np.int32)
+            padded[0, :n - start] = toks[start:]
             tokens = jnp.asarray(padded)
             true_len = jnp.asarray(n, jnp.int32)
         else:
             # exact prompt, no pad tokens (MoE routing capacity depends on
             # token count); K/V writes pad to block granularity internally
-            tokens = jnp.asarray(toks[None, :])
+            tokens = jnp.asarray(toks[start:][None, :])
             true_len = None
         embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
+        prefix_ids = jnp.asarray(block_ids[:j]) if j else None
         tok, self.cache, self.last_tok = self._prefill_fn(
             self.params, tokens, true_len, jnp.asarray(slot, jnp.int32),
-            jnp.asarray(block_ids),
+            jnp.asarray(block_ids[j:]),
             None if ring_ids is None else jnp.asarray(ring_ids),
-            self.cache, self.last_tok, samp, embeds, any_sampling)
+            self.cache, self.last_tok, samp, embeds, prefix_ids,
+            any_sampling, start)
+        if self.prefix_caching:
+            # publish every freshly written full block under its chain key
+            # (first-wins on key collision: the duplicate stays private)
+            for idx in range(j, n // blk):
+                self.alloc.register(req.rid, idx, keys_full[idx])
+            self._slot_keys[slot] = list(keys_full[:n // blk])
+            self._key_memo.pop(req.rid, None)
+        self.prefill_tokens_total += n
+        self.prefill_tokens_skipped += start
         return tok
 
 

@@ -57,6 +57,16 @@ class EngineConfig:
     # construction: quantized archs must name a backend that implements
     # int8 block pools.
     attn_backend: Optional[str] = None
+    # paged backend: content-addressed prefix caching. Completed KV blocks
+    # are published under a chained hash of their token prefix; a new
+    # request whose prompt shares a published full-block prefix maps those
+    # blocks into its table (refcounted, copy-on-write) and prefills only
+    # the uncached suffix. Released blocks park in an LRU and are reused
+    # or evicted on demand. Off by default: with caching on, a drained
+    # engine intentionally retains cached blocks (free + cached == usable)
+    # instead of returning everything to the free list. Ring (sliding-
+    # window) layouts opt out automatically.
+    prefix_cache: bool = False
     # -- the LLMEngine construction surface --------------------------------
     # execution backend: "slot" (sequential per-slot reference), "arena"
     # (dense batched arena, the default), "paged" (shared block pool)
@@ -76,6 +86,12 @@ class EngineConfig:
     # best-effort traffic is never starved of *grants*; it is never
     # preempted by this path)
     be_grant_window: int = 8
+    # qos scheduler: optional direct bound on the best-effort share of
+    # decode tokens. When set (0 < share < 1), the scheduler withholds
+    # "be" admissions while the running be-token fraction exceeds the
+    # share (rt demand permitting) — token-rate shaping on top of the
+    # grant-count fairness above. None disables shaping.
+    be_token_share: Optional[float] = None
     # how many *finished* (done/aborted) requests the engine keeps
     # addressable by handle after completion. None keeps all — right for
     # batch jobs that read results after run_until_drained(); a
@@ -112,6 +128,12 @@ class EngineConfig:
                 f"be_grant_window must be >= 1, got {self.be_grant_window} "
                 f"(0 would promote the be lane every iteration, inverting "
                 f"rt priority)")
+        if self.be_token_share is not None and not (
+                0.0 < self.be_token_share < 1.0):
+            raise ValueError(
+                f"be_token_share must be in (0, 1) when set, got "
+                f"{self.be_token_share} (0 starves be admission outright; "
+                f"1 disables shaping — use None for that)")
         # NOTE: attn_backend × backend compatibility is validated by
         # LLMEngine, not here — the legacy shims pin `backend` *after*
         # config construction (dataclasses.replace), so a config carrying

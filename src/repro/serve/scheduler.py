@@ -145,6 +145,14 @@ class QoSTrafficClassScheduler(Scheduler):
     bounds narrow grants, after ``be_grant_window`` consecutive rt
     admissions with a be request waiting, the be lane head is moved to
     the front of the next admission pass.
+
+    **Token-rate shaping** (``ec.be_token_share``): when set, the be
+    lane's share of *decode tokens* (not just admission grants) is
+    bounded directly — while rt requests are waiting and the cumulative
+    be-token fraction exceeds the share, be admissions are withheld from
+    the admission pass (the guaranteed-grant rule included). With no rt
+    demand the be lane always flows, so shaping throttles, it never
+    starves.
     """
 
     name = "qos"
@@ -152,6 +160,11 @@ class QoSTrafficClassScheduler(Scheduler):
     def __init__(self, ec: EngineConfig):
         super().__init__(ec)
         self._consecutive_rt = 0
+        # token-share accounting: live admitted requests are observed in
+        # place (their .output grows as they decode); finished ones fold
+        # into per-lane scalars so the map stays bounded
+        self._live: dict = {}               # rid -> Request
+        self._done_tokens = {RT: 0, BE: 0}
 
     @staticmethod
     def _lanes(queue: Sequence[Request]):
@@ -159,8 +172,33 @@ class QoSTrafficClassScheduler(Scheduler):
         be = [r for r in queue if r.qos != RT]
         return rt, be
 
+    def _token_counts(self) -> Tuple[int, int]:
+        """Cumulative decode tokens per lane across everything this
+        scheduler has admitted (live slots counted at their current
+        length)."""
+        totals = dict(self._done_tokens)
+        for rid, req in list(self._live.items()):
+            lane = RT if req.qos == RT else BE
+            totals[lane] += len(req.output)
+            if req.finished:
+                self._done_tokens[lane] += len(req.output)
+                del self._live[rid]
+        return totals[RT], totals[BE]
+
+    def _be_throttled(self, queue) -> bool:
+        share = self.ec.be_token_share
+        if share is None:
+            return False
+        if not any(r.qos == RT for r in queue):
+            return False      # no rt demand → shaping never starves be
+        rt_toks, be_toks = self._token_counts()
+        total = rt_toks + be_toks
+        return total > 0 and be_toks / total > share
+
     def admit_order(self, queue):
         rt, be = self._lanes(queue)
+        if self._be_throttled(queue):
+            return rt         # withhold be grants while over-share
         if be and self._consecutive_rt >= self.ec.be_grant_window:
             # guaranteed be grant: the bounded-narrow-priority rule
             return be[:1] + rt + be[1:]
@@ -179,6 +217,8 @@ class QoSTrafficClassScheduler(Scheduler):
 
     def note_iteration(self, admitted, queue):
         super().note_iteration(admitted, queue)
+        for r in admitted:
+            self._live[r.rid] = r
         _, be_waiting = self._lanes(queue)
         if any(r.qos != RT for r in admitted):
             self._consecutive_rt = 0

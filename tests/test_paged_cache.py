@@ -7,8 +7,10 @@ import jax.numpy as jnp
 import pytest
 
 from repro.models.cache import (
-    TRASH_BLOCK, BlockAllocator, PagedLayout, blocks_for, paged_insert_kv,
-    prefill_write_kv, ring_blocks_for, ring_prefill_write_kv, ring_table_row,
+    TRASH_BLOCK, BlockAllocator, PagedLayout, blocks_for, chain_key,
+    chain_seed, gather_prefix_kv, paged_insert_kv, prefill_write_kv,
+    prefix_chain_keys, ring_blocks_for, ring_prefill_write_kv,
+    ring_table_row,
 )
 
 
@@ -211,6 +213,395 @@ def test_allocator_property_based_hypothesis():
     )
     def run(num_blocks, ops):
         _apply_ops(PagedLayout(4, num_blocks, 64), ops)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed prefix caching: chain keys, refcounts, LRU reuse,
+# copy-on-write — unit tests plus a model-checked property suite (seeded
+# fallback + Hypothesis variant, same interpreter).
+# ---------------------------------------------------------------------------
+
+
+def test_chain_keys_identify_position_and_history():
+    """Equal keys ⇔ equal (block size, salt, full token prefix): a shared
+    suffix at a different position or under a different salt never
+    collides."""
+    a = prefix_chain_keys(np.arange(16), 4)
+    b = prefix_chain_keys(np.arange(16), 4)
+    assert a == b and len(a) == 4
+    # common 8-token prefix → first two keys shared, rest diverge
+    c = prefix_chain_keys(np.concatenate([np.arange(8), np.arange(8) + 99]),
+                          4)
+    assert c[:2] == a[:2] and c[2] != a[2] and c[3] != a[3]
+    # same block *content* after different history: position is in the key
+    d = prefix_chain_keys(np.concatenate([np.arange(4) + 99, np.arange(4)]),
+                          4)
+    assert d[1] != a[0]
+    # block size and salt are part of the chain identity
+    assert prefix_chain_keys(np.arange(16), 8)[0] != a[0]
+    assert prefix_chain_keys(np.arange(16), 4, salt=b"enc")[0] != a[0]
+    # partial tail blocks never get keys; limit caps the chain
+    assert len(prefix_chain_keys(np.arange(15), 4)) == 3
+    assert len(prefix_chain_keys(np.arange(16), 4, limit=2)) == 2
+    # incremental extension (the decode-block path) matches the bulk chain
+    d = chain_seed(4)
+    toks = np.arange(16, dtype=np.int32)
+    for i in range(4):
+        d = chain_key(d, toks[i * 4:(i + 1) * 4])
+        assert d == a[i]
+
+
+def _prefix_alloc(num_blocks=9):
+    return BlockAllocator(PagedLayout(4, num_blocks, 64), prefix_cache=True)
+
+
+def test_register_lookup_and_shared_admit():
+    a = _prefix_alloc()
+    keys = prefix_chain_keys(np.arange(12), 4)
+    ids = a.admit(0, 3, 4)
+    for i, k in enumerate(keys):
+        assert a.register(0, i, k) == ids[i]
+        assert a.register(0, i, k) == ids[i]     # idempotent
+    assert a.lookup(keys) == ids
+    assert a.lookup(keys[:2]) == ids[:2]
+    assert a.lookup([b"nope"] + keys) == []      # longest *prefix* only
+    ids2 = a.admit(1, 3, 4, keys=keys)
+    assert ids2 == ids                            # physical sharing
+    assert all(a.ref_of(b) == 2 for b in ids)
+    assert a.hit_blocks == 3 and a.miss_blocks == 3
+    # release one owner: blocks stay live under the other's references
+    a.release(0)
+    assert all(a.ref_of(b) == 1 for b in ids)
+    assert a.cached_blocks == 0
+    # release the last owner: published blocks park in the cached LRU
+    a.release(1)
+    assert a.cached_blocks == 3
+    assert all(a.is_cached(b) for b in ids)
+    assert a.free_blocks + a.cached_blocks == 8
+    # ...and a later admission revives them from the LRU
+    ids3 = a.admit(2, 3, 3, keys=keys)
+    assert ids3 == ids and a.cached_blocks == 0
+
+
+def test_register_first_wins_on_key_collision():
+    a = _prefix_alloc()
+    keys = prefix_chain_keys(np.arange(8), 4)
+    ids0 = a.admit(0, 2, 2)
+    a.register(0, 0, keys[0])
+    # a second request that prefilled the same content privately (raced
+    # past the lookup) registers after: the published block wins, the
+    # duplicate stays private
+    ids1 = a.admit(1, 2, 2)
+    assert a.register(1, 0, keys[0]) == ids0[0]
+    assert a.ref_of(ids1[0]) == 1
+    a.release(0)
+    a.release(1)
+    # only the published block is cached; the private duplicate was freed
+    assert a.cached_blocks == 1 and a.is_cached(ids0[0])
+
+
+def test_lru_eviction_order_and_exhaustion():
+    a = _prefix_alloc(num_blocks=5)               # 4 usable
+    keys = prefix_chain_keys(np.arange(16), 4)
+    for rid in range(4):
+        ids = a.admit(rid, 1, 1)
+        a.register(rid, 0, keys[rid])
+    for rid in range(4):                          # release order = LRU order
+        a.release(rid)
+    assert a.cached_blocks == 4 and a.free_blocks == 0
+    assert a.available_blocks == 4                # cached is reclaimable
+    first_cached = a.lookup(keys[:1])[0]
+    # a fresh 2-block admission must evict the two LRU-oldest cached
+    # blocks — their keys are retracted, the younger two survive
+    a.admit(9, 2, 2)
+    assert a.evictions == 2
+    assert a.lookup(keys[:1]) == []               # oldest retracted
+    assert not a.is_cached(first_cached)
+    assert a.cached_blocks == 2
+    # pool truly full now: nothing reclaimable beyond live reservations
+    assert not a.can_admit(3)
+    with pytest.raises(RuntimeError):
+        a.admit(10, 3, 3)
+
+
+def test_decref_incref_contracts():
+    a = _prefix_alloc()
+    ids = a.admit(0, 2, 2)
+    with pytest.raises(KeyError):
+        a.incref(999)                             # not live
+    a.incref(ids[0])                              # fork
+    assert a.ref_of(ids[0]) == 2
+    a.release(0)                                  # owner's refs drop
+    assert a.ref_of(ids[0]) == 1                  # fork ref survives
+    assert a.ref_of(ids[1]) == 0
+    a.decref(ids[0])
+    with pytest.raises(RuntimeError):
+        a.decref(ids[0])                          # double decref
+    with pytest.raises(RuntimeError):
+        a.decref(ids[1])                          # already freed by release
+    assert a.free_blocks == 8
+
+
+def test_ensure_writable_cow_semantics():
+    a = _prefix_alloc()
+    keys = prefix_chain_keys(np.arange(8), 4)
+    ids = a.admit(0, 2, 2)
+    a.register(0, 0, keys[0])
+    # sole-owned published block: written in place, key retracted
+    assert a.ensure_writable(0, 0) is None
+    assert a.lookup(keys[:1]) == []
+    assert a.owned(0) == ids
+    # shared block (forked): detach a private copy
+    a.incref(ids[1])
+    old, new = a.ensure_writable(0, 1)
+    assert old == ids[1] and new not in ids
+    assert a.owned(0) == [ids[0], new]
+    assert a.ref_of(old) == 1                     # the fork still holds it
+    assert a.ref_of(new) == 1
+    assert a.cow_copies == 1
+    # private unpublished block: no-op
+    assert a.ensure_writable(0, 1) is None
+    a.decref(old)
+    a.release(0)
+    assert a.free_blocks == 8
+
+
+def test_register_requires_prefix_cache_mode():
+    a = BlockAllocator(PagedLayout(4, 9, 64))
+    a.admit(0, 1, 1)
+    with pytest.raises(RuntimeError):
+        a.register(0, 0, b"k")
+
+
+def test_gather_prefix_kv_float_and_int8():
+    rng = np.random.default_rng(0)
+    pool = rng.standard_normal((6, 2, 4, 3)).astype(np.float32)
+    out = gather_prefix_kv(jnp.asarray(pool), jnp.asarray([5, 2], jnp.int32))
+    assert out.shape == (1, 2, 8, 3)
+    np.testing.assert_array_equal(np.asarray(out[0, :, :4]), pool[5])
+    np.testing.assert_array_equal(np.asarray(out[0, :, 4:]), pool[2])
+    qpool = rng.integers(-127, 128, (6, 2, 4, 3)).astype(np.int8)
+    scale = rng.uniform(0.01, 0.1, (6,)).astype(np.float32)
+    qout = gather_prefix_kv(jnp.asarray(qpool), jnp.asarray([1, 4], jnp.int32),
+                            scale=jnp.asarray(scale))
+    np.testing.assert_allclose(np.asarray(qout[0, :, :4]),
+                               qpool[1] * scale[1], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(qout[0, :, 4:]),
+                               qpool[4] * scale[4], rtol=1e-6)
+    with pytest.raises(ValueError):
+        gather_prefix_kv(jnp.asarray(qpool), jnp.asarray([1], jnp.int32))
+
+
+# -- model-checked property suite -------------------------------------------
+
+# three token streams sharing an 8-token (2-block) prefix → chains overlap
+_STREAMS = [
+    np.concatenate([np.arange(8), np.arange(24) + 100 * (v + 1)]).astype(
+        np.int32)
+    for v in range(3)
+]
+_PFX_KEYS = [prefix_chain_keys(s, 4) for s in _STREAMS]
+
+
+class _PrefixModel:
+    """Reference model for the refcount/publish state: refcounts are
+    predicted from observed op results, never read back from the
+    allocator."""
+
+    def __init__(self):
+        self.ref = {}          # block → predicted refcount
+        self.key_of = {}       # published block → key
+        self.published = {}    # key → block
+        self.extra = {}        # block → outstanding fork (incref) refs
+
+    def take_fresh(self, b):
+        """A fresh draw handed out block ``b`` — if it was cached, its key
+        was retracted by the eviction."""
+        assert b not in self.ref, f"fresh draw returned live block {b}"
+        k = self.key_of.pop(b, None)
+        if k is not None:
+            del self.published[k]
+        self.ref[b] = 1
+
+    def decref(self, b):
+        self.ref[b] -= 1
+        if self.ref[b] == 0:
+            del self.ref[b]
+
+
+def _check_prefix_invariants(a: BlockAllocator, layout: PagedLayout,
+                             m: _PrefixModel):
+    usable = set(range(1, layout.num_blocks))
+    free, live, cached = set(a._free), set(a._ref), set(a._lru)
+    # cached ⊎ free ⊎ live partitions the pool — every step
+    assert free | live | cached == usable
+    assert len(free) + len(live) + len(cached) == len(usable)
+    assert TRASH_BLOCK not in free | live | cached
+    # exact refcount model match: no block freed while referenced, no
+    # missed/double decref anywhere
+    assert a._ref == m.ref
+    # published index is a consistent bijection; cached blocks are exactly
+    # the ref-0 published ones
+    assert {a._block_of[k]: k for k in a._block_of} == a._hash_of
+    assert a._hash_of == m.key_of
+    assert cached == {b for b in m.key_of if b not in m.ref}
+    # every owner's reference is accounted: ref = owners + forks
+    owner_count = {}
+    for rid in a._reserved:
+        assert len(a.owned(rid)) <= a._reserved[rid]
+        for b in a.owned(rid):
+            owner_count[b] = owner_count.get(b, 0) + 1
+            assert b in a._ref
+    for b in a._ref:
+        assert a._ref[b] == owner_count.get(b, 0) + m.extra.get(b, 0)
+    # capacity algebra
+    assert a.reclaimable_blocks == len(free) + len(cached)
+    assert a.available_blocks == a.reclaimable_blocks - a.reserved_unallocated
+
+
+def _apply_prefix_ops(layout: PagedLayout, ops):
+    """Interpret (kind, x, y) triples as refcounted-allocator ops against
+    the reference model, asserting every documented refusal and every
+    invariant after every op."""
+    a = BlockAllocator(layout, prefix_cache=True)
+    m = _PrefixModel()
+    reg_next = {}              # rid → (variant, next index to register)
+    for kind, x, y in ops:
+        kind %= 7
+        rid = x % _N_RIDS
+        if kind == 0:                          # admit with chain keys
+            variant = y % len(_STREAMS)
+            maxb = y % (layout.usable_blocks + 2)
+            nowb = min(x % (maxb + 1), maxb, len(_PFX_KEYS[variant]))
+            keys = _PFX_KEYS[variant][:nowb]
+            if rid in a._reserved:
+                with pytest.raises(ValueError):
+                    a.admit(rid, nowb, maxb, keys=keys)
+            else:
+                hit = a.lookup(keys)[:nowb]
+                if not a.can_admit(maxb, keys[:len(hit)]):
+                    with pytest.raises(RuntimeError):
+                        a.admit(rid, nowb, maxb, keys=keys)
+                else:
+                    ids = a.admit(rid, nowb, maxb, keys=keys)
+                    assert len(ids) == nowb and TRASH_BLOCK not in ids
+                    assert ids[:len(hit)] == hit
+                    for b in hit:
+                        m.ref[b] = m.ref.get(b, 0) + 1
+                    for b in ids[len(hit):]:
+                        m.take_fresh(b)
+                    reg_next[rid] = (variant, len(hit))
+        elif kind == 1:                        # grow within reservation
+            if rid not in a._reserved:
+                with pytest.raises(KeyError):
+                    a.grow(rid)
+            elif len(a.owned(rid)) >= a._reserved[rid]:
+                with pytest.raises(RuntimeError):
+                    a.grow(rid)
+            else:
+                m.take_fresh(a.grow(rid))
+        elif kind == 2:                        # release → decref all owned
+            if rid not in a._reserved:
+                with pytest.raises(KeyError):
+                    a.release(rid)
+            else:
+                owned = a.owned(rid)
+                freed = a.release(rid)
+                assert freed == owned
+                for b in owned:
+                    m.decref(b)
+                reg_next.pop(rid, None)
+        elif kind == 3:                        # register next full block
+            if rid in reg_next and reg_next[rid][1] < len(a.owned(rid)):
+                variant, idx = reg_next[rid]
+                key = _PFX_KEYS[variant][idx] if idx < len(
+                    _PFX_KEYS[variant]) else None
+                if key is not None:
+                    block = a.owned(rid)[idx]
+                    serving = a.register(rid, idx, key)
+                    if block in m.key_of:          # idempotent re-register
+                        assert serving == block
+                    elif key in m.published:       # first-wins collision
+                        assert serving == m.published[key]
+                    else:
+                        assert serving == block
+                        m.key_of[block] = key
+                        m.published[key] = block
+                    reg_next[rid] = (variant, idx + 1)
+        elif kind == 4:                        # incref fork on a live block
+            live = sorted(a._ref)
+            if live:
+                b = live[y % len(live)]
+                a.incref(b)
+                m.ref[b] += 1
+                m.extra[b] = m.extra.get(b, 0) + 1
+            else:
+                with pytest.raises(KeyError):
+                    a.incref(1)
+        elif kind == 5:                        # decref a fork / double-free
+            forked = sorted(b for b in m.extra if m.extra[b] > 0)
+            if forked:
+                b = forked[y % len(forked)]
+                a.decref(b)
+                m.decref(b)
+                m.extra[b] -= 1
+            else:
+                dead = sorted(set(range(1, layout.num_blocks)) - set(a._ref))
+                if dead:
+                    with pytest.raises(RuntimeError):
+                        a.decref(dead[y % len(dead)])
+        else:                                  # ensure_writable (COW guard)
+            if rid in a._reserved and a.owned(rid):
+                idx = y % len(a.owned(rid))
+                block = a.owned(rid)[idx]
+                shared = a._ref[block] > 1
+                if shared and a.reclaimable_blocks == 0:
+                    with pytest.raises(RuntimeError):
+                        a.ensure_writable(rid, idx)
+                else:
+                    moved = a.ensure_writable(rid, idx)
+                    if shared:
+                        old, new = moved
+                        assert old == block
+                        assert a.owned(rid)[idx] == new
+                        m.ref[old] -= 1          # ref > 1: never reaches 0
+                        m.take_fresh(new)
+                    else:
+                        assert moved is None
+                        k = m.key_of.pop(block, None)
+                        if k is not None:        # key retracted in place
+                            del m.published[k]
+        _check_prefix_invariants(a, layout, m)
+    return a
+
+
+def test_prefix_allocator_random_op_sequences_seeded():
+    """600 seeded random op sequences over the refcounted allocator (the
+    always-on fallback for the Hypothesis suite below)."""
+    rng = np.random.default_rng(1)
+    for seq in range(600):
+        layout = PagedLayout(4, int(rng.integers(2, 12)), 64)
+        n_ops = int(rng.integers(1, 30))
+        ops = rng.integers(0, 1_000_000, size=(n_ops, 3)).tolist()
+        _apply_prefix_ops(layout, ops)
+
+
+def test_prefix_allocator_property_based_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=500, deadline=None)
+    @given(
+        num_blocks=st.integers(2, 12),
+        ops=st.lists(
+            st.tuples(st.integers(0, 6), st.integers(0, 1_000_000),
+                      st.integers(0, 1_000_000)),
+            min_size=1, max_size=30),
+    )
+    def run(num_blocks, ops):
+        _apply_prefix_ops(PagedLayout(4, num_blocks, 64), ops)
 
     run()
 

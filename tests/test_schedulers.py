@@ -10,7 +10,7 @@ from repro.serve.api import LLMEngine
 from repro.serve.config import EngineConfig
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import (
-    BoundedPriorityScheduler, FCFSScheduler, QoSTrafficClassScheduler,
+    BE, BoundedPriorityScheduler, FCFSScheduler, QoSTrafficClassScheduler,
     make_scheduler,
 )
 
@@ -145,6 +145,49 @@ def test_bounded_forces_only_after_decode_only_window():
     assert s.forced_request(q, []) is None
 
 
+def test_qos_be_token_share_throttle_unit():
+    """Token-rate shaping at the policy level: while rt demand waits and
+    the cumulative be-token fraction exceeds the share, admit_order
+    withholds the be lane entirely — including the be_grant_window
+    guaranteed grant — and resumes it the moment either condition drops."""
+    ec = EngineConfig(scheduler="qos", be_token_share=0.25)
+    s = QoSTrafficClassScheduler(ec)
+    rt_q, be_q = _req(1, "rt"), _req(2, "be")
+    # nothing admitted yet → nothing to throttle
+    assert [r.rid for r in s.admit_order([be_q, rt_q])] == [1, 2]
+    # an admitted be request decodes far past the 25% share
+    be_live, rt_live = _req(100, "be"), _req(101, "rt")
+    s.note_iteration([be_live, rt_live], [])
+    be_live.output.extend([0] * 9)
+    rt_live.output.extend([0] * 3)                # be share 9/12 = 0.75
+    assert s._be_throttled([rt_q])
+    assert [r.rid for r in s.admit_order([be_q, rt_q])] == [1]
+    # the guaranteed grant is overridden too
+    s._consecutive_rt = ec.be_grant_window
+    assert [r.rid for r in s.admit_order([be_q, rt_q])] == [1]
+    s._consecutive_rt = 0
+    # no rt demand → shaping never starves the be lane
+    assert not s._be_throttled([be_q])
+    assert [r.rid for r in s.admit_order([be_q])] == [2]
+    # rt catches up (9/42 ≈ 0.21 ≤ 0.25) → be grants resume
+    rt_live.output.extend([0] * 30)
+    assert [r.rid for r in s.admit_order([be_q, rt_q])] == [1, 2]
+    # finished requests fold into scalars; totals stay put and the live
+    # map stays bounded
+    be_live.state = RequestState.DONE
+    assert s._token_counts() == (33, 9)
+    assert 100 not in s._live and s._done_tokens[BE] == 9
+    assert s._token_counts() == (33, 9)
+
+
+def test_be_token_share_config_validation():
+    for bad in (0.0, 1.0, -0.5, 1.2):
+        with pytest.raises(ValueError, match="be_token_share"):
+            EngineConfig(scheduler="qos", be_token_share=bad)
+    assert EngineConfig(scheduler="qos",
+                        be_token_share=0.5).be_token_share == 0.5
+
+
 # ---------------------------------------------------------------------------
 # Engine-level behavior on the fake backend
 # ---------------------------------------------------------------------------
@@ -224,6 +267,39 @@ def test_qos_be_grant_window_bounds_rt_priority():
     rt_before_be2 = order.index(501)
     assert rt_before_be2 - 1 <= eng.ec.be_grant_window, (
         f"be waited through {rt_before_be2 - 1} rt grants: {order}")
+
+
+def test_qos_be_token_share_defers_guaranteed_grant():
+    """Shaping end-to-end on the fake backend: with the running be-token
+    fraction above the share and rt demand waiting, the be lane gets no
+    grants — not even the be_grant_window one — until rt decoding brings
+    the fraction back under the share."""
+    def rt_grants_before_be2(share):
+        eng = _engine(slots=1, scheduler="qos", rt_window=64,
+                      be_grant_window=2, be_token_share=share)
+        be = _req(500, qos="be", max_new=4)
+        eng.submit(be)
+        eng.step()                                # be holds the only slot
+        for k in range(8):
+            eng.submit(_req(k, qos="rt", max_new=2))
+        be2 = _req(501, qos="be", max_new=2)
+        eng.submit(be2)
+        order, seen = [], set()
+        for _ in range(80):
+            eng.step()
+            for r in eng.slots:
+                if r is not None and r.rid not in seen:
+                    seen.add(r.rid)
+                    order.append(r.rid)
+            if be2.finished:
+                break
+        assert be2.finished                       # throttled, never starved
+        return order.index(501) - 1
+
+    assert rt_grants_before_be2(None) <= 2        # guaranteed grant fires
+    # share 0.2: be fraction 4/(4+2k) stays above the share until all 8
+    # rt requests (16 tokens) have decoded — be2 is deferred past them
+    assert rt_grants_before_be2(0.2) == 8
 
 
 def test_capacity_blocked_head_stops_admissions():

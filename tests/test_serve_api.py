@@ -227,6 +227,121 @@ def test_allocator_invariant_under_interleaved_add_abort_preempt(
 
 
 # ---------------------------------------------------------------------------
+# Prefix caching at the engine level: partition invariant under the
+# randomized interleave, the defensive COW path, and metrics()
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_allocator_invariants_under_interleave(engine_setup):
+    """The randomized add/abort interleave extended to the refcounted /
+    shared allocator: every step, free ⊎ live ⊎ cached must partition the
+    usable pool; at drain the cached blocks are intentionally retained
+    (free + cached == usable, not free == usable) and the shared system
+    prompt must have produced actual cache traffic."""
+    cfg, arch, params = engine_setup
+    eng = LLMEngine(arch, params,
+                    EngineConfig(slots=2, max_len=64, block_len=8,
+                                 backend="paged", scheduler="qos",
+                                 rt_window=2, admit_window=3,
+                                 prefix_cache=True))
+    assert eng.prefix_caching
+    rng = np.random.default_rng(11)
+    sys_prompt = rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+    rid, live = 0, []
+    for it in range(100):
+        roll = rng.random()
+        if roll < 0.3 and rid < 20:
+            tail = rng.integers(
+                0, cfg.vocab, size=int(rng.integers(2, 14))).astype(np.int32)
+            prompt = (np.concatenate([sys_prompt, tail])
+                      if rng.random() < 0.7 else tail)
+            h = eng.add_request(prompt,
+                                max_new_tokens=int(rng.integers(2, 16)),
+                                qos="rt" if rng.random() < 0.4 else "be",
+                                rid=rid)
+            live.append(h)
+            rid += 1
+        elif roll < 0.4 and live:
+            eng.abort(live[int(rng.integers(len(live)))])
+        eng.step()
+        live = [h for h in live if not eng.request(h).finished]
+        a = eng.alloc
+        assert (a.free_blocks + a.live_blocks + a.cached_blocks
+                == eng.layout.usable_blocks)
+        assert a.reserved_unallocated >= 0
+        assert a.available_blocks <= a.reclaimable_blocks
+    eng.run_until_drained()
+    assert eng.idle
+    a = eng.alloc
+    assert a.live_blocks == 0
+    assert a.free_blocks + a.cached_blocks == eng.layout.usable_blocks
+    assert a.reserved_unallocated == 0
+    assert a.hit_blocks > 0, "the shared prompt never hit the cache"
+
+
+def test_cow_fork_preserves_pinned_block_contents(engine_setup):
+    """Forcing the defensive COW path: an external incref pins the slot's
+    partially-filled tail block; the next iteration must relocate the
+    writer to a fresh copy (cow_copies advances, table updated) and leave
+    the pinned block's pool contents bit-identical."""
+    cfg, arch, params = engine_setup
+    eng = LLMEngine(arch, params,
+                    EngineConfig(slots=1, max_len=32, block_len=4,
+                                 backend="paged", prefix_cache=True))
+    h = eng.add_request(_prompt(cfg, n=6, seed=3), max_new_tokens=8, rid=0)
+    eng.step()                                    # admission + first token
+    req = eng.request(h)
+    tail = (len(req.prompt) + len(req.output)) // 4
+    pinned = int(eng.table[0, tail])
+    assert eng.alloc.ref_of(pinned) == 1
+    eng.alloc.incref(pinned)                      # external fork handle
+    before = [np.asarray(leaf[:, pinned]) for leaf in eng.pool_leaves()]
+    cows0 = eng.alloc.cow_copies
+    eng.step()                                    # COW fires here
+    assert eng.alloc.cow_copies == cows0 + 1
+    assert int(eng.table[0, tail]) != pinned      # writer relocated
+    eng.run_until_drained()
+    after = [np.asarray(leaf[:, pinned]) for leaf in eng.pool_leaves()]
+    for b, a in zip(before, after):
+        np.testing.assert_array_equal(b, a)
+    assert eng.alloc.ref_of(pinned) == 1          # only our handle remains
+    eng.alloc.decref(pinned)
+    assert (eng.alloc.free_blocks + eng.alloc.cached_blocks
+            == eng.layout.usable_blocks)
+
+
+def test_llm_engine_metrics_reports_prefix_cache_counters(engine_setup):
+    cfg, arch, params = engine_setup
+    ec = EngineConfig(slots=2, max_len=48, block_len=8, backend="paged",
+                      prefix_cache=True)
+    eng = LLMEngine(arch, params, ec)
+    sysp = _prompt(cfg, n=16, seed=9)             # two full shared blocks
+    for rid in range(3):
+        eng.add_request(
+            np.concatenate([sysp, _prompt(cfg, n=3, seed=20 + rid)]),
+            max_new_tokens=3, rid=rid)
+    eng.run_until_drained()
+    m = eng.metrics()
+    assert m["iterations"] > 0
+    assert m["prefix_cache_hit_blocks"] >= 4.0    # rids 1, 2 hit 2 each
+    assert m["prefix_cache_hit_rate"] == pytest.approx(
+        m["prefix_cache_hit_blocks"]
+        / (m["prefix_cache_hit_blocks"] + m["prefix_cache_miss_blocks"]))
+    assert m["prefix_cached_blocks"] == float(eng.alloc.cached_blocks)
+    assert m["prefill_tokens_skipped"] >= 32.0
+    assert m["prefill_skip_rate"] == pytest.approx(
+        m["prefill_tokens_skipped"] / m["prefill_tokens_total"])
+    # a non-caching engine reports engine counters but no cache fields
+    off = LLMEngine(arch, params,
+                    dataclasses.replace(ec, prefix_cache=False))
+    off.add_request(_prompt(cfg), max_new_tokens=2, rid=0)
+    off.run_until_drained()
+    m_off = off.metrics()
+    assert m_off["iterations"] > 0
+    assert "prefix_cache_hit_blocks" not in m_off
+
+
+# ---------------------------------------------------------------------------
 # Legacy shims are token-identical to LLMEngine: {dense, paged} × {float,
 # int8}
 # ---------------------------------------------------------------------------

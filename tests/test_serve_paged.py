@@ -153,6 +153,177 @@ def test_paged_dense_identity_matrix(family, quant, layout, sampling):
 
 
 # ---------------------------------------------------------------------------
+# Content-addressed prefix caching: cross-family cache-on/off identity with
+# a shared system prompt, the int8 preemption re-prefill boundary contract,
+# and the ring-layout opt-out.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("quant", ["float", "int8"])
+@pytest.mark.parametrize("family", ["dense", "moe", "encdec"])
+def test_prefix_sharing_matrix_cache_on_off_identity(family, quant):
+    """Prefix-sharing cell of the cross-family matrix: four requests share
+    a 2-block system prompt; the prefix-caching engine must produce
+    exactly the cache-off engine's greedy tokens while demonstrably
+    sharing blocks (hits + prefill tokens skipped). encdec requests share
+    the *same* encoder input — the chain salt restricts sharing to
+    identical conditioning, so distinct-audio requests never hit."""
+    cfg, arch, params = _matrix_setup(family, "full", quant)
+    if family == "moe":
+        # expert-capacity drops are *order-dependent*: the cache-off
+        # engine routes prefix and suffix together while the resume
+        # routes only the suffix, so token identity requires the routing
+        # capacity not to bind (the documented moe.paged_prefill
+        # contract). Serve the no-drop capacity setting — cap ≥ s·topk
+        # for every s ≤ max_len. Schema is capacity-independent, so the
+        # cached params stay valid.
+        cfg = dataclasses.replace(cfg, moe_capacity=float(cfg.n_experts))
+        arch = registry.build(cfg)
+    blk = 8
+    sys_prompt = (np.arange(2 * blk) % cfg.vocab).astype(np.int32)
+    embeds = None
+    if family == "encdec":
+        emb_rng = np.random.default_rng(5)
+        embeds = (0.1 * emb_rng.standard_normal(
+            (cfg.enc_seq, cfg.d_model))).astype(np.float32)
+
+    def workload():
+        rng = np.random.default_rng(3)
+        return [Request(rid=rid,
+                        prompt=np.concatenate([
+                            sys_prompt,
+                            rng.integers(0, cfg.vocab,
+                                         size=int(rng.integers(2, 6))
+                                         ).astype(np.int32)]),
+                        embeds=embeds, max_new_tokens=6)
+                for rid in range(4)]
+
+    def run(pc):
+        ec = EngineConfig(slots=2, max_len=48, block_len=blk,
+                          prefix_cache=pc, seed=11)
+        eng = PagedServeEngine(arch, params, ec)
+        for r in workload():
+            eng.submit(r)
+        out = {r.rid: list(r.output) for r in eng.run_until_drained()}
+        return eng, out
+
+    eng_off, out_off = run(False)
+    eng_on, out_on = run(True)
+    assert len(out_on) == 4
+    assert out_on == out_off                     # token-identical, greedy
+    # sharing actually happened: every later request hit the 2 system
+    # blocks and skipped their prefill
+    assert eng_on.alloc.hit_blocks >= 2 * 3
+    assert eng_on.prefill_tokens_skipped >= 2 * blk * 3
+    assert eng_off.alloc.hit_blocks == 0
+    # drained pools: cache-off returns everything to the free list; the
+    # caching engine retains cached (reusable) blocks instead
+    assert eng_off.alloc.free_blocks == eng_off.layout.usable_blocks
+    al = eng_on.alloc
+    assert al.free_blocks + al.cached_blocks == eng_on.layout.usable_blocks
+    assert al.reserved_unallocated == 0 and al.live_blocks == 0
+
+
+def test_int8_preemption_reprefill_boundary_contract(engine_setup):
+    """Pins the int8 near-tie contract at the preemption re-prefill
+    boundary (ROADMAP follow-up). What IS guaranteed, preemption or not:
+
+      * tokens emitted before the preemption are preserved exactly (the
+        continuation re-prefills from prompt + output, never resamples);
+      * prefix caching is transparent: cache-on and cache-off produce
+        identical tokens, even though cache-on resumes the re-prefill
+        from the victim's own registered decode blocks (boundary moved —
+        asserted via the skip counters).
+
+    What is NOT guaranteed on the int8 path — and deterministically
+    reproduced here: the *post-boundary* continuation may diverge from
+    the never-preempted run, because the re-prefill's last-position
+    logits come from chunked float attention over (dequantized) K/V
+    while the decode path's come from the exact-int8 kernel; a near-tie
+    argmax flips. The float path is greedy-lossless (asserted in the
+    preemption tests above); int8 trades that corner for half the pool
+    bytes. If this assertion ever starts failing because the outputs
+    became identical, promote bit-identity to the contract."""
+    cfg, arch, params = engine_setup
+    assert cfg.serve_quant                        # int8 serving arch
+
+    def scenario(pc):
+        ec = EngineConfig(slots=2, max_len=32, block_len=4, num_blocks=9,
+                          admit_window=2, min_bucket=4, prefix_cache=pc)
+        eng = PagedServeEngine(arch, params, ec)
+        r0 = Request(rid=0, prompt=np.arange(4, dtype=np.int32) + 7,
+                     max_new_tokens=25)
+        r1 = Request(rid=1, prompt=np.arange(4, dtype=np.int32) + 3,
+                     max_new_tokens=8)
+        eng.submit(r0)
+        eng.step()
+        eng.submit(r1)
+        for _ in range(ec.admit_window + 2):
+            eng.step()
+        assert r0.preemptions == 1
+        boundary = len(r0.output)                 # tokens already emitted
+        done = {r.rid: list(r.output)
+                for r in eng.run_until_drained(max_iters=300)}
+        return eng, done, boundary
+
+    eng_on, on, boundary = scenario(True)
+    eng_off, off, _ = scenario(False)
+    # prefix caching preserves the serving contract bit-for-bit
+    assert on == off
+    # ...while actually moving the boundary: the re-prefill resumed from
+    # the victim's registered decode blocks instead of recomputing
+    assert eng_on.alloc.hit_blocks >= 1
+    assert eng_on.prefill_tokens_skipped >= 4
+    assert eng_off.prefill_tokens_skipped == 0
+
+    # never-preempted reference (same request, big enough pool)
+    ref_eng = PagedServeEngine(arch, params, EngineConfig(
+        slots=2, max_len=32, block_len=4, num_blocks=17, min_bucket=4))
+    ref_eng.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32) + 7,
+                           max_new_tokens=25))
+    ref = list(ref_eng.run_until_drained(max_iters=300)[0].output)
+    # guaranteed: the pre-preemption tokens are immutable
+    assert on[0][:boundary] == ref[:boundary]
+    # documented (not guaranteed): a near-tie flip past the boundary
+    assert on[0] != ref
+    first_div = next(i for i, (x, y) in enumerate(zip(on[0], ref))
+                     if x != y)
+    assert first_div >= boundary
+
+
+def test_prefix_cache_ring_layout_opts_out():
+    """Sliding-window (ring) layouts disable prefix caching cleanly: a
+    ring layout that skipped its prefix prefill would leave in-window
+    pool positions unwritten, so the backend opts out — serving stays
+    token-identical to the cache-off config with zero cache traffic."""
+    cfg, arch, params = _matrix_setup("dense", "sliding", "float")
+
+    def run(pc):
+        eng = PagedServeEngine(arch, params, EngineConfig(
+            slots=2, max_len=48, block_len=8, prefix_cache=pc))
+        assert eng.ring
+        sys_prompt = (np.arange(16) % cfg.vocab).astype(np.int32)
+        for rid in range(3):
+            eng.submit(Request(
+                rid=rid,
+                prompt=np.concatenate([sys_prompt,
+                                       np.asarray([rid + 1], np.int32)]),
+                max_new_tokens=5))
+        out = {r.rid: list(r.output) for r in eng.run_until_drained()}
+        return eng, out
+
+    eng_on, out_on = run(True)
+    eng_off, out_off = run(False)
+    assert not eng_on.prefix_caching             # opted out, not half-on
+    assert out_on == out_off
+    assert eng_on.alloc.hit_blocks == 0
+    assert eng_on.prefill_tokens_skipped == 0
+    assert eng_on.alloc.free_blocks == eng_on.layout.usable_blocks
+    assert eng_on.ring_alloc.free_blocks == eng_on.layout.ring_num_blocks - 1
+
+
+# ---------------------------------------------------------------------------
 # Ring-block serving specifics
 # ---------------------------------------------------------------------------
 
