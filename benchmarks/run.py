@@ -74,6 +74,30 @@ def smoke() -> None:
         failures += 1
         print(f"prefix_cache_IMPORT_ERROR,0.0,{type(e).__name__}:{e}")
         traceback.print_exc(file=sys.stderr, limit=3)
+    try:
+        from repro.launch.mesh import make_serve_mesh
+        from repro.models.cache import KVShard
+        from repro.parallel.sharding import (
+            paged_cache_axes, pick_paged_serve_rules,
+        )
+        from repro.kernels.paged_attention.ref import (
+            paged_attention_sharded_oracle,
+        )
+        from repro.serve.config import EngineConfig as _EC
+        for fn in (make_serve_mesh, pick_paged_serve_rules,
+                   paged_cache_axes, paged_attention_sharded_oracle,
+                   KVShard):
+            if not callable(fn):
+                raise AttributeError(f"{fn!r} not callable")
+        ec = _EC()
+        for field in ("mesh_axes", "kv_shard"):
+            if not hasattr(ec, field):
+                raise AttributeError(f"EngineConfig.{field} missing")
+        print("repro.serve.mesh_surface,0.0,import_ok")
+    except Exception as e:  # noqa: BLE001
+        failures += 1
+        print(f"mesh_surface_IMPORT_ERROR,0.0,{type(e).__name__}:{e}")
+        traceback.print_exc(file=sys.stderr, limit=3)
     for mod in SERVE_MODULES:
         try:
             m = importlib.import_module(mod)

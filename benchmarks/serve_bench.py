@@ -35,6 +35,13 @@ Claims validated:
     prefill, so an argmax may flip only where the reference top-2 logits
     are within rounding distance);
 
+  * **mesh scaling** (ISSUE 7 shard_map serving): at a fixed per-device
+    block budget, the mesh-sharded pool's aggregate capacity scales with
+    device count — ≥ 1.8x the concurrent requests at 2 devices and
+    monotone to 8 — while outputs stay token-identical to the
+    single-device engine (heads mode slices the KV-head axis, blocks
+    mode partitions the pool; the sweep crosses both);
+
   * **QoS traffic classes** (ISSUE 5 scheduler/engine split): with every
     slot saturated by best-effort (``"be"``) traffic, the two-class QoS
     scheduler holds latency-critical (``"rt"``) p99 TTFT ≥ 4x below FCFS
@@ -259,6 +266,117 @@ def _prefix_cache_contrast(arch, params, cfg):
         "evictions": m["prefix_cache_evictions"],
         "near_tie_flips": len(flips),
         "token_identity": "exact or certified near-tie (float)",
+    }
+
+
+MESH_DEVICES = (1, 2, 4, 8)
+MESH_BUDGET = 13       # per-device block budget (incl. the trash block)
+MESH_SLOTS = 48
+MESH_NEW = 8
+
+# The sweep needs a multi-device runtime, and the host device count is
+# fixed at jax import — so the parent (which already imported jax on
+# however many devices it was given) runs the sweep in a child process
+# with 8 forced host devices. The child prints one JSON line.
+_MESH_CHILD = r"""
+import json, time
+import numpy as np
+import jax
+
+from repro import configs
+from repro.models import registry, schema as schema_lib
+from repro.serve import EngineConfig, LLMEngine
+from repro.launch.mesh import make_serve_mesh
+
+DEVICES, BUDGET, SLOTS, NEW, BLOCK_LEN = {params}
+
+cfg = configs.smoke_config("phi3-mini-3.8b")
+arch = registry.build(cfg)
+params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+
+
+def workload():
+    # short requests: 4..8-token prompts + NEW decoded tokens stay inside
+    # 2 blocks each, so capacity = usable_blocks // 2 per device
+    rng = np.random.default_rng(11)
+    return [rng.integers(0, cfg.vocab, size=int(rng.integers(4, 9))
+                         ).astype(np.int32) for _ in range(SLOTS)]
+
+
+entries, base = [], None
+for n in DEVICES:
+    mesh = make_serve_mesh(n)
+    # num_blocks = BUDGET * n holds per-device bytes fixed in BOTH modes:
+    # heads mode stores all blocks but a 1/n head-slice of each; blocks
+    # mode stores full-head blocks but only 1/n of them
+    ec = EngineConfig(slots=SLOTS, max_len=64, block_len=BLOCK_LEN,
+                     backend="paged", num_blocks=BUDGET * n,
+                     admit_batch=SLOTS)
+    eng = LLMEngine(arch, params, ec, mesh=mesh)
+    for rid, p in enumerate(workload()):
+        eng.add_request(p, max_new_tokens=NEW, rid=rid)
+    out = {r.rid: list(r.output) for r in eng.run_until_drained()}
+    if base is None:
+        base = out
+    assert out == base, f"mesh={n} diverged from single-device output"
+    # timed second drain: every trace is warm, so this measures serving
+    for rid, p in enumerate(workload()):
+        eng.add_request(p, max_new_tokens=NEW, rid=10_000 + rid)
+    t0 = time.perf_counter()
+    eng.run_until_drained()
+    wall = time.perf_counter() - t0
+    m = eng.metrics()
+    entries.append({
+        "devices": n,
+        "kv_shard": eng.kv_mode,
+        "num_blocks": BUDGET * n,
+        "pool_bytes_per_device": max(
+            v for k, v in m.items() if k.startswith("pool_bytes_dev")),
+        "pool_blocks_total": m["pool_blocks_total"],
+        "concurrent": eng.max_concurrent,
+        "tokens_per_s": SLOTS * NEW / wall,
+    })
+print(json.dumps({"entries": entries}))
+"""
+
+
+def _mesh_scaling():
+    """Mesh capacity sweep at a fixed per-device block budget.
+
+    One child process with 8 forced host devices serves the same
+    short-request workload on 1/2/4/8-device meshes, each mesh given
+    ``MESH_BUDGET`` blocks of per-device pool memory; reports peak
+    concurrency and warm tokens/s per mesh. Outputs are asserted
+    token-identical across device counts inside the child."""
+    import os
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"),
+                    env.get("PYTHONPATH", "")) if p)
+    child = _MESH_CHILD.replace("{params}", repr(
+        (MESH_DEVICES, MESH_BUDGET, MESH_SLOTS, MESH_NEW, BLOCK_LEN)))
+    proc = subprocess.run([sys.executable, "-c", child], env=env,
+                          capture_output=True, text=True, timeout=3600)
+    assert proc.returncode == 0, (
+        f"mesh scaling child failed:\n{proc.stderr[-4000:]}")
+    entries = json.loads(proc.stdout.strip().splitlines()[-1])["entries"]
+    cap = {e["devices"]: e["concurrent"] for e in entries}
+    return {
+        "arch": "phi3-mini-3.8b",
+        "block_len": BLOCK_LEN,
+        "budget_blocks_per_device": MESH_BUDGET,
+        "slots": MESH_SLOTS,
+        "entries": entries,
+        "capacity_ratio_2dev": cap[2] / cap[1],
+        "capacity_ratio_8dev": cap[8] / cap[1],
+        "token_identical_across_meshes": True,
     }
 
 
@@ -568,6 +686,21 @@ def main(csv: bool = True):
         f"near_tie_flips={prefix_cache['near_tie_flips']}",
     ))
 
+    # mesh scaling (child process, 8 forced host devices): fixed
+    # per-device block budget, capacity + tokens/s at 1/2/4/8 devices
+    mesh_scaling = _mesh_scaling()
+    mesh_caps = {e["devices"]: e["concurrent"]
+                 for e in mesh_scaling["entries"]}
+    rows.append((
+        "serve_paged_mesh_scaling", 0.0,
+        "concurrent=" + "/".join(
+            f"{mesh_caps[n]}@{n}dev" for n in MESH_DEVICES)
+        + f"|2dev_ratio={mesh_scaling['capacity_ratio_2dev']:.2f}x "
+        f"(claim: >=1.8x)|"
+        f"8dev_ratio={mesh_scaling['capacity_ratio_8dev']:.2f}x|"
+        f"budget={MESH_BUDGET} blocks/device|identical=yes",
+    ))
+
     # QoS traffic classes: rt-vs-be TTFT under full be contention, FCFS
     # vs the two-class QoS scheduler (same workload, same backend)
     qos_classes = _qos_contention(arch, params, cfg)
@@ -607,6 +740,7 @@ def main(csv: bool = True):
                 "sliding_window": sliding,
                 "int8_blocks": int8_blocks,
                 "prefix_cache": prefix_cache,
+                "mesh_scaling": mesh_scaling,
             },
             "qos_classes": qos_classes,
         }, f, indent=2)
@@ -634,6 +768,15 @@ def main(csv: bool = True):
         f"{prefix_cache['ttft_reduction']:.2f}x on a "
         f"{prefix_cache['shared_fraction']:.0%}-shared workload "
         f"(claim: >=1.5x)")
+    assert mesh_scaling["capacity_ratio_2dev"] >= 1.8, (
+        f"2-device mesh admitted only "
+        f"{mesh_scaling['capacity_ratio_2dev']:.2f}x the single-device "
+        f"concurrency at an equal per-device pool budget (claim: >=1.8x)")
+    for lo, hi in zip(MESH_DEVICES, MESH_DEVICES[1:]):
+        assert mesh_caps[hi] >= mesh_caps[lo], (
+            f"mesh capacity not monotone: {mesh_caps[lo]} concurrent at "
+            f"{lo} devices but {mesh_caps[hi]} at {hi}")
+    assert mesh_caps[8] > mesh_caps[1], "mesh capacity flat from 1->8 devices"
     assert qos_classes["rt_p99_improvement"] >= 4.0, (
         f"QoS scheduler lowered rt p99 TTFT only "
         f"{qos_classes['rt_p99_improvement']:.2f}x vs FCFS (claim: >=4x)")

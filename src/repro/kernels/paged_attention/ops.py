@@ -32,6 +32,15 @@ softmax is f32 flash over the same exact integer score dots (contract:
 backends that implement int8 blocks at all — engines validate against it
 at config time so a quantized arch on an unsupported backend fails at
 construction, not mid-serve inside a jitted step.
+
+**Mesh-sharded serving**: every backend here is *rank-local* — inside a
+``shard_map``'d decode step each rank calls these ops on its local pool
+shard (a KV-head slice in "heads" mode, a block slice plus local table in
+"blocks" mode) and the serving layer handles the one collective per layer
+(output all-gather / owner-masked psum). The ops themselves contain no
+collectives and are shape-generic over the sharded extents;
+``ref.paged_attention_sharded_oracle`` is the head-sharded harness that
+pins the bit-identity of this arrangement.
 """
 
 from __future__ import annotations

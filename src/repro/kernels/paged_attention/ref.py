@@ -176,3 +176,47 @@ def paged_attention_int8_dequant_ref(
     out = jnp.einsum("bhgk,bhkd->bhgd", p * entry_scale(v_scale),
                      v8.astype(jnp.float32))
     return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+def paged_attention_sharded_oracle(
+    q: jax.Array,            # [B, Hq, 1, D] float
+    k_pool: jax.Array,       # [N, Hkv, blk, D]
+    v_pool: jax.Array,       # [N, Hkv, blk, D]
+    block_table: jax.Array,  # [B, M] int32
+    lens: jax.Array,         # [B] int32
+    mesh,
+    *,
+    axis: str = "model",
+    window: Optional[int] = None,
+    start: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Head-sharded shard_map harness over ``paged_attention_ref``.
+
+    Splits the KV-head axis of the pools (and the grouped query heads)
+    over ``mesh[axis]``, runs the rank-local oracle on each shard, and
+    reassembles the output on its head axis. Because decode attention is
+    per-head independent, the result is *bit-identical* to the one-device
+    oracle — this is the contract the mesh-sharded serving path's
+    "heads" mode builds on, and what the sharded tests pin down.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.compat import shard_map
+
+    nshard = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    hkv = k_pool.shape[1]
+    if hkv % nshard:
+        raise ValueError(
+            f"KV heads ({hkv}) must divide the '{axis}' mesh axis "
+            f"({nshard}) — block-shard the pool instead")
+
+    def body(q, kp, vp, bt, ln, st):
+        return paged_attention_ref(q, kp, vp, bt, ln, window=window,
+                                   start=st)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, axis), P(None, axis), P(None, axis), P(), P(),
+                  P()),
+        out_specs=P(None, axis), check_rep=False)
+    return fn(q, k_pool, v_pool, block_table, lens, start)

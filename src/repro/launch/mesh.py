@@ -36,3 +36,19 @@ def make_host_mesh(model: int = 1):
     data = n // model
     devs = np.asarray(jax.devices()[: data * model]).reshape(data, model)
     return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+def make_serve_mesh(model: int = 1):
+    """1-axis ``("model",)`` mesh over the first ``model`` devices — the
+    shape ``LLMEngine`` shards the paged KV pool over. Unlike
+    ``make_host_mesh`` it takes a device *count*, so benchmarks can build
+    1/2/4/8-device meshes out of one forced-host-device pool."""
+    import jax
+
+    devs = jax.devices()
+    if len(devs) < model:
+        raise RuntimeError(
+            f"need {model} devices, have {len(devs)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={model}")
+    return jax.sharding.Mesh(
+        np.asarray(devs[:model]).reshape(model), ("model",))

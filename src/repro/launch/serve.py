@@ -73,6 +73,16 @@ def main():
     ap.add_argument("--be-token-share", type=float, default=None,
                     help="qos scheduler: cap the best-effort share of "
                          "decode tokens while rt traffic waits (0, 1)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="shard the paged KV pool over this many devices "
+                         "(0 = no mesh; run under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N on CPU)")
+    ap.add_argument("--kv-shard", choices=("auto", "heads", "blocks"),
+                    default="auto",
+                    help="mesh sharding strategy: 'heads' slices the "
+                         "KV-head axis (bit-identical), 'blocks' gives "
+                         "each device a slice of the block pool; 'auto' "
+                         "picks heads when the head count divides --mesh")
     args = ap.parse_args()
 
     import jax
@@ -100,8 +110,23 @@ def main():
                       backend=backend, scheduler=args.scheduler,
                       rt_window=args.rt_window,
                       prefix_cache=args.prefix_cache,
-                      be_token_share=args.be_token_share)
-    engine = LLMEngine(arch, params, ec)
+                      be_token_share=args.be_token_share,
+                      kv_shard=args.kv_shard)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(args.mesh)
+    engine = LLMEngine(arch, params, ec, mesh=mesh)
+    if mesh is not None:
+        em = engine.metrics()
+        per_dev = {k: v for k, v in em.items()
+                   if k.startswith("pool_bytes_dev")}
+        print(f"mesh: {engine.ndev} devices, kv_shard={engine.kv_mode}, "
+              f"pool {em['pool_bytes_total'] / 2**20:.2f} MiB total, "
+              f"per-device "
+              + " ".join(f"{k.removeprefix('pool_bytes_')}="
+                         f"{v / 2**20:.2f}MiB"
+                         for k, v in sorted(per_dev.items())))
     rng = np.random.default_rng(0)
     shared = rng.integers(0, model.vocab,
                           size=args.shared_prefix).astype(np.int32)

@@ -622,6 +622,90 @@ def gather_prefix_kv(pool: jax.Array, prefix_ids: jax.Array,
     return g.transpose(1, 0, 2, 3).reshape(1, hkv, j * blk, d)
 
 
+# ---------------------------------------------------------------------------
+# Mesh-sharded paged serving (the software twin of the paper's shared-L2
+# island interleaving banks across clusters): inside a shard_map'd decode /
+# prefill step, each device holds either a KV-head slice of every pool
+# block ("heads" mode) or a block slice of the whole pool ("blocks" mode).
+# The model layers stay mode-agnostic — they call the `kv_shard_*` hooks
+# below, all of which are no-ops when `shard` is None or single-device.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KVShard:
+    """Rank-local view of the paged-pool sharding, constructed *inside* the
+    shard-mapped step function (``owner`` may hold traced values).
+
+      * mode "heads": pool leaves are sliced on the KV-head axis; layers
+        slice Q/K/V to the local heads, attend locally, and all-gather the
+        attention output (one collective per layer, bit-identical since
+        attention is per-head independent).
+      * mode "blocks": pool leaves are sliced on the block axis; every
+        device runs the full layer math against its *local* block table
+        (non-owner rows point at the per-device trash block 0), and the
+        true rows are selected by a masked psum keyed on ``owner`` — the
+        device each slot's blocks live on.
+    """
+
+    mode: str                       # "heads" | "blocks"
+    axis: str = "model"
+    nshard: int = 1
+    owner: Optional[object] = None  # blocks mode: [slots] int32 (decode)
+    #                                 or scalar int32 (prefill slot owner)
+
+
+def kv_shard_slice(shard: Optional[KVShard], q, k, v):
+    """Heads mode: slice K/V to the rank-local KV heads and Q to the
+    matching grouped query heads (GQA groups are contiguous: q head h
+    serves kv head ``h // (hq // hkv)``)."""
+    if shard is None or shard.mode != "heads" or shard.nshard == 1:
+        return q, k, v
+    hq, hkv = q.shape[1], k.shape[1]
+    group = hq // hkv
+    kvl = hkv // shard.nshard
+    i0 = jax.lax.axis_index(shard.axis) * kvl
+    q = jax.lax.dynamic_slice_in_dim(q, i0 * group, kvl * group, axis=1)
+    k = jax.lax.dynamic_slice_in_dim(k, i0, kvl, axis=1)
+    v = jax.lax.dynamic_slice_in_dim(v, i0, kvl, axis=1)
+    return q, k, v
+
+
+def kv_shard_allgather(shard: Optional[KVShard], o, *, axis: int = 1):
+    """Heads mode: gather per-rank attention outputs back to the full head
+    dimension (tiled all-gather in rank order restores contiguous GQA head
+    order) — the single collective of a head-sharded layer."""
+    if shard is None or shard.mode != "heads" or shard.nshard == 1:
+        return o
+    return jax.lax.all_gather(o, shard.axis, axis=axis, tiled=True)
+
+
+def kv_shard_owner_rows(shard: Optional[KVShard], o):
+    """Blocks mode (decode): keep each slot row from the device that owns
+    its blocks. Non-owner rows attended per-device trash garbage; they are
+    multiplied by an exact 0.0 before the psum, so the result is the
+    owner's row bit-for-bit, replicated everywhere."""
+    if shard is None or shard.mode != "blocks" or shard.nshard == 1:
+        return o
+    rank = jax.lax.axis_index(shard.axis)
+    mask = (jnp.asarray(shard.owner, jnp.int32) == rank).astype(o.dtype)
+    mask = mask.reshape(mask.shape + (1,) * (o.ndim - 1))
+    return jax.lax.psum(o * mask, shard.axis)
+
+
+def kv_shard_prefix(shard: Optional[KVShard], kp, vp):
+    """Blocks mode (prefill): broadcast the gathered prefix K/V from the
+    slot's owner device. Non-owners gathered trash (their local prefix ids
+    are 0); after this psum every device attends the true prefix, so the
+    replicated suffix math stays correct on all ranks."""
+    if shard is None or shard.mode != "blocks" or shard.nshard == 1:
+        return kp, vp
+    rank = jax.lax.axis_index(shard.axis)
+    own = (jnp.asarray(shard.owner, jnp.int32) == rank)
+    return (jax.lax.psum(kp * own.astype(kp.dtype), shard.axis),
+            jax.lax.psum(vp * own.astype(vp.dtype), shard.axis))
+
+
 def ring_table_row(ring_ids, first_bi: int):
     """Host-side rotated ring-table row: entry ``j`` is the pool block of
     absolute block index ``first_bi + j`` (entry 0 = oldest live block)."""

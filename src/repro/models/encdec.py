@@ -145,15 +145,20 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, quantized=None):
 
 
 def _dec_prefill_layer(xc, p, enc, cfg: ModelConfig, positions, *,
-                       kv_prefix=None):
+                       kv_prefix=None, shard=None):
     """One decoder-layer prefill application; returns (x, k, v, xk, xv —
     the newly computed positions only). Shared by ``prefill`` and
     ``paged_prefill`` so the dense and paged write paths can never diverge
     in how layers are applied. ``kv_prefix`` resumes a prefix-cache hit:
     self-attention runs [prefix ++ suffix] at ``q_offset`` (cross
-    attention is position-free — unchanged)."""
+    attention is position-free — unchanged). ``shard`` (heads mode): only
+    the paged *self*-attention is head-sliced + output-all-gathered; the
+    fixed-size cross-attention arena stays replicated."""
+    from repro.models.cache import kv_shard_allgather, kv_shard_slice
+
     h = nn.rms_norm(xc, p["ln1"])
     q, k, v = dense._project_qkv(h, p, cfg, positions)
+    q, k, v = kv_shard_slice(shard, q, k, v)
     ka, va, q_off = k, v, 0
     if kv_prefix is not None:
         kp, vp = kv_prefix
@@ -163,6 +168,7 @@ def _dec_prefill_layer(xc, p, enc, cfg: ModelConfig, positions, *,
     o = attn.chunked_attention(q, ka, va, causal=True,
                                chunk_q=min(cfg.attn_chunk_q, xc.shape[1]),
                                q_offset=q_off)
+    o = kv_shard_allgather(shard, o)
     xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
     xk, xv = _enc_kv(p, enc, cfg)
     xc = _cross_attn(xc, p, (xk, xv), cfg)
@@ -260,7 +266,7 @@ def paged_insert(cache, single, slot, block_ids, cfg: ModelConfig):
 
 def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
                   *, ring_ids=None, true_len=None, embeds=None,
-                  prefix_ids=None, start=0):
+                  prefix_ids=None, start=0, shard=None):
     """Encode audio + ingest decoder prompt straight into the paged cache:
     self-attention K/V lands in pool blocks (bulk block writes, tail at
     block granularity), cross-attention K/V and the position counter land
@@ -275,7 +281,7 @@ def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
     in full — they are per-request (``embeds``-dependent), not shareable
     block residency."""
     from repro.models.cache import (
-        gather_prefix_kv, prefill_write_kv, quantize_kv,
+        gather_prefix_kv, kv_shard_prefix, prefill_write_kv, quantize_kv,
     )
 
     if ring_ids is not None:
@@ -305,10 +311,13 @@ def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
         p, kc, vc, ksc, vsc = slices
         kv_prefix = None
         if prefix_ids is not None:
-            kv_prefix = (gather_prefix_kv(kc, prefix_ids, scale=ksc),
-                         gather_prefix_kv(vc, prefix_ids, scale=vsc))
+            kv_prefix = kv_shard_prefix(
+                shard,
+                gather_prefix_kv(kc, prefix_ids, scale=ksc),
+                gather_prefix_kv(vc, prefix_ids, scale=vsc))
         xc, k, v, xk, xv = _dec_prefill_layer(xc, p, enc, cfg, positions,
-                                              kv_prefix=kv_prefix)
+                                              kv_prefix=kv_prefix,
+                                              shard=shard)
         if kc.dtype == jnp.int8:   # int8 block pool (serve_quant layout)
             k = quantize_kv(k, attn.KV_SCALE)
             v = quantize_kv(v, attn.KV_SCALE)
@@ -334,16 +343,21 @@ def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
 
 
 def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
-                      qparams=None, embeds=None, attn_backend: str = "xla"):
+                      qparams=None, embeds=None, attn_backend: str = "xla",
+                      shard=None):
     """One decode step with paged self-attention KV (cross K/V stays dense).
 
     Int8 block pools take ``paged_attention_int8`` (requantized write +
     ITA/xla or fused-kernel attention over the int8 blocks); the per-layer
-    scale vectors ride through the scan alongside the pools."""
+    scale vectors ride through the scan alongside the pools. ``shard``
+    (``cache.KVShard``): only the paged self-attention is sharded; the
+    per-slot cross K/V arena is replicated in both modes."""
     from repro.kernels.paged_attention.ops import (
         paged_attention, paged_attention_int8,
     )
-    from repro.models.cache import quantize_kv
+    from repro.models.cache import (
+        kv_shard_allgather, kv_shard_owner_rows, kv_shard_slice, quantize_kv,
+    )
 
     del qparams
     x = nn.embed(tokens[:, None], params["embed"], cfg.compute_dtype)
@@ -364,6 +378,7 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
         v = nn.dense(h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
         q = nn.rope(q, pos[:, None, None], cfg.rope_theta)
         k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
+        q, k, v = kv_shard_slice(shard, q, k, v)
         if int8_kv:
             k, v = quantize_kv(k, attn.KV_SCALE), quantize_kv(v, attn.KV_SCALE)
         sc = dense._paged_cache_write({"k": kc, "v": vc}, k, v, pos, tbl,
@@ -375,6 +390,8 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
                                      backend=attn_backend)
         else:
             o = paged_attention(q, kc, vc, tbl, pos + 1, backend=attn_backend)
+        o = kv_shard_allgather(shard, o)
+        o = kv_shard_owner_rows(shard, o)
         xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
         hx = nn.rms_norm(xc, p["lnx"])
         xq = nn.dense(hx, p["xwq"]).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)

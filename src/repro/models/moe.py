@@ -336,11 +336,14 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
     return logits[:, 0], dict(cache, len=cache["len"] + 1)
 
 
-def _paged_decode_layer(x, p, c, kind, cfg, pos, table, attn_backend):
+def _paged_decode_layer(x, p, c, kind, cfg, pos, table, attn_backend,
+                        shard=None):
     from repro.kernels.paged_attention.ops import (
         paged_attention, paged_attention_int8,
     )
-    from repro.models.cache import quantize_kv
+    from repro.models.cache import (
+        kv_shard_allgather, kv_shard_owner_rows, kv_shard_slice, quantize_kv,
+    )
 
     h = nn.rms_norm(x, p["ln1"])
     b = x.shape[0]
@@ -350,6 +353,7 @@ def _paged_decode_layer(x, p, c, kind, cfg, pos, table, attn_backend):
     v = nn.dense(h, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
     q = nn.rope(q, pos[:, None, None], cfg.rope_theta)
     k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
+    q, k, v = kv_shard_slice(shard, q, k, v)
     tbl, start = dense._resolve_paged_table(table, kind)
     window = cfg.local_window if kind == "L" else None
     if c["k"].dtype == jnp.int8:   # int8 block pool (serve_quant layout)
@@ -365,15 +369,18 @@ def _paged_decode_layer(x, p, c, kind, cfg, pos, table, attn_backend):
                                      start=start)
         o = paged_attention(q, c["k"], c["v"], tbl, pos + 1,
                             window=window, start=start, backend=attn_backend)
+    o = kv_shard_allgather(shard, o)
+    o = kv_shard_owner_rows(shard, o)
     x = x + nn.dense(dense._merge_heads(o), p["wo"])
     x = x + moe_mlp(nn.rms_norm(x, p["ln2"]), p, cfg)
     return x, c
 
 
 def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
-                      qparams=None, embeds=None, attn_backend: str = "xla"):
+                      qparams=None, embeds=None, attn_backend: str = "xla",
+                      shard=None):
     """One decode step against the paged block pool (see the dense family's
-    ``paged_decode_step`` for the block-table convention)."""
+    ``paged_decode_step`` for the block-table and ``shard`` conventions)."""
     del qparams  # MoE serving runs the float path
     pattern, n_groups, tail = cfg.layer_layout()
     x = embeds if embeds is not None else nn.embed(
@@ -387,7 +394,7 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
         for i, kind in enumerate(pattern):
             xc, c = _paged_decode_layer(
                 xc, stacks_slice[i], cache_slice[i], kind, cfg, pos, table,
-                attn_backend)
+                attn_backend, shard=shard)
             new_caches.append(c)
         return xc, tuple(new_caches)
 
@@ -399,7 +406,7 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
         p = jax.tree.map(lambda a: a[0], params["tail"][i])
         c_in = jax.tree.map(lambda a: a[0], cache["tail"][i])
         x, c = _paged_decode_layer(x, p, c_in, kind, cfg, pos, table,
-                                   attn_backend)
+                                   attn_backend, shard=shard)
         cache["tail"][i] = jax.tree.map(lambda a: a[None], c)
     x = nn.rms_norm(x, params["final_norm"])
     tbl = params["embed"] if cfg.tie_embeddings else params["unembed"]
@@ -408,7 +415,7 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
 
 
 def _prefill_layer(xc, p, kind, cfg: ModelConfig, positions, *,
-                   kv_prefix=None):
+                   kv_prefix=None, shard=None):
     """One prefill layer application; returns (x, this layer's k, v — the
     newly computed positions only). Shared by ``prefill`` and
     ``paged_prefill`` so the two write paths can never diverge in how
@@ -417,8 +424,11 @@ def _prefill_layer(xc, p, kind, cfg: ModelConfig, positions, *,
     ``q_offset``); note the expert router below still only sees the
     *suffix* tokens — cached-prefix tokens are never re-routed, which is
     the point, but it means ``_capacity`` is sized to the suffix length."""
+    from repro.models.cache import kv_shard_allgather, kv_shard_slice
+
     h = nn.rms_norm(xc, p["ln1"])
     q, k, v = dense._project_qkv(h, p, cfg, positions)
+    q, k, v = kv_shard_slice(shard, q, k, v)
     ka, va, q_off = k, v, 0
     if kv_prefix is not None:
         kp, vp = kv_prefix
@@ -430,6 +440,7 @@ def _prefill_layer(xc, p, kind, cfg: ModelConfig, positions, *,
         window=cfg.local_window if kind == "L" else None,
         chunk_q=min(cfg.attn_chunk_q, xc.shape[1]),
         q_offset=q_off)
+    o = kv_shard_allgather(shard, o)
     xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
     xc = xc + moe_mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
     return xc, k, v
@@ -492,7 +503,7 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, embeds=None):
 
 def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
                   *, ring_ids=None, true_len=None, embeds=None,
-                  prefix_ids=None, start=0):
+                  prefix_ids=None, start=0, shard=None):
     """MoE prefill straight into pool blocks: the dense family's shared
     scaffold with this family's expert-FFN layer (see ``dense.
     _paged_prefill_impl`` for the write conventions). ``tokens`` should be
@@ -508,7 +519,7 @@ def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
     return dense._paged_prefill_impl(
         params, tokens, cfg, cache, slot, block_ids, layer_fn=_prefill_layer,
         ring_ids=ring_ids, true_len=true_len, embeds=embeds,
-        prefix_ids=prefix_ids, start=start)
+        prefix_ids=prefix_ids, start=start, shard=shard)
 
 
 # ---------------------------------------------------------------------------

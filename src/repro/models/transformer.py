@@ -391,7 +391,7 @@ def _paged_cache_write(c, k_new, v_new, pos, table, block_len: int,
 
 
 def _paged_decode_layer(x, p, c, kind, cfg: ModelConfig, pos, table, *,
-                        qparams=None, attn_backend: str = "xla"):
+                        qparams=None, attn_backend: str = "xla", shard=None):
     """One-token decode through one layer against the paged pool.
 
     Int8 block pools (``c["k"].dtype == int8``) take the fused quantized
@@ -399,10 +399,18 @@ def _paged_decode_layer(x, p, c, kind, cfg: ModelConfig, pos, table, *,
     ``paged_attention_int8`` over the pool — no dense gather, no float
     copy of the history. The ``xla`` backend of that op is the ITA gather
     oracle, bit-identical to the dense int8 reference.
+
+    ``shard`` (``cache.KVShard``, inside a shard_map'd step): heads mode
+    slices Q/K/V to the rank-local heads before the write/attend and
+    all-gathers the attention output; blocks mode attends the rank-local
+    block table and keeps owner rows via a masked psum. Either way the
+    attention op itself stays rank-local.
     """
     from repro.kernels.paged_attention.ops import paged_attention
     from repro.kernels.paged_attention.ops import paged_attention_int8
-    from repro.models.cache import quantize_kv
+    from repro.models.cache import (
+        kv_shard_allgather, kv_shard_owner_rows, kv_shard_slice, quantize_kv,
+    )
 
     int8_w = qparams is not None
     int8_kv = c["k"].dtype == jnp.int8
@@ -422,6 +430,7 @@ def _paged_decode_layer(x, p, c, kind, cfg: ModelConfig, pos, table, *,
     v = lin("wv", h).reshape(b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
     q = nn.rope(q, pos[:, None, None], cfg.rope_theta)
     k = nn.rope(k, pos[:, None, None], cfg.rope_theta)
+    q, k, v = kv_shard_slice(shard, q, k, v)
 
     window = cfg.local_window if kind == "L" else None
     tbl, start = _resolve_paged_table(table, kind)
@@ -438,6 +447,8 @@ def _paged_decode_layer(x, p, c, kind, cfg: ModelConfig, pos, table, *,
         o = paged_attention(q, c["k"], c["v"], tbl, pos + 1,
                             window=window, start=start,
                             backend=attn_backend)
+    o = kv_shard_allgather(shard, o)
+    o = kv_shard_owner_rows(shard, o)
     x = x + lin("wo", _merge_heads(o))
     h = nn.rms_norm(x, p["ln2"])
     act = nn.ACTIVATIONS[cfg.act]
@@ -446,7 +457,8 @@ def _paged_decode_layer(x, p, c, kind, cfg: ModelConfig, pos, table, *,
 
 
 def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
-                      qparams=None, embeds=None, attn_backend: str = "xla"):
+                      qparams=None, embeds=None, attn_backend: str = "xla",
+                      shard=None):
     """One decode step against the paged block pool.
 
     ``table`` [slots, max_blocks] int32 maps each row's position ``p`` to
@@ -455,7 +467,9 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
     (fixed shape, so the step never retraces). When sliding-window layers
     store ring blocks, ``table`` is instead the dict ``{"full": [slots,
     max_blocks], "ring": [slots, ring_blocks], "start": [slots]}`` (see
-    ``_resolve_paged_table``).
+    ``_resolve_paged_table``). ``shard`` (``cache.KVShard``) threads the
+    mesh-sharded pool view through every layer — see
+    ``_paged_decode_layer``.
     """
     pattern, n_groups, tail = cfg.layer_layout()
     x = embeds if embeds is not None else nn.embed(
@@ -470,7 +484,7 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
             xc, c = _paged_decode_layer(
                 xc, stacks_slice[i], cache_slice[i], kind, cfg, pos, table,
                 qparams=None if q_slice is None else q_slice[i],
-                attn_backend=attn_backend,
+                attn_backend=attn_backend, shard=shard,
             )
             new_caches.append(c)
         return xc, tuple(new_caches)
@@ -489,7 +503,8 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
             qp = jax.tree.map(lambda a: a[0], qparams["tail"][i])
         c_in = jax.tree.map(lambda a: a[0], cache["tail"][i])
         x, c = _paged_decode_layer(x, p, c_in, kind, cfg, pos, table,
-                                   qparams=qp, attn_backend=attn_backend)
+                                   qparams=qp, attn_backend=attn_backend,
+                                   shard=shard)
         cache["tail"][i] = jax.tree.map(lambda a: a[None], c)
 
     x = nn.rms_norm(x, params["final_norm"])
@@ -532,7 +547,7 @@ def paged_insert(cache, single, slot, block_ids, cfg: ModelConfig):
 
 def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
                   *, ring_ids=None, true_len=None, embeds=None,
-                  prefix_ids=None, start=0):
+                  prefix_ids=None, start=0, shard=None):
     """Prefill straight into pool blocks: forward pass + per-layer K/V
     writes into the paged ``cache`` — no intermediate dense bucket cache,
     no splice dispatch. Returns ``(last-position logits, updated cache)``.
@@ -551,12 +566,12 @@ def paged_prefill(params, tokens, cfg: ModelConfig, cache, slot, block_ids,
     return _paged_prefill_impl(
         params, tokens, cfg, cache, slot, block_ids, layer_fn=_prefill_layer,
         ring_ids=ring_ids, true_len=true_len, embeds=embeds,
-        prefix_ids=prefix_ids, start=start)
+        prefix_ids=prefix_ids, start=start, shard=shard)
 
 
 def _paged_prefill_impl(params, tokens, cfg: ModelConfig, cache, slot,
                         block_ids, *, layer_fn, ring_ids=None, true_len=None,
-                        embeds=None, prefix_ids=None, start=0):
+                        embeds=None, prefix_ids=None, start=0, shard=None):
     """Shared paged-prefill scaffold (block writes, scan over groups, tail
     layers, last-real-token logits, slot position update). ``layer_fn`` is
     the family's per-layer prefill application — the MoE family reuses
@@ -577,7 +592,7 @@ def _paged_prefill_impl(params, tokens, cfg: ModelConfig, cache, slot,
     requantization the dense serving reference applies, so pool contents
     are bit-identical to what the dense arena holds."""
     from repro.models.cache import (
-        gather_prefix_kv, prefill_write_kv, quantize_kv,
+        gather_prefix_kv, kv_shard_prefix, prefill_write_kv, quantize_kv,
         ring_prefill_write_kv,
     )
 
@@ -615,17 +630,21 @@ def _paged_prefill_impl(params, tokens, cfg: ModelConfig, cache, slot,
         write — prefix blocks are disjoint from ``block_ids`` anyway)."""
         if prefix_ids is None:
             return None
-        return (gather_prefix_kv(c_kv["k"], prefix_ids,
-                                 scale=c_kv.get("kscale")),
-                gather_prefix_kv(c_kv["v"], prefix_ids,
-                                 scale=c_kv.get("vscale")))
+        kp = gather_prefix_kv(c_kv["k"], prefix_ids,
+                              scale=c_kv.get("kscale"))
+        vp = gather_prefix_kv(c_kv["v"], prefix_ids,
+                              scale=c_kv.get("vscale"))
+        # block-sharded pools: only the slot's owner gathered real blocks;
+        # broadcast so every rank attends the true prefix
+        return kv_shard_prefix(shard, kp, vp)
 
     def group_body(xc, slices):
         stacks_slice, cache_slice = slices
         new_caches = []
         for i, kind in enumerate(pattern):
             xc, k, v = layer_fn(xc, stacks_slice[i], kind, cfg, positions,
-                                kv_prefix=prefix_of(cache_slice[i]))
+                                kv_prefix=prefix_of(cache_slice[i]),
+                                shard=shard)
             new_caches.append(write(cache_slice[i], k, v, kind))
         return xc, tuple(new_caches)
 
@@ -637,7 +656,7 @@ def _paged_prefill_impl(params, tokens, cfg: ModelConfig, cache, slot,
         p = jax.tree.map(lambda a: a[0], params["tail"][i])
         c_in = jax.tree.map(lambda a: a[0], cache["tail"][i])
         x, k, v = layer_fn(x, p, kind, cfg, positions,
-                           kv_prefix=prefix_of(c_in))
+                           kv_prefix=prefix_of(c_in), shard=shard)
         cache["tail"][i] = jax.tree.map(
             lambda a: a[None], write(c_in, k, v, kind))
 
@@ -664,7 +683,7 @@ PAGED_INT8_KV = True
 
 
 def _prefill_layer(xc, p, kind: str, cfg: ModelConfig, positions, *,
-                   kv_prefix=None):
+                   kv_prefix=None, shard=None):
     """One prefill layer application; returns (x, this layer's k, v — the
     *newly computed* positions only). Shared by ``prefill`` and
     ``paged_prefill`` so the dense and paged write paths can never diverge
@@ -675,9 +694,17 @@ def _prefill_layer(xc, p, kind: str, cfg: ModelConfig, positions, *,
     [prefix ++ suffix] with ``q_offset`` placing row 0 at the global
     position right after the prefix — ``chunked_attention``'s causal and
     window masks then bind by absolute position, so local ("L") layers
-    whose full-history window reaches into the prefix stay exact."""
+    whose full-history window reaches into the prefix stay exact.
+
+    ``shard`` (``cache.KVShard``, heads mode only): slice to the local
+    heads, attend locally, all-gather the output; the returned k/v are the
+    local-head slice the caller writes into its local pool leaf. Blocks
+    mode needs no hook here — prefill math is replicated and the write
+    path diverts non-owner ranks to their trash block."""
     h = nn.rms_norm(xc, p["ln1"])
     q, k, v = _project_qkv(h, p, cfg, positions)
+    from repro.models.cache import kv_shard_allgather, kv_shard_slice
+    q, k, v = kv_shard_slice(shard, q, k, v)
     ka, va, q_off = k, v, 0
     if kv_prefix is not None:
         kp, vp = kv_prefix
@@ -690,6 +717,7 @@ def _prefill_layer(xc, p, kind: str, cfg: ModelConfig, positions, *,
         chunk_q=min(cfg.attn_chunk_q, xc.shape[1]),
         q_offset=q_off,
     )
+    o = kv_shard_allgather(shard, o)
     xc = xc + nn.dense(_merge_heads(o), p["wo"])
     xc = xc + _mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
     return xc, k, v

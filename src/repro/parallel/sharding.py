@@ -103,8 +103,14 @@ def train_rules(fsdp: bool = True) -> Rules:
     ))
 
 
-def serve_rules(kv_shardable: bool = True, seq_sharded: bool = False) -> Rules:
-    """TP serving. ``seq_sharded`` turns on SP for long-context KV caches."""
+def serve_rules(kv_shardable: bool = True, seq_sharded: bool = False,
+                block_sharded: bool = False) -> Rules:
+    """TP serving. ``seq_sharded`` turns on SP for long-context KV caches;
+    ``block_sharded`` shards the *paged pool's block axis* instead of the
+    KV-head axis (the fallback when head count doesn't divide the mesh —
+    each device then owns a slice of ``num_blocks``). The ``blocks``
+    logical axis only appears in paged-cache axes trees
+    (``paged_cache_axes``); other rule tables simply never map it."""
     return Rules((
         ("batch", ("pod", "data")),
         ("seq", ("model",) if seq_sharded else None),
@@ -113,6 +119,7 @@ def serve_rules(kv_shardable: bool = True, seq_sharded: bool = False) -> Rules:
         ("embed_io", None),
         ("heads", ("model",)),
         ("kv", ("model",) if kv_shardable else None),
+        ("blocks", ("model",) if block_sharded else None),
         ("qkv", ("model",)),
         ("mlp", ("model",)),
         ("experts", ("model",)),
@@ -207,6 +214,68 @@ def cache_axes(cfg, cache):
         return tuple([None] * leaf.ndim)
 
     return jax.tree_util.tree_map_with_path(leaf_axes, cache)
+
+
+def paged_cache_axes(cfg, cache, *, ring: bool = False):
+    """Logical axes tree matching a *paged* cache pytree.
+
+    Full-history pools carry a ``blocks`` axis (axis 1 of
+    ``[n_stack, num_blocks, n_kv, block_len, head]``) and a ``kv`` axis, so
+    the same tree serves both sharding modes: head-sharded rules map ``kv``
+    and leave ``blocks`` replicated; block-sharded rules do the opposite.
+    Ring arenas (sliding-window ``L`` stacks when ``ring`` is set) are
+    window-bounded and stay replicated on the block axis in both modes;
+    encdec cross-attention pools (``xk``/``xv``) and per-slot state are
+    always replicated.
+    """
+    pattern, _, tail = cfg.layer_layout()
+
+    def kind_of(path):
+        entries = [(getattr(p, "key", None), getattr(p, "idx", None))
+                   for p in path]
+        for (key, _), (_, nidx) in zip(entries, entries[1:]):
+            if key == "stacks" and nidx is not None:
+                return pattern[nidx]
+            if key == "tail" and nidx is not None:
+                return tail[nidx]
+        return "G"
+
+    def leaf_axes(path, leaf):
+        key = getattr(path[-1], "key", None)
+        blocks = None if (ring and kind_of(path) == "L") else "blocks"
+        if key in ("k", "v"):
+            return ("layers", blocks, "kv", None, None)
+        if key in ("kscale", "vscale"):
+            return ("layers", blocks)
+        if key == "len":
+            return ("batch",)
+        # xk/xv (encdec cross-attention, per-slot) and anything unknown
+        return tuple([None] * leaf.ndim)
+
+    return jax.tree_util.tree_map_with_path(leaf_axes, cache)
+
+
+def pick_paged_serve_rules(cfg, mesh: Mesh, *, kv_shard: str = "auto"):
+    """Sharding strategy for the paged KV pool on a serve mesh.
+
+    Returns ``(rules, mode)`` where mode is ``"heads"`` (pool sharded on
+    the KV-head axis — bit-identical decode via one output all-gather) or
+    ``"blocks"`` (each device owns a slice of ``num_blocks``; slots pin to
+    the device holding their blocks — the fallback when the KV head count
+    doesn't divide the mesh). ``kv_shard`` forces a mode; forcing
+    ``"heads"`` on a non-divisible arch raises.
+    """
+    if kv_shard not in ("auto", "heads", "blocks"):
+        raise ValueError(f"kv_shard must be auto|heads|blocks, got {kv_shard}")
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    heads_ok = cfg.n_kv_heads % model_size == 0
+    if kv_shard == "heads" and not heads_ok:
+        raise ValueError(
+            f"kv_shard='heads' needs n_kv_heads ({cfg.n_kv_heads}) divisible "
+            f"by the model mesh axis ({model_size})")
+    if heads_ok and kv_shard != "blocks":
+        return serve_rules(kv_shardable=True, block_sharded=False), "heads"
+    return serve_rules(kv_shardable=False, block_sharded=True), "blocks"
 
 
 def batch_specs(mesh: Mesh, rules: Rules, *ranks):

@@ -54,11 +54,15 @@ class LLMEngine:
 
     def __init__(self, arch: registry.Arch, params,
                  config: Optional[EngineConfig] = None, *,
-                 backend=None, scheduler: Optional[Scheduler] = None):
+                 backend=None, scheduler: Optional[Scheduler] = None,
+                 mesh=None):
         """``backend`` / ``scheduler`` inject pre-built instances (any
         object honoring the ``CacheBackend`` / ``Scheduler`` protocols —
         how the scheduler unit tests run against a fake backend);
-        normally both are constructed from ``config``."""
+        normally both are constructed from ``config``. ``mesh`` (a
+        ``jax.sharding.Mesh`` with a ``model`` axis, e.g. from
+        ``launch.mesh.make_serve_mesh``) shards the paged KV pool across
+        its devices — paged backend only."""
         ec = config if config is not None else EngineConfig()
         # (admit_batch/scheduler/backend-name validation lives in
         # EngineConfig.__post_init__; only the cross-field check that
@@ -68,13 +72,19 @@ class LLMEngine:
                 f"attn_backend={ec.attn_backend!r} applies to the paged "
                 f"backend only — the dense-arena backends do not dispatch "
                 f"through kernels.paged_attention")
+        if mesh is not None and backend is not None:
+            raise ValueError(
+                "pass the mesh to the injected backend's constructor — "
+                "LLMEngine(mesh=...) only applies when it builds the "
+                "backend itself")
         self.arch = arch
         self.ec = ec
         self.params = params
         self.scheduler: Scheduler = (scheduler if scheduler is not None
                                      else make_scheduler(ec))
         self.backend = (backend if backend is not None
-                        else make_backend(ec.backend, arch, params, ec))
+                        else make_backend(ec.backend, arch, params, ec,
+                                          mesh=mesh))
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * ec.slots
         self.iterations = 0
@@ -95,6 +105,14 @@ class LLMEngine:
             return getattr(backend, name)
         raise AttributeError(
             f"{type(self).__name__!r} object has no attribute {name!r}")
+
+    def _choose_slot(self, req, avail):
+        # injected backends (protocol implementers, test fakes) may not
+        # define choose_slot; the default placement is first-available
+        chooser = getattr(self.backend, "choose_slot", None)
+        if chooser is None:
+            return avail[0] if avail else None
+        return chooser(req, avail)
 
     # -- request intake ----------------------------------------------------
 
@@ -303,7 +321,14 @@ class LLMEngine:
                 break
             if not self.backend.can_admit(req):
                 break
-            slot = avail.pop(0)
+            # the backend picks *which* free slot (block-sharded paged
+            # serving pins slots to devices; None = capacity exists but
+            # no listed slot's device can take the request — same
+            # head-of-line credit as a capacity block)
+            slot = self._choose_slot(req, avail)
+            if slot is None:
+                break
+            avail.remove(slot)
             self.queue.remove(req)
             tok = self._dispatch_admission(req, slot)
             admitted.append((req, slot, tok))
@@ -317,12 +342,14 @@ class LLMEngine:
         # request fits.
         forced = self.scheduler.forced_request(
             list(self.queue), [r for r, _, _ in admitted])
-        if forced is not None and avail and self.backend.can_admit(forced):
-            slot = avail.pop(0)
-            self.queue.remove(forced)
-            tok = self._dispatch_admission(forced, slot)
-            admitted.append((forced, slot, tok))
-            forced = None
+        if forced is not None and self.backend.can_admit(forced):
+            slot = self._choose_slot(forced, avail)
+            if slot is not None:
+                avail.remove(slot)
+                self.queue.remove(forced)
+                tok = self._dispatch_admission(forced, slot)
+                admitted.append((forced, slot, tok))
+                forced = None
         if forced is not None:
             taken = {slot for _, slot, _ in admitted}
             running = [(i, r) for i, r in enumerate(self.slots)
@@ -457,19 +484,42 @@ class LLMEngine:
             "transfers": float(b.transfers),
             "max_concurrent": float(self.max_concurrent),
         }
-        alloc = getattr(b, "alloc", None)
-        if alloc is None or not getattr(b, "prefix_caching", False):
+        if getattr(b, "mesh", None) is not None:
+            # mesh-sharded paged serving: aggregate + per-device pool
+            # residency (the per-device numbers are what a fixed HBM
+            # budget per chip actually constrains)
+            out["mesh_devices"] = float(b.ndev)
+            out["pool_bytes_total"] = float(b.pool_bytes)
+            for d, nbytes in sorted(b.pool_bytes_by_device().items()):
+                out[f"pool_bytes_dev{d}"] = float(nbytes)
+            out["pool_blocks_total"] = float(b.layout.usable_blocks if
+                                             b.kv_mode != "blocks" else
+                                             b._dev_layout.usable_blocks
+                                             * b.ndev)
+            for d, nb in sorted(b.blocks_by_device().items()):
+                out[f"pool_blocks_dev{d}"] = float(nb)
+        # prefix-cache economics: one global allocator, or (block-sharded
+        # mesh serving) summed over the per-device allocators
+        allocs = getattr(b, "allocs", None)
+        if allocs is None:
+            alloc = getattr(b, "alloc", None)
+            allocs = [alloc] if alloc is not None else []
+        if not allocs or not getattr(b, "prefix_caching", False):
             return out
-        looked = alloc.hit_blocks + alloc.miss_blocks
+        hit = sum(a.hit_blocks for a in allocs)
+        miss = sum(a.miss_blocks for a in allocs)
+        looked = hit + miss
         total = b.prefill_tokens_total
         out.update({
-            "prefix_cache_hit_blocks": float(alloc.hit_blocks),
-            "prefix_cache_miss_blocks": float(alloc.miss_blocks),
-            "prefix_cache_hit_rate": (alloc.hit_blocks / looked
-                                      if looked else 0.0),
-            "prefix_cache_evictions": float(alloc.evictions),
-            "prefix_cache_cow_copies": float(alloc.cow_copies),
-            "prefix_cached_blocks": float(alloc.cached_blocks),
+            "prefix_cache_hit_blocks": float(hit),
+            "prefix_cache_miss_blocks": float(miss),
+            "prefix_cache_hit_rate": (hit / looked if looked else 0.0),
+            "prefix_cache_evictions": float(
+                sum(a.evictions for a in allocs)),
+            "prefix_cache_cow_copies": float(
+                sum(a.cow_copies for a in allocs)),
+            "prefix_cached_blocks": float(
+                sum(a.cached_blocks for a in allocs)),
             "prefill_tokens_total": float(total),
             "prefill_tokens_skipped": float(b.prefill_tokens_skipped),
             "prefill_skip_rate": (b.prefill_tokens_skipped / total

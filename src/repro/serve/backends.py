@@ -58,7 +58,7 @@ from __future__ import annotations
 
 import hashlib
 from collections import OrderedDict
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -155,6 +155,15 @@ class _BackendBase:
 
     def can_admit(self, req: Request) -> bool:
         return True
+
+    def choose_slot(self, req: Request,
+                    avail: Sequence[int]) -> Optional[int]:
+        """Pick the slot ``req`` is admitted into, from the engine's
+        free-slot list (in preference order). ``None`` means no listed
+        slot can take the request right now. Block-sharded paged serving
+        overrides this — slots are pinned to the device owning their
+        blocks, so slot choice is a placement decision there."""
+        return avail[0] if avail else None
 
     def release(self, slot: int, req: Request) -> None:
         """Recycle ``slot``'s resources (finish, preemption, abort)."""
@@ -429,6 +438,22 @@ class PagedBackend(_BackendBase):
     blocks (ITA gather oracle on ``xla``, token-identical to the dense
     int8 reference; fused dequantizing kernel on ``pallas``/``interpret``).
 
+    **Mesh sharding** (``mesh=`` a ``jax.sharding.Mesh`` with a ``model``
+    axis): the software twin of CHIMERA's shared-L2 island interleaving
+    banks across clusters — pool capacity and read bandwidth scale with
+    device count at a fixed per-device budget. The decode/prefill steps
+    run under ``shard_map``; strategy comes from
+    ``parallel.sharding.pick_paged_serve_rules``. In **heads** mode
+    (KV head count divides the mesh) each device holds a KV-head slice of
+    every pool; layers slice Q/K/V locally and all-gather the attention
+    output — one collective per layer, bit-identical to single-device. In
+    **blocks** mode (the fallback) each device owns ``num_blocks / ndev``
+    pool blocks plus its own trash block; slots pin to device
+    ``slot % ndev`` with per-device allocators, tables and prefix caches,
+    and the owner's rows win via an exact masked psum. Sampling always
+    runs on the replicated logits outside the shard-mapped region, so the
+    one-dispatch / one-transfer contract is unchanged.
+
     The dataflow contract is preserved: one jitted paged decode dispatch
     over all rows per iteration, up to ``admit_batch`` admission
     dispatches, one device→host token fetch. Tables are host-owned and
@@ -439,7 +464,8 @@ class PagedBackend(_BackendBase):
 
     name = "paged"
 
-    def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
+    def __init__(self, arch: registry.Arch, params, ec: EngineConfig,
+                 mesh=None):
         super().__init__(arch, params, ec)
         cfg = arch.cfg
         from repro.kernels.paged_attention import ops as paged_ops
@@ -447,9 +473,44 @@ class PagedBackend(_BackendBase):
         self.attn_backend = (paged_ops.DEFAULT_BACKEND
                              if ec.attn_backend is None else ec.attn_backend)
         validate_paged_config(arch, self.attn_backend)
+        # -- mesh resolution ------------------------------------------------
+        # mesh=None is the single-device path (unchanged). With a mesh the
+        # pool shards per ``pick_paged_serve_rules``: "heads" slices the
+        # KV-head axis (layers slice Q/K/V, attend locally, all-gather the
+        # attention output — bit-identical); "blocks" is the fallback when
+        # the head count doesn't divide the mesh — each device owns a
+        # slice of num_blocks, slots pin to the device holding their
+        # blocks, and the owner's rows are selected by a masked psum.
+        self.mesh = mesh
+        self.kv_mode: Optional[str] = None
+        self.ndev = 1
+        self._cache_specs = None
+        rules = None
+        if mesh is not None:
+            from repro.parallel.sharding import pick_paged_serve_rules
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            if "model" not in sizes:
+                raise ValueError(
+                    f"paged serving mesh needs a 'model' axis, got "
+                    f"{mesh.axis_names}")
+            extra = [a for a in mesh.axis_names
+                     if a != "model" and sizes[a] != 1]
+            if extra:
+                raise ValueError(
+                    f"paged serving shards over 'model' only; mesh axes "
+                    f"{extra} have extent > 1")
+            self.ndev = sizes["model"]
+            rules, self.kv_mode = pick_paged_serve_rules(
+                cfg, mesh, kv_shard=ec.kv_shard)
         num_blocks = ec.num_blocks
         if num_blocks is None:  # match the dense arena's token budget
             num_blocks = blocks_for(ec.slots * ec.max_len, ec.block_len) + 1
+        if self.kv_mode == "blocks":
+            # each device owns an equal slice of the pool (local block 0
+            # is that device's trash row); round up so the pool splits
+            # evenly and every device keeps at least one usable block
+            num_blocks = max(num_blocks, 2 * self.ndev)
+            num_blocks = -(-num_blocks // self.ndev) * self.ndev
         # ring blocks when sliding-window layers can't hold full history
         self.ring = ("L" in cfg.pattern
                      and cfg.local_window < ec.max_len
@@ -460,16 +521,39 @@ class PagedBackend(_BackendBase):
             ec.block_len, num_blocks, ec.max_len,
             window=cfg.local_window if self.ring else None,
             ring_num_blocks=(1 + ec.slots * wb) if self.ring else 0)
+        # blocks mode: admission/growth run against per-device allocators
+        # over each device's local slice; otherwise one global allocator
+        # over the whole pool (sliced by head, not by block)
+        self._dev_layout = (
+            PagedLayout(ec.block_len, num_blocks // self.ndev, ec.max_len)
+            if self.kv_mode == "blocks" else self.layout)
         # content-addressed prefix caching: full-history layouts only —
         # a ring layout skipping its prefix prefill would leave the
         # sliding-window pools unwritten for in-window prefix positions
         self.prefix_caching = bool(ec.prefix_cache) and not self.ring
-        self.alloc = BlockAllocator(self.layout,
-                                    prefix_cache=self.prefix_caching)
+        if self.kv_mode == "blocks":
+            self.alloc = None
+            self.allocs: Optional[List[BlockAllocator]] = [
+                BlockAllocator(self._dev_layout,
+                               prefix_cache=self.prefix_caching)
+                for _ in range(self.ndev)]
+        else:
+            self.alloc = BlockAllocator(self.layout,
+                                        prefix_cache=self.prefix_caching)
+            self.allocs = None
         # full-history blocks are consumed by non-L layers only; an all-L
         # pattern reserves none of them
         self._has_full = (not self.ring) or any(k != "L" for k in cfg.pattern)
-        self.table = np.zeros((ec.slots, self.layout.max_blocks), np.int32)
+        if self.kv_mode == "blocks":
+            # one table plane per device holding *local* block ids; a
+            # slot's non-owner planes stay 0 (each device's trash block),
+            # so every device runs identical shapes and non-owner writes
+            # land in trash. Slot i's owner is device i % ndev.
+            self.table = np.zeros(
+                (self.ndev, ec.slots, self.layout.max_blocks), np.int32)
+        else:
+            self.table = np.zeros((ec.slots, self.layout.max_blocks),
+                                  np.int32)
         if self.ring:
             # the ring arena always fits every slot's ring (sized above),
             # but runs through an allocator so leaks/double-frees surface
@@ -498,31 +582,120 @@ class PagedBackend(_BackendBase):
         self.quantized = bool(cfg.serve_quant)
         self.cache = arch.init_paged_cache(ec.slots, self.layout)
         self.last_tok = jnp.zeros((ec.slots,), jnp.int32)
+        if mesh is not None:
+            # build the cache at global logical shapes, then lay it out on
+            # the mesh per the picked rules; params (and the replicated
+            # host-table uploads each iteration) stay replicated. Keeping
+            # matching out_specs below holds the cache sharded in steady
+            # state with donation intact.
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.core.compat import shard_map
+            from repro.models.cache import KVShard
+            from repro.parallel.sharding import paged_cache_axes
+            axes = paged_cache_axes(cfg, self.cache, ring=self.ring)
+            self._cache_specs = rules.tree_spec(axes, mesh, like=self.cache)
+            self.cache = jax.device_put(
+                self.cache,
+                jax.tree.map(lambda s: NamedSharding(mesh, s),
+                             self._cache_specs,
+                             is_leaf=lambda x: isinstance(x, P)))
+            rep = NamedSharding(mesh, P())
+            self.params = jax.device_put(self.params, rep)
+            if self.qparams is not None:
+                self.qparams = jax.device_put(self.qparams, rep)
+            self.last_tok = jax.device_put(self.last_tok, rep)
         base_key = jax.random.key(ec.seed)
         self._bucketing = ec.prefill_buckets and arch.supports_padded_prefill
         backend = self.attn_backend
+        mode, ndev, cache_specs = self.kv_mode, self.ndev, self._cache_specs
+        if mesh is not None:
+            # decode owner is static: slot i's blocks live on device
+            # i % ndev. Block-id operands ([ndev]- or [ndev, nb]-shaped in
+            # blocks mode, owner plane real / others 0) shard over the
+            # mesh so each device sees only its local ids.
+            owner_dec = (jnp.asarray(
+                np.arange(ec.slots, dtype=np.int32) % ndev)
+                if mode == "blocks" else None)
+            idspec = P("model") if mode == "blocks" else P()
+            if mode == "blocks":
+                table_spec = ({"full": P("model"), "ring": P(), "start": P()}
+                              if self.ring else P("model"))
+            else:
+                table_spec = P()
+
+        def _model_dec(p, qp, cache, table, last_tok):
+            if mesh is None:
+                return arch.paged_decode_step(
+                    p, cache, last_tok, table, qparams=qp,
+                    attn_backend=backend)
+
+            def body(p, qp, cache, table, last_tok):
+                shard = KVShard(mode, nshard=ndev, owner=owner_dec)
+                if mode == "blocks":
+                    if isinstance(table, dict):
+                        table = dict(table, full=table["full"][0])
+                    else:
+                        table = table[0]
+                return arch.paged_decode_step(
+                    p, cache, last_tok, table, qparams=qp,
+                    attn_backend=backend, shard=shard)
+
+            return shard_map(
+                body, mesh=mesh,
+                in_specs=(P(), P(), cache_specs, table_spec, P()),
+                out_specs=(P(), cache_specs), check_rep=False,
+            )(p, qp, cache, table, last_tok)
 
         def _dec(p, qp, cache, table, last_tok, samp, any_sampling):
             self.decode_traces += 1  # runs at trace time only
-            logits, cache = arch.paged_decode_step(
-                p, cache, last_tok, table, qparams=qp, attn_backend=backend)
+            logits, cache = _model_dec(p, qp, cache, table, last_tok)
+            # sampling runs on the replicated logits *outside* the
+            # shard-mapped step — the collectives end at the model output
             tok = sample_tokens_per_slot(logits, *samp, base_key,
                                          any_sampling=any_sampling)
             return tok, cache
 
+        def _model_pre(p, tokens, true_len, slot, block_ids, ring_ids,
+                       cache, embeds, prefix_ids, start):
+            if mesh is None:
+                return arch.paged_prefill(
+                    p, tokens, cache, slot, block_ids, ring_ids=ring_ids,
+                    true_len=true_len, embeds=embeds,
+                    prefix_ids=prefix_ids, start=start)
+
+            def body(p, tokens, true_len, slot, block_ids, ring_ids, cache,
+                     embeds, prefix_ids):
+                owner = slot % ndev if mode == "blocks" else None
+                shard = KVShard(mode, nshard=ndev, owner=owner)
+                if mode == "blocks":
+                    block_ids = block_ids[0]
+                    if prefix_ids is not None:
+                        prefix_ids = prefix_ids[0]
+                return arch.paged_prefill(
+                    p, tokens, cache, slot, block_ids, ring_ids=ring_ids,
+                    true_len=true_len, embeds=embeds,
+                    prefix_ids=prefix_ids, start=start, shard=shard)
+
+            return shard_map(
+                body, mesh=mesh,
+                in_specs=(P(), P(), P(), P(), idspec, P(), cache_specs,
+                          P(), idspec),
+                out_specs=(P(), cache_specs), check_rep=False,
+            )(p, tokens, true_len, slot, block_ids, ring_ids, cache,
+              embeds, prefix_ids)
+
         def _pre(p, tokens, true_len, slot, block_ids, ring_ids, cache,
                  last_tok, samp, embeds, prefix_ids, any_sampling, start):
             self.prefill_traces += 1  # one trace per (bucket, block count)
-            logits, cache = arch.paged_prefill(
-                p, tokens, cache, slot, block_ids, ring_ids=ring_ids,
-                true_len=true_len, embeds=embeds, prefix_ids=prefix_ids,
-                start=start)
+            logits, cache = _model_pre(p, tokens, true_len, slot, block_ids,
+                                       ring_ids, cache, embeds, prefix_ids,
+                                       start)
             tok = sample_tokens_per_slot(logits, *samp, base_key,
                                          any_sampling=any_sampling)  # [1]
             last_tok = jax.lax.dynamic_update_slice(last_tok, tok, (slot,))
             return tok[0], cache, last_tok
 
-        def _copy_block(cache, old, new):
+        def _copy_impl(cache, old, new):
             # copy-on-write: duplicate one pool block (k/v + scales) so a
             # diverging writer stops sharing it; per-slot leaves (encdec
             # cross K/V, positions) are left untouched
@@ -536,11 +709,59 @@ class PagedBackend(_BackendBase):
 
             return jax.tree_util.tree_map_with_path(cp, cache)
 
+        def _copy_block(cache, old, new):
+            if mesh is None:
+                return _copy_impl(cache, old, new)
+
+            def body(cache, old, new):
+                # heads mode: every device copies its head slice of the
+                # (replicated) block id; blocks mode: the owner copies its
+                # local ids, everyone else copies trash onto itself
+                if mode == "blocks":
+                    old, new = old[0], new[0]
+                return _copy_impl(cache, old, new)
+
+            return shard_map(
+                body, mesh=mesh,
+                in_specs=(cache_specs, idspec, idspec),
+                out_specs=cache_specs, check_rep=False)(cache, old, new)
+
         self._decode_fn = jax.jit(_dec, donate_argnums=(2,),
                                   static_argnums=(6,))
         self._prefill_fn = jax.jit(_pre, donate_argnums=(6,),
                                    static_argnums=(11, 12))
         self._copy_block_fn = jax.jit(_copy_block, donate_argnums=(0,))
+
+    # -- mesh helpers ------------------------------------------------------
+
+    def _dev(self, slot: int) -> int:
+        """Owning device of a slot's blocks (blocks mode pins slot i to
+        device i % ndev; degenerate 0 otherwise)."""
+        return slot % self.ndev
+
+    def _alloc_for(self, slot: int) -> BlockAllocator:
+        if self.kv_mode == "blocks":
+            return self.allocs[self._dev(slot)]
+        return self.alloc
+
+    def _all_allocs(self) -> List[BlockAllocator]:
+        return self.allocs if self.kv_mode == "blocks" else [self.alloc]
+
+    def _set_table(self, slot: int, idx: int, block: int) -> None:
+        if self.kv_mode == "blocks":
+            self.table[self._dev(slot), slot, idx] = block
+        else:
+            self.table[slot, idx] = block
+
+    def _block_arg(self, slot: int, block: int):
+        """Block-id operand for the jitted COW copy: an [ndev] vector in
+        blocks mode (owner entry real, others 0 → a trash-onto-itself
+        no-op); a replicated scalar otherwise."""
+        if self.kv_mode == "blocks":
+            vec = np.zeros((self.ndev,), np.int32)
+            vec[self._dev(slot)] = block
+            return jnp.asarray(vec)
+        return jnp.asarray(block, jnp.int32)
 
     # -- capacity bookkeeping ----------------------------------------------
 
@@ -616,21 +837,46 @@ class PagedBackend(_BackendBase):
 
     def validate_request(self, req: Request) -> None:
         need = self._max_blocks_needed(req)
-        if need > self.layout.usable_blocks:
+        usable = self._dev_layout.usable_blocks
+        if need > usable:
+            where = " per device" if self.kv_mode == "blocks" else ""
             raise ValueError(
                 f"request {req.rid} needs {need} blocks; pool has "
-                f"{self.layout.usable_blocks}")
+                f"{usable}{where}")
+
+    def _admit_keys(self, req: Request) -> Sequence[bytes]:
+        if not self.prefix_caching:
+            return ()
+        return self._chain_keys(req)[:self._hit_limit(req)]
 
     def can_admit(self, req: Request) -> bool:
-        keys: Sequence[bytes] = ()
-        if self.prefix_caching:
-            keys = self._chain_keys(req)[:self._hit_limit(req)]
-        if not self.alloc.can_admit(self._max_blocks_needed(req), keys):
+        need = self._max_blocks_needed(req)
+        keys = self._admit_keys(req)
+        if not any(a.can_admit(need, keys) for a in self._all_allocs()):
             return False
         if self.ring and not self.ring_alloc.can_admit(
                 self.layout.ring_blocks):
             return False
         return True
+
+    def choose_slot(self, req: Request,
+                    avail: Sequence[int]) -> Optional[int]:
+        """Blocks mode: admit into a slot whose device both has capacity
+        and holds the most cached prefix blocks for this request (ties →
+        the engine's preference order). Otherwise: first listed slot."""
+        if self.kv_mode != "blocks":
+            return avail[0] if avail else None
+        need = self._max_blocks_needed(req)
+        keys = self._admit_keys(req)
+        best, best_hits = None, -1
+        for slot in avail:
+            a = self.allocs[self._dev(slot)]
+            if not a.can_admit(need, keys):
+                continue
+            hits = len(a.lookup(keys)) if keys else 0
+            if hits > best_hits:
+                best, best_hits = slot, hits
+        return best
 
     def release(self, slot: int, req: Request) -> None:
         """Recycle a slot's blocks (full + ring) and point its table rows
@@ -638,8 +884,11 @@ class PagedBackend(_BackendBase):
         release *decrefs*: shared blocks survive under their other
         references, and published sole-owned blocks move to the cached LRU
         (reusable K/V) instead of the free list."""
-        self.alloc.release(req.rid)
-        self.table[slot, :] = 0
+        self._alloc_for(slot).release(req.rid)
+        if self.kv_mode == "blocks":
+            self.table[:, slot, :] = 0
+        else:
+            self.table[slot, :] = 0
         if self.ring:
             self.ring_alloc.release(req.rid)
             self.ring_table[slot, :] = 0
@@ -652,6 +901,36 @@ class PagedBackend(_BackendBase):
 
     def evict_for(self, req, candidates, slots):
         need = self._max_blocks_needed(req)
+        if self.kv_mode == "blocks":
+            # victims must share ONE device: freed blocks only help a
+            # request admitted into a slot of that same device (the engine
+            # re-admits into evict[0]'s slot). Devices are tried in the
+            # scheduler's preference order (position of their first
+            # candidate); an infeasible device is skipped whole.
+            keys = self._admit_keys(req)
+            by_dev: Dict[int, List[int]] = {}
+            for i in candidates:
+                by_dev.setdefault(self._dev(i), []).append(i)
+            for d in sorted(by_dev,
+                            key=lambda d: candidates.index(by_dev[d][0])):
+                a, cands = self.allocs[d], by_dev[d]
+                if need > a.available_blocks + sum(
+                        a.reservation(slots[i].rid) for i in cands):
+                    continue
+                single = next(
+                    (i for i in cands if a.can_admit_after_release(
+                        need, slots[i].rid)), None)
+                order = [single] if single is not None else cands
+                evicted: List[int] = []
+                for victim in order:
+                    if evicted and a.can_admit(need, keys) and (
+                            not self.ring or self.ring_alloc.can_admit(
+                                self.layout.ring_blocks)):
+                        break
+                    self.release(victim, slots[victim])
+                    evicted.append(victim)
+                return evicted
+            return []
         # Feasibility first: when an admission *this iteration* already
         # reserved blocks (possible under the QoS scheduler, whose forced
         # path fires even alongside admissions), the candidate slots may
@@ -721,21 +1000,45 @@ class PagedBackend(_BackendBase):
         window-bounded, so compare like layouts.)"""
         return self.pool_bytes / self.layout.usable_tokens
 
+    def pool_bytes_by_device(self) -> Dict[int, int]:
+        """Resident KV-pool bytes per mesh device (device index →
+        bytes); without a mesh everything sits on device 0. Heads mode
+        splits each pool leaf 1/ndev by head slice; blocks mode by block
+        slice — either way the per-device residency is what a fixed
+        per-device HBM budget constrains."""
+        if self.mesh is None:
+            return {0: self.pool_bytes}
+        idx = {d: i for i, d in enumerate(self.mesh.devices.flat)}
+        out: Dict[int, int] = {i: 0 for i in idx.values()}
+        for leaf in self.pool_leaves():
+            for sh in leaf.addressable_shards:
+                i = idx.get(sh.device)
+                if i is not None:
+                    out[i] += sh.data.nbytes
+        return out
+
+    def blocks_by_device(self) -> Dict[int, int]:
+        """Usable full-history blocks per device: the local slice in
+        blocks mode, the whole (head-sliced) block index space
+        otherwise."""
+        return {d: self._dev_layout.usable_blocks for d in range(self.ndev)}
+
     # -- iteration hooks ---------------------------------------------------
 
     def begin_iteration(self, active, slots):
         blk = self.ec.block_len
         for i in active:
             req = slots[i]
+            alloc = self._alloc_for(i)
             if self._has_full:
                 # grow any slot whose next write position crosses a block
                 # boundary (drawn from its admission-time reservation —
                 # can never fail)
                 needed = self._slot_len[i] // blk + 1
-                owned = self.alloc.owned(req.rid)
+                owned = alloc.owned(req.rid)
                 while len(owned) < needed:
-                    b = self.alloc.grow(req.rid)
-                    self.table[i, len(owned)] = b
+                    b = alloc.grow(req.rid)
+                    self._set_table(i, len(owned), b)
                     owned.append(b)
             if self.prefix_caching:
                 # publish decode blocks as they complete: a preempted (or
@@ -753,19 +1056,19 @@ class PagedBackend(_BackendBase):
                         prev = keys[idx - 1] if idx else chain_seed(blk, salt)
                         key = chain_key(prev, seq[idx * blk:(idx + 1) * blk])
                         keys.append(key)
-                        self.alloc.register(req.rid, idx, key)
+                        alloc.register(req.rid, idx, key)
                 # copy-on-write guard: if this iteration's decode write
                 # lands in a block another table still references (only
                 # possible after an explicit incref fork), duplicate it
                 # first so the sharer's K/V stays immutable
                 tail = self._slot_len[i] // blk
-                moved = self.alloc.ensure_writable(req.rid, tail)
+                moved = alloc.ensure_writable(req.rid, tail)
                 if moved is not None:
                     old, new = moved
                     self.cache = self._copy_block_fn(
-                        self.cache, jnp.asarray(old, jnp.int32),
-                        jnp.asarray(new, jnp.int32))
-                    self.table[i, tail] = new
+                        self.cache, self._block_arg(i, old),
+                        self._block_arg(i, new))
+                    self._set_table(i, tail, new)
             if self.ring:
                 # rotate the ring table when the next write position enters
                 # a block past the current ring: the evicted oldest block
@@ -805,18 +1108,23 @@ class PagedBackend(_BackendBase):
         n = toks.size
         pre_len = self._pre_len(req)
         now_blocks = pre_len // blk if self._has_full else 0
+        alloc = self._alloc_for(slot)
         j = 0
         keys_full: List[bytes] = []
         if self.prefix_caching:
             keys_full = self._chain_keys(req)
-            j = len(self.alloc.lookup(keys_full[:self._hit_limit(req)]))
+            j = len(alloc.lookup(keys_full[:self._hit_limit(req)]))
         block_ids = np.asarray(
-            self.alloc.admit(req.rid, now_blocks,
-                             self._max_blocks_needed(req),
-                             keys=keys_full[:j]),
+            alloc.admit(req.rid, now_blocks,
+                        self._max_blocks_needed(req),
+                        keys=keys_full[:j]),
             np.int32)
-        self.table[slot, :] = 0
-        self.table[slot, :block_ids.size] = block_ids
+        if self.kv_mode == "blocks":
+            self.table[:, slot, :] = 0
+            self.table[self._dev(slot), slot, :block_ids.size] = block_ids
+        else:
+            self.table[slot, :] = 0
+            self.table[slot, :block_ids.size] = block_ids
         ring_ids = None
         if self.ring:
             wb = self.layout.ring_blocks
@@ -840,10 +1148,25 @@ class PagedBackend(_BackendBase):
             tokens = jnp.asarray(toks[start:][None, :])
             true_len = None
         embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
-        prefix_ids = jnp.asarray(block_ids[:j]) if j else None
+        suffix_ids = block_ids[j:]
+        if self.kv_mode == "blocks":
+            # owner plane holds the real local ids; other devices write
+            # (and gather prefixes) through 0 → their local trash block
+            dev = self._dev(slot)
+            bid = np.zeros((self.ndev, suffix_ids.size), np.int32)
+            bid[dev] = suffix_ids
+            bid_arg = jnp.asarray(bid)
+            prefix_ids = None
+            if j:
+                pid = np.zeros((self.ndev, j), np.int32)
+                pid[dev] = block_ids[:j]
+                prefix_ids = jnp.asarray(pid)
+        else:
+            bid_arg = jnp.asarray(suffix_ids)
+            prefix_ids = jnp.asarray(block_ids[:j]) if j else None
         tok, self.cache, self.last_tok = self._prefill_fn(
             self.params, tokens, true_len, jnp.asarray(slot, jnp.int32),
-            jnp.asarray(block_ids[j:]),
+            bid_arg,
             None if ring_ids is None else jnp.asarray(ring_ids),
             self.cache, self.last_tok, samp, embeds, prefix_ids,
             any_sampling, start)
@@ -851,7 +1174,7 @@ class PagedBackend(_BackendBase):
             # publish every freshly written full block under its chain key
             # (first-wins on key collision: the duplicate stays private)
             for idx in range(j, n // blk):
-                self.alloc.register(req.rid, idx, keys_full[idx])
+                alloc.register(req.rid, idx, keys_full[idx])
             self._slot_keys[slot] = list(keys_full[:n // blk])
             self._key_memo.pop(req.rid, None)
         self.prefill_tokens_total += n
@@ -877,11 +1200,17 @@ if set(_BACKENDS) != set(_NAMES):
 
 
 def make_backend(name: str, arch: registry.Arch, params,
-                 ec: EngineConfig) -> _BackendBase:
+                 ec: EngineConfig, mesh=None) -> _BackendBase:
     try:
         cls = _BACKENDS[name]
     except KeyError:
         raise ValueError(
             f"unknown serve backend {name!r} "
             f"(supported: {', '.join(_NAMES)})") from None
+    if mesh is not None:
+        if cls is not PagedBackend:
+            raise ValueError(
+                f"mesh-sharded serving is paged-only; backend {name!r} has "
+                f"no sharded KV layout — use backend='paged'")
+        return cls(arch, params, ec, mesh=mesh)
     return cls(arch, params, ec)

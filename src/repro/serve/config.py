@@ -67,6 +67,18 @@ class EngineConfig:
     # instead of returning everything to the free list. Ring (sliding-
     # window) layouts opt out automatically.
     prefix_cache: bool = False
+    # paged backend on a mesh: the mesh axis names LLMEngine accepts, and
+    # how the block pool is sharded over the "model" axis. mesh_axes[0]
+    # must be "model" (the serve_rules TP axis); extra axes must have
+    # extent 1 on the mesh actually passed to the engine. kv_shard:
+    #   "auto"   — head-sharded when n_kv_heads divides the mesh, else
+    #              block-sharded (slots pinned to the device owning their
+    #              blocks);
+    #   "heads"  — force head sharding (raises if it doesn't divide);
+    #   "blocks" — force block sharding.
+    # Ignored unless a mesh is passed to LLMEngine.
+    mesh_axes: tuple = ("model",)
+    kv_shard: str = "auto"
     # -- the LLMEngine construction surface --------------------------------
     # execution backend: "slot" (sequential per-slot reference), "arena"
     # (dense batched arena, the default), "paged" (shared block pool)
@@ -128,6 +140,14 @@ class EngineConfig:
                 f"be_grant_window must be >= 1, got {self.be_grant_window} "
                 f"(0 would promote the be lane every iteration, inverting "
                 f"rt priority)")
+        self.mesh_axes = tuple(self.mesh_axes)
+        if not self.mesh_axes or self.mesh_axes[0] != "model":
+            raise ValueError(
+                f"mesh_axes must start with 'model' (the serve_rules TP "
+                f"axis), got {self.mesh_axes!r}")
+        if self.kv_shard not in ("auto", "heads", "blocks"):
+            raise ValueError(
+                f"kv_shard must be auto|heads|blocks, got {self.kv_shard!r}")
         if self.be_token_share is not None and not (
                 0.0 < self.be_token_share < 1.0):
             raise ValueError(

@@ -69,3 +69,104 @@ def test_cache_axes_structure():
     axes = sh.cache_axes(cfg, cache)
     flat = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
     assert ("layers", "batch", "kv", "seq", None) in flat
+
+
+# ---------------------------------------------------------------------------
+# Paged-pool serving rules (mesh-sharded paged backend)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mesh_model3():
+    devs = np.asarray(jax.devices()[:1] * 3) if len(jax.devices()) < 3 \
+        else np.asarray(jax.devices()[:3])
+    return Mesh(devs.reshape(3), ("model",))
+
+
+def _paged_smoke():
+    from repro.configs import smoke_config
+    from repro.models import registry
+
+    cfg = smoke_config("phi3-mini-3.8b")   # n_kv_heads=2
+    return cfg, registry.build(cfg)
+
+
+def test_pick_paged_serve_rules_heads_when_divisible(mesh22):
+    cfg, _ = _paged_smoke()
+    rules, mode = sh.pick_paged_serve_rules(cfg, mesh22)   # model axis = 2
+    assert mode == "heads"
+    assert rules.spec_for(("layers", "blocks", "kv", None, None),
+                          mesh22) == P(None, None, "model", None, None)
+
+
+def test_pick_paged_serve_rules_blocks_fallback(mesh_model3):
+    # 2 KV heads don't divide a 3-way model axis → block-sharded pool
+    cfg, _ = _paged_smoke()
+    rules, mode = sh.pick_paged_serve_rules(cfg, mesh_model3)
+    assert mode == "blocks"
+    assert rules.spec_for(("layers", "blocks", "kv", None, None),
+                          mesh_model3) == P(None, "model", None, None, None)
+    # forcing heads on a non-divisible mesh is a loud error
+    with pytest.raises(ValueError, match="divisible"):
+        sh.pick_paged_serve_rules(cfg, mesh_model3, kv_shard="heads")
+
+
+def test_pick_paged_serve_rules_forced_blocks(mesh22):
+    cfg, _ = _paged_smoke()
+    _, mode = sh.pick_paged_serve_rules(cfg, mesh22, kv_shard="blocks")
+    assert mode == "blocks"
+    with pytest.raises(ValueError, match="auto|heads|blocks"):
+        sh.pick_paged_serve_rules(cfg, mesh22, kv_shard="sideways")
+
+
+def test_pick_paged_serve_rules_single_device_degenerate():
+    # a 1-extent model axis always supports heads mode (nshard=1 no-ops)
+    devs = np.asarray(jax.devices()[:1]).reshape(1)
+    mesh1 = Mesh(devs, ("model",))
+    cfg, _ = _paged_smoke()
+    _, mode = sh.pick_paged_serve_rules(cfg, mesh1)
+    assert mode == "heads"
+
+
+def test_pick_serve_rules_long_context_overrides_heads(mesh22):
+    # long_context forces SP even when the head count divides the mesh —
+    # the paged picker never does this (pool reads are block-gathered)
+    cfg, _ = _paged_smoke()
+    r = sh.pick_serve_rules(cfg, mesh22, long_context=True)
+    assert r.spec_for(("seq",), mesh22) == P("model")
+    assert r.spec_for(("kv",), mesh22) == P(None)
+
+
+def test_paged_cache_axes_structure():
+    cfg, arch = _paged_smoke()
+    from repro.models.cache import PagedLayout
+
+    layout = PagedLayout(8, 12, 64)
+    cache = jax.eval_shape(lambda: arch.init_paged_cache(2, layout))
+    axes = sh.paged_cache_axes(cfg, cache)
+    flat = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    # full-history pools expose BOTH the blocks and kv logical axes, so
+    # one axes tree serves heads- and block-sharded rule sets
+    assert ("layers", "blocks", "kv", None, None) in flat
+    # int8 per-block scales shard with their blocks
+    assert ("layers", "blocks") in flat
+
+
+def test_paged_cache_axes_ring_stays_replicated():
+    from repro.configs import smoke_config
+    from repro.models import registry
+    from repro.models.cache import PagedLayout, ring_blocks_for
+
+    cfg = smoke_config("gemma3-4b")        # pattern LLLLLG → ring arenas
+    arch = registry.build(cfg)
+    wb = ring_blocks_for(cfg.local_window, 8)
+    layout = PagedLayout(8, 12, 64, window=cfg.local_window,
+                         ring_num_blocks=1 + 2 * wb)
+    cache = jax.eval_shape(lambda: arch.init_paged_cache(2, layout))
+    axes = sh.paged_cache_axes(cfg, cache, ring=True)
+    flat = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    # ring ("L") stacks: window-bounded arenas keep their block axis
+    # replicated in both modes (kv still shardable in heads mode)
+    assert ("layers", None, "kv", None, None) in flat
+    # the non-L stack keeps the shardable blocks axis
+    assert ("layers", "blocks", "kv", None, None) in flat
