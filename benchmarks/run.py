@@ -105,7 +105,8 @@ def smoke() -> None:
                     getattr(m, "LLMEngine", None)):
                 raise AttributeError("repro.serve.api.LLMEngine missing")
             if mod == "repro.serve.config":
-                for field in ("prefix_cache", "be_token_share"):
+                for field in ("prefix_cache", "be_token_share",
+                              "prefill_chunk_tokens"):
                     if not hasattr(m.EngineConfig(), field):
                         raise AttributeError(
                             f"EngineConfig.{field} missing")

@@ -70,6 +70,10 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens "
                          "to every request (shows prefix-cache hits)")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=None,
+                    help="co-schedule prefill with decode in chunks of "
+                         "this many tokens per iteration (paged backend; "
+                         "multiple of --block-len; default monolithic)")
     ap.add_argument("--be-token-share", type=float, default=None,
                     help="qos scheduler: cap the best-effort share of "
                          "decode tokens while rt traffic waits (0, 1)")
@@ -110,6 +114,7 @@ def main():
                       backend=backend, scheduler=args.scheduler,
                       rt_window=args.rt_window,
                       prefix_cache=args.prefix_cache,
+                      prefill_chunk_tokens=args.prefill_chunk_tokens,
                       be_token_share=args.be_token_share,
                       kv_shard=args.kv_shard)
     mesh = None
@@ -147,6 +152,13 @@ def main():
             f"{em[k]:.3f}" if isinstance(em[k], float) else
             f"{k.removeprefix('prefix_cache_')}={em[k]}"
             for k in sorted(em) if "prefix" in k or "prefill" in k))
+    if args.prefill_chunk_tokens:
+        em = engine.metrics()
+        print("chunked_prefill: " + " ".join(
+            f"{k}={em[k]:.3f}" if isinstance(em[k], float) else
+            f"{k}={em[k]}"
+            for k in sorted(em)
+            if "chunk" in k or "jitter" in k or "iter_wall" in k))
     by_class = {}
     for h in handles:
         r = engine.request(h)

@@ -72,6 +72,12 @@ class LLMEngine:
                 f"attn_backend={ec.attn_backend!r} applies to the paged "
                 f"backend only — the dense-arena backends do not dispatch "
                 f"through kernels.paged_attention")
+        if ec.prefill_chunk_tokens is not None and ec.backend != "paged":
+            raise ValueError(
+                f"prefill_chunk_tokens={ec.prefill_chunk_tokens} applies "
+                f"to the paged backend only — chunked prefill resumes at "
+                f"block boundaries of the shared pool, which the dense "
+                f"arenas don't have")
         if mesh is not None and backend is not None:
             raise ValueError(
                 "pass the mesh to the injected backend's constructor — "
@@ -89,6 +95,17 @@ class LLMEngine:
         self.slots: List[Optional[Request]] = [None] * ec.slots
         self.iterations = 0
         self.max_concurrent = 0           # peak active slots (capacity proof)
+        # chunked prefill: active iff the config asks for it AND the
+        # backend supports it (rings opt out backend-side; injected fakes
+        # default to monolithic)
+        self._chunked = (ec.prefill_chunk_tokens is not None
+                         and getattr(self.backend, "chunking", False))
+        self._chunk_stalls = 0   # chunk/admission dispatches deferred by
+        #                          an exhausted per-iteration token budget
+        # per-iteration wall clock (bounded window): decode-iteration
+        # jitter = p99 − p50 over this window, the number chunked prefill
+        # exists to bound
+        self._iter_walls: deque = deque(maxlen=2048)
         self._requests: Dict[int, Request] = {}
         # finished handles in completion order — the pruning queue when
         # ec.retain_finished bounds the registry (long-running servers)
@@ -190,6 +207,10 @@ class LLMEngine:
             return False
         if req in self.queue:
             self.queue.remove(req)
+            # never admitted (or preempted out of its slot): no release()
+            # will run for this rid, so drop backend per-rid memo state
+            # here — a reused rid must not inherit stale chain keys
+            self._backend_forget(req)
         else:
             for i, r in enumerate(self.slots):
                 if r is req:
@@ -257,17 +278,26 @@ class LLMEngine:
 
     # -- one iteration -----------------------------------------------------
 
-    def _dispatch_admission(self, req: Request, slot: int):
-        """One admission prefill dispatch for ``req`` into ``slot``."""
+    def _dispatch_admission(self, req: Request, slot: int, budget=None):
+        """One admission dispatch for ``req`` into ``slot``. Monolithic
+        backends run the whole prefill; under chunked prefill only the
+        first chunk (within ``budget`` tokens) is dispatched and the
+        request stays in PREFILL until later iterations finish it.
+        Returns ``(tokens_consumed, tok_or_None)``."""
         req.state = RequestState.PREFILL
         req.waiting_iters = 0
         if self.backend.vectorized:
             samp, any_sampling = self._admission_vectors(req)
         else:
             samp, any_sampling = None, False
+        if self._chunked:
+            self.backend.prefill_begin(req, slot)
+            self.slots[slot] = req
+            return self.backend.prefill_chunk(req, slot, budget, samp,
+                                              any_sampling)
         tok = self.backend.prefill(req, slot, samp, any_sampling)
         self.slots[slot] = req
-        return tok
+        return 0, tok
 
     def step(self) -> List[StepOutput]:
         """One engine iteration → every request's progress this step."""
@@ -278,16 +308,28 @@ class LLMEngine:
         """One engine iteration. Exactly one decode pass (if any slot is
         active), up to ``admit_batch`` admission dispatches (plus at most
         one forced admission), then a single device→host fetch of the
-        sampled tokens; every finish condition is a host-side check on
+        sampled tokens. Under chunked prefill the iteration is *bounded*:
+        all prefill work (chunk continuations first, then new admissions)
+        shares one ``prefill_chunk_tokens`` token budget, so a long
+        prompt can no longer stall every running decode behind a
+        monolithic dispatch. Every finish condition is a host-side check on
         that fetch. Which requests finish *by length* is known before the
         fetch, so their resources are recycled in time for this
         iteration's admissions; stop/EOS finishes release on the fetch.
         """
         self.iterations += 1
+        it_t0 = time.perf_counter()
         outputs: List[StepOutput] = []
-        active = [i for i, r in enumerate(self.slots) if r is not None]
+        # decode batches only RUNNING occupants; mid-chunk (PREFILL-state)
+        # slots hold blocks but have no tokens yet — their prefill
+        # continues below, inside this same bounded iteration
+        active = [i for i, r in enumerate(self.slots)
+                  if r is not None and r.state == RequestState.RUNNING]
+        chunking = [i for i, r in enumerate(self.slots)
+                    if r is not None and r.state == RequestState.PREFILL]
         at_dispatch = list(self.slots)  # snapshot: who owns each decode row
-        self.max_concurrent = max(self.max_concurrent, len(active))
+        self.max_concurrent = max(self.max_concurrent,
+                                  len(active) + len(chunking))
         self.backend.begin_iteration(active, self.slots)
 
         dec_tok = None
@@ -298,6 +340,33 @@ class LLMEngine:
                 samp, any_sampling = None, False
             dec_tok = self.backend.decode(active, self.slots, samp,
                                           any_sampling)
+
+        # chunked prefill: continue in-flight admissions first (they
+        # already hold their blocks, and finishing one turns a dead slot
+        # into a decode row). The per-iteration token budget is shared —
+        # the QoS scheduler drains it into rt chunks before be
+        # (chunk_order), realizing "rt prefill outranks be work".
+        admitted: List[tuple] = []      # (request, slot, first token)
+        granted: List[Request] = []     # dispatched admissions (for credit)
+        granted_slots: set = set()
+        budget = self.ec.prefill_chunk_tokens if self._chunked else None
+        if chunking:
+            pairs = [(i, self.slots[i]) for i in chunking]
+            order_fn = getattr(self.scheduler, "chunk_order", None)
+            order = (order_fn(pairs) if order_fn is not None
+                     else [i for i, _ in pairs])
+            for i in order:
+                if budget is not None and budget < self.ec.block_len:
+                    self._chunk_stalls += 1
+                    break
+                r = self.slots[i]
+                samp, any_sampling = self._admission_vectors(r)
+                used, tok = self.backend.prefill_chunk(r, i, budget, samp,
+                                                       any_sampling)
+                if budget is not None:
+                    budget -= used
+                if tok is not None:
+                    admitted.append((r, i, tok))
 
         # length-determined finishes free their resources *now* so this
         # iteration's admissions can reuse them (the decode dispatch that
@@ -312,12 +381,15 @@ class LLMEngine:
         avail = free + will_free
 
         # scheduler-ordered admissions into free (or freeing) slots; stop
-        # at the first capacity-blocked request (head-of-line credit)
-        admitted: List[tuple] = []      # (request, slot, first token)
+        # at the first capacity-blocked request (head-of-line credit —
+        # an exhausted chunk budget blocks the head the same way)
         limit = min(self.ec.admit_batch,
                     self.backend.max_admit or self.ec.admit_batch)
         for req in self.scheduler.admit_order(list(self.queue)):
-            if not avail or len(admitted) >= limit:
+            if not avail or len(granted) >= limit:
+                break
+            if budget is not None and budget < self.ec.block_len:
+                self._chunk_stalls += 1
                 break
             if not self.backend.can_admit(req):
                 break
@@ -330,28 +402,43 @@ class LLMEngine:
                 break
             avail.remove(slot)
             self.queue.remove(req)
-            tok = self._dispatch_admission(req, slot)
-            admitted.append((req, slot, tok))
+            used, tok = self._dispatch_admission(req, slot, budget)
+            if budget is not None:
+                budget -= used
+            granted.append(req)
+            granted_slots.add(slot)
+            if tok is not None:
+                admitted.append((req, slot, tok))
 
         # forced admission (bounded-priority / QoS rt guarantee): a slot
         # still free after the admission pass is used first — the
-        # guarantee outranks the admit_batch cap, and evicting a running
-        # request while a slot sits empty would throw its KV away for no
-        # capacity reason. Only then preempt victims — never a slot that
-        # is finishing or was admitted this iteration — until the forced
-        # request fits.
-        forced = self.scheduler.forced_request(
-            list(self.queue), [r for r, _, _ in admitted])
+        # guarantee outranks the admit_batch cap (and, chunked, gets a
+        # fresh one-chunk allowance: the latency bound outranks the
+        # shared budget, overshooting it by at most one chunk), and
+        # evicting a running request while a slot sits empty would throw
+        # its KV away for no capacity reason. Only then preempt victims —
+        # never a slot that is finishing or was admitted this iteration —
+        # until the forced request fits.
+        forced_budget = (self.ec.prefill_chunk_tokens if self._chunked
+                         else None)
+        forced = self.scheduler.forced_request(list(self.queue), granted)
         if forced is not None and self.backend.can_admit(forced):
             slot = self._choose_slot(forced, avail)
             if slot is not None:
                 avail.remove(slot)
                 self.queue.remove(forced)
-                tok = self._dispatch_admission(forced, slot)
-                admitted.append((forced, slot, tok))
+                used, tok = self._dispatch_admission(forced, slot,
+                                                     forced_budget)
+                granted.append(forced)
+                granted_slots.add(slot)
+                if tok is not None:
+                    admitted.append((forced, slot, tok))
                 forced = None
         if forced is not None:
-            taken = {slot for _, slot, _ in admitted}
+            # never evict a slot admitted this iteration, nor one whose
+            # final chunk just completed (its first token is in flight —
+            # _fetch_and_finish would resurrect a preempted request)
+            taken = granted_slots | {s for _, s, _ in admitted}
             running = [(i, r) for i, r in enumerate(self.slots)
                        if r is not None and i not in pre_released
                        and i not in taken]
@@ -377,16 +464,30 @@ class LLMEngine:
                     if self.backend.can_admit(forced):
                         self.queue.remove(forced)
                         slot = evict[0]
-                        tok = self._dispatch_admission(forced, slot)
-                        admitted.append((forced, slot, tok))
+                        used, tok = self._dispatch_admission(forced, slot,
+                                                             forced_budget)
+                        granted.append(forced)
+                        granted_slots.add(slot)
+                        if tok is not None:
+                            admitted.append((forced, slot, tok))
 
         finished = self._fetch_and_finish(dec_tok, active, at_dispatch,
                                           admitted, pre_released, outputs)
-        self.scheduler.note_iteration([r for r, _, _ in admitted],
-                                      list(self.queue))
+        # only *dispatched* admissions accrue scheduler credit (a chunked
+        # admission counts from its first chunk; a deferred forced
+        # admission counts nothing — see Scheduler.note_iteration)
+        self.scheduler.note_iteration(granted, list(self.queue))
+        self._iter_walls.append(time.perf_counter() - it_t0)
         return outputs, finished
 
     # -- fetch + host-side finish bookkeeping ------------------------------
+
+    def _backend_forget(self, req: Request) -> None:
+        # injected backends (protocol implementers, test fakes) may not
+        # define the forget hook
+        fn = getattr(self.backend, "forget", None)
+        if fn is not None:
+            fn(req)
 
     def _finish(self, req: Request, slot: Optional[int], reason: str,
                 now: float, already_released: bool,
@@ -399,6 +500,11 @@ class LLMEngine:
                 self.backend.release(slot, req)
             if self.slots[slot] is req:
                 self.slots[slot] = None
+        else:
+            # finishing without a slot (a preempted victim completing on
+            # its pre-eviction token): release() never runs for this rid —
+            # invalidate backend per-rid memo state explicitly
+            self._backend_forget(req)
         self._note_finished(req)
         finished.append(req)
 
@@ -484,6 +590,23 @@ class LLMEngine:
             "transfers": float(b.transfers),
             "max_concurrent": float(self.max_concurrent),
         }
+        # decode-iteration wall statistics (0.0 on a fresh engine — never
+        # divide by an empty window) + chunked-prefill progress: jitter =
+        # p99 − p50 iteration wall, the spread chunking exists to bound
+        walls = np.asarray(self._iter_walls, np.float64)
+        p50 = float(np.percentile(walls, 50)) if walls.size else 0.0
+        p99 = float(np.percentile(walls, 99)) if walls.size else 0.0
+        out.update({
+            "iter_wall_p50_ms": p50 * 1e3,
+            "iter_wall_p99_ms": p99 * 1e3,
+            "decode_iter_jitter_ms": (p99 - p50) * 1e3,
+            "prefill_chunks_in_flight": float(sum(
+                1 for r in self.slots
+                if r is not None and r.state == RequestState.PREFILL)),
+            "prefill_chunks_dispatched": float(
+                getattr(b, "prefill_chunk_dispatches", 0)),
+            "prefill_chunk_stalls": float(self._chunk_stalls),
+        })
         if getattr(b, "mesh", None) is not None:
             # mesh-sharded paged serving: aggregate + per-device pool
             # residency (the per-device numbers are what a fixed HBM

@@ -131,6 +131,7 @@ class _BackendBase:
 
     vectorized = True
     max_admit: Optional[int] = None   # None → EngineConfig.admit_batch
+    chunking = False                  # chunked-prefill admission path
 
     def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
         self.arch = arch
@@ -167,6 +168,13 @@ class _BackendBase:
 
     def release(self, slot: int, req: Request) -> None:
         """Recycle ``slot``'s resources (finish, preemption, abort)."""
+
+    def forget(self, req: Request) -> None:
+        """Drop any per-rid bookkeeping for a request that leaves the
+        engine *without* ever holding a slot (queued abort, or a
+        preempted request finishing on its pre-eviction token). Backends
+        that memoize per-rid state must invalidate it here, or a reused
+        rid can observe the predecessor's entries."""
 
     def evict_for(self, req: Request, candidates: List[int],
                   slots: Sequence[Optional[Request]]) -> List[int]:
@@ -577,6 +585,16 @@ class PagedBackend(_BackendBase):
             OrderedDict()
         self.prefill_tokens_skipped = 0
         self.prefill_tokens_total = 0
+        # chunked prefill: admissions split into block-aligned chunks
+        # co-scheduled with decode. Rings opt out (a ring arena cannot
+        # resume mid-history — same reason they opt out of prefix
+        # caching); the engine falls back to monolithic prefill there.
+        self.chunking = (ec.prefill_chunk_tokens is not None
+                         and not self.ring)
+        # per-slot mid-chunk admission state (set by prefill_begin,
+        # cleared at the final chunk or on release)
+        self._chunk: Dict[int, dict] = {}
+        self.prefill_chunk_dispatches = 0
         # quantized archs get int8 block pools (+ per-block scales) — the
         # family default; float archs keep compute_dtype pools
         self.quantized = bool(cfg.serve_quant)
@@ -898,6 +916,19 @@ class PagedBackend(_BackendBase):
         self._slot_len[slot] = 0
         self._slot_keys[slot] = []
         self._key_memo.pop(req.rid, None)
+        # aborted/preempted mid-chunk: the chunk cursor dies with the
+        # blocks (a re-admission re-prefills from scratch — or from
+        # whatever its own published blocks left in the cache)
+        self._chunk.pop(slot, None)
+        req.prefill_pos = 0
+
+    def forget(self, req: Request) -> None:
+        """Invalidate the per-rid chain-key memo for a request that never
+        reached ``release`` (queued abort / finish before admission). The
+        memo's validity check is continuation *length* only, so a reused
+        rid with a different same-length prompt would otherwise inherit
+        the predecessor's chain keys and claim false cache hits."""
+        self._key_memo.pop(req.rid, None)
 
     def evict_for(self, req, candidates, slots):
         need = self._max_blocks_needed(req)
@@ -1102,7 +1133,21 @@ class PagedBackend(_BackendBase):
         increfed, never rewritten), and the dispatch runs over only the
         uncached *suffix* — the prefix K/V is gathered from the pool
         inside the jitted step. The hit is capped so at least the last
-        token is always computed (its logits can't be looked up)."""
+        token is always computed (its logits can't be looked up).
+
+        This is the monolithic path: ``prefill_begin`` plus one unbounded
+        ``prefill_chunk`` — the chunked admission path is the same code
+        with a finite per-iteration token budget."""
+        self.prefill_begin(req, slot)
+        _, tok = self.prefill_chunk(req, slot, None, samp, any_sampling)
+        return tok
+
+    def prefill_begin(self, req: Request, slot: int) -> None:
+        """Admission bookkeeping for a (possibly chunked) prefill: reserve
+        the request's full worst-case block set, map any cached prefix
+        hit, and set the chunk cursor. No dispatch happens here — chunks
+        are dispatched by ``prefill_chunk``; a cache hit simply shortens
+        the chunk list (the cursor starts past the mapped prefix)."""
         blk = self.ec.block_len
         toks = continuation_tokens(req)
         n = toks.size
@@ -1119,12 +1164,15 @@ class PagedBackend(_BackendBase):
                         self._max_blocks_needed(req),
                         keys=keys_full[:j]),
             np.int32)
+        # the table row stays zeroed until the *final* chunk completes: a
+        # mid-chunk slot is excluded from the decode active set, but the
+        # batched decode still computes its (garbage) row each iteration —
+        # a zeroed table diverts that row's K/V write into the trash block
+        # instead of the partially-written admission blocks
         if self.kv_mode == "blocks":
             self.table[:, slot, :] = 0
-            self.table[self._dev(slot), slot, :block_ids.size] = block_ids
         else:
             self.table[slot, :] = 0
-            self.table[slot, :block_ids.size] = block_ids
         ring_ids = None
         if self.ring:
             wb = self.layout.ring_blocks
@@ -1135,20 +1183,74 @@ class PagedBackend(_BackendBase):
             self._ring_ids[slot] = ring_ids
             self.ring_table[slot, :] = ring_table_row(ring_ids, first)
             self.ring_start[slot] = first * blk
-        self._slot_len[slot] = n
-        start = j * blk   # static: one trace per (suffix bucket, hit depth)
-        if self._bucketing:
-            padded = np.zeros((1, pre_len - start), np.int32)
-            padded[0, :n - start] = toks[start:]
+        self._key_memo.pop(req.rid, None)
+        req.prefill_pos = j * blk
+        self.prefill_tokens_total += j * blk
+        self.prefill_tokens_skipped += j * blk
+        self._chunk[slot] = dict(toks=toks, n=n, pre_len=pre_len,
+                                 block_ids=block_ids, keys=keys_full,
+                                 ring_ids=ring_ids)
+
+    def prefill_chunk(self, req: Request, slot: int, budget, samp,
+                      any_sampling):
+        """One prefill-chunk dispatch for the admission started by
+        ``prefill_begin``. ``budget`` bounds this chunk's token count
+        (``None`` → the whole remaining suffix, the monolithic path).
+        Returns ``(tokens_consumed, tok)`` where ``tok`` is the sampled
+        first-token device array on the *final* chunk and ``None``
+        mid-prefill (a mid-chunk's sampled token is garbage: the true
+        next token is the prompt itself).
+
+        Chunk boundaries land on block boundaries (mid-chunks are exact
+        block multiples), so every chunk writes whole pool blocks with
+        ``start`` at the cursor and gathers the already-written blocks as
+        its prefix — the identical suffix-resume path a prefix-cache hit
+        uses, hence token-identical to the monolithic dispatch. Returns
+        ``(0, None)`` without dispatching when the budget is under one
+        block (the engine counts a stall)."""
+        st = self._chunk[slot]
+        blk = self.ec.block_len
+        alloc = self._alloc_for(slot)
+        c = req.prefill_pos
+        n = st["n"]
+        rem = n - c
+        if budget is None or budget >= rem:
+            length = rem
+            final = True
+        else:
+            length = (budget // blk) * blk
+            if length <= 0:
+                return 0, None
+            final = False
+        toks = st["toks"]
+        block_ids = st["block_ids"]
+        pb = c // blk                      # resume depth in blocks
+        if final and self._bucketing:
+            if budget is None:
+                # monolithic-compatible padding: the full admission bucket
+                width = st["pre_len"] - c
+            else:
+                # budgeted final chunk: pad only to the chunk-local pow2
+                # bucket (block-rounded, never past the reservation) so a
+                # short tail doesn't cost a full-bucket dispatch
+                bucket = bucket_for(length, max(self.ec.min_bucket, blk),
+                                    max(budget, blk))
+                width = min(blocks_for(bucket, blk) * blk,
+                            st["pre_len"] - c)
+            padded = np.zeros((1, width), np.int32)
+            padded[0, :length] = toks[c:]
             tokens = jnp.asarray(padded)
             true_len = jnp.asarray(n, jnp.int32)
         else:
-            # exact prompt, no pad tokens (MoE routing capacity depends on
-            # token count); K/V writes pad to block granularity internally
-            tokens = jnp.asarray(toks[start:][None, :])
+            # exact tokens, no pad: mid-chunks always (fixed shape per
+            # chunk size × resume depth) and every chunk on non-bucketing
+            # archs (MoE routing capacity depends on token count); K/V
+            # writes pad to block granularity internally
+            width = length
+            tokens = jnp.asarray(toks[c:c + length][None, :])
             true_len = None
         embeds = None if req.embeds is None else jnp.asarray(req.embeds)[None]
-        suffix_ids = block_ids[j:]
+        suffix_ids = block_ids[pb:blocks_for(c + width, blk)]
         if self.kv_mode == "blocks":
             # owner plane holds the real local ids; other devices write
             # (and gather prefixes) through 0 → their local trash block
@@ -1157,29 +1259,50 @@ class PagedBackend(_BackendBase):
             bid[dev] = suffix_ids
             bid_arg = jnp.asarray(bid)
             prefix_ids = None
-            if j:
-                pid = np.zeros((self.ndev, j), np.int32)
-                pid[dev] = block_ids[:j]
+            if pb:
+                pid = np.zeros((self.ndev, pb), np.int32)
+                pid[dev] = block_ids[:pb]
                 prefix_ids = jnp.asarray(pid)
         else:
             bid_arg = jnp.asarray(suffix_ids)
-            prefix_ids = jnp.asarray(block_ids[:j]) if j else None
+            prefix_ids = jnp.asarray(block_ids[:pb]) if pb else None
+        ring_ids = st["ring_ids"]
+        # start=c is static: one trace per (chunk width, resume depth)
         tok, self.cache, self.last_tok = self._prefill_fn(
             self.params, tokens, true_len, jnp.asarray(slot, jnp.int32),
             bid_arg,
             None if ring_ids is None else jnp.asarray(ring_ids),
             self.cache, self.last_tok, samp, embeds, prefix_ids,
-            any_sampling, start)
+            any_sampling, c)
+        # monolithic mode runs through this same path as one unbudgeted
+        # chunk; only budgeted (chunking-active) dispatches count, so the
+        # metric reads 0 on monolithic/ring engines
+        if self.chunking:
+            self.prefill_chunk_dispatches += 1
+        self.prefill_tokens_total += length
+        end = c + length
+        req.prefill_pos = end
         if self.prefix_caching:
             # publish every freshly written full block under its chain key
-            # (first-wins on key collision: the duplicate stays private)
-            for idx in range(j, n // blk):
-                alloc.register(req.rid, idx, keys_full[idx])
-            self._slot_keys[slot] = list(keys_full[:n // blk])
-            self._key_memo.pop(req.rid, None)
-        self.prefill_tokens_total += n
-        self.prefill_tokens_skipped += start
-        return tok
+            # as its chunk completes (first-wins on key collision: the
+            # duplicate stays private) — a concurrent admission can hit a
+            # mid-flight request's finished blocks
+            for idx in range(pb, end // blk):
+                alloc.register(req.rid, idx, st["keys"][idx])
+        if not final:
+            return length, None
+        # final chunk: the slot becomes a decode row — fill its table from
+        # the admitted blocks and hand the per-slot chain keys over to the
+        # decode-block publishing path
+        if self.kv_mode == "blocks":
+            self.table[self._dev(slot), slot, :block_ids.size] = block_ids
+        else:
+            self.table[slot, :block_ids.size] = block_ids
+        self._slot_len[slot] = n
+        if self.prefix_caching:
+            self._slot_keys[slot] = list(st["keys"][:n // blk])
+        del self._chunk[slot]
+        return length, tok
 
 
 _BACKENDS = {

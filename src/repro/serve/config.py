@@ -67,6 +67,18 @@ class EngineConfig:
     # instead of returning everything to the free list. Ring (sliding-
     # window) layouts opt out automatically.
     prefix_cache: bool = False
+    # paged backend: chunked prefill co-scheduled with decode. When set,
+    # an admission's prefill is split into block-aligned chunks of at most
+    # this many tokens per engine iteration (the budget is shared across
+    # every in-flight prefill), so one iteration's dispatch work is
+    # bounded: ≤ budget of prefill chunk work + one batched decode + one
+    # fetch. Must be a multiple of block_len (chunk boundaries land on
+    # block boundaries, keeping the suffix-resume reduction order
+    # unchanged — chunked output is token-identical to monolithic) and
+    # >= block_len. None (the default) keeps monolithic admission
+    # prefills. Ring (sliding-window) layouts opt out automatically: a
+    # ring arena cannot resume mid-history.
+    prefill_chunk_tokens: Optional[int] = None
     # paged backend on a mesh: the mesh axis names LLMEngine accepts, and
     # how the block pool is sharded over the "model" axis. mesh_axes[0]
     # must be "model" (the serve_rules TP axis); extra axes must have
@@ -148,6 +160,15 @@ class EngineConfig:
         if self.kv_shard not in ("auto", "heads", "blocks"):
             raise ValueError(
                 f"kv_shard must be auto|heads|blocks, got {self.kv_shard!r}")
+        if self.prefill_chunk_tokens is not None:
+            c = self.prefill_chunk_tokens
+            if c < self.block_len or c % self.block_len:
+                raise ValueError(
+                    f"prefill_chunk_tokens must be a multiple of block_len "
+                    f"({self.block_len}) and >= it, got {c} — chunk "
+                    f"boundaries must land on block boundaries so each "
+                    f"chunk writes whole pool blocks and the suffix-resume "
+                    f"reduction order is unchanged")
         if self.be_token_share is not None and not (
                 0.0 < self.be_token_share < 1.0):
             raise ValueError(

@@ -8,6 +8,14 @@ A :class:`Request` moves through an explicit state machine::
                         re-enters the queue and is re-prefilled from its
                         prompt + generated tokens, token-identically)
 
+With chunked prefill (``EngineConfig.prefill_chunk_tokens``) the PREFILL
+state is a *sub-state machine* of its own: a request may stay in PREFILL
+across several iterations while its prompt is written chunk-by-chunk
+(``prefill_pos`` is the cursor), co-scheduled with the batched decode.
+Mid-chunk requests hold a slot and their full block reservation but are
+excluded from the decode batch until the final chunk lands their first
+token.
+
 ``abort()`` moves a request from any live state to ``ABORTED``.
 
 When a request finishes, ``finish_reason`` records why:
@@ -84,6 +92,15 @@ class Request:
     # iterations spent waiting in the queue since submission / last
     # preemption (the QoS scheduler's admission-credit coordinate)
     waiting_iters: int = 0
+    # chunked prefill (paged backend): the per-request chunk cursor —
+    # tokens of the continuation already written into pool blocks while
+    # ``state == PREFILL``. A request whose cursor is short of its
+    # continuation length is *mid-chunk*: it holds a slot and its block
+    # reservation but produces no tokens yet, and its remaining chunks are
+    # co-scheduled with decode across later iterations. Always
+    # block-aligned except at completion; reset to 0 whenever the slot is
+    # released (preemption/abort re-prefills from scratch).
+    prefill_pos: int = 0
 
     @property
     def remaining(self) -> int:

@@ -84,8 +84,24 @@ class Scheduler:
         """Slot eviction preference for a forced admission, best first."""
         return _by_remaining_work(running)
 
+    def chunk_order(self,
+                    chunking: Sequence[Tuple[int, Request]]) -> List[int]:
+        """Order in which mid-chunk (PREFILL-in-progress) slots drain this
+        iteration's prefill-chunk token budget. ``chunking`` is (slot,
+        request) pairs in slot order; earlier slots get budget first, so
+        the head finishes its prefill (and starts decoding) before later
+        arrivals — admission-order completion, no chunk interleaving
+        starvation."""
+        return [i for i, _ in chunking]
+
     def note_iteration(self, admitted: Sequence[Request],
                        queue: Sequence[Request]) -> None:
+        """Advance queue aging. ``admitted`` must contain only requests
+        whose admission was actually *dispatched* this iteration (a
+        chunked admission counts from its first chunk; a deferred forced
+        admission — ``evict_for`` feasibility precheck returned no
+        victims — must not appear, or grant-credit accounting
+        double-counts it)."""
         for req in queue:
             req.waiting_iters += 1
 
@@ -214,6 +230,17 @@ class QoSTrafficClassScheduler(Scheduler):
         be = [(i, r) for i, r in running if r.qos != RT]
         rt = [(i, r) for i, r in running if r.qos == RT]
         return _by_remaining_work(be) + _by_remaining_work(rt)
+
+    def chunk_order(self, chunking):
+        """rt prefill chunks outrank be chunk work: the shared per-
+        iteration token budget drains into latency-critical prefills
+        first, so an rt TTFT is never extended by a long be prompt ahead
+        of it in slot order (the decode dispatch itself is one batch —
+        priority is expressed through budget order, the same way the
+        island arbiter orders narrow grants before wide beats)."""
+        rt = [i for i, r in chunking if r.qos == RT]
+        be = [i for i, r in chunking if r.qos != RT]
+        return rt + be
 
     def note_iteration(self, admitted, queue):
         super().note_iteration(admitted, queue)

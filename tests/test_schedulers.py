@@ -334,6 +334,65 @@ def test_scheduler_state_survives_preempt_requeue_cycle():
     assert rids.index(600) < rids.index(601)
 
 
+class DeferringBackend(FakeBackend):
+    """FakeBackend whose eviction feasibility check can refuse: while
+    ``defer`` is set, ``evict_for`` returns no victims, so a forced
+    admission is *deferred* — the scheduler asked for it, but nothing was
+    dispatched."""
+
+    def __init__(self, capacity=None):
+        super().__init__(capacity=capacity)
+        self.defer = True
+
+    def evict_for(self, req, candidates, slots):
+        if self.defer:
+            return []
+        return super().evict_for(req, candidates, slots)
+
+
+def test_deferred_forced_admission_accrues_no_credit():
+    """Regression (bugfix sweep): a forced admission whose eviction was
+    deferred by the backend must not appear in ``note_iteration``'s
+    admitted list — only *dispatched* admissions accrue be-grant-window
+    credit, or a deferral chain silently burns rt's bounded-priority
+    budget and hands be a guaranteed grant it never earned."""
+    ec = EngineConfig(slots=1, max_len=1024, scheduler="qos", rt_window=1)
+    backend = DeferringBackend()
+    eng = LLMEngine(None, None, ec, backend=backend)
+    be0 = _req(1000, qos="be", max_new=64)
+    eng.submit(be0)
+    eng.step()
+    assert eng.slots[0] is be0
+    rt = _req(0, qos="rt", max_new=4)
+    be2 = _req(1001, qos="be", max_new=4)         # be waiting: credit bait
+    eng.submit(rt)
+    eng.submit(be2)
+    sched = eng.scheduler
+    for _ in range(5):                            # deferred every iteration
+        eng.step()
+        assert sched._consecutive_rt == 0
+    assert rt.state == RequestState.WAITING
+    assert rt.rid not in backend.prefills
+    backend.defer = False                         # eviction now feasible
+    eng.step()
+    assert rt in eng.slots                        # dispatched this time...
+    assert be0.preemptions == 1
+    assert sched._consecutive_rt == 1             # ...and credited exactly once
+    assert backend.prefills[-1] == rt.rid
+
+
+def test_chunk_order_policies():
+    """The chunk-budget drain order: base schedulers keep slot order
+    (admission-order completion); qos drains rt prefill chunks before be
+    — an rt TTFT is never extended by a long be prompt's chunks."""
+    pairs = [(0, _req(10, qos="be")), (1, _req(11, qos="rt")),
+             (2, _req(12, qos="be")), (3, _req(13, qos="rt"))]
+    qos = make_scheduler(EngineConfig(scheduler="qos"))
+    assert qos.chunk_order(pairs) == [1, 3, 0, 2]
+    fcfs = make_scheduler(EngineConfig(scheduler="fcfs"))
+    assert fcfs.chunk_order(pairs) == [0, 1, 2, 3]
+
+
 def test_forced_admission_prefers_leftover_free_slot():
     """Regression: when the admit_batch cap leaves a free slot unused,
     a forced (rt-guarantee) admission takes that slot instead of evicting

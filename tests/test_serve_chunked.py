@@ -1,0 +1,443 @@
+"""Chunked prefill co-scheduled with decode: chunked-vs-monolithic
+token-identity (cross-family matrix + chunk-size sweep), the bounded
+per-iteration budget (stalls, decode progress during long prefills),
+mid-chunk abort block recycling, the rid-reuse chain-key memo bugfix, and
+a randomized 150-iteration interleave holding the allocator partition
+invariant every step.
+
+int8 cells note: a chunk boundary is a *suffix resume* — the next chunk
+attends the dequantized int8 K/V its predecessor wrote, while a
+monolithic prefill attends the pre-quantization float K/V in-dispatch.
+That is the same documented near-tie class as
+``test_int8_preemption_reprefill_boundary_contract``: greedy argmax can
+flip on a quantization-step tie. The matrix below pins workloads
+(deterministic seeds) where every cell — int8 included — is exactly
+token-identical; float cells are identical for *any* workload.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro import configs
+from repro.models import registry, schema as schema_lib
+from repro.serve.api import LLMEngine
+from repro.serve.config import EngineConfig
+from repro.serve.request import Request, RequestState
+
+BLK = 8
+
+
+@pytest.fixture(scope="module")
+def float_setup():
+    # serve_quant=False: identity assertions must not depend on int8
+    # requantization near-ties (see module docstring)
+    cfg = dataclasses.replace(configs.smoke_config("phi3-mini-3.8b"),
+                              serve_quant=False)
+    arch = registry.build(cfg)
+    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+    return cfg, arch, params
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+
+
+def _assert_partition(eng):
+    """The allocator partition invariant: every usable block is exactly
+    one of free / live / cached, and reservations are consistent."""
+    a = eng.alloc
+    assert (a.free_blocks + a.live_blocks + a.cached_blocks
+            == eng.layout.usable_blocks)
+    assert a.reserved_unallocated >= 0
+
+
+# ---------------------------------------------------------------------------
+# Config / construction surface
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_chunk_tokens_validation():
+    with pytest.raises(ValueError, match="multiple of block_len"):
+        EngineConfig(backend="paged", block_len=16, prefill_chunk_tokens=12)
+    with pytest.raises(ValueError, match="multiple of block_len"):
+        EngineConfig(backend="paged", block_len=16, prefill_chunk_tokens=8)
+    ec = EngineConfig(backend="paged", block_len=16, prefill_chunk_tokens=32)
+    assert ec.prefill_chunk_tokens == 32
+
+
+def test_chunked_requires_paged_backend():
+    ec = EngineConfig(backend="arena", block_len=16, prefill_chunk_tokens=16)
+    with pytest.raises(ValueError, match="paged backend only"):
+        LLMEngine(None, None, ec)
+
+
+def test_ring_layout_opts_out(float_setup):
+    """Sliding-window (ring) layouts cannot resume mid-history; the
+    backend silently falls back to monolithic prefills, like the prefix
+    cache does."""
+    cfg = configs.smoke_config("gemma3-4b")     # LLLLLG, ring blocks
+    arch = registry.build(cfg)
+    params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+
+    def run(chunk):
+        ec = EngineConfig(slots=2, max_len=48, block_len=BLK,
+                          backend="paged", prefill_chunk_tokens=chunk)
+        eng = LLMEngine(arch, params, ec)
+        for rid, n in enumerate([20, 9]):
+            eng.add_request(_prompt(cfg, n, seed=rid), max_new_tokens=4,
+                            rid=rid)
+        out = {r.rid: list(r.output) for r in eng.run_until_drained()}
+        return eng, out
+
+    eng, out = run(BLK)
+    assert eng.ring and not eng.backend.chunking
+    assert eng.backend.prefill_chunk_dispatches == 0
+    _, base = run(None)
+    assert out == base
+
+
+def test_metrics_fresh_engine_no_division(float_setup):
+    """Satellite bugfix: metrics() on a never-stepped engine must not
+    divide by empty windows — every rate/percentile defaults to 0.0."""
+    cfg, arch, params = float_setup
+    ec = EngineConfig(slots=2, max_len=64, block_len=BLK, backend="paged",
+                      prefix_cache=True, prefill_chunk_tokens=BLK)
+    eng = LLMEngine(arch, params, ec)
+    m = eng.metrics()
+    for key in ("iterations", "iter_wall_p50_ms", "iter_wall_p99_ms",
+                "decode_iter_jitter_ms", "prefill_chunks_in_flight",
+                "prefill_chunks_dispatched", "prefill_chunk_stalls",
+                "prefix_cache_hit_rate", "prefill_skip_rate",
+                "prefill_tokens_total"):
+        assert m[key] == 0.0, key
+
+
+# ---------------------------------------------------------------------------
+# Token identity: chunked == monolithic
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("chunk", [BLK, 3 * BLK])
+def test_chunk_size_sweep_float_identity(float_setup, chunk):
+    """Float cells are exactly identical for any chunk size / workload:
+    chunk boundaries land on block boundaries, the masked-softmax padding
+    underflows to exact zeros, and the resume gathers the same float
+    bytes the monolithic dispatch held in-register."""
+    cfg, arch, params = float_setup
+
+    def run(c, cache):
+        ec = EngineConfig(slots=3, max_len=64, block_len=BLK,
+                          backend="paged", prefix_cache=cache,
+                          prefill_chunk_tokens=c)
+        eng = LLMEngine(arch, params, ec)
+        for rid, n in enumerate([30, 5, 17, 24, 9, 31]):
+            eng.add_request(_prompt(cfg, n, seed=rid), max_new_tokens=6,
+                            rid=rid)
+        out = {r.rid: list(r.output) for r in eng.run_until_drained()}
+        _assert_partition(eng)
+        assert eng.alloc.live_blocks == 0
+        # the QoS dataflow contract holds under chunking: mid-chunk
+        # iterations still dispatch at most one decode + one fetch
+        assert eng.decode_dispatches <= eng.iterations
+        assert eng.transfers <= eng.iterations
+        return eng, out
+
+    for cache in (False, True):
+        _, base = run(None, cache)
+        eng, out = run(chunk, cache)
+        assert out == base
+        # chunking actually happened: more prefill dispatches than
+        # admissions (the 30/17/24/31-token prompts each span chunks)
+        assert eng.backend.prefill_chunk_dispatches > 6
+
+
+_MATRIX_CFGS = {
+    "dense": lambda: configs.smoke_config("phi3-mini-3.8b"),
+    # float32 keeps MoE routing ties deterministic; no-drop capacity keeps
+    # routing order-independent (chunked prefill routes each chunk's
+    # tokens separately — the documented moe.paged_prefill contract)
+    "moe": lambda: dataclasses.replace(
+        configs.smoke_config("qwen3-moe-30b-a3b"), dtype="float32",
+        moe_capacity=8.0),
+    "encdec": lambda: configs.smoke_config("whisper-small"),
+}
+
+_ARCH_CACHE = {}
+
+
+def _matrix_setup(family, quant):
+    key = (family, quant)
+    if key not in _ARCH_CACHE:
+        cfg = _MATRIX_CFGS[family]()
+        if family == "moe":
+            cfg = dataclasses.replace(cfg,
+                                      moe_capacity=float(cfg.n_experts))
+        cfg = dataclasses.replace(cfg, serve_quant=(quant == "int8"))
+        arch = registry.build(cfg)
+        params = schema_lib.init_params(arch.schema(), jax.random.key(0))
+        _ARCH_CACHE[key] = (cfg, arch, params)
+    return _ARCH_CACHE[key]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("quant", ["float", "int8"])
+@pytest.mark.parametrize("family", ["dense", "moe", "encdec"])
+def test_chunked_identity_matrix(family, quant):
+    """Chunked-vs-monolithic token identity across
+    {dense, moe, encdec} × {float, int8} × {prefix cache on, off}: four
+    requests share a 2-block system prompt (so cache-on cells resume
+    chunk lists shortened by prefix hits) with multi-chunk suffixes.
+    Workload seeds are pinned — see the module docstring for the int8
+    near-tie contract this pins around."""
+    cfg, arch, params = _matrix_setup(family, quant)
+    sys_prompt = (np.arange(2 * BLK) % cfg.vocab).astype(np.int32)
+    embeds = None
+    if family == "encdec":
+        emb_rng = np.random.default_rng(5)
+        embeds = (0.1 * emb_rng.standard_normal(
+            (cfg.enc_seq, cfg.d_model))).astype(np.float32)
+
+    def run(chunk, cache):
+        rng = np.random.default_rng(8)
+        ec = EngineConfig(slots=2, max_len=64, block_len=BLK,
+                          backend="paged", prefix_cache=cache,
+                          prefill_chunk_tokens=chunk, seed=11)
+        eng = LLMEngine(arch, params, ec)
+        for rid in range(4):
+            suffix = rng.integers(0, cfg.vocab,
+                                  size=int(rng.integers(10, 26))
+                                  ).astype(np.int32)
+            eng.add_request(np.concatenate([sys_prompt, suffix]),
+                            max_new_tokens=6, rid=rid, embeds=embeds)
+        out = {r.rid: list(r.output) for r in eng.run_until_drained()}
+        _assert_partition(eng)
+        assert eng.alloc.live_blocks == 0
+        return eng, out
+
+    for cache in (False, True):
+        _, base = run(None, cache)
+        eng, out = run(2 * BLK, cache)
+        assert len(out) == 4
+        assert out == base, f"{family}/{quant}/cache={cache} diverged"
+        assert eng.backend.prefill_chunk_dispatches > 4
+        if cache:
+            # prefix hits shorten the chunk list: later requests skip the
+            # shared system blocks entirely
+            assert eng.prefill_tokens_skipped >= 2 * BLK * 3
+
+
+# ---------------------------------------------------------------------------
+# The bounded iteration: decode progress, stalls, sub-state bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_decode_progress_during_long_chunked_prefill(float_setup):
+    """A running decode gains exactly one token per iteration while a
+    long prompt prefills chunk-by-chunk next to it — the jitter bound
+    chunking exists for. Monolithic admission would emit the same tokens
+    but stall the decode for the whole prompt inside one iteration."""
+    cfg, arch, params = float_setup
+    ec = EngineConfig(slots=2, max_len=64, block_len=BLK, backend="paged",
+                      prefill_chunk_tokens=BLK)
+    eng = LLMEngine(arch, params, ec)
+    h0 = eng.add_request(_prompt(cfg, 5, seed=0), max_new_tokens=12)
+    eng.step()
+    r0 = eng.request(h0)
+    assert r0.state == RequestState.RUNNING and len(r0.output) == 1
+
+    h1 = eng.add_request(_prompt(cfg, 41, seed=1), max_new_tokens=4)
+    r1 = eng.request(h1)
+    mid_chunk_iters = 0
+    while r1.state != RequestState.RUNNING:
+        before = len(r0.output)
+        pos = r1.prefill_pos
+        eng.step()
+        assert len(r0.output) == before + 1      # decode never stalls
+        if r1.state == RequestState.PREFILL:
+            mid_chunk_iters += 1
+            assert len(r1.output) == 0
+            assert r1.prefill_pos % BLK == 0     # cursor is block-aligned
+            assert 0 < r1.prefill_pos - pos <= BLK
+            assert eng.metrics()["prefill_chunks_in_flight"] == 1.0
+    # 41 tokens → 40-token continuation-before-last + final: ≥ 4 chunk
+    # iterations at 8 tokens each before the first token lands
+    assert mid_chunk_iters >= 4
+    assert len(r1.output) == 1
+    done = {r.rid: r for r in eng.run_until_drained()}
+    assert len(done[h0].output) == 12 and len(done[h1].output) == 4
+
+
+def test_chunk_budget_stall_counter(float_setup):
+    """Two long admissions under a one-block budget: the continuation
+    drains the whole budget, so the queued request's admission defers and
+    the stall counter advances."""
+    cfg, arch, params = float_setup
+    ec = EngineConfig(slots=2, max_len=64, block_len=BLK, backend="paged",
+                      prefill_chunk_tokens=BLK, admit_batch=2)
+    eng = LLMEngine(arch, params, ec)
+    eng.add_request(_prompt(cfg, 41, seed=0), max_new_tokens=3, rid=0)
+    eng.step()                                   # rid 0: first chunk
+    eng.add_request(_prompt(cfg, 41, seed=1), max_new_tokens=3, rid=1)
+    eng.step()  # continuation eats the budget; rid 1 must wait its turn
+    assert eng.request(1).state == RequestState.WAITING
+    assert eng.metrics()["prefill_chunk_stalls"] >= 1.0
+    done = eng.run_until_drained()
+    assert sorted(len(r.output) for r in done) == [3, 3]
+    _assert_partition(eng)
+
+
+def test_abort_mid_chunk_returns_all_blocks(float_setup):
+    """Aborting a mid-chunk request returns its full reservation (all
+    blocks were reserved at admission) to the allocator immediately and
+    clears the chunk cursor state."""
+    cfg, arch, params = float_setup
+    ec = EngineConfig(slots=2, max_len=64, block_len=BLK, backend="paged",
+                      prefill_chunk_tokens=BLK)
+    eng = LLMEngine(arch, params, ec)
+    free0 = eng.alloc.free_blocks
+    h = eng.add_request(_prompt(cfg, 41, seed=0), max_new_tokens=4)
+    eng.step()
+    req = eng.request(h)
+    assert req.state == RequestState.PREFILL and req.prefill_pos == BLK
+    assert eng.alloc.live_blocks > 0
+    assert eng.backend._chunk                     # cursor state held
+    assert eng.abort(h)
+    assert eng.alloc.free_blocks == free0         # every block back, now
+    assert eng.alloc.live_blocks == 0
+    assert not eng.backend._chunk
+    assert req.prefill_pos == 0
+    _assert_partition(eng)
+    assert eng.idle
+
+
+# ---------------------------------------------------------------------------
+# Satellite bugfix: rid-reuse chain-key memo invalidation
+# ---------------------------------------------------------------------------
+
+
+def test_queue_abort_forgets_chain_key_memo(float_setup):
+    """Regression: a queued request's chain keys are memoized by
+    ``can_admit`` (per rid, validated by continuation *length* only). An
+    abort before admission never reaches ``release``, so without the
+    ``forget`` hook a reused rid with a different same-length prompt
+    would inherit the predecessor's keys and claim false prefix hits."""
+    cfg, arch, params = float_setup
+    ec = EngineConfig(slots=2, max_len=64, block_len=BLK, backend="paged",
+                      prefix_cache=True, num_blocks=8)    # 7 usable
+    eng = LLMEngine(arch, params, ec)
+    eng.add_request(_prompt(cfg, 9, seed=0), max_new_tokens=8, rid=0)
+    eng.step()                                    # rid 0 live: 3 blocks
+    # rid 77's worst-case reservation (33 prompt + 22 new → 7 blocks)
+    # exceeds what rid 0 leaves free → queued via a can_admit refusal,
+    # which seeds the memo
+    p_old = _prompt(cfg, 33, seed=1)
+    eng.add_request(p_old, max_new_tokens=22, rid=77)
+    eng.step()
+    assert eng.request(77).state == RequestState.WAITING
+    assert 77 in eng.backend._key_memo
+    assert eng.abort(77)
+    assert 77 not in eng.backend._key_memo        # the fix
+    # reuse the rid with a *different same-length* prompt: fresh keys
+    p_new = _prompt(cfg, 33, seed=2)
+    assert not np.array_equal(p_old, p_new)
+    eng.add_request(p_new, max_new_tokens=22, rid=77)
+    keys = eng.backend._chain_keys(eng.request(77))
+    from repro.models.cache import prefix_chain_keys
+    assert keys == prefix_chain_keys(p_new, BLK)
+    done = eng.run_until_drained()
+    assert sorted(r.rid for r in done if r.state == RequestState.DONE) \
+        == [0, 77]
+    _assert_partition(eng)
+
+
+def test_finish_without_slot_forgets_memo(float_setup):
+    """The other no-release exit: a preempted victim finishing on its
+    pre-eviction token holds no slot — ``_finish(slot=None)`` must drop
+    the memo entry the same way the queued abort does."""
+    cfg, arch, params = float_setup
+    ec = EngineConfig(slots=2, max_len=64, block_len=BLK, backend="paged",
+                      prefix_cache=True)
+    eng = LLMEngine(arch, params, ec)
+    req = Request(rid=5, prompt=_prompt(cfg, 9, seed=0), max_new_tokens=2)
+    eng.submit(req)
+    eng.backend._chain_keys(req)                  # seed the memo
+    assert 5 in eng.backend._key_memo
+    eng.queue.remove(req)
+    eng._finish(req, None, "stop", 0.0, True, [])
+    assert 5 not in eng.backend._key_memo
+
+
+# ---------------------------------------------------------------------------
+# Randomized interleave: the allocator partition invariant under
+# chunked admissions × aborts × preemption × prefix hits
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_randomized_chunked_interleave_partition_invariant(float_setup):
+    """150 iterations of adversarial interleaving on the QoS scheduler:
+    random multi-chunk admissions (shared prefixes → cache hits shorten
+    chunk lists), random aborts (including mid-chunk), rt forced
+    admissions preempting be slots. After every step the allocator
+    partition invariant holds (free ⊎ live ⊎ cached == usable), and an
+    abort of a mid-chunk request returns its blocks immediately."""
+    cfg, arch, params = float_setup
+    ec = EngineConfig(slots=3, max_len=64, block_len=BLK, backend="paged",
+                      prefix_cache=True, prefill_chunk_tokens=BLK,
+                      scheduler="qos", rt_window=1, admit_batch=1)
+    eng = LLMEngine(arch, params, ec)
+    rng = np.random.default_rng(42)
+    shared = (np.arange(2 * BLK) % cfg.vocab).astype(np.int32)
+    rid = 0
+    live = []
+    mid_chunk_aborts = 0
+    for it in range(150):
+        # keep the slots oversubscribed (6 in flight over 3 slots, long
+        # be decodes) so rt arrivals must preempt; shapes drawn from a
+        # small set so the trace cache stays bounded
+        while len(live) < 6:
+            n = int(rng.choice([5, 9, 17, 25, 33]))
+            prompt = _prompt(cfg, n, seed=rid)
+            if rng.random() < 0.5:                # shared prefix → hits
+                prompt = np.concatenate([shared, prompt[:n - 2 * BLK]]) \
+                    if n > 2 * BLK else prompt
+            qos = "rt" if rng.random() < 0.3 else "be"
+            h = eng.add_request(prompt,
+                                max_new_tokens=int(
+                                    rng.choice([3, 6, 12]
+                                               if qos == "be" else [3, 4])),
+                                qos=qos,
+                                rid=rid)
+            live.append(h)
+            rid += 1
+        if live and rng.random() < 0.15:
+            victim = eng.request(live[int(rng.integers(len(live)))])
+            was_mid_chunk = victim.state == RequestState.PREFILL
+            before_live = eng.alloc.live_blocks
+            if eng.abort(victim):
+                if was_mid_chunk:
+                    mid_chunk_aborts += 1
+                    # the mid-chunk reservation came back *immediately*
+                    assert eng.alloc.live_blocks < before_live
+        eng.step()
+        _assert_partition(eng)
+        live = [h for h in live if not eng.request(h).finished]
+    done = eng.run_until_drained()
+    _assert_partition(eng)
+    assert eng.alloc.live_blocks == 0
+    # the adversary actually exercised the paths it claims to
+    assert mid_chunk_aborts >= 1
+    assert eng.backend.prefill_chunk_dispatches > 20
+    assert eng.alloc.hit_blocks > 0
+    assert any(r.preemptions > 0
+               for r in eng._requests.values()) or any(
+                   r.preemptions > 0 for r in done)
+    # every non-aborted request that drained produced its full output
+    for r in done:
+        if r.state == RequestState.DONE:
+            assert len(r.output) == r.max_new_tokens

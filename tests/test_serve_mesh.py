@@ -75,9 +75,10 @@ def _workload(cfg, n=6, seed=0, max_new=6, embeds_seed=None, shared=0):
 
 
 def _drain(arch, params, cfg, mesh, *, cache=False, embeds_seed=None,
-           shared=0, kv_shard="auto", slots=4):
+           shared=0, kv_shard="auto", slots=4, chunk=None):
     ec = EngineConfig(slots=slots, max_len=64, block_len=8, backend="paged",
-                      prefix_cache=cache, kv_shard=kv_shard)
+                      prefix_cache=cache, kv_shard=kv_shard,
+                      prefill_chunk_tokens=chunk)
     eng = LLMEngine(arch, params, ec, mesh=mesh)
     for r in _workload(cfg, embeds_seed=embeds_seed, shared=shared):
         eng.submit(r)
@@ -124,6 +125,40 @@ def test_mesh_token_identity_matrix(family, quant, cache):
         expect_mode = "heads" if cfg.n_kv_heads % n == 0 else "blocks"
         assert eng.kv_mode == expect_mode
         assert out == base, f"{family}/{quant} diverged at {n} devices"
+
+
+@needs2
+@pytest.mark.parametrize("family,quant", [
+    ("dense", "float"), ("dense", "int8"), ("encdec", "float"),
+])
+def test_mesh_chunked_prefill_identity(family, quant):
+    """The chunked column of the mesh matrix: chunked prefill composes
+    with sharding — a chunk's suffix dispatch and the per-device
+    allocators behave identically at 1/2/4 devices (heads mode is
+    bit-identical; blocks mode writes owner planes). Chunked mesh runs
+    are compared against chunked single-device runs so the assertion is
+    a pure mesh property (chunked-vs-monolithic identity is pinned in
+    ``test_serve_chunked``; int8 chunk boundaries carry the documented
+    requantize near-tie contract, which same-boundary comparisons like
+    this one are immune to). Float cells additionally match the
+    monolithic baseline exactly."""
+    cfg, arch, params = _setup(family, quant)
+    embeds_seed = 5 if family == "encdec" else None
+    base, beng = _drain(arch, params, cfg, None, cache=True, shared=8,
+                        embeds_seed=embeds_seed, chunk=8)
+    assert len(base) == 6
+    assert beng.backend.prefill_chunk_dispatches > 6   # multi-chunk runs
+    if quant == "float":
+        mono, _ = _drain(arch, params, cfg, None, cache=True, shared=8,
+                         embeds_seed=embeds_seed)
+        assert base == mono
+    for n in (2, 4):
+        if n > NDEV:
+            continue
+        out, eng = _drain(arch, params, cfg, _mesh(n), cache=True,
+                          shared=8, embeds_seed=embeds_seed, chunk=8)
+        assert eng.backend.chunking
+        assert out == base, f"{family}/{quant} chunked diverged at {n} dev"
 
 
 @needs2
