@@ -44,6 +44,7 @@ SERVE_MODULES = [
     "repro.serve.request",
     "repro.serve.config",
     "repro.serve.scheduler",
+    "repro.serve.spec",
     "repro.serve.backends",
     "repro.serve.api",
     "repro.serve.engine",
@@ -98,6 +99,20 @@ def smoke() -> None:
         failures += 1
         print(f"mesh_surface_IMPORT_ERROR,0.0,{type(e).__name__}:{e}")
         traceback.print_exc(file=sys.stderr, limit=3)
+    try:
+        from repro.kernels.paged_attention import (
+            paged_attention_verify, paged_attention_verify_int8,
+        )
+        from repro.serve.spec import accept_tokens, ngram_propose
+        for fn in (paged_attention_verify, paged_attention_verify_int8,
+                   ngram_propose, accept_tokens):
+            if not callable(fn):
+                raise AttributeError(f"{fn!r} not callable")
+        print("repro.serve.spec_surface,0.0,import_ok")
+    except Exception as e:  # noqa: BLE001
+        failures += 1
+        print(f"spec_surface_IMPORT_ERROR,0.0,{type(e).__name__}:{e}")
+        traceback.print_exc(file=sys.stderr, limit=3)
     for mod in SERVE_MODULES:
         try:
             m = importlib.import_module(mod)
@@ -106,7 +121,8 @@ def smoke() -> None:
                 raise AttributeError("repro.serve.api.LLMEngine missing")
             if mod == "repro.serve.config":
                 for field in ("prefix_cache", "be_token_share",
-                              "prefill_chunk_tokens"):
+                              "prefill_chunk_tokens", "spec_tokens",
+                              "spec_method"):
                     if not hasattr(m.EngineConfig(), field):
                         raise AttributeError(
                             f"EngineConfig.{field} missing")

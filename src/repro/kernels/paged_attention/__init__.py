@@ -1,3 +1,4 @@
 from repro.kernels.paged_attention.ops import (  # noqa: F401
     paged_attention, paged_attention_int8,
+    paged_attention_verify, paged_attention_verify_int8,
 )

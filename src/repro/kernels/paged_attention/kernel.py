@@ -300,3 +300,268 @@ def paged_attention_int8_pallas(
       jnp.asarray(start, jnp.int32), jnp.asarray(k_scale, jnp.float32),
       jnp.asarray(v_scale, jnp.float32), qg, k_pool, v_pool)
     return out.reshape(b, hq, 1, d)
+
+
+# ---------------------------------------------------------------------------
+# Small-q verify kernels (speculative decoding)
+# ---------------------------------------------------------------------------
+#
+# The verify step sits between decode (q=1) and prefill: each row carries
+# Q = spec_tokens + 1 query positions — the last committed token plus the
+# drafts — whose K/V were just written at positions len-1 … len-1+Q-1.
+# Query row j attends ``lens + j`` keys. Folding Q into the grouped-row
+# axis reuses the decode kernel's dataflow unchanged: the q "row" becomes
+# the [group·Q, D] bundle, each flash row gets a per-row effective length
+# ``lens + (row % Q)``, and pool blocks are still DMA'd exactly once per
+# (row, kv-head) — the whole point: k+1 tokens scored per pool sweep.
+#
+# A block is skipped only when it is past *every* row's length
+# (``row0 < length + Q - 1``). Blocks fully masked for a given flash row
+# are exact no-ops for that row: the masked scores are NEG_INF, so either
+# the row's running max is already finite (p underflows to exact 0, alpha
+# is exp(0)=1) or it is still NEG_INF and the later first valid block's
+# alpha = exp(NEG_INF − finite) rescales the placeholder sums by exact 0.
+# Row j=0 therefore reproduces the decode kernel's accumulation order
+# bit-for-bit.
+
+
+def _paged_verify_kernel(
+    table_ref, lens_ref, start_ref,  # scalar prefetch (SMEM)
+    q_ref, k_ref, v_ref,            # blocks picked by index maps
+    o_ref,
+    m_ref, l_ref, acc_ref,          # VMEM scratch
+    *, block_len: int, group: int, qlen: int, window: Optional[int],
+):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lens_ref[b]
+    row0 = start_ref[b] + i * block_len
+    rows = group * qlen
+
+    @pl.when(row0 < length + qlen - 1)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)    # [group·Q, D] (pre-scaled)
+        k = k_ref[0, 0].astype(jnp.float32)    # [block_len, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)  # [group·Q, block_len]
+        pos = row0 + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, block_len), 1)
+        # flash row r is query position r % Q of query-head group r // Q
+        eff = length + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, block_len), 0) % qlen
+        mask = pos < eff
+        if window is not None:
+            mask &= pos >= eff - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                    # [group·Q, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(i == nb - 1)
+    def _finish():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "interpret"))
+def paged_attention_verify_pallas(
+    q: jax.Array,            # [B, Hq, Q, D] float (post-RoPE)
+    k_pool: jax.Array,       # [N, Hkv, block_len, D]
+    v_pool: jax.Array,       # [N, Hkv, block_len, D]
+    block_table: jax.Array,  # [B, M] int32
+    lens: jax.Array,         # [B] int32: committed_len + 1
+    *,
+    window: Optional[int] = None,
+    start: Optional[jax.Array] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, qlen, d = q.shape
+    n, hkv, blk, _ = k_pool.shape
+    m = block_table.shape[1]
+    group = hq // hkv
+    if hq % hkv:
+        raise ValueError(f"query heads {hq} not a multiple of kv heads {hkv}")
+    rows = group * qlen
+    # [B, Hq, Q, D] → [B, Hkv, group·Q, D]: row (g, j), query index fastest
+    qg = (q.astype(jnp.float32) * (d ** -0.5)).reshape(b, hkv, rows, d)
+    if start is None:
+        start = jnp.zeros((b,), jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d),
+                         lambda bi, h, i, tbl, ln, st: (bi, h, 0, 0)),
+            pl.BlockSpec((1, 1, blk, d),
+                         lambda bi, h, i, tbl, ln, st: (tbl[bi, i], h, 0, 0)),
+            pl.BlockSpec((1, 1, blk, d),
+                         lambda bi, h, i, tbl, ln, st: (tbl[bi, i], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, rows, d), lambda bi, h, i, tbl, ln, st: (bi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_verify_kernel, block_len=blk, group=group, qlen=qlen,
+        window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rows, d), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), jnp.asarray(lens, jnp.int32),
+      jnp.asarray(start, jnp.int32), qg, k_pool, v_pool)
+    return out.reshape(b, hq, qlen, d)
+
+
+def _paged_verify_int8_kernel(
+    table_ref, lens_ref, start_ref, ks_ref, vs_ref,  # scalar prefetch
+    q_ref, k_ref, v_ref,
+    o_ref,
+    m_ref, l_ref, acc_ref,
+    *, block_len: int, group: int, qlen: int, window: Optional[int],
+    q_scale: float,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lens_ref[b]
+    row0 = start_ref[b] + i * block_len
+    blk_id = table_ref[b, i]
+    rows = group * qlen
+
+    @pl.when(row0 < length + qlen - 1)
+    def _block():
+        q8 = q_ref[0, 0]                       # [group·Q, D] int8
+        k8 = k_ref[0, 0]                       # [block_len, D] int8
+        v8 = v_ref[0, 0]
+        s32 = jax.lax.dot_general(
+            q8, k8, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        s = s32.astype(jnp.float32) * (q_scale * ks_ref[blk_id])
+        pos = row0 + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, block_len), 1)
+        eff = length + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, block_len), 0) % qlen
+        mask = pos < eff
+        if window is not None:
+            mask &= pos >= eff - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v8.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv * vs_ref[blk_id]
+        m_ref[...] = m_new
+
+    @pl.when(i == nb - 1)
+    def _finish():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "q_scale", "interpret"))
+def paged_attention_verify_int8_pallas(
+    q: jax.Array,            # [B, Hq, Q, D] float (post-RoPE)
+    k_pool: jax.Array,       # [N, Hkv, block_len, D] int8
+    v_pool: jax.Array,       # [N, Hkv, block_len, D] int8
+    block_table: jax.Array,  # [B, M] int32
+    lens: jax.Array,         # [B] int32: committed_len + 1
+    k_scale: jax.Array,      # [N] f32 per-block scales
+    v_scale: jax.Array,      # [N] f32
+    *,
+    q_scale: float,
+    window: Optional[int] = None,
+    start: Optional[jax.Array] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, qlen, d = q.shape
+    n, hkv, blk, _ = k_pool.shape
+    m = block_table.shape[1]
+    group = hq // hkv
+    if hq % hkv:
+        raise ValueError(f"query heads {hq} not a multiple of kv heads {hkv}")
+    if k_pool.dtype != jnp.int8 or v_pool.dtype != jnp.int8:
+        raise ValueError(
+            f"int8 kernel needs int8 pools, got {k_pool.dtype}/{v_pool.dtype}")
+    rows = group * qlen
+    qs = q.astype(jnp.float32) * (d ** -0.5)
+    q8 = jnp.clip(jnp.round(qs / q_scale), -127, 127).astype(jnp.int8)
+    qg = q8.reshape(b, hkv, rows, d)
+    if start is None:
+        start = jnp.zeros((b,), jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(b, hkv, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d),
+                         lambda bi, h, i, tbl, ln, st, ks, vs: (bi, h, 0, 0)),
+            pl.BlockSpec((1, 1, blk, d),
+                         lambda bi, h, i, tbl, ln, st, ks, vs:
+                         (tbl[bi, i], h, 0, 0)),
+            pl.BlockSpec((1, 1, blk, d),
+                         lambda bi, h, i, tbl, ln, st, ks, vs:
+                         (tbl[bi, i], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, rows, d),
+            lambda bi, h, i, tbl, ln, st, ks, vs: (bi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_verify_int8_kernel, block_len=blk, group=group, qlen=qlen,
+        window=window, q_scale=q_scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rows, d), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), jnp.asarray(lens, jnp.int32),
+      jnp.asarray(start, jnp.int32), jnp.asarray(k_scale, jnp.float32),
+      jnp.asarray(v_scale, jnp.float32), qg, k_pool, v_pool)
+    return out.reshape(b, hq, qlen, d)

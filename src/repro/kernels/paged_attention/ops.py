@@ -54,9 +54,11 @@ import numpy as np
 
 from repro.kernels.paged_attention.kernel import (
     paged_attention_int8_pallas, paged_attention_pallas,
+    paged_attention_verify_int8_pallas, paged_attention_verify_pallas,
 )
 from repro.kernels.paged_attention.ref import (
     paged_attention_int8_ref, paged_attention_ref,
+    paged_attention_verify_int8_ref, paged_attention_verify_ref,
 )
 
 DEFAULT_BACKEND = os.environ.get("REPRO_PAGED_ATTN_BACKEND", "xla")
@@ -154,5 +156,94 @@ def paged_attention_int8(
                     f"the 'pallas'/'interpret' kernel (or the dequant "
                     f"oracle) for per-block calibration")
         return paged_attention_int8_ref(
+            q, k_pool, v_pool, block_table, lens, window=window, start=start)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def paged_attention_verify(
+    q: jax.Array,            # [B, Hq, Q, D] float (post-RoPE), Q = k + 1
+    k_pool: jax.Array,       # [N, Hkv, block_len, D]
+    v_pool: jax.Array,       # [N, Hkv, block_len, D]
+    block_table: jax.Array,  # [B, M] int32 pool indices
+    lens: jax.Array,         # [B] int32: committed_len + 1
+    *,
+    window: Optional[int] = None,
+    start: Optional[jax.Array] = None,
+    backend: str = DEFAULT_BACKEND,
+) -> jax.Array:
+    """Small-q verify attention for speculative decoding.
+
+    Query row ``j`` of each batch row scores draft position
+    ``committed + j`` against ``lens + j`` keys (its committed history
+    plus the ``j`` draft K/V entries written before it this dispatch).
+    Row 0 is exactly a decode step — with ``Q == 1`` every backend here
+    matches ``paged_attention`` bit-for-bit, which is what keeps the
+    speculative engine token-identical to the plain one.
+    """
+    if q.shape[1] % k_pool.shape[1]:
+        raise ValueError(
+            f"query heads {q.shape[1]} not a multiple of kv heads "
+            f"{k_pool.shape[1]}")
+    if backend in ("pallas", "interpret"):
+        return paged_attention_verify_pallas(
+            q, k_pool, v_pool, block_table, lens, window=window, start=start,
+            interpret=backend == "interpret")
+    if backend == "xla":
+        return paged_attention_verify_ref(
+            q, k_pool, v_pool, block_table, lens, window=window, start=start)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def paged_attention_verify_int8(
+    q: jax.Array,            # [B, Hq, Q, D] float (post-RoPE)
+    k_pool: jax.Array,       # [N, Hkv, block_len, D] int8
+    v_pool: jax.Array,       # [N, Hkv, block_len, D] int8
+    block_table: jax.Array,  # [B, M] int32 pool indices
+    lens: jax.Array,         # [B] int32: committed_len + 1
+    *,
+    k_scale: Optional[jax.Array] = None,  # [N] f32 per-block (None→KV_SCALE)
+    v_scale: Optional[jax.Array] = None,
+    window: Optional[int] = None,
+    start: Optional[jax.Array] = None,
+    backend: str = DEFAULT_BACKEND,
+) -> jax.Array:
+    """Int8 small-q verify attention (same numerics split as decode:
+    ``xla`` is the exact multi-q ITA oracle, ``pallas``/``interpret`` the
+    fused dequant kernel contracted to
+    ``ref.paged_attention_verify_int8_dequant_ref``)."""
+    if q.shape[1] % k_pool.shape[1]:
+        raise ValueError(
+            f"query heads {q.shape[1]} not a multiple of kv heads "
+            f"{k_pool.shape[1]}")
+    if k_pool.dtype != jnp.int8 or v_pool.dtype != jnp.int8:
+        raise ValueError(
+            f"paged_attention_verify_int8 needs int8 pools, got "
+            f"{k_pool.dtype}/{v_pool.dtype} — float pools go through "
+            f"paged_attention_verify")
+    from repro.models.attention import KV_SCALE, Q_SCALE
+
+    if backend in ("pallas", "interpret"):
+        n = k_pool.shape[0]
+        if k_scale is None:
+            k_scale = jnp.full((n,), KV_SCALE, jnp.float32)
+        if v_scale is None:
+            v_scale = jnp.full((n,), KV_SCALE, jnp.float32)
+        return paged_attention_verify_int8_pallas(
+            q, k_pool, v_pool, block_table, lens, k_scale, v_scale,
+            q_scale=Q_SCALE, window=window, start=start,
+            interpret=backend == "interpret")
+    if backend == "xla":
+        for name, scale in (("k_scale", k_scale), ("v_scale", v_scale)):
+            if scale is None or isinstance(scale, jax.core.Tracer):
+                continue
+            vals = np.asarray(scale)
+            if not np.all(vals == np.float32(KV_SCALE)):
+                raise ValueError(
+                    f"paged_attention_verify_int8 backend='xla' (ITA "
+                    f"integer pipeline) supports only the static KV_SCALE "
+                    f"calibration, but {name} has per-block values — use "
+                    f"the 'pallas'/'interpret' kernel (or the dequant "
+                    f"oracle) for per-block calibration")
+        return paged_attention_verify_int8_ref(
             q, k_pool, v_pool, block_table, lens, window=window, start=start)
     raise ValueError(f"unknown backend {backend!r}")

@@ -21,7 +21,9 @@ import numpy as np
 
 # name lists live in repro.serve.config (the single source of truth);
 # the deprecated --engine names are that module's legacy aliases too
-from repro.serve.config import BACKENDS, SCHEDULERS, canonical_backend
+from repro.serve.config import (
+    BACKENDS, SCHEDULERS, SPEC_METHODS, canonical_backend,
+)
 
 _ENGINE_NAMES = ("batched", "paged", "reference")
 
@@ -74,6 +76,13 @@ def main():
                     help="co-schedule prefill with decode in chunks of "
                          "this many tokens per iteration (paged backend; "
                          "multiple of --block-len; default monolithic)")
+    ap.add_argument("--spec-tokens", type=int, default=0,
+                    help="speculative decoding: host-drafted tokens "
+                         "verified per iteration (paged backend; 0 = off; "
+                         "greedy acceptance stays token-identical)")
+    ap.add_argument("--spec-method", choices=SPEC_METHODS, default="ngram",
+                    help="draft method: 'ngram' = prompt-lookup matching "
+                         "over the request's own tokens (no second model)")
     ap.add_argument("--be-token-share", type=float, default=None,
                     help="qos scheduler: cap the best-effort share of "
                          "decode tokens while rt traffic waits (0, 1)")
@@ -115,6 +124,8 @@ def main():
                       rt_window=args.rt_window,
                       prefix_cache=args.prefix_cache,
                       prefill_chunk_tokens=args.prefill_chunk_tokens,
+                      spec_tokens=args.spec_tokens,
+                      spec_method=args.spec_method,
                       be_token_share=args.be_token_share,
                       kv_shard=args.kv_shard)
     mesh = None
@@ -152,6 +163,13 @@ def main():
             f"{em[k]:.3f}" if isinstance(em[k], float) else
             f"{k.removeprefix('prefix_cache_')}={em[k]}"
             for k in sorted(em) if "prefix" in k or "prefill" in k))
+    if args.spec_tokens:
+        em = engine.metrics()
+        print("speculative: " + " ".join(
+            f"{k}={em[k]:.3f}" if isinstance(em[k], float) else
+            f"{k}={em[k]}"
+            for k in sorted(em)
+            if k.startswith("spec_") or "per_token" in k))
     if args.prefill_chunk_tokens:
         em = engine.metrics()
         print("chunked_prefill: " + " ".join(

@@ -416,6 +416,34 @@ class BlockAllocator:
     def owned(self, rid: int) -> List[int]:
         return list(self._owned.get(rid, ()))
 
+    def shrink(self, rid: int, keep: int) -> List[int]:
+        """Speculative-decode rollback: return ``rid``'s blocks past index
+        ``keep`` to the pool, newest first, keeping the reservation intact
+        (the committed frontier may cross the same boundary again next
+        iteration). Rolled-back blocks hold garbage K/V past the accept
+        point, so any content key they were published under is retracted
+        before the decref — the cache must never serve them. Returns the
+        dropped block ids (newest first).
+
+        In practice dropped blocks are always private (they were grown
+        fresh past the committed frontier, and ``register`` only publishes
+        committed full blocks), so the retraction is a guard, not a hot
+        path.
+        """
+        owned = self._owned.get(rid)
+        if owned is None:
+            raise KeyError(f"request {rid} not admitted")
+        if keep < 0:
+            raise ValueError(f"keep {keep} must be >= 0")
+        dropped: List[int] = []
+        while len(owned) > keep:
+            blk = owned.pop()
+            if blk in self._hash_of:
+                del self._block_of[self._hash_of.pop(blk)]
+            self.decref(blk)
+            dropped.append(blk)
+        return dropped
+
     # -- refcounts ---------------------------------------------------------
 
     def incref(self, block: int) -> None:

@@ -411,6 +411,75 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
     return logits[:, 0], dict(cache, k=ks, v=vs, len=cache["len"] + 1)
 
 
+def paged_verify_step(params, cache, tokens, cfg: ModelConfig, table, *,
+                      qparams=None, embeds=None, attn_backend: str = "xla"):
+    """Speculative-decode verify step (see ``transformer.paged_verify_step``
+    for the token/position contract): ``tokens`` [slots, Q] scores all
+    Q = spec_tokens + 1 positions per slot in one dispatch. Self-attention
+    runs the multi-q verify ops over the paged pool; cross-attention folds
+    the Q axis into the head axis of ``decode_attention`` — every (head, j)
+    row attends the same full ``enc_seq`` arena, so each row is bit-identical
+    to the decode path's single-query cross-attention. ``cache["len"]`` is
+    host-owned and not advanced here."""
+    from repro.kernels.paged_attention.ops import (
+        paged_attention_verify, paged_attention_verify_int8,
+    )
+    from repro.models.cache import quantize_kv
+
+    del qparams  # encdec serving keeps float weights
+    x = nn.embed(tokens, params["embed"], cfg.compute_dtype)
+    b, qlen = tokens.shape
+    pos = dense._as_positions(cache["len"], b)
+    positions = pos[:, None] + jnp.arange(qlen, dtype=jnp.int32)[None, :]
+    table = jax.tree.map(lambda a: jnp.asarray(a, jnp.int32), table)
+    tbl, _ = dense._resolve_paged_table(table, "G")
+    hd = cfg.hd
+    int8_kv = cache["k"].dtype == jnp.int8
+
+    def body(xc, slices):
+        p, kc, vc, ksc, vsc, xkc, xvc = slices
+        h = nn.rms_norm(xc, p["ln1"])
+        q = nn.dense(h, p["wq"]).reshape(b, qlen, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        k = nn.dense(h, p["wk"]).reshape(b, qlen, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        v = nn.dense(h, p["wv"]).reshape(b, qlen, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        q = nn.rope(q, positions[:, None, :], cfg.rope_theta)
+        k = nn.rope(k, positions[:, None, :], cfg.rope_theta)
+        if int8_kv:
+            k, v = quantize_kv(k, attn.KV_SCALE), quantize_kv(v, attn.KV_SCALE)
+        sc = dense._paged_verify_write({"k": kc, "v": vc}, k, v, pos, tbl,
+                                       kc.shape[2])
+        kc, vc = sc["k"], sc["v"]
+        if int8_kv:
+            o = paged_attention_verify_int8(q, kc, vc, tbl, pos + 1,
+                                            k_scale=ksc, v_scale=vsc,
+                                            backend=attn_backend)
+        else:
+            o = paged_attention_verify(q, kc, vc, tbl, pos + 1,
+                                       backend=attn_backend)
+        xc = xc + nn.dense(dense._merge_heads(o), p["wo"])
+        hx = nn.rms_norm(xc, p["lnx"])
+        xq = nn.dense(hx, p["xwq"]).reshape(b, qlen, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        # fold Q into the query-head axis: rows flatten kv-major, so row
+        # (h, j) still lands in kv group h // group — a uniform-length
+        # (position-free) attention identical per row to the decode path
+        xo = attn.decode_attention(
+            xq.reshape(b, cfg.n_heads * qlen, 1, hd), xkc, xvc,
+            jnp.asarray(cfg.enc_seq, jnp.int32),
+        ).reshape(b, cfg.n_heads, qlen, hd)
+        xc = xc + nn.dense(dense._merge_heads(xo), p["xwo"])
+        xc = xc + dense._mlp(nn.rms_norm(xc, p["ln2"]), p, cfg)
+        return xc, (kc, vc)
+
+    L = cfg.n_layers
+    ks_in = cache.get("kscale", jnp.zeros((L, 1), jnp.float32))
+    vs_in = cache.get("vscale", jnp.zeros((L, 1), jnp.float32))
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_stack"], cache["k"], cache["v"],
+                  ks_in, vs_in, cache["xk"], cache["xv"]))
+    x = nn.rms_norm(x, params["final_norm"])
+    return nn.unembed(x, params["unembed"]), dict(cache, k=ks, v=vs)
+
+
 def decode_step(params, cache, tokens, cfg: ModelConfig, *, qparams=None,
                 embeds=None):
     """One dense-arena decode step. Under ``serve_quant`` the self-attention

@@ -414,6 +414,85 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
     return logits[:, 0], dict(cache, len=cache["len"] + 1)
 
 
+def _paged_verify_layer(x, p, c, kind, cfg, pos, table, attn_backend):
+    """Small-q speculative-verify layer (see the dense family's
+    ``_paged_verify_layer``). The expert router sees all Q = spec + 1
+    positions of every slot as one routing group per row, with capacity
+    ``_capacity(cfg, Q)`` — token identity with the q=1 decode path
+    requires the capacity not to bind, the same no-drop condition the
+    prefix-cache resume already pins down."""
+    from repro.kernels.paged_attention.ops import (
+        paged_attention_verify, paged_attention_verify_int8,
+    )
+    from repro.models.cache import quantize_kv
+
+    h = nn.rms_norm(x, p["ln1"])
+    b, qlen = x.shape[:2]
+    hd = cfg.hd
+    q = nn.dense(h, p["wq"]).reshape(b, qlen, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = nn.dense(h, p["wk"]).reshape(b, qlen, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = nn.dense(h, p["wv"]).reshape(b, qlen, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    positions = pos[:, None] + jnp.arange(qlen, dtype=jnp.int32)[None, :]
+    q = nn.rope(q, positions[:, None, :], cfg.rope_theta)
+    k = nn.rope(k, positions[:, None, :], cfg.rope_theta)
+    tbl, start = dense._resolve_paged_table(table, kind)
+    window = cfg.local_window if kind == "L" else None
+    if c["k"].dtype == jnp.int8:
+        c = dense._paged_verify_write(
+            c, quantize_kv(k, attn.KV_SCALE), quantize_kv(v, attn.KV_SCALE),
+            pos, tbl, c["k"].shape[2], start=start)
+        o = paged_attention_verify_int8(
+            q, c["k"], c["v"], tbl, pos + 1,
+            k_scale=c["kscale"], v_scale=c["vscale"],
+            window=window, start=start, backend=attn_backend)
+    else:
+        c = dense._paged_verify_write(c, k, v, pos, tbl, c["k"].shape[2],
+                                      start=start)
+        o = paged_attention_verify(q, c["k"], c["v"], tbl, pos + 1,
+                                   window=window, start=start,
+                                   backend=attn_backend)
+    x = x + nn.dense(dense._merge_heads(o), p["wo"])
+    x = x + moe_mlp(nn.rms_norm(x, p["ln2"]), p, cfg)
+    return x, c
+
+
+def paged_verify_step(params, cache, tokens, cfg: ModelConfig, table, *,
+                      qparams=None, attn_backend: str = "xla"):
+    """Speculative-decode verify step (see the dense family's
+    ``paged_verify_step`` for the contract): ``tokens`` [slots, Q] int32,
+    returns ``(logits [slots, Q, V], cache)`` with ``cache["len"]``
+    untouched — the engine owns the committed frontier."""
+    del qparams  # MoE serving runs the float path
+    pattern, n_groups, tail = cfg.layer_layout()
+    x = nn.embed(tokens, params["embed"], cfg.compute_dtype)
+    pos = dense._as_positions(cache["len"], x.shape[0])
+    table = jax.tree.map(lambda a: jnp.asarray(a, jnp.int32), table)
+
+    def group_body(xc, slices):
+        stacks_slice, cache_slice = slices
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            xc, c = _paged_verify_layer(
+                xc, stacks_slice[i], cache_slice[i], kind, cfg, pos, table,
+                attn_backend)
+            new_caches.append(c)
+        return xc, tuple(new_caches)
+
+    if n_groups > 0:
+        x, new_caches = jax.lax.scan(
+            group_body, x, (tuple(params["stacks"]), tuple(cache["stacks"])))
+        cache = dict(cache, stacks=list(new_caches))
+    for i, kind in enumerate(tail):
+        p = jax.tree.map(lambda a: a[0], params["tail"][i])
+        c_in = jax.tree.map(lambda a: a[0], cache["tail"][i])
+        x, c = _paged_verify_layer(x, p, c_in, kind, cfg, pos, table,
+                                   attn_backend)
+        cache["tail"][i] = jax.tree.map(lambda a: a[None], c)
+    x = nn.rms_norm(x, params["final_norm"])
+    tbl = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return nn.unembed(x, tbl), cache
+
+
 def _prefill_layer(xc, p, kind, cfg: ModelConfig, positions, *,
                    kv_prefix=None, shard=None):
     """One prefill layer application; returns (x, this layer's k, v — the

@@ -43,6 +43,9 @@ class Arch:
     paged_insert: Optional[Callable] = None
     # prefill straight into pool blocks (no dense bucket cache + splice)
     paged_prefill: Optional[Callable] = None
+    # small-q speculative verify step (score spec_tokens + 1 positions per
+    # slot in one dispatch; host-owned position vector)
+    paged_verify_step: Optional[Callable] = None
     # the family can store paged K/V as int8 blocks (+ per-block scales)
     # with write-time requantization identical to its dense int8 reference
     paged_int8_kv: bool = False
@@ -58,6 +61,14 @@ class Arch:
     @property
     def supports_paged_int8(self) -> bool:
         return self.supports_paged and self.paged_int8_kv
+
+    @property
+    def supports_spec_decode(self) -> bool:
+        """Speculative decoding needs the multi-token verify entry point on
+        top of full paged serving (drafts are written/scored through the
+        block pools, and rollback rides the paged allocator)."""
+        return (self.supports_paged and self.supports_paged_prefill
+                and self.paged_verify_step is not None)
 
     @property
     def serve_backends(self) -> tuple:
@@ -119,6 +130,11 @@ def build(cfg: ModelConfig) -> Arch:
              mod.paged_prefill(params, tokens, cfg, cache, slot, block_ids,
                                **kw))
             if hasattr(mod, "paged_prefill") else None
+        ),
+        paged_verify_step=(
+            (lambda params, cache, tokens, table, **kw: mod.paged_verify_step(
+                params, cache, tokens, cfg, table, **kw))
+            if hasattr(mod, "paged_verify_step") else None
         ),
     )
 

@@ -514,6 +514,151 @@ def paged_decode_step(params, cache, tokens, cfg: ModelConfig, table, *,
     return logits[:, 0], cache
 
 
+def _paged_verify_write(c, k_new, v_new, pos, table, block_len: int,
+                        start=None):
+    """Scatter Q consecutive tokens' k/v per row: row ``b``'s query ``j``
+    lands at position ``pos[b] + j`` through the block table. Rows whose
+    trailing positions exceed their draft count write into the grown tail
+    block's pad offsets (or, clipped, the trash block) — those positions
+    are past every committed length, never attended, and always rewritten
+    before the frontier reaches them."""
+    rows_b = pos.shape[0]
+    qlen = k_new.shape[2]                          # [B, Hkv, Q, hd]
+    max_blocks = table.shape[1]
+    positions = pos[:, None] + jnp.arange(qlen, dtype=jnp.int32)[None, :]
+    rel = (positions if start is None
+           else positions - jnp.asarray(start, jnp.int32)[:, None])
+    bi_raw = rel // jnp.int32(block_len)
+    bi = jnp.clip(bi_raw, 0, max_blocks - 1)
+    blk_ids = table[jnp.arange(rows_b)[:, None], bi]    # [B, Q] pool rows
+    # positions past the table (a full-length request's pad columns) must
+    # divert to the trash block — clipping onto the last table entry
+    # could overwrite a real block's committed offsets
+    blk_ids = jnp.where(bi_raw >= max_blocks, jnp.int32(0), blk_ids)
+    off = positions % jnp.int32(block_len)
+    # advanced-index result axes lead: value shape [B, Q, Hkv, hd]
+    k = c["k"].at[blk_ids, :, off].set(
+        k_new.transpose(0, 2, 1, 3).astype(c["k"].dtype))
+    v = c["v"].at[blk_ids, :, off].set(
+        v_new.transpose(0, 2, 1, 3).astype(c["v"].dtype))
+    return dict(c, k=k, v=v)
+
+
+def _paged_verify_layer(x, p, c, kind, cfg: ModelConfig, pos, table, *,
+                        qparams=None, attn_backend: str = "xla"):
+    """Small-q (speculative verify) pass through one layer: ``x`` carries
+    Q = spec_tokens + 1 positions per row — the last committed token plus
+    the drafts — all written and scored in one pool sweep. Query row 0
+    reproduces ``_paged_decode_layer``'s math bit-for-bit (same write, and
+    the verify attention's row 0 is exactly the decode mask), which is
+    what keeps greedy speculative serving token-identical."""
+    from repro.kernels.paged_attention.ops import (
+        paged_attention_verify, paged_attention_verify_int8,
+    )
+    from repro.models.cache import quantize_kv
+
+    int8_w = qparams is not None
+    int8_kv = c["k"].dtype == jnp.int8
+    if int8_w and not int8_kv:
+        raise ValueError(
+            "int8 serving over float block pools was removed (the dense-"
+            "gather ITA detour): build the paged cache with quantized=True "
+            "so K/V live in int8 blocks")
+    h = nn.rms_norm(x, p["ln1"])
+    b, qlen = x.shape[:2]
+    hd = cfg.hd
+    block_len = c["k"].shape[2]
+    lin = functools.partial(_qlin, qparams) if int8_w else (
+        lambda name, y: nn.dense(y, p[name]))
+    q = lin("wq", h).reshape(b, qlen, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = lin("wk", h).reshape(b, qlen, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = lin("wv", h).reshape(b, qlen, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    positions = pos[:, None] + jnp.arange(qlen, dtype=jnp.int32)[None, :]
+    q = nn.rope(q, positions[:, None, :], cfg.rope_theta)
+    k = nn.rope(k, positions[:, None, :], cfg.rope_theta)
+
+    window = cfg.local_window if kind == "L" else None
+    tbl, start = _resolve_paged_table(table, kind)
+    if int8_kv:
+        c = _paged_verify_write(c, quantize_kv(k, attn.KV_SCALE),
+                                quantize_kv(v, attn.KV_SCALE), pos, tbl,
+                                block_len, start=start)
+        o = paged_attention_verify_int8(
+            q, c["k"], c["v"], tbl, pos + 1,
+            k_scale=c["kscale"], v_scale=c["vscale"],
+            window=window, start=start, backend=attn_backend)
+    else:
+        c = _paged_verify_write(c, k, v, pos, tbl, block_len, start=start)
+        o = paged_attention_verify(q, c["k"], c["v"], tbl, pos + 1,
+                                   window=window, start=start,
+                                   backend=attn_backend)
+    x = x + lin("wo", _merge_heads(o))
+    h = nn.rms_norm(x, p["ln2"])
+    act = nn.ACTIVATIONS[cfg.act]
+    x = x + lin("wd", act(lin("wg", h), lin("wu", h)))
+    return x, c
+
+
+def paged_verify_step(params, cache, tokens, cfg: ModelConfig, table, *,
+                      qparams=None, attn_backend: str = "xla"):
+    """Speculative-decode verify step: score Q = spec_tokens + 1 positions
+    per slot in one dispatch against the paged pool.
+
+    ``tokens`` [slots, Q] int32 — column 0 is each row's last committed
+    token, columns 1.. are the host-drafted candidates (pad rows repeat
+    anything; their logits are ignored host-side). Logits row ``j`` is the
+    model's prediction *after* consuming ``tokens[:, :j+1]``, so the host
+    commits the longest prefix where ``argmax(logits[j]) == tokens[j+1]``
+    plus one bonus token.
+
+    Unlike ``paged_decode_step`` the position vector is **host-owned**:
+    ``cache["len"]`` is not advanced here — the engine commits the
+    accepted count host-side and passes refreshed lengths next dispatch
+    (draft K/V past the accept point stays in the pool as garbage that is
+    never attended and always overwritten before the frontier reaches
+    it; the allocator rolls the *blocks* back).
+
+    Returns ``(logits [slots, Q, V], cache)``.
+    """
+    pattern, n_groups, tail = cfg.layer_layout()
+    x = nn.embed(tokens, params["embed"], cfg.compute_dtype)  # [slots, Q, D]
+    pos = _as_positions(cache["len"], x.shape[0])
+    table = jax.tree.map(lambda a: jnp.asarray(a, jnp.int32), table)
+
+    def group_body(xc, slices):
+        stacks_slice, cache_slice, q_slice = slices
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            xc, c = _paged_verify_layer(
+                xc, stacks_slice[i], cache_slice[i], kind, cfg, pos, table,
+                qparams=None if q_slice is None else q_slice[i],
+                attn_backend=attn_backend,
+            )
+            new_caches.append(c)
+        return xc, tuple(new_caches)
+
+    if n_groups > 0:
+        qstacks = None if qparams is None else tuple(qparams["stacks"])
+        x, new_stack_caches = jax.lax.scan(
+            group_body, x,
+            (tuple(params["stacks"]), tuple(cache["stacks"]), qstacks),
+        )
+        cache = dict(cache, stacks=list(new_stack_caches))
+    for i, kind in enumerate(tail):
+        p = jax.tree.map(lambda a: a[0], params["tail"][i])
+        qp = None
+        if qparams is not None:
+            qp = jax.tree.map(lambda a: a[0], qparams["tail"][i])
+        c_in = jax.tree.map(lambda a: a[0], cache["tail"][i])
+        x, c = _paged_verify_layer(x, p, c_in, kind, cfg, pos, table,
+                                   qparams=qp, attn_backend=attn_backend)
+        cache["tail"][i] = jax.tree.map(lambda a: a[None], c)
+
+    x = nn.rms_norm(x, params["final_norm"])
+    table_w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return nn.unembed(x, table_w), cache
+
+
 def paged_insert(cache, single, slot, block_ids, cfg: ModelConfig):
     """Splice a batch-1 prefilled dense cache (sized to the admission
     bucket) into pool blocks ``block_ids`` and point ``slot``'s position

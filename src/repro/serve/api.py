@@ -78,6 +78,11 @@ class LLMEngine:
                 f"to the paged backend only — chunked prefill resumes at "
                 f"block boundaries of the shared pool, which the dense "
                 f"arenas don't have")
+        if ec.spec_tokens > 0 and ec.backend != "paged":
+            raise ValueError(
+                f"spec_tokens={ec.spec_tokens} applies to the paged "
+                f"backend only — draft verification writes through the "
+                f"block pools and rollback rides the paged allocator")
         if mesh is not None and backend is not None:
             raise ValueError(
                 "pass the mesh to the injected backend's constructor — "
@@ -102,10 +107,28 @@ class LLMEngine:
                          and getattr(self.backend, "chunking", False))
         self._chunk_stalls = 0   # chunk/admission dispatches deferred by
         #                          an exhausted per-iteration token budget
+        # speculative decoding: active iff configured AND the backend
+        # supports it (rings / mesh-sharded pools opt out backend-side —
+        # the same silent-fallback contract as chunked prefill; a
+        # non-paged backend raised above). Greedy acceptance keeps the
+        # committed stream token-identical to spec off.
+        self._spec = (ec.spec_tokens
+                      if getattr(self.backend, "spec_supported", False)
+                      else 0)
+        self.spec_drafted = 0    # draft tokens proposed across iterations
+        self.spec_accepted = 0   # drafts accepted (excludes bonus tokens)
         # per-iteration wall clock (bounded window): decode-iteration
         # jitter = p99 − p50 over this window, the number chunked prefill
-        # exists to bound
+        # exists to bound. _iter_tokens rides alongside (same window):
+        # committed tokens per iteration, so walls can be normalized
+        # per-token — a speculative iteration commits several.
         self._iter_walls: deque = deque(maxlen=2048)
+        self._iter_tokens: deque = deque(maxlen=2048)
+        # all-greedy dispatches ignore the sampling operands entirely
+        # (static any_sampling=False compiles to argmax), so one cached
+        # zero vector set per length replaces four host→device uploads
+        # every iteration
+        self._greedy_vecs: Dict[int, tuple] = {}
         self._requests: Dict[int, Request] = {}
         # finished handles in completion order — the pruning queue when
         # ec.retain_finished bounds the registry (long-running servers)
@@ -251,6 +274,8 @@ class LLMEngine:
         ``any_sampling`` is the static hot-path switch: False (the common
         all-greedy case) compiles to a plain argmax."""
         n = self.ec.slots
+        if self._all_greedy():
+            return self._greedy_sampling_vectors(n), False
         temps = np.zeros((n,), np.float32)
         topks = np.zeros((n,), np.int32)
         rids = np.zeros((n,), np.int32)
@@ -266,6 +291,23 @@ class LLMEngine:
                 jnp.asarray(rids), jnp.asarray(steps))
         return vecs, bool(temps.max(initial=0.0) > 0)
 
+    def _all_greedy(self) -> bool:
+        """True when no occupied slot samples (every row decodes via the
+        static greedy path, which never reads the sampling operands)."""
+        return not any(r is not None and self._req_temperature(r) > 0
+                       for r in self.slots)
+
+    def _greedy_sampling_vectors(self, n: int):
+        """Cached constant zero sampling vectors of length ``n`` — the
+        operand payload for ``any_sampling=False`` dispatches, whose
+        compiled body is a plain argmax that ignores them."""
+        vecs = self._greedy_vecs.get(n)
+        if vecs is None:
+            zi = jnp.zeros((n,), jnp.int32)
+            vecs = (jnp.zeros((n,), jnp.float32), zi, zi, zi)
+            self._greedy_vecs[n] = vecs
+        return vecs
+
     def _admission_vectors(self, req: Request):
         """(length-1 sampling vectors, any_sampling) for an admission
         prefill's first token (same stateless coordinates as decode)."""
@@ -275,6 +317,66 @@ class LLMEngine:
                 jnp.asarray([req.rid], jnp.int32),
                 jnp.asarray([len(req.output)], jnp.int32))
         return vecs, temp > 0
+
+    # -- speculative decoding ----------------------------------------------
+
+    def _build_drafts(self, active):
+        """Token matrix + spans + per-slot drafts for one verify dispatch.
+
+        Row ``i`` of the [slots, k+1] matrix is the slot's last committed
+        token followed by its n-gram drafts; unused columns stay 0 — their
+        K/V writes land past the frontier (or in trash) and their logits
+        are ignored host-side. Each slot's draft count is capped at
+        ``remaining - 1`` so a commit can never exceed ``max_new_tokens``
+        (nor outgrow the admission-time block reservation); a slot on its
+        final token drafts nothing and behaves exactly like plain decode.
+        ``spans[i] = drafts + 1`` is the slot's write extent for
+        ``begin_iteration``.
+        """
+        from repro.serve.backends import continuation_tokens
+        from repro.serve.spec import ngram_propose
+
+        k = self._spec
+        mat = np.zeros((self.ec.slots, k + 1), np.int32)
+        spans = [1] * self.ec.slots
+        drafts: Dict[int, List[int]] = {}
+        for i in active:
+            r = self.slots[i]
+            mat[i, 0] = r.output[-1]
+            cap = min(k, r.max_new_tokens - len(r.output) - 1)
+            d = ngram_propose(continuation_tokens(r), cap) if cap > 0 else []
+            mat[i, 1:1 + len(d)] = d
+            spans[i] = len(d) + 1
+            drafts[i] = d
+            self.spec_drafted += len(d)
+        return mat, spans, drafts
+
+    def _verify_sampling_vectors(self):
+        """Flat [slots · (k+1)] sampling vectors for a verify dispatch:
+        entry ``i·Q + j`` carries slot ``i``'s coordinates with ``steps``
+        at the *absolute* output index ``len(output) + j`` of the token
+        position ``j`` would commit. Keying the stateless PRNG by absolute
+        index (not iteration count) is what makes a sampled request's
+        token sequence identical with speculation on or off — position
+        ``p`` draws the same key either way."""
+        n, q = self.ec.slots, self._spec + 1
+        if self._all_greedy():
+            return self._greedy_sampling_vectors(n * q), False
+        temps = np.zeros((n * q,), np.float32)
+        topks = np.zeros((n * q,), np.int32)
+        rids = np.zeros((n * q,), np.int32)
+        steps = np.zeros((n * q,), np.int32)
+        for i, r in enumerate(self.slots):
+            if r is None or r.state != RequestState.RUNNING:
+                continue
+            lo = i * q
+            temps[lo:lo + q] = self._req_temperature(r)
+            topks[lo:lo + q] = r.top_k
+            rids[lo:lo + q] = r.rid
+            steps[lo:lo + q] = len(r.output) + np.arange(q)
+        vecs = (jnp.asarray(temps), jnp.asarray(topks),
+                jnp.asarray(rids), jnp.asarray(steps))
+        return vecs, bool(temps.max(initial=0.0) > 0)
 
     # -- one iteration -----------------------------------------------------
 
@@ -330,16 +432,32 @@ class LLMEngine:
         at_dispatch = list(self.slots)  # snapshot: who owns each decode row
         self.max_concurrent = max(self.max_concurrent,
                                   len(active) + len(chunking))
-        self.backend.begin_iteration(active, self.slots)
+        # speculative path: build drafts host-side and replace the decode
+        # dispatch with one small-q verify over [slots, k+1] positions —
+        # still exactly one batched dispatch and one fetch per iteration
+        spec_drafts = None
+        spec_mat = spec_spans = None
+        if self._spec and active:
+            spec_mat, spec_spans, spec_drafts = self._build_drafts(active)
+        if spec_spans is not None:
+            self.backend.begin_iteration(active, self.slots,
+                                         spans=spec_spans)
+        else:
+            self.backend.begin_iteration(active, self.slots)
 
         dec_tok = None
         if active:
-            if self.backend.vectorized:
+            if spec_drafts is not None:
+                samp, any_sampling = self._verify_sampling_vectors()
+                dec_tok = self.backend.verify(active, self.slots, spec_mat,
+                                              samp, any_sampling)
+            elif self.backend.vectorized:
                 samp, any_sampling = self._sampling_vectors()
+                dec_tok = self.backend.decode(active, self.slots, samp,
+                                              any_sampling)
             else:
-                samp, any_sampling = None, False
-            dec_tok = self.backend.decode(active, self.slots, samp,
-                                          any_sampling)
+                dec_tok = self.backend.decode(active, self.slots, None,
+                                              False)
 
         # chunked prefill: continue in-flight admissions first (they
         # already hold their blocks, and finishing one turns a dead slot
@@ -472,12 +590,15 @@ class LLMEngine:
                             admitted.append((forced, slot, tok))
 
         finished = self._fetch_and_finish(dec_tok, active, at_dispatch,
-                                          admitted, pre_released, outputs)
+                                          admitted, pre_released, outputs,
+                                          spec_drafts)
         # only *dispatched* admissions accrue scheduler credit (a chunked
         # admission counts from its first chunk; a deferred forced
         # admission counts nothing — see Scheduler.note_iteration)
         self.scheduler.note_iteration(granted, list(self.queue))
         self._iter_walls.append(time.perf_counter() - it_t0)
+        self._iter_tokens.append(
+            sum(1 for o in outputs if o.token is not None))
         return outputs, finished
 
     # -- fetch + host-side finish bookkeeping ------------------------------
@@ -509,13 +630,19 @@ class LLMEngine:
         finished.append(req)
 
     def _fetch_and_finish(self, dec_tok, active, at_dispatch, admitted,
-                          pre_released, outputs) -> List[Request]:
+                          pre_released, outputs,
+                          spec_drafts=None) -> List[Request]:
         """One async device→host fetch of this iteration's sampled tokens
         (decode batch + every admitted request's first token), then the
         host-side finish bookkeeping: stop sequences, EOS, length.
 
         ``admitted`` is this iteration's admission list — ``(request, slot,
-        first token)`` triples.
+        first token)`` triples. ``spec_drafts`` (speculation) maps slot →
+        its proposed draft list; ``dec_tok`` is then the [slots, Q] verify
+        choices, greedy acceptance commits the longest agreeing prefix per
+        slot (plus the bonus token), and the backend rolls rejected-draft
+        blocks back. Every committed position is scanned for finishes —
+        a stop/EOS match truncates the accepted tail behind it.
         """
         finished: List[Request] = []
         if self.backend.vectorized:
@@ -540,11 +667,28 @@ class LLMEngine:
         if dec_vals is not None:
             for i in active:
                 r = at_dispatch[i]
-                r.output.append(int(dec_vals[i]))
-                reason = r.check_finish()
+                if spec_drafts is not None:
+                    from repro.serve.spec import accept_tokens
+                    d = spec_drafts.get(i, [])
+                    committed = accept_tokens(
+                        d, [int(t) for t in dec_vals[i][:len(d) + 1]])
+                    self.spec_accepted += len(committed) - 1
+                    # roll back rejected-draft blocks and advance the
+                    # slot's frontier — but never for a slot the engine
+                    # already recycled this iteration (a length-finishing
+                    # pre-release or a preemption victim): its rid left
+                    # the allocator, and its tokens commit below anyway
+                    if r.state != RequestState.PREEMPTED \
+                            and i not in pre_released:
+                        self.backend.commit(i, r, len(committed))
+                else:
+                    committed = [int(dec_vals[i])]
+                before = len(r.output)
+                r.output.extend(committed)
+                reason = r.check_finish(new_tokens=len(committed))
                 if reason:
                     # a victim preempted this very iteration may finish on
-                    # the token it decoded before eviction: it holds no
+                    # tokens it decoded before eviction: it holds no
                     # slot/blocks anymore — just pull it off the queue
                     if r.state == RequestState.PREEMPTED:
                         if r in self.queue:
@@ -553,10 +697,17 @@ class LLMEngine:
                     else:
                         self._finish(r, i, reason, now, i in pre_released,
                                      finished)
-                outputs.append(StepOutput(
-                    rid=r.rid, token=r.output[-1], state=r.state,
-                    finish_reason=r.finish_reason if reason else None,
-                    qos=r.qos))
+                # one StepOutput per surviving committed token (a finish
+                # scan may have truncated accepted tokens behind a match);
+                # only the last carries the finish reason
+                tail = r.output[before:]
+                for j, t in enumerate(tail):
+                    last = j == len(tail) - 1
+                    outputs.append(StepOutput(
+                        rid=r.rid, token=t, state=r.state,
+                        finish_reason=(r.finish_reason
+                                       if reason and last else None),
+                        qos=r.qos))
         for (req, slot, _), tok in zip(admitted, adm_vals):
             req.output.append(int(tok))
             if req.first_token_at is None:
@@ -596,10 +747,27 @@ class LLMEngine:
         walls = np.asarray(self._iter_walls, np.float64)
         p50 = float(np.percentile(walls, 50)) if walls.size else 0.0
         p99 = float(np.percentile(walls, 99)) if walls.size else 0.0
+        # per-committed-token normalized walls: a speculative iteration
+        # commits several tokens, so the raw iteration wall overstates
+        # its per-token latency — normalize by that iteration's commits
+        # (idle iterations commit 0 and divide by 1). Windows are
+        # appended together; the min() guards a partially-filled pair.
+        toks = np.asarray(self._iter_tokens, np.float64)
+        m = min(walls.size, toks.size)
+        per_tok = (walls[-m:] / np.maximum(toks[-m:], 1.0)) if m else walls
+        tp50 = float(np.percentile(per_tok, 50)) if per_tok.size else 0.0
+        tp99 = float(np.percentile(per_tok, 99)) if per_tok.size else 0.0
+        drafted = float(self.spec_drafted)
         out.update({
             "iter_wall_p50_ms": p50 * 1e3,
             "iter_wall_p99_ms": p99 * 1e3,
             "decode_iter_jitter_ms": (p99 - p50) * 1e3,
+            "iter_wall_per_token_p50_ms": tp50 * 1e3,
+            "iter_wall_per_token_p99_ms": tp99 * 1e3,
+            "spec_drafted": drafted,
+            "spec_accepted": float(self.spec_accepted),
+            "spec_accept_rate": (self.spec_accepted / drafted
+                                 if drafted else 0.0),
             "prefill_chunks_in_flight": float(sum(
                 1 for r in self.slots
                 if r is not None and r.state == RequestState.PREFILL)),

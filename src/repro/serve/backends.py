@@ -132,6 +132,7 @@ class _BackendBase:
     vectorized = True
     max_admit: Optional[int] = None   # None → EngineConfig.admit_batch
     chunking = False                  # chunked-prefill admission path
+    spec_supported = False            # speculative-verify decode path
 
     def __init__(self, arch: registry.Arch, params, ec: EngineConfig):
         self.arch = arch
@@ -572,6 +573,7 @@ class PagedBackend(_BackendBase):
             self._ring_first = [0] * ec.slots   # abs block idx of entry 0
             self._ring_ids: List = [None] * ec.slots
         self._slot_len = [0] * ec.slots   # host mirror of active rows' len
+        self._tables_dev = None           # cached device view of the tables
         # prefix cache: per-slot chain keys of the full blocks written so
         # far (prompt at prefill, decode blocks as they complete), plus
         # skip counters for metrics/bench
@@ -595,6 +597,14 @@ class PagedBackend(_BackendBase):
         # cleared at the final chunk or on release)
         self._chunk: Dict[int, dict] = {}
         self.prefill_chunk_dispatches = 0
+        # speculative decoding: the engine replaces the decode dispatch
+        # with a small-q verify over host-drafted tokens. Rings opt out
+        # (ring rotation assumes one position per iteration) and
+        # mesh-sharded pools opt out (no shard_map verify path yet) —
+        # silently, like chunked prefill; the engine falls back to plain
+        # decode there.
+        self.spec_supported = (arch.supports_spec_decode
+                               and not self.ring and mesh is None)
         # quantized archs get int8 block pools (+ per-block scales) — the
         # family default; float archs keep compute_dtype pools
         self.quantized = bool(cfg.serve_quant)
@@ -750,6 +760,31 @@ class PagedBackend(_BackendBase):
                                    static_argnums=(11, 12))
         self._copy_block_fn = jax.jit(_copy_block, donate_argnums=(0,))
 
+        if self.spec_supported:
+            def _ver(p, qp, cache, table, packed, samp, any_sampling):
+                self.decode_traces += 1  # runs at trace time only
+                # packed [B, Q+1]: column 0 is the committed length, the
+                # rest the token row — one host→device upload per verify.
+                # The position vector is host-owned under speculation:
+                # inject this iteration's committed lengths; the verify
+                # step never advances them (the host commits)
+                lens, tokens = packed[:, 0], packed[:, 1:]
+                logits, cache = arch.paged_verify_step(
+                    p, dict(cache, len=lens), tokens, table, qparams=qp,
+                    attn_backend=backend)
+                b, qlen, vocab = logits.shape
+                # flat per-position sampling: row i·Q + j carries slot i's
+                # coordinates with the *absolute* output index of position
+                # j, so a sampled token is a pure function of
+                # (seed, rid, index) — identical with speculation on or off
+                tok = sample_tokens_per_slot(
+                    logits.reshape(b * qlen, vocab), *samp, base_key,
+                    any_sampling=any_sampling)
+                return tok.reshape(b, qlen), cache
+
+            self._verify_fn = jax.jit(_ver, donate_argnums=(2,),
+                                      static_argnums=(6,))
+
     # -- mesh helpers ------------------------------------------------------
 
     def _dev(self, slot: int) -> int:
@@ -770,6 +805,7 @@ class PagedBackend(_BackendBase):
             self.table[self._dev(slot), slot, idx] = block
         else:
             self.table[slot, idx] = block
+        self._touch_tables()
 
     def _block_arg(self, slot: int, block: int):
         """Block-id operand for the jitted COW copy: an [ndev] vector in
@@ -913,6 +949,7 @@ class PagedBackend(_BackendBase):
             self.ring_start[slot] = 0
             self._ring_first[slot] = 0
             self._ring_ids[slot] = None
+        self._touch_tables()
         self._slot_len[slot] = 0
         self._slot_keys[slot] = []
         self._key_memo.pop(req.rid, None)
@@ -990,13 +1027,25 @@ class PagedBackend(_BackendBase):
             evicted.append(victim_slot)
         return evicted
 
+    def _touch_tables(self) -> None:
+        """Invalidate the cached device table view (call after any host
+        write to ``table``/``ring_table``/``ring_start``)."""
+        self._tables_dev = None
+
     def _tables(self):
-        """Device view of the host-owned block tables for this iteration."""
-        if not self.ring:
-            return jnp.asarray(self.table)
-        return {"full": jnp.asarray(self.table),
-                "ring": jnp.asarray(self.ring_table),
-                "start": jnp.asarray(self.ring_start)}
+        """Device view of the host-owned block tables, cached across
+        iterations. Steady-state decode mutates no table (growth touches
+        one slot every ``block_len`` commits), so re-uploading every
+        dispatch is pure host overhead; every mutation site invalidates
+        via ``_touch_tables``."""
+        if self._tables_dev is None:
+            if not self.ring:
+                self._tables_dev = jnp.asarray(self.table)
+            else:
+                self._tables_dev = {"full": jnp.asarray(self.table),
+                                    "ring": jnp.asarray(self.ring_table),
+                                    "start": jnp.asarray(self.ring_start)}
+        return self._tables_dev
 
     def pool_leaves(self):
         """KV pool leaves (k/v block pools + per-block scale vectors) of
@@ -1056,16 +1105,25 @@ class PagedBackend(_BackendBase):
 
     # -- iteration hooks ---------------------------------------------------
 
-    def begin_iteration(self, active, slots):
+    def begin_iteration(self, active, slots, spans=None):
+        """Host bookkeeping before the decode (or verify) dispatch.
+        ``spans`` (speculation): per-slot write extents — slot ``i``
+        writes positions ``_slot_len[i] .. _slot_len[i] + spans[i] - 1``
+        this iteration (drafts + the decode position); ``None`` is the
+        plain one-position decode. The engine caps each span at the
+        request's remaining budget, so growth never outruns the
+        admission-time block reservation."""
         blk = self.ec.block_len
         for i in active:
             req = slots[i]
             alloc = self._alloc_for(i)
+            span = 1 if spans is None else spans[i]
+            last_pos = self._slot_len[i] + span - 1
             if self._has_full:
-                # grow any slot whose next write position crosses a block
-                # boundary (drawn from its admission-time reservation —
-                # can never fail)
-                needed = self._slot_len[i] // blk + 1
+                # grow any slot whose write span crosses a block boundary
+                # (drawn from its admission-time reservation — can never
+                # fail)
+                needed = last_pos // blk + 1
                 owned = alloc.owned(req.rid)
                 while len(owned) < needed:
                     b = alloc.grow(req.rid)
@@ -1088,18 +1146,21 @@ class PagedBackend(_BackendBase):
                         key = chain_key(prev, seq[idx * blk:(idx + 1) * blk])
                         keys.append(key)
                         alloc.register(req.rid, idx, key)
-                # copy-on-write guard: if this iteration's decode write
+                # copy-on-write guard: if this iteration's write span
                 # lands in a block another table still references (only
                 # possible after an explicit incref fork), duplicate it
-                # first so the sharer's K/V stays immutable
-                tail = self._slot_len[i] // blk
-                moved = alloc.ensure_writable(req.rid, tail)
-                if moved is not None:
-                    old, new = moved
-                    self.cache = self._copy_block_fn(
-                        self.cache, self._block_arg(i, old),
-                        self._block_arg(i, new))
-                    self._set_table(i, tail, new)
+                # first so the sharer's K/V stays immutable. Speculation
+                # widens the span; grown blocks are fresh (never shared),
+                # so the loop is a no-op past the tail in practice.
+                for tail in range(self._slot_len[i] // blk,
+                                  last_pos // blk + 1):
+                    moved = alloc.ensure_writable(req.rid, tail)
+                    if moved is not None:
+                        old, new = moved
+                        self.cache = self._copy_block_fn(
+                            self.cache, self._block_arg(i, old),
+                            self._block_arg(i, new))
+                        self._set_table(i, tail, new)
             if self.ring:
                 # rotate the ring table when the next write position enters
                 # a block past the current ring: the evicted oldest block
@@ -1112,6 +1173,7 @@ class PagedBackend(_BackendBase):
                     self.ring_table[i, :] = ring_table_row(
                         self._ring_ids[i], first)
                     self.ring_start[i] = first * blk
+                    self._touch_tables()
 
     def decode(self, active, slots, samp, any_sampling):
         tok, self.cache = self._decode_fn(
@@ -1122,6 +1184,38 @@ class PagedBackend(_BackendBase):
         for i in active:
             self._slot_len[i] += 1
         return tok
+
+    def verify(self, active, slots, tokens, samp, any_sampling):
+        """One speculative verify dispatch — the decode replacement under
+        ``spec_tokens > 0``. ``tokens`` [slots, Q] carries each row's last
+        committed token in column 0 and its drafts after; ``samp`` are the
+        flat [slots · Q] per-position sampling vectors. Returns the chosen
+        tokens [slots, Q] on device (one dispatch, fetched with the batch).
+        ``_slot_len`` is *not* advanced here — the engine's acceptance
+        drives :meth:`commit` per slot after the fetch."""
+        packed = np.concatenate(
+            [np.asarray(self._slot_len, np.int32)[:, None],
+             np.asarray(tokens, np.int32)], axis=1)
+        tok, self.cache = self._verify_fn(
+            self.params, self.qparams, self.cache, self._tables(),
+            jnp.asarray(packed), samp, any_sampling)
+        self.decode_dispatches += 1
+        return tok
+
+    def commit(self, slot: int, req: Request, accepted: int) -> None:
+        """Commit ``accepted`` tokens from the last verify dispatch and
+        roll the rejected tail back at block granularity: blocks grown
+        past the new frontier are popped back to the allocator (their
+        published keys retracted — recycling invariants hold every step)
+        and their table entries re-point at trash. K/V written past the
+        accept point inside kept blocks stays as garbage that is never
+        attended and always overwritten before the frontier reaches it."""
+        self._slot_len[slot] += accepted
+        keep = (self._slot_len[slot] - 1) // self.ec.block_len + 1
+        dropped = self._alloc_for(slot).shrink(req.rid, keep)
+        if dropped:
+            self.table[slot, keep:keep + len(dropped)] = 0
+            self._touch_tables()
 
     def prefill(self, req: Request, slot: int, samp, any_sampling):
         """Reserve blocks, set up tables, and run one paged-prefill
@@ -1173,6 +1267,7 @@ class PagedBackend(_BackendBase):
             self.table[:, slot, :] = 0
         else:
             self.table[slot, :] = 0
+        self._touch_tables()
         ring_ids = None
         if self.ring:
             wb = self.layout.ring_blocks
@@ -1298,6 +1393,7 @@ class PagedBackend(_BackendBase):
             self.table[self._dev(slot), slot, :block_ids.size] = block_ids
         else:
             self.table[slot, :block_ids.size] = block_ids
+        self._touch_tables()
         self._slot_len[slot] = n
         if self.prefix_caching:
             self._slot_keys[slot] = list(st["keys"][:n // blk])

@@ -23,6 +23,9 @@ _BACKEND_ALIASES = {
 # admission schedulers (repro.serve.scheduler)
 SCHEDULERS = ("fcfs", "bounded", "qos")
 
+# speculative-decoding draft methods (re-exported from repro.serve.spec)
+from repro.serve.spec import SPEC_METHODS  # noqa: E402
+
 
 def canonical_backend(name: str) -> str:
     name = _BACKEND_ALIASES.get(name, name)
@@ -79,6 +82,18 @@ class EngineConfig:
     # prefills. Ring (sliding-window) layouts opt out automatically: a
     # ring arena cannot resume mid-history.
     prefill_chunk_tokens: Optional[int] = None
+    # paged backend: speculative decoding. When spec_tokens = k > 0, a
+    # host-side drafter proposes up to k tokens per running slot each
+    # iteration and a single small-q verify dispatch scores all k + 1
+    # positions; greedy acceptance commits the longest agreeing prefix
+    # (plus the bonus token) and rolls the rest back at block granularity.
+    # Greedy acceptance keeps the engine token-identical to spec_tokens=0.
+    # Requires the paged backend; ring (sliding-window) layouts and
+    # mesh-sharded pools opt out automatically (like chunked prefill).
+    spec_tokens: int = 0
+    # draft method: "ngram" — prompt-lookup n-gram matching over the
+    # request's own prompt + generated tokens (no second model)
+    spec_method: str = "ngram"
     # paged backend on a mesh: the mesh axis names LLMEngine accepts, and
     # how the block pool is sharded over the "model" axis. mesh_axes[0]
     # must be "model" (the serve_rules TP axis); extra axes must have
@@ -169,6 +184,13 @@ class EngineConfig:
                     f"boundaries must land on block boundaries so each "
                     f"chunk writes whole pool blocks and the suffix-resume "
                     f"reduction order is unchanged")
+        if self.spec_tokens < 0:
+            raise ValueError(
+                f"spec_tokens must be >= 0, got {self.spec_tokens}")
+        if self.spec_method not in SPEC_METHODS:
+            raise ValueError(
+                f"unknown spec_method {self.spec_method!r} "
+                f"(supported: {', '.join(SPEC_METHODS)})")
         if self.be_token_share is not None and not (
                 0.0 < self.be_token_share < 1.0):
             raise ValueError(

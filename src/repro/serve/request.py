@@ -20,9 +20,12 @@ token.
 
 When a request finishes, ``finish_reason`` records why:
 
-  * ``"stop"``   — one of its ``stop_sequences`` matched the tail of the
-                   generated tokens (host-side check, one per iteration);
-  * ``"eos"``    — the generated token equals ``eos_token``;
+  * ``"stop"``   — one of its ``stop_sequences`` matched at a committed
+                   position (host-side check; the window may extend back
+                   into the prompt, and every position of a multi-token
+                   speculative commit is scanned — ``matched_stop``
+                   records the sequence that fired);
+  * ``"eos"``    — a committed token equals ``eos_token``;
   * ``"length"`` — ``max_new_tokens`` generated;
   * ``"abort"``  — the caller aborted the handle.
 
@@ -89,6 +92,8 @@ class Request:
     preemptions: int = 0         # times evicted by a forced admission
     state: str = RequestState.WAITING
     finish_reason: Optional[str] = None
+    # the stop sequence that fired (finish_reason == "stop"), as submitted
+    matched_stop: Optional[Tuple[int, ...]] = None
     # iterations spent waiting in the queue since submission / last
     # preemption (the QoS scheduler's admission-credit coordinate)
     waiting_iters: int = 0
@@ -110,23 +115,55 @@ class Request:
     def finished(self) -> bool:
         return self.state in RequestState.FINISHED
 
-    def check_finish(self) -> Optional[str]:
-        """Finish reason implied by the generated tokens, else None.
+    def _stop_match_at(self, t: int) -> Optional[Tuple[int, ...]]:
+        """First stop sequence whose match *ends* at output position ``t``.
 
-        EOS wins over stop-sequence matches, which win over length — all
-        three are checked against ``output`` only (generated tokens; stop
-        sequences do not match across the prompt boundary).
+        A sequence longer than the generated tail ``output[:t + 1]``
+        windows back into the prompt — stop sequences match across the
+        prompt/generation boundary (a one-token continuation of a phrase
+        the prompt already started must still fire).
+        """
+        for seq in self.stop_sequences or ():
+            n = len(seq)
+            short = n - (t + 1)          # tokens needed from the prompt
+            if short > len(self.prompt):
+                continue
+            if short > 0:
+                window = [int(x) for x in self.prompt[-short:]]
+                window += self.output[:t + 1]
+            else:
+                window = self.output[t + 1 - n:t + 1]
+            if window == list(seq):
+                return tuple(seq)
+        return None
+
+    def check_finish(self, new_tokens: int = 1) -> Optional[str]:
+        """Finish reason implied by the last ``new_tokens`` committed
+        tokens, else None.
+
+        Every newly committed position is scanned in order (a multi-token
+        speculative commit may bury the EOS / stop match mid-batch);
+        at each position EOS wins over stop-sequence matches, which win
+        over length. On a match, ``output`` is truncated right after the
+        matching position — accepted draft tokens past the finish point
+        are dropped — and ``matched_stop`` records the stop sequence that
+        fired.
         """
         if not self.output:
             return None
-        if self.eos_token is not None and self.output[-1] == self.eos_token:
-            return FinishReason.EOS
-        for seq in self.stop_sequences or ():
-            n = len(seq)
-            if 0 < n <= len(self.output) and self.output[-n:] == list(seq):
+        start = max(0, len(self.output) - new_tokens)
+        for t in range(start, len(self.output)):
+            if self.eos_token is not None and self.output[t] == self.eos_token:
+                del self.output[t + 1:]
+                return FinishReason.EOS
+            hit = self._stop_match_at(t)
+            if hit is not None:
+                del self.output[t + 1:]
+                self.matched_stop = hit
                 return FinishReason.STOP
-        if len(self.output) >= self.max_new_tokens:
-            return FinishReason.LENGTH
+            if t + 1 >= self.max_new_tokens:
+                del self.output[t + 1:]
+                return FinishReason.LENGTH
         return None
 
 

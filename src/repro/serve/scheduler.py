@@ -191,7 +191,10 @@ class QoSTrafficClassScheduler(Scheduler):
     def _token_counts(self) -> Tuple[int, int]:
         """Cumulative decode tokens per lane across everything this
         scheduler has admitted (live slots counted at their current
-        length)."""
+        length). Observing ``len(req.output)`` keeps the accounting
+        correct under speculative decoding too — a multi-token commit
+        advances the lane's count by every committed token, not by
+        iterations."""
         totals = dict(self._done_tokens)
         for rid, req in list(self._live.items()):
             lane = RT if req.qos == RT else BE

@@ -872,3 +872,112 @@ def test_paged_attention_matches_dense_decode_attention():
         np.testing.assert_allclose(np.asarray(paged_out),
                                    np.asarray(dense_out),
                                    atol=2e-6, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# small-q verify attention (speculative decoding)
+
+
+def _verify_fixture(seed=0, int8=False):
+    rng = np.random.default_rng(seed)
+    B, HQ, HKV, D, BLK, N, M, Q = 3, 8, 2, 16, 4, 12, 6, 4
+    q = jnp.asarray(rng.standard_normal((B, HQ, Q, D)), jnp.float32)
+    if int8:
+        kp = jnp.asarray(rng.integers(-127, 128, (N, HKV, BLK, D)), jnp.int8)
+        vp = jnp.asarray(rng.integers(-127, 128, (N, HKV, BLK, D)), jnp.int8)
+    else:
+        kp = jnp.asarray(rng.standard_normal((N, HKV, BLK, D)), jnp.float32)
+        vp = jnp.asarray(rng.standard_normal((N, HKV, BLK, D)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(1, N, (B, M)), jnp.int32)
+    # lens = committed + 1; row j may attend lens + j ≤ M·BLK keys
+    lens = jnp.asarray([7, 1, 18], jnp.int32)
+    return q, kp, vp, tbl, lens
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_paged_attention_verify_rows_match_decode(backend):
+    """Verify row ``j`` equals a decode call with ``lens + j`` — the
+    per-row semantics that make greedy acceptance token-identical (row 0
+    *is* the decode step)."""
+    from repro.kernels.paged_attention.ops import (
+        paged_attention, paged_attention_verify,
+    )
+
+    q, kp, vp, tbl, lens = _verify_fixture()
+    out = paged_attention_verify(q, kp, vp, tbl, lens, backend=backend)
+    for j in range(q.shape[2]):
+        dec = paged_attention(q[:, :, j:j + 1], kp, vp, tbl,
+                              lens + j, backend=backend)
+        np.testing.assert_allclose(np.asarray(out[:, :, j:j + 1]),
+                                   np.asarray(dec), atol=2e-6, rtol=2e-5,
+                                   err_msg=f"verify row {j}")
+
+
+def test_paged_attention_verify_kernel_vs_oracle():
+    """Pallas verify kernel (interpret mode) matches the dense gather
+    oracle, including sliding windows."""
+    from repro.kernels.paged_attention.ops import paged_attention_verify
+    from repro.kernels.paged_attention.ref import paged_attention_verify_ref
+
+    q, kp, vp, tbl, lens = _verify_fixture(seed=2)
+    for window in (None, 6):
+        ref = paged_attention_verify_ref(q, kp, vp, tbl, lens,
+                                         window=window)
+        out = paged_attention_verify(q, kp, vp, tbl, lens, window=window,
+                                     backend="interpret")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-6, rtol=2e-5)
+
+
+def test_paged_attention_verify_int8_xla_rowwise_bit_identity():
+    """The multi-q ITA verify oracle is bit-identical per row to the
+    decode ITA oracle at ``lens + j`` — int8 serving's token-identity
+    anchor under speculation."""
+    from repro.kernels.paged_attention.ops import (
+        paged_attention_int8, paged_attention_verify_int8,
+    )
+
+    q, kp, vp, tbl, lens = _verify_fixture(seed=3, int8=True)
+    out = paged_attention_verify_int8(q, kp, vp, tbl, lens, backend="xla")
+    for j in range(q.shape[2]):
+        dec = paged_attention_int8(q[:, :, j:j + 1], kp, vp, tbl,
+                                   lens + j, backend="xla")
+        np.testing.assert_array_equal(np.asarray(out[:, :, j:j + 1]),
+                                      np.asarray(dec),
+                                      err_msg=f"verify row {j}")
+
+
+def test_paged_attention_verify_int8_kernel_vs_dequant_oracle():
+    """Fused int8 verify kernel (interpret mode) matches its dequant
+    oracle contract — same quantized operands, exact integer score dots,
+    f32 softmax."""
+    from repro.kernels.paged_attention.ops import (
+        paged_attention_verify_int8,
+    )
+    from repro.kernels.paged_attention.ref import (
+        paged_attention_verify_int8_dequant_ref,
+    )
+    from repro.models.attention import KV_SCALE
+
+    q, kp, vp, tbl, lens = _verify_fixture(seed=4, int8=True)
+    scale = jnp.full((kp.shape[0],), KV_SCALE, jnp.float32)
+    for window in (None, 6):
+        ref = paged_attention_verify_int8_dequant_ref(
+            q, kp, vp, tbl, lens, k_scale=scale, v_scale=scale,
+            window=window)
+        out = paged_attention_verify_int8(q, kp, vp, tbl, lens,
+                                          window=window,
+                                          backend="interpret")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-6, rtol=3e-5)
+
+
+def test_paged_attention_verify_rejects_float_pools():
+    from repro.kernels.paged_attention.ops import paged_attention_verify_int8
+
+    q = jnp.zeros((1, 2, 3, 8), jnp.float32)
+    pool = jnp.zeros((3, 1, 4, 8), jnp.float32)
+    with pytest.raises(ValueError, match="int8 pools"):
+        paged_attention_verify_int8(
+            q, pool, pool, jnp.zeros((1, 2), jnp.int32),
+            jnp.zeros((1,), jnp.int32))
