@@ -113,6 +113,24 @@ def smoke() -> None:
         failures += 1
         print(f"spec_surface_IMPORT_ERROR,0.0,{type(e).__name__}:{e}")
         traceback.print_exc(file=sys.stderr, limit=3)
+    try:
+        from repro.analysis import (
+            CHECKERS as _CHECKERS, hot_path as _hp, parse_pragmas as _pp,
+        )
+        from repro.analysis.cli import main as _analysis_main
+        expected_rules = {"host-sync", "retrace-hazard", "pallas-index",
+                          "alloc-pairing", "prng-key"}
+        if set(_CHECKERS) != expected_rules:
+            raise AttributeError(
+                f"checker registry drifted: {sorted(_CHECKERS)}")
+        if not callable(_hp) or not callable(_pp) \
+                or not callable(_analysis_main):
+            raise AttributeError("analysis entry points not callable")
+        print("repro.analysis,0.0,import_ok")
+    except Exception as e:  # noqa: BLE001
+        failures += 1
+        print(f"analysis_IMPORT_ERROR,0.0,{type(e).__name__}:{e}")
+        traceback.print_exc(file=sys.stderr, limit=3)
     for mod in SERVE_MODULES:
         try:
             m = importlib.import_module(mod)

@@ -1,0 +1,62 @@
+"""``repro.analysis`` — static contract checkers for the serving stack.
+
+CHIMERA's hardware guarantees hold because an arbiter *enforces* them;
+this package is the software twin of that move for the repo's own
+contracts.  The serving stack's invariants — one jitted dispatch and one
+device→host fetch per iteration, ``pl.dslice`` indexing inside Pallas
+kernels, allocator acquire/release pairing, absolute-index PRNG keying —
+are mechanical defect classes with repo history behind each one (the
+seed's raw-int Pallas store index, the iteration-keyed sampling PRNG
+desync, the stale chain-key memo on abort).  Each checker turns one of
+those review-enforced contracts into an AST-enforced one.
+
+Usage::
+
+    python -m repro.analysis src tests benchmarks [--format text|github|junit]
+
+Five rules (see ``repro.analysis.checkers``):
+
+  host-sync       device→host synchronization inside ``@hot_path``
+                  functions (the one-dispatch/one-fetch contract)
+  retrace-hazard  traced functions mutating closed-over state, len() of
+                  closure values, trace-time host side effects
+  pallas-index    raw dynamic indices where ``pl.dslice`` is required;
+                  BlockSpec/grid arity mismatches
+  alloc-pairing   allocator acquisitions that can escape on an exception
+                  path without release; double releases
+  prng-key        PRNG key reuse without split/fold_in; loop-iteration
+                  fold_in (the absolute-index keying contract)
+
+Intentional violations carry an inline pragma with a reason::
+
+    # repro: allow(host-sync) -- the contract's single fetch
+
+Grandfathered findings live in the checked-in ``analysis_baseline.json``;
+CI fails on any non-baselined finding and a meta-test keeps the baseline
+exactly in sync with a fresh run (drift cannot accumulate).
+
+This package is stdlib-only (``ast`` + ``tokenize``) — the CI shard needs
+no JAX install and the checkers never import the code they scan.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.annotations import HOT_PATH_ATTR, hot_path
+from repro.analysis.baseline import load_baseline, write_baseline
+from repro.analysis.checkers import CHECKERS, get_checkers
+from repro.analysis.core import Finding, SourceModule, run_paths
+from repro.analysis.pragmas import Pragma, parse_pragmas
+
+__all__ = [
+    "CHECKERS",
+    "Finding",
+    "HOT_PATH_ATTR",
+    "Pragma",
+    "SourceModule",
+    "get_checkers",
+    "hot_path",
+    "load_baseline",
+    "parse_pragmas",
+    "run_paths",
+    "write_baseline",
+]

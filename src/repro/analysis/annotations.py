@@ -1,0 +1,33 @@
+"""Hot-path annotation — the marker the ``host-sync`` checker keys on.
+
+``@hot_path`` declares that a function runs inside the serving loop's
+per-iteration critical section, where the dataflow contract allows
+exactly one device→host fetch (and that fetch carries an explicit
+pragma).  The decorator is a pure marker: it sets an attribute and
+returns the function unchanged, so it composes with methods, jitted
+callables and ``functools.partial`` wrappers at zero runtime cost.  The
+static checker recognizes it *syntactically* (decorator named
+``hot_path``), so the scanned module is never imported.
+
+Functions that cannot carry the decorator (third-party, generated) can be
+named in ``repro.analysis.config.HOT_PATHS`` by dotted path instead.
+
+This module must stay dependency-free — it is imported by the serving
+hot path itself and by the stdlib-only analysis CI shard.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, TypeVar
+
+F = TypeVar("F", bound=Callable)
+
+#: attribute set on decorated functions (runtime-introspectable mirror of
+#: the static marker; tests assert the two agree)
+HOT_PATH_ATTR = "__repro_hot_path__"
+
+
+def hot_path(fn: F) -> F:
+    """Mark ``fn`` as serving-loop hot path for the ``host-sync`` rule."""
+    setattr(fn, HOT_PATH_ATTR, True)
+    return fn

@@ -1,0 +1,60 @@
+"""Checked-in baseline of grandfathered findings.
+
+The baseline is a JSON list of finding records.  The CLI subtracts it
+from a fresh run (CI fails only on *new* findings); the meta-test in
+``tests/test_analysis.py`` asserts the checked-in file equals a fresh
+full-repo run exactly — a stale baseline (fixed finding still listed, or
+new finding missing) fails tier-1, so drift cannot accumulate.  Policy:
+intentional violations get inline pragmas with reasons; the baseline is
+for *grandfathered* findings only and is expected to stay empty.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Iterable, List, Set, Tuple
+
+from repro.analysis.core import Finding
+
+_VERSION = 1
+
+
+def load_baseline(path: str) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as f:
+        data = json.load(f)
+    if data.get("version") != _VERSION:
+        raise ValueError(
+            f"baseline {path}: unsupported version {data.get('version')!r}")
+    return sorted(
+        Finding(file=r["file"], line=int(r["line"]), rule=r["rule"],
+                message=r["message"])
+        for r in data.get("findings", []))
+
+
+def write_baseline(path: str, findings: Iterable[Finding]) -> None:
+    records = [
+        {"file": f.file, "line": f.line, "rule": f.rule,
+         "message": f.message}
+        for f in sorted(findings)]
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump({"version": _VERSION, "findings": records}, f, indent=2,
+                  sort_keys=True)
+        f.write("\n")
+
+
+def split_baselined(findings: Iterable[Finding],
+                    baseline: Iterable[Finding],
+                    ) -> Tuple[List[Finding], List[Finding], List[Finding]]:
+    """→ (new, grandfathered, stale-baseline-entries).  Stale entries are
+    baseline records no fresh finding matches — the meta-test (and
+    ``--format text`` output) surfaces them so fixed findings leave the
+    baseline in the same PR that fixes them."""
+    base_keys: Set[str] = {b.key() for b in baseline}
+    fresh_keys: Set[str] = set()
+    new: List[Finding] = []
+    old: List[Finding] = []
+    for f in findings:
+        fresh_keys.add(f.key())
+        (old if f.key() in base_keys else new).append(f)
+    stale = [b for b in baseline if b.key() not in fresh_keys]
+    return new, old, stale

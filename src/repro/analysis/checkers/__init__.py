@@ -1,0 +1,44 @@
+"""Checker registry — rule id → checker class.
+
+Adding a checker: subclass :class:`repro.analysis.core.Checker`, set
+``rule``, implement ``check(SourceModule) -> List[Finding]``, register it
+here, and add a flagged + a not-flagged fixture pair under
+``tests/analysis_fixtures/`` (the golden tests parametrize over this
+registry, so an unregistered checker — or one without fixtures — fails
+the suite).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Type
+
+from repro.analysis.checkers.alloc_pairing import AllocPairingChecker
+from repro.analysis.checkers.host_sync import HostSyncChecker
+from repro.analysis.checkers.pallas_index import PallasIndexChecker
+from repro.analysis.checkers.prng_key import PrngKeyChecker
+from repro.analysis.checkers.retrace_hazard import RetraceHazardChecker
+from repro.analysis.core import Checker
+
+CHECKERS: Dict[str, Type[Checker]] = {
+    c.rule: c
+    for c in (
+        HostSyncChecker,
+        RetraceHazardChecker,
+        PallasIndexChecker,
+        AllocPairingChecker,
+        PrngKeyChecker,
+    )
+}
+
+
+def get_checkers(rules: Optional[Iterable[str]] = None) -> List[Checker]:
+    """Instantiate checkers (all, or the named subset)."""
+    if rules is None:
+        return [cls() for cls in CHECKERS.values()]
+    out: List[Checker] = []
+    for r in rules:
+        if r not in CHECKERS:
+            raise ValueError(
+                f"unknown rule {r!r} (known: {', '.join(sorted(CHECKERS))})")
+        out.append(CHECKERS[r]())
+    return out

@@ -1,0 +1,173 @@
+"""``alloc-pairing`` — block-allocator acquire/release discipline.
+
+The paged KV pool's :class:`~repro.models.cache.BlockAllocator` keeps a
+hard partition invariant (free ⊎ live ⊎ cached); an ``admit``/``grow``/
+``incref`` whose blocks escape on an exception path without a matching
+``release``/``decref`` leaks capacity until the next full reset.  The
+check is an intra-procedural walk over allocator call sites — a receiver
+is "allocator-ish" when its source text contains ``alloc`` (``alloc``,
+``self.ring_alloc``, ``self._alloc_for(slot)``), which is the repo-wide
+naming convention.
+
+  AP1  a second acquire on a *different* receiver while an earlier
+       acquire is still open and unguarded (not inside a ``try`` whose
+       handler/finally releases it): if the second raises mid-admission,
+       the first receiver's reservation leaks.  This is exactly the
+       paged ``prefill_begin`` full-arena + ring-arena shape.
+  AP2  ``admit``/``grow`` result discarded (bare expression statement):
+       the returned block ids are the only handle to what was allocated.
+  AP3  double ``release``/``decref`` with the same receiver and argument
+       in one suite with no intervening acquire: the second drops
+       someone else's refcount (or raises), corrupting the partition.
+  AP4  ``raise`` while an acquire is open and unguarded — the explicit
+       version of AP1's implicit exception edge.
+
+Branches are scanned linearly (both arms of an ``if`` in sequence):
+deliberate over-approximation — pairings that need path-sensitive
+reasoning to prove safe deserve a pragma explaining the path.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.core import Checker, Finding, SourceModule
+
+_ACQUIRE = {"admit", "grow", "incref"}
+_RESULT_REQUIRED = {"admit", "grow"}
+_RELEASE = {"release", "decref", "free"}
+
+
+@dataclass
+class _Open:
+    recv: str
+    method: str
+    line: int
+
+
+def _alloc_call(node: ast.AST) -> Tuple[str, str, ast.Call]:
+    """(receiver_text, method, call) if ``node`` is an allocator call
+    else ``("", "", node)``."""
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+            and node.func.attr in (_ACQUIRE | _RELEASE):
+        recv = ast.unparse(node.func.value)
+        if "alloc" in recv.lower():
+            return recv, node.func.attr, node
+    return "", "", node  # type: ignore[return-value]
+
+
+class AllocPairingChecker(Checker):
+    rule = "alloc-pairing"
+
+    def check(self, mod: SourceModule) -> List[Finding]:
+        out: List[Finding] = []
+        for info in mod.functions.values():
+            body = getattr(info.node, "body", None)
+            if isinstance(body, list):
+                self._scan_suite(mod, body, guarded=frozenset(),
+                                 open_=[], out=out)
+        return out
+
+    # -- suite walk --------------------------------------------------------
+
+    def _scan_suite(self, mod: SourceModule, stmts: List[ast.stmt],
+                    guarded: frozenset, open_: List[_Open],
+                    out: List[Finding]) -> None:
+        released: Dict[Tuple[str, str], int] = {}  # (recv, arg) -> line
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue  # nested defs are scanned as their own functions
+            if isinstance(stmt, ast.Try):
+                g = set(guarded)
+                for h in stmt.handlers:
+                    g.update(self._released_receivers(h.body))
+                g.update(self._released_receivers(stmt.finalbody))
+                pre = list(open_)
+                self._scan_suite(mod, stmt.body, frozenset(g), open_, out)
+                for h in stmt.handlers:
+                    # a handler runs when the body raised part-way: the
+                    # body's own acquires may not have happened, so the
+                    # handler is checked against the pre-try open set
+                    self._scan_suite(mod, h.body, guarded, list(pre), out)
+                self._scan_suite(mod, stmt.orelse, guarded, open_, out)
+                self._scan_suite(mod, stmt.finalbody, guarded, open_, out)
+                continue
+            if isinstance(stmt, ast.Raise):
+                for o in open_:
+                    if o.recv not in guarded:
+                        out.append(self.finding(
+                            mod, stmt,
+                            f"raise while {o.recv}.{o.method} from line "
+                            f"{o.line} is unreleased — the reservation "
+                            f"leaks on this path (release in an except/"
+                            f"finally first)"))
+            self._scan_calls(mod, stmt, guarded, open_, released, out)
+            for suite in self._sub_suites(stmt):
+                self._scan_suite(mod, suite, guarded, open_, out)
+
+    @staticmethod
+    def _sub_suites(stmt: ast.stmt) -> List[List[ast.stmt]]:
+        suites = []
+        for field in ("body", "orelse", "finalbody"):
+            val = getattr(stmt, field, None)
+            if isinstance(val, list) and val \
+                    and isinstance(val[0], ast.stmt):
+                suites.append(val)
+        return suites
+
+    @staticmethod
+    def _released_receivers(stmts: List[ast.stmt]) -> Set[str]:
+        out: Set[str] = set()
+        for s in stmts:
+            for n in ast.walk(s):
+                recv, method, _ = _alloc_call(n)
+                if recv and method in _RELEASE:
+                    out.add(recv)
+        return out
+
+    # -- per-statement call handling ---------------------------------------
+
+    def _scan_calls(self, mod: SourceModule, stmt: ast.stmt,
+                    guarded: frozenset, open_: List[_Open],
+                    released: Dict[Tuple[str, str], int],
+                    out: List[Finding]) -> None:
+        exprs = [c for c in ast.iter_child_nodes(stmt)
+                 if isinstance(c, ast.expr)]
+        for node in (n for e in exprs for n in ast.walk(e)):
+            recv, method, call = _alloc_call(node)
+            if not recv:
+                continue
+            if method in _ACQUIRE:
+                if method in _RESULT_REQUIRED \
+                        and isinstance(stmt, ast.Expr) \
+                        and stmt.value is node:
+                    out.append(self.finding(
+                        mod, call,
+                        f"{recv}.{method}(...) result discarded — the "
+                        f"returned block ids are the only handle to the "
+                        f"allocation"))
+                for o in open_:
+                    if o.recv != recv and o.recv not in guarded:
+                        out.append(self.finding(
+                            mod, call,
+                            f"{recv}.{method} while {o.recv}.{o.method} "
+                            f"from line {o.line} is unreleased — if this "
+                            f"call raises, the earlier reservation leaks "
+                            f"(guard it with a try/except that releases)"))
+                open_.append(_Open(recv, method, call.lineno))
+                for k in [k for k in released if k[0] == recv]:
+                    del released[k]
+            else:  # release
+                arg = ast.unparse(call.args[0]) if call.args else ""
+                key = (recv, arg)
+                if key in released:
+                    out.append(self.finding(
+                        mod, call,
+                        f"double {method} of {arg!r} on {recv} (first at "
+                        f"line {released[key]}) with no intervening "
+                        f"acquire — drops a foreign refcount or raises"))
+                released[key] = call.lineno
+                open_[:] = [o for o in open_ if o.recv != recv]

@@ -1,0 +1,207 @@
+"""``host-sync`` — device→host synchronization inside hot-path functions.
+
+The serving dataflow contract allows exactly one device→host fetch per
+engine iteration (``LLMEngine._fetch_and_finish``'s ``jax.device_get``,
+which carries a pragma).  Any *other* synchronization in a function
+marked ``@hot_path`` — an ``.item()``, an ``int()``/``float()``/
+``bool()`` coercion of a device value, ``np.asarray`` on a device array,
+iterating or branching on one — blocks the host on the device and breaks
+the one-fetch contract that keeps dispatch latency flat.
+
+Device values are tracked by a lightweight intra-function taint pass:
+
+  sources   parameters annotated ``jax.Array``; results of
+            ``jnp.* / jax.lax.* / jax.random.* / jax.vmap`` calls and of
+            locally-jitted callables (``self._*_fn(...)``, ``jax.jit``
+            results); ``.astype(...)`` / arithmetic / subscripts of
+            tainted values stay tainted
+  cleaners  ``jax.device_get(...)`` returns *host* values (the call
+            itself is flagged — it IS the sync — but its result is
+            clean), as do ``int()``-style coercions (one flag per sync,
+            not one per downstream use)
+
+Sub-rules: HS1 ``.item()``; HS2 ``jax.device_get``; HS3 ``int/float/
+bool`` of a device value; HS4 ``np.asarray``/``np.array`` of a device
+value; HS5 ``for`` iteration over a device value; HS6 ``if``/``while``
+branching on a device expression.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.core import Checker, Finding, SourceModule
+
+_DEVICE_CALL_ROOTS = (
+    "jax.numpy.",
+    "jax.lax.",
+    "jax.random.",
+    "jax.nn.",
+)
+_DEVICE_CALLS = {"jax.vmap", "jax.grad", "jax.value_and_grad"}
+_HOST_CALLS = {"jax.device_get"}  # the sync itself; result is host
+_COERCIONS = {"int", "float", "bool"}
+_NP_SINKS = {"numpy.asarray", "numpy.array"}
+_ARRAY_ANNOTATIONS = ("jax.Array", "jnp.ndarray", "jax.numpy.ndarray")
+
+
+class _Taint(ast.NodeVisitor):
+    """Forward pass over one function body marking device-valued names."""
+
+    def __init__(self, mod: SourceModule, fn: ast.AST):
+        self.mod = mod
+        self.fn = fn
+        self.tainted: Set[str] = set()
+        args = getattr(fn, "args", None)
+        if args is not None:
+            for a in list(args.posonlyargs) + list(args.args) \
+                    + list(args.kwonlyargs):
+                ann = a.annotation
+                if ann is not None and self._ann_is_array(ann):
+                    self.tainted.add(a.arg)
+
+    def _ann_is_array(self, ann: ast.AST) -> bool:
+        if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+            return any(t in ann.value for t in _ARRAY_ANNOTATIONS)
+        name = self.mod.dotted(ann)
+        return name in ("jax.Array", "jax.numpy.ndarray")
+
+    def is_device(self, node: ast.AST) -> bool:
+        """Heuristic: does this expression hold a device value?"""
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Subscript) or isinstance(node, ast.Starred):
+            return self.is_device(node.value)
+        if isinstance(node, ast.BinOp):
+            return self.is_device(node.left) or self.is_device(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_device(node.operand)
+        if isinstance(node, ast.Compare):
+            return self.is_device(node.left) or any(
+                self.is_device(c) for c in node.comparators)
+        if isinstance(node, ast.Call):
+            name = self.mod.dotted(node.func)
+            if name is not None:
+                if name in _HOST_CALLS:
+                    return False
+                if name in _DEVICE_CALLS or any(
+                        name.startswith(r) for r in _DEVICE_CALL_ROOTS):
+                    return True
+                # locally-jitted dispatch: self._decode_fn(...) — only
+                # attribute calls, so a bare scheduler hook like
+                # order_fn(...) stays host
+                if name.split(".")[-1].endswith("_fn") \
+                        and isinstance(node.func, ast.Attribute):
+                    return True
+            if isinstance(node.func, ast.Attribute):
+                # method on a device value keeps the taint (.astype,
+                # .reshape, .sum, ...) — except explicit host landings
+                if node.func.attr in ("item", "tolist", "block_until_ready"):
+                    return False
+                return self.is_device(node.func.value)
+            return False
+        if isinstance(node, ast.Attribute):
+            # .shape/.dtype/.size of a device array are host metadata
+            if node.attr in ("shape", "dtype", "size", "ndim", "nbytes"):
+                return False
+            return self.is_device(node.value)
+        if isinstance(node, ast.IfExp):
+            return self.is_device(node.body) or self.is_device(node.orelse)
+        return False
+
+    def learn(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) >= 1:
+            dev = self.is_device(stmt.value)
+            names: List[str] = []
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    names.append(t.id)
+                elif isinstance(t, ast.Tuple):
+                    names.extend(e.id for e in t.elts
+                                 if isinstance(e, ast.Name))
+            for n in names:
+                (self.tainted.add if dev else self.tainted.discard)(n)
+        elif isinstance(stmt, ast.AugAssign) \
+                and isinstance(stmt.target, ast.Name):
+            if self.is_device(stmt.value):
+                self.tainted.add(stmt.target.id)
+
+
+class HostSyncChecker(Checker):
+    rule = "host-sync"
+
+    def check(self, mod: SourceModule) -> List[Finding]:
+        out: List[Finding] = []
+        for info in mod.functions_of_role("hot"):
+            out.extend(self._check_fn(mod, info.node))
+        return out
+
+    def _check_fn(self, mod: SourceModule, fn: ast.AST) -> List[Finding]:
+        out: List[Finding] = []
+        taint = _Taint(mod, fn)
+        body = getattr(fn, "body", [])
+        if isinstance(body, ast.AST):   # lambda
+            body = [ast.Expr(body)]
+
+        def scan(node: ast.AST) -> None:
+            # nested defs get their own hot marks; don't descend
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn:
+                return
+            if isinstance(node, ast.stmt):
+                self._scan_stmt(mod, node, taint, out)
+            for child in ast.iter_child_nodes(node):
+                scan(child)
+            if isinstance(node, ast.stmt):
+                taint.learn(node)
+
+        for stmt in body:
+            scan(stmt)
+        return out
+
+    def _scan_stmt(self, mod: SourceModule, stmt: ast.stmt, taint: _Taint,
+                   out: List[Finding]) -> None:
+        if isinstance(stmt, ast.For) and taint.is_device(stmt.iter):
+            out.append(self.finding(
+                mod, stmt,
+                "iterating a device array pulls every element to host — "
+                "fetch once with jax.device_get instead"))
+        if isinstance(stmt, (ast.If, ast.While)) \
+                and taint.is_device(stmt.test):
+            out.append(self.finding(
+                mod, stmt,
+                "branching on a device value forces a blocking host sync "
+                "inside the hot path"))
+        # immediate expression operands only — nested statements are
+        # scanned on their own visit (no double counting)
+        exprs = [c for c in ast.iter_child_nodes(stmt)
+                 if isinstance(c, ast.expr)]
+        for node in (n for e in exprs for n in ast.walk(e)):
+            if not isinstance(node, ast.Call):
+                continue
+            name = mod.dotted(node.func)
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item":
+                out.append(self.finding(
+                    mod, node,
+                    ".item() synchronizes device→host — hot paths fetch "
+                    "once per iteration via the engine's batched "
+                    "device_get"))
+            elif name in _HOST_CALLS:
+                out.append(self.finding(
+                    mod, node,
+                    "jax.device_get is a device→host fetch — the hot loop "
+                    "allows exactly one, carried by _fetch_and_finish"))
+            elif name in _COERCIONS and node.args \
+                    and taint.is_device(node.args[0]):
+                out.append(self.finding(
+                    mod, node,
+                    f"{name}() on a device value is a blocking host sync — "
+                    f"keep it on device or ride the per-iteration fetch"))
+            elif name in _NP_SINKS and node.args \
+                    and taint.is_device(node.args[0]):
+                out.append(self.finding(
+                    mod, node,
+                    "np.asarray on a device value copies device→host — "
+                    "keep the hot path on device"))

@@ -1,0 +1,170 @@
+"""``prng-key`` — stateless PRNG key discipline.
+
+The serving stack's sampling contract (PR 9) keys every draw by the
+*absolute output position*: ``fold_in(fold_in(base_key, rid), step)``
+with ``step`` the request's committed length.  That makes sampling
+deterministic under preemption, restart, chunked prefill and
+speculative rollback.  Two statically-checkable violations:
+
+  PK1  key reuse — the same key variable consumed by two ``jax.random``
+       sampler calls with no ``split``/``fold_in`` rebinding between:
+       correlated draws (identical, for the same sampler and shape).
+       A key consumed inside a loop but derived *outside* it is the same
+       bug across iterations.
+  PK2  iteration-counter keying — ``fold_in(key, i)`` where ``i`` is an
+       enclosing ``for``-loop induction variable (or an ``.iteration``-
+       style attribute).  The count restarts from zero on preemption/
+       restart, so replayed positions draw *different* tokens than the
+       first attempt — the PR-9 desync class.  Key by the absolute
+       output index carried on the request instead.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import Checker, Finding, SourceModule
+
+_SAMPLERS = {
+    "ball", "bernoulli", "beta", "bits", "categorical", "cauchy",
+    "choice", "dirichlet", "exponential", "gamma", "gumbel", "laplace",
+    "logistic", "normal", "permutation", "poisson", "randint", "shuffle",
+    "truncated_normal", "uniform",
+}
+_REBINDERS = {"split", "fold_in", "key", "PRNGKey"}
+_KEY_NAME_RE = re.compile(r"(^|_)(key|rng|prng)s?$")
+
+
+def _random_fn(mod: SourceModule, call: ast.Call) -> Optional[str]:
+    name = mod.dotted(call.func)
+    if name and name.startswith("jax.random."):
+        return name[len("jax.random."):]
+    return None
+
+
+class PrngKeyChecker(Checker):
+    rule = "prng-key"
+
+    def check(self, mod: SourceModule) -> List[Finding]:
+        out: List[Finding] = []
+        for info in mod.functions.values():
+            body = getattr(info.node, "body", None)
+            if isinstance(body, list):
+                self._check_fn(mod, info.node, body, out)
+        return out
+
+    def _check_fn(self, mod: SourceModule, fn: ast.AST,
+                  body: List[ast.stmt], out: List[Finding]) -> None:
+        # keys: name -> (defining loop depth, consumed?, consuming line)
+        keys: Dict[str, Tuple[int, Optional[int]]] = {}
+        args = getattr(fn, "args", None)
+        if args is not None:
+            for a in list(args.posonlyargs) + list(args.args) \
+                    + list(args.kwonlyargs):
+                if _KEY_NAME_RE.search(a.arg):
+                    keys[a.arg] = (0, None)
+        self._scan(mod, body, keys, loop_vars=set(), depth=0, out=out)
+
+    def _scan(self, mod: SourceModule, stmts: List[ast.stmt],
+              keys: Dict[str, Tuple[int, Optional[int]]],
+              loop_vars: Set[str], depth: int,
+              out: List[Finding]) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            self._scan_exprs(mod, stmt, keys, loop_vars, depth, out)
+            if isinstance(stmt, ast.Assign):
+                self._learn(mod, stmt.targets, stmt.value, keys, depth)
+            elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                lv = set(loop_vars)
+                for n in ast.walk(stmt.target):
+                    if isinstance(n, ast.Name):
+                        lv.add(n.id)
+                self._scan(mod, stmt.body, keys, lv, depth + 1, out)
+                self._scan(mod, stmt.orelse, keys, loop_vars, depth, out)
+            elif isinstance(stmt, ast.While):
+                self._scan(mod, stmt.body, keys, loop_vars, depth + 1, out)
+                self._scan(mod, stmt.orelse, keys, loop_vars, depth, out)
+            else:
+                for field in ("body", "orelse", "finalbody"):
+                    sub = getattr(stmt, field, None)
+                    if isinstance(sub, list) and sub \
+                            and isinstance(sub[0], ast.stmt):
+                        self._scan(mod, sub, keys, loop_vars, depth, out)
+                for h in getattr(stmt, "handlers", []):
+                    self._scan(mod, h.body, keys, loop_vars, depth, out)
+
+    def _learn(self, mod: SourceModule, targets: List[ast.AST],
+               value: ast.AST,
+               keys: Dict[str, Tuple[int, Optional[int]]],
+               depth: int) -> None:
+        fresh = isinstance(value, ast.Call) \
+            and _random_fn(mod, value) in _REBINDERS
+        for t in targets:
+            for n in ([t] if isinstance(t, ast.Name)
+                      else [e for e in getattr(t, "elts", [])
+                            if isinstance(e, ast.Name)]):
+                if fresh:
+                    keys[n.id] = (depth, None)    # fresh, unconsumed
+                elif n.id in keys:
+                    del keys[n.id]                # rebound to a non-key
+
+    def _scan_exprs(self, mod: SourceModule, stmt: ast.stmt,
+                    keys: Dict[str, Tuple[int, Optional[int]]],
+                    loop_vars: Set[str], depth: int,
+                    out: List[Finding]) -> None:
+        exprs = [c for c in ast.iter_child_nodes(stmt)
+                 if isinstance(c, ast.expr)]
+        for node in (n for e in exprs for n in ast.walk(e)):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = _random_fn(mod, node)
+            if fn is None:
+                continue
+            if fn == "fold_in" and len(node.args) >= 2:
+                arg = node.args[1]
+                if isinstance(arg, ast.Name) and arg.id in loop_vars:
+                    out.append(self.finding(
+                        mod, node,
+                        f"fold_in keyed by loop counter {arg.id!r} — "
+                        f"iteration counts restart on preemption and "
+                        f"desync replayed draws; key by the absolute "
+                        f"output index (request step) instead"))
+                elif isinstance(arg, ast.Attribute) \
+                        and "iteration" in arg.attr:
+                    out.append(self.finding(
+                        mod, node,
+                        f"fold_in keyed by .{arg.attr} — engine iteration "
+                        f"counts are not stable across restarts; key by "
+                        f"the absolute output index instead"))
+            if fn in _SAMPLERS or fn == "split":
+                if not node.args or not isinstance(node.args[0], ast.Name):
+                    continue
+                name = node.args[0].id
+                state = keys.get(name)
+                if state is None:
+                    continue
+                def_depth, used_line = state
+                if fn == "split":
+                    # split is how you *stop* reusing; mark consumed so a
+                    # later sampler on the raw key still flags
+                    keys[name] = (def_depth, used_line or node.lineno)
+                    continue
+                if used_line is not None:
+                    out.append(self.finding(
+                        mod, node,
+                        f"key {name!r} already consumed at line "
+                        f"{used_line} — split or fold_in before drawing "
+                        f"again (identical keys give identical draws)"))
+                elif depth > def_depth:
+                    out.append(self.finding(
+                        mod, node,
+                        f"key {name!r} derived outside this loop is "
+                        f"consumed every iteration — fold_in a "
+                        f"per-iteration position first"))
+                    keys[name] = (def_depth, node.lineno)
+                else:
+                    keys[name] = (def_depth, node.lineno)

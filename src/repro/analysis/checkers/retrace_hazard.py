@@ -1,0 +1,151 @@
+"""``retrace-hazard`` — traced functions entangled with host state.
+
+A function handed to ``jax.jit`` / ``shard_map`` / ``pallas_call`` runs
+its Python body at *trace time only*.  Host state it touches is silently
+frozen into the compiled artifact — and anything that changes the trace
+signature per call churns recompiles (the class the benches guard with
+ad-hoc retrace asserts).  Three statically-checkable sub-rules:
+
+  RH1  mutation of closed-over state (``self.attr = / +=``, ``nonlocal``
+       / ``global`` writes) inside a traced function: runs once per
+       *trace*, not per call — a counter that was meant to count calls
+       counts compiles, and a cache write happens never again.  The
+       repo's intentional trace counters carry pragmas.
+  RH2  ``len()`` of a closed-over (non-parameter, non-local) value:
+       the length is captured as a Python int at trace time — shapes
+       derived from it go stale silently, and tracing per-length churns
+       the jit cache.
+  RH3  trace-time host side effects: ``time.*``, ``random.*``,
+       ``np.random.*``, ``print`` — evaluated once at trace time, frozen
+       thereafter (a timestamp that never advances, a "random" constant).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.core import Checker, Finding, SourceModule, parent
+
+_SIDE_EFFECT_ROOTS = ("time.", "random.", "numpy.random.")
+_SIDE_EFFECT_CALLS = {"print"}
+
+
+class RetraceHazardChecker(Checker):
+    rule = "retrace-hazard"
+
+    def check(self, mod: SourceModule) -> List[Finding]:
+        out: List[Finding] = []
+        for info in mod.functions.values():
+            if info.traced or info.kernel:
+                out.extend(self._check_fn(mod, info.node))
+        return out
+
+    def _check_fn(self, mod: SourceModule, fn: ast.AST) -> List[Finding]:
+        out: List[Finding] = []
+        params = self._params(fn)
+        local_names = self._local_bindings(fn, params)
+        # pre-pass: nonlocal/global declarations bind the whole function
+        # scope regardless of where they appear
+        nonlocals: Set[str] = set()
+        for node in self._walk_same_function(fn):
+            if isinstance(node, (ast.Nonlocal, ast.Global)):
+                nonlocals.update(node.names)
+        for node in self._walk_same_function(fn):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    self._check_mutation(mod, t, nonlocals, out)
+            elif isinstance(node, ast.Call):
+                name = mod.dotted(node.func)
+                if name is None:
+                    continue
+                if name == "len" and node.args \
+                        and isinstance(node.args[0], ast.Name) \
+                        and node.args[0].id not in params \
+                        and node.args[0].id not in local_names:
+                    out.append(self.finding(
+                        mod, node,
+                        f"len({node.args[0].id}) of a closed-over value is "
+                        f"frozen at trace time — pass it as an argument or "
+                        f"derive it from a traced shape"))
+                elif name in _SIDE_EFFECT_CALLS or any(
+                        name.startswith(r) for r in _SIDE_EFFECT_ROOTS):
+                    out.append(self.finding(
+                        mod, node,
+                        f"{name}() inside a traced function runs at trace "
+                        f"time only — its value is frozen into the "
+                        f"compiled artifact"))
+        return out
+
+    def _check_mutation(self, mod: SourceModule, target: ast.AST,
+                        nonlocals: Set[str], out: List[Finding]) -> None:
+        if isinstance(target, (ast.Attribute, ast.Subscript)):
+            base = target
+            while isinstance(base, (ast.Attribute, ast.Subscript)):
+                base = base.value
+            if isinstance(base, ast.Name) and base.id == "self":
+                out.append(self.finding(
+                    mod, target,
+                    f"traced function mutates closed-over engine state "
+                    f"({ast.unparse(target)}) — this runs at trace time "
+                    f"only and is skipped on every compiled call"))
+        elif isinstance(target, ast.Name) and target.id in nonlocals:
+            out.append(self.finding(
+                mod, target,
+                f"traced function writes nonlocal/global {target.id!r} — "
+                f"trace-time-only mutation of host state"))
+
+    @staticmethod
+    def _params(fn: ast.AST) -> Set[str]:
+        args = getattr(fn, "args", None)
+        if args is None:
+            return set()
+        names = {a.arg for a in
+                 list(args.posonlyargs) + list(args.args)
+                 + list(args.kwonlyargs)}
+        if args.vararg:
+            names.add(args.vararg.arg)
+        if args.kwarg:
+            names.add(args.kwarg.arg)
+        return names
+
+    def _local_bindings(self, fn: ast.AST, params: Set[str]) -> Set[str]:
+        """Names assigned anywhere in the function (its own locals)."""
+        names = set(params)
+        for node in self._walk_same_function(fn):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    names.update(self._target_names(t))
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                names.update(self._target_names(node.target))
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                names.update(self._target_names(node.target))
+            elif isinstance(node, ast.withitem) \
+                    and node.optional_vars is not None:
+                names.update(self._target_names(node.optional_vars))
+        return names
+
+    @staticmethod
+    def _target_names(t: ast.AST) -> Set[str]:
+        out: Set[str] = set()
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                out.add(n.id)
+        return out
+
+    @staticmethod
+    def _walk_same_function(fn: ast.AST):
+        """Walk ``fn``'s body without descending into nested defs (nested
+        traced functions are checked on their own)."""
+        body = getattr(fn, "body", [])
+        stack = list(body) if isinstance(body, list) else [body]
+        while stack:
+            node = stack.pop()
+            yield node
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child,
+                              (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                stack.append(child)

@@ -1,0 +1,137 @@
+"""Command line front end — ``python -m repro.analysis``.
+
+Runs the checker suite over the given paths, subtracts the checked-in
+baseline, and reports what's left.  Exit status is the contract CI
+enforces: 0 when every finding is baselined (and no baseline entry is
+stale), 1 otherwise.
+
+  python -m repro.analysis src tests benchmarks
+  python -m repro.analysis src --rules host-sync,prng-key
+  python -m repro.analysis src tests benchmarks --format junit \
+      --output reports/junit-analysis.xml
+  python -m repro.analysis src --write-baseline   # grandfather findings
+
+Formats: ``text`` (file:line: rule: message, one per line), ``github``
+(workflow error annotations), ``junit`` (one testcase per rule — CI
+uploads it as the shard's report artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+from xml.sax.saxutils import escape, quoteattr
+
+from repro.analysis.baseline import (load_baseline, split_baselined,
+                                     write_baseline)
+from repro.analysis.checkers import CHECKERS, get_checkers
+from repro.analysis.config import BASELINE_NAME
+from repro.analysis.core import Finding, run_paths
+
+
+def _format_text(new: List[Finding], old: List[Finding],
+                 stale: List[Finding], suppressed: int) -> str:
+    lines = [f.render() for f in new]
+    for b in stale:
+        lines.append(f"stale baseline entry (fix landed — remove it): "
+                     f"{b.render()}")
+    tail = (f"{len(new)} finding(s), {len(old)} baselined, "
+            f"{len(stale)} stale baseline entr(y/ies), "
+            f"{suppressed} pragma-suppressed")
+    return "\n".join(lines + [tail])
+
+
+def _format_github(new: List[Finding], stale: List[Finding]) -> str:
+    lines = [f"::error file={f.file},line={f.line}::{f.rule}: {f.message}"
+             for f in new]
+    lines += [f"::error file={b.file}::stale baseline entry: {b.rule}: "
+              f"{b.message}" for b in stale]
+    return "\n".join(lines)
+
+
+def _format_junit(new: List[Finding], stale: List[Finding]) -> str:
+    """One <testcase> per rule; a rule's findings aggregate into one
+    <failure> body, so the CI report shows which *contracts* broke."""
+    rules = sorted(CHECKERS) + ["bad-pragma", "parse-error", "baseline"]
+    by_rule = {r: [] for r in rules}
+    for f in new:
+        by_rule.setdefault(f.rule, []).append(f.render())
+    for b in stale:
+        by_rule["baseline"].append(f"stale: {b.render()}")
+    failures = sum(1 for v in by_rule.values() if v)
+    out = ['<?xml version="1.0" encoding="utf-8"?>',
+           f'<testsuite name="repro.analysis" tests="{len(by_rule)}" '
+           f'failures="{failures}" errors="0">']
+    for rule in by_rule:
+        out.append(f'  <testcase classname="repro.analysis" '
+                   f'name={quoteattr(rule)}>')
+        if by_rule[rule]:
+            body = escape("\n".join(by_rule[rule]))
+            out.append(f'    <failure message='
+                       f'{quoteattr(f"{len(by_rule[rule])} finding(s)")}>'
+                       f'{body}</failure>')
+        out.append('  </testcase>')
+    out.append('</testsuite>')
+    return "\n".join(out)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static contract checkers for the serving stack.")
+    p.add_argument("paths", nargs="*", default=["src"],
+                   help="files or directories to scan (default: src)")
+    p.add_argument("--format", choices=("text", "github", "junit"),
+                   default="text")
+    p.add_argument("--rules",
+                   help="comma-separated subset of rules "
+                        f"(known: {', '.join(sorted(CHECKERS))})")
+    p.add_argument("--baseline", default=None,
+                   help=f"baseline file (default: ./{BASELINE_NAME} "
+                        f"when present)")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="write current findings as the new baseline "
+                        "and exit 0")
+    p.add_argument("--output", default=None,
+                   help="write the report here instead of stdout")
+    args = p.parse_args(argv)
+
+    try:
+        checkers = get_checkers(
+            [r.strip() for r in args.rules.split(",")] if args.rules
+            else None)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    findings, suppressed, errors = run_paths(args.paths, checkers)
+    findings = sorted(findings + errors)  # a broken file fails the run
+
+    baseline_path = args.baseline
+    if baseline_path is None and os.path.exists(BASELINE_NAME):
+        baseline_path = BASELINE_NAME
+    if args.write_baseline:
+        write_baseline(baseline_path or BASELINE_NAME, findings)
+        print(f"wrote {len(findings)} finding(s) to "
+              f"{baseline_path or BASELINE_NAME}", file=sys.stderr)
+        return 0
+    baseline = load_baseline(baseline_path) if baseline_path else []
+    new, old, stale = split_baselined(findings, baseline)
+
+    if args.format == "text":
+        report = _format_text(new, old, stale, len(suppressed))
+    elif args.format == "github":
+        report = _format_github(new, stale)
+    else:
+        report = _format_junit(new, stale)
+    if args.output:
+        os.makedirs(os.path.dirname(args.output) or ".", exist_ok=True)
+        with open(args.output, "w", encoding="utf-8") as f:
+            f.write(report + "\n")
+        print(f"{len(new)} finding(s); report written to {args.output}",
+              file=sys.stderr)
+    else:
+        print(report)
+    return 1 if (new or stale) else 0

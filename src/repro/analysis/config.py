@@ -1,0 +1,32 @@
+"""Checker configuration shared by the CLI and the test harness.
+
+``HOT_PATHS`` names hot-loop functions by dotted path for code that
+cannot carry the ``@hot_path`` decorator (the decorator is the preferred,
+locality-preserving marker — the entries here are the fallback channel
+and double as documentation of the serving loop's critical section).
+Paths are matched against ``<module>.<qualname>`` where the module is
+derived from the file's location under ``src/``; files outside ``src/``
+(tests, benchmarks) can only use the decorator.
+"""
+
+from __future__ import annotations
+
+# dotted <module>.<qualname> names treated exactly like @hot_path marks.
+# LLMEngine.step is the public wrapper around the decorated _step — named
+# here so the pair stays covered even if the wrapper grows logic.
+HOT_PATHS = frozenset({
+    "repro.serve.api.LLMEngine.step",
+})
+
+# directories never collected by the CLI (fixture corpora are known-bad
+# snippets that MUST flag in tests/test_analysis.py — scanning them in CI
+# would fail the tree by design)
+EXCLUDED_DIR_NAMES = frozenset({
+    "analysis_fixtures",
+    "__pycache__",
+    ".git",
+})
+
+# default baseline filename, resolved against the current directory (CI
+# runs from the repo root)
+BASELINE_NAME = "analysis_baseline.json"

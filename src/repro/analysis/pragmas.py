@@ -1,0 +1,91 @@
+"""Inline suppression pragmas: ``# repro: allow(<rule>) -- <reason>``.
+
+A pragma suppresses findings of the named rule(s) on its own line; a
+comment-only pragma line also covers the next non-blank source line, so
+long statements keep the repo's 79-column style::
+
+    # repro: allow(host-sync) -- the contract's single fetch
+    got = jax.device_get(fetch)
+
+Multiple rules separate with commas: ``allow(host-sync, retrace-hazard)``.
+The reason is mandatory — a pragma without one does not suppress anything
+and is itself reported as a ``bad-pragma`` finding, so silent waivers
+cannot creep in.
+"""
+
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from typing import Dict, List, Set
+
+PRAGMA_RE = re.compile(
+    r"#\s*repro:\s*allow\(\s*(?P<rules>[a-z0-9_\-,\s]+)\s*\)"
+    r"(?:\s*--\s*(?P<reason>\S.*))?")
+
+#: rule id reported for malformed pragmas (missing reason / empty rules)
+BAD_PRAGMA_RULE = "bad-pragma"
+
+
+@dataclass
+class Pragma:
+    """One parsed ``allow`` pragma."""
+
+    line: int                 # 1-indexed source line of the comment
+    rules: Set[str]           # rule ids it suppresses
+    reason: str               # mandatory justification
+    comment_only: bool        # line holds nothing but the comment
+    lines: Set[int] = field(default_factory=set)  # lines it covers
+
+
+def parse_pragmas(source: str):
+    """Parse ``source`` → ``(line → {rule, ...} suppression map,
+    [(line, problem), ...] malformed pragmas, [Pragma, ...])``.
+
+    Only real ``#`` comments count — the source is tokenized so pragma
+    syntax quoted inside strings or docstrings is never picked up."""
+    suppress: Dict[int, Set[str]] = {}
+    bad: List[tuple] = []
+    pragmas: List[Pragma] = []
+    lines = source.splitlines()
+    try:
+        tokens = [t for t in
+                  tokenize.generate_tokens(io.StringIO(source).readline)
+                  if t.type == tokenize.COMMENT]
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        tokens = []   # unparsable source is reported as parse-error
+    for tok in tokens:
+        i, col = tok.start
+        text = tok.string
+        m = PRAGMA_RE.search(text)
+        if m is None:
+            if "repro:" in text and "allow" in text:
+                bad.append((i, "unparsable repro: allow(...) pragma"))
+            continue
+        rules = {r.strip() for r in m.group("rules").split(",") if r.strip()}
+        reason = (m.group("reason") or "").strip()
+        if not rules:
+            bad.append((i, "pragma names no rules"))
+            continue
+        if not reason:
+            bad.append((i, "pragma has no '-- <reason>' justification"))
+            continue
+        comment_only = lines[i - 1][:col].strip() == ""
+        covered = {i}
+        if comment_only:
+            # a standalone pragma comment covers the next code line
+            # (skipping blanks and follow-on comment lines, so reasons
+            # may wrap)
+            for j in range(i + 1, len(lines) + 1):
+                nxt = lines[j - 1].strip()
+                if nxt and not nxt.startswith("#"):
+                    covered.add(j)
+                    break
+        p = Pragma(line=i, rules=rules, reason=reason,
+                   comment_only=comment_only, lines=covered)
+        pragmas.append(p)
+        for ln in covered:
+            suppress.setdefault(ln, set()).update(rules)
+    return suppress, bad, pragmas

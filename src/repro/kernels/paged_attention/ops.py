@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.annotations import hot_path
 from repro.kernels.paged_attention.kernel import (
     paged_attention_int8_pallas, paged_attention_pallas,
     paged_attention_verify_int8_pallas, paged_attention_verify_pallas,
@@ -69,6 +70,7 @@ BACKENDS = ("pallas", "interpret", "xla")
 INT8_BACKENDS = ("pallas", "interpret", "xla")
 
 
+@hot_path
 def paged_attention(
     q: jax.Array,            # [B, Hq, 1, D] float (post-RoPE)
     k_pool: jax.Array,       # [N, Hkv, block_len, D]
@@ -94,6 +96,7 @@ def paged_attention(
     raise ValueError(f"unknown backend {backend!r}")
 
 
+@hot_path
 def paged_attention_int8(
     q: jax.Array,            # [B, Hq, 1, D] float (post-RoPE)
     k_pool: jax.Array,       # [N, Hkv, block_len, D] int8
@@ -160,6 +163,7 @@ def paged_attention_int8(
     raise ValueError(f"unknown backend {backend!r}")
 
 
+@hot_path
 def paged_attention_verify(
     q: jax.Array,            # [B, Hq, Q, D] float (post-RoPE), Q = k + 1
     k_pool: jax.Array,       # [N, Hkv, block_len, D]
@@ -194,6 +198,7 @@ def paged_attention_verify(
     raise ValueError(f"unknown backend {backend!r}")
 
 
+@hot_path
 def paged_attention_verify_int8(
     q: jax.Array,            # [B, Hq, Q, D] float (post-RoPE)
     k_pool: jax.Array,       # [N, Hkv, block_len, D] int8

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.annotations import hot_path
 from repro.models import registry
 from repro.serve.backends import make_backend
 from repro.serve.config import EngineConfig
@@ -406,6 +407,7 @@ class LLMEngine:
         outputs, _ = self._step()
         return outputs
 
+    @hot_path
     def _step(self):
         """One engine iteration. Exactly one decode pass (if any slot is
         active), up to ``admit_batch`` admission dispatches (plus at most
@@ -629,6 +631,7 @@ class LLMEngine:
         self._note_finished(req)
         finished.append(req)
 
+    @hot_path
     def _fetch_and_finish(self, dec_tok, active, at_dispatch, admitted,
                           pre_released, outputs,
                           spec_drafts=None) -> List[Request]:
@@ -654,6 +657,8 @@ class LLMEngine:
             if not fetch:
                 return finished
             jax.tree.map(lambda a: a.copy_to_host_async(), fetch)
+            # repro: allow(host-sync) -- the contract's single fetch per
+            # iteration (async-started above, batched across the slots)
             got = jax.device_get(fetch)
             self.backend.transfers += 1
             dec_vals = got.get("dec")

@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.annotations import hot_path
 from repro.models import registry
 from repro.models.cache import (
     BlockAllocator, PagedLayout, blocks_for, bucket_for, cache_insert,
@@ -214,6 +215,7 @@ class ArenaBackend(_BackendBase):
         self._bucketing = ec.prefill_buckets and arch.supports_padded_prefill
 
         def _dec(p, qp, cache, last_tok, samp, any_sampling):
+            # repro: allow(retrace-hazard) -- deliberate trace counter
             self.decode_traces += 1  # runs at trace time only
             if qp is None:
                 logits, cache = arch.decode_step(p, cache, last_tok)
@@ -235,7 +237,8 @@ class ArenaBackend(_BackendBase):
 
         def _pre_bucketed(p, tokens, true_len, slot, cache, last_tok, samp,
                           embeds, any_sampling):
-            self.prefill_traces += 1  # one trace per bucket, not per length
+            # repro: allow(retrace-hazard) -- deliberate trace counter
+            self.prefill_traces += 1  # one trace per bucket, not length
             logits, c1 = arch.prefill(p, tokens, ec.max_len,
                                       true_len=true_len, embeds=embeds)
             return _insert_and_sample(logits, c1, slot, cache, last_tok,
@@ -243,6 +246,7 @@ class ArenaBackend(_BackendBase):
 
         def _pre_exact(p, tokens, slot, cache, last_tok, samp, embeds,
                        any_sampling):
+            # repro: allow(retrace-hazard) -- deliberate trace counter
             self.prefill_traces += 1
             logits, c1 = arch.prefill(p, tokens, ec.max_len, embeds=embeds)
             return _insert_and_sample(logits, c1, slot, cache, last_tok,
@@ -266,6 +270,7 @@ class ArenaBackend(_BackendBase):
         cfg = self.arch.cfg
         return "L" not in cfg.pattern or bucket <= cfg.local_window
 
+    @hot_path
     def decode(self, active, slots, samp, any_sampling):
         tok, self.cache = self._decode_fn(
             self.params, self.qparams, self.cache, self.last_tok,
@@ -274,6 +279,7 @@ class ArenaBackend(_BackendBase):
         self.decode_dispatches += 1
         return tok
 
+    @hot_path
     def prefill(self, req: Request, slot: int, samp, any_sampling):
         """One prefill dispatch for ``req`` into ``slot``; returns the
         on-device sampled first token (fetched later, with the batch)."""
@@ -318,13 +324,15 @@ class SlotBackend(_BackendBase):
         self.caches = [None] * ec.slots
 
         def _dec(p, c, t):
+            # repro: allow(retrace-hazard) -- deliberate trace counter
             self.decode_traces += 1  # runs at trace time only
             if self.qparams is None:
                 return arch.decode_step(p, c, t)
             return arch.decode_step(p, c, t, qparams=self.qparams)
 
         def _pre(p, t, embeds):
-            self.prefill_traces += 1  # retraces for every new prompt length
+            # repro: allow(retrace-hazard) -- deliberate trace counter
+            self.prefill_traces += 1  # retraces per new prompt length
             return arch.prefill(p, t, ec.max_len, embeds=embeds)
 
         self._decode = jax.jit(_dec)
@@ -675,6 +683,7 @@ class PagedBackend(_BackendBase):
             )(p, qp, cache, table, last_tok)
 
         def _dec(p, qp, cache, table, last_tok, samp, any_sampling):
+            # repro: allow(retrace-hazard) -- deliberate trace counter
             self.decode_traces += 1  # runs at trace time only
             logits, cache = _model_dec(p, qp, cache, table, last_tok)
             # sampling runs on the replicated logits *outside* the
@@ -714,7 +723,8 @@ class PagedBackend(_BackendBase):
 
         def _pre(p, tokens, true_len, slot, block_ids, ring_ids, cache,
                  last_tok, samp, embeds, prefix_ids, any_sampling, start):
-            self.prefill_traces += 1  # one trace per (bucket, block count)
+            # repro: allow(retrace-hazard) -- deliberate trace counter
+            self.prefill_traces += 1  # one trace per (bucket, blocks)
             logits, cache = _model_pre(p, tokens, true_len, slot, block_ids,
                                        ring_ids, cache, embeds, prefix_ids,
                                        start)
@@ -762,6 +772,7 @@ class PagedBackend(_BackendBase):
 
         if self.spec_supported:
             def _ver(p, qp, cache, table, packed, samp, any_sampling):
+                # repro: allow(retrace-hazard) -- deliberate trace counter
                 self.decode_traces += 1  # runs at trace time only
                 # packed [B, Q+1]: column 0 is the committed length, the
                 # rest the token row — one host→device upload per verify.
@@ -1105,6 +1116,7 @@ class PagedBackend(_BackendBase):
 
     # -- iteration hooks ---------------------------------------------------
 
+    @hot_path
     def begin_iteration(self, active, slots, spans=None):
         """Host bookkeeping before the decode (or verify) dispatch.
         ``spans`` (speculation): per-slot write extents — slot ``i``
@@ -1175,6 +1187,7 @@ class PagedBackend(_BackendBase):
                     self.ring_start[i] = first * blk
                     self._touch_tables()
 
+    @hot_path
     def decode(self, active, slots, samp, any_sampling):
         tok, self.cache = self._decode_fn(
             self.params, self.qparams, self.cache,
@@ -1185,6 +1198,7 @@ class PagedBackend(_BackendBase):
             self._slot_len[i] += 1
         return tok
 
+    @hot_path
     def verify(self, active, slots, tokens, samp, any_sampling):
         """One speculative verify dispatch — the decode replacement under
         ``spec_tokens > 0``. ``tokens`` [slots, Q] carries each row's last
@@ -1202,6 +1216,7 @@ class PagedBackend(_BackendBase):
         self.decode_dispatches += 1
         return tok
 
+    @hot_path
     def commit(self, slot: int, req: Request, accepted: int) -> None:
         """Commit ``accepted`` tokens from the last verify dispatch and
         roll the rejected tail back at block granularity: blocks grown
@@ -1271,8 +1286,16 @@ class PagedBackend(_BackendBase):
         ring_ids = None
         if self.ring:
             wb = self.layout.ring_blocks
-            ring_ids = np.asarray(
-                self.ring_alloc.admit(req.rid, wb, wb), np.int32)
+            try:
+                ring_ids = np.asarray(
+                    self.ring_alloc.admit(req.rid, wb, wb), np.int32)
+            except Exception:
+                # admission is all-or-nothing: a failed ring reservation
+                # must hand the full-history reservation back, or its
+                # blocks leak from the pool until reset (found by the
+                # alloc-pairing checker)
+                alloc.release(req.rid)
+                raise
             first = max(0, (n - 1) // blk - (wb - 1))
             self._ring_first[slot] = first
             self._ring_ids[slot] = ring_ids
@@ -1286,6 +1309,7 @@ class PagedBackend(_BackendBase):
                                  block_ids=block_ids, keys=keys_full,
                                  ring_ids=ring_ids)
 
+    @hot_path
     def prefill_chunk(self, req: Request, slot: int, budget, samp,
                       any_sampling):
         """One prefill-chunk dispatch for the admission started by

@@ -1,0 +1,30 @@
+"""alloc-pairing flagged fixture."""
+
+
+def unguarded_double_admission(alloc, ring_alloc, rid, blocks, wb):
+    ids = alloc.admit(rid, blocks, blocks)
+    ring = ring_alloc.admit(rid, wb, wb)       # EXPECT: alloc-pairing
+    return ids, ring
+
+
+def discarded_handle(alloc, rid, blocks):
+    alloc.admit(rid, blocks, blocks)           # EXPECT: alloc-pairing
+    alloc.grow(rid)                            # EXPECT: alloc-pairing
+
+
+def raise_with_open_reservation(alloc, rid, blocks, limit):
+    ids = alloc.admit(rid, blocks, blocks)
+    if len(ids) > limit:
+        raise ValueError("over limit")         # EXPECT: alloc-pairing
+    return ids
+
+
+def double_release(alloc, rid, blocks):
+    ids = alloc.admit(rid, blocks, blocks)
+    use(ids)
+    alloc.release(rid)
+    alloc.release(rid)                         # EXPECT: alloc-pairing
+
+
+def use(ids):
+    return ids

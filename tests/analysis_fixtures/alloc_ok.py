@@ -1,0 +1,44 @@
+"""alloc-pairing near misses: allocator use that must NOT flag.
+
+Covers: the guarded two-arena admission (the shape the paged backend's
+``prefill_begin`` uses after its PR-10 fix), release-then-raise in a
+handler, re-release after re-acquire, and non-allocator receivers.
+"""
+
+
+def guarded_double_admission(alloc, ring_alloc, rid, blocks, wb):
+    ids = alloc.admit(rid, blocks, blocks)
+    try:
+        ring = ring_alloc.admit(rid, wb, wb)
+    except Exception:
+        # all-or-nothing admission: hand the first arena back
+        alloc.release(rid)
+        raise
+    return ids, ring
+
+
+def release_between_acquires(alloc, rid, other_alloc, blocks):
+    ids = alloc.admit(rid, blocks, blocks)
+    use(ids)
+    alloc.release(rid)
+    more = other_alloc.admit(rid, blocks, blocks)
+    return more
+
+
+def rerelease_after_reacquire(alloc, rid, blocks):
+    alloc.release(rid)
+    ids = alloc.admit(rid, blocks, blocks)
+    use(ids)
+    alloc.release(rid)
+    return ids
+
+
+def non_allocator_receiver(pool, rid):
+    # admit/release on a non-allocator object is out of scope
+    pool.admit(rid)
+    pool.admit(rid)
+    raise RuntimeError("pool is not an allocator")
+
+
+def use(ids):
+    return ids

@@ -1,0 +1,41 @@
+"""host-sync flagged fixture: every marked line must trip the checker."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.annotations import hot_path
+
+
+@hot_path
+def decode_loop(logits: jax.Array, steps):
+    out = []
+    for _ in range(steps):
+        tok = jnp.argmax(logits)
+        out.append(tok.item())                 # EXPECT: host-sync
+    return out
+
+
+@hot_path
+def coerce(logits: jax.Array):
+    scores = jax.nn.softmax(logits)
+    best = int(jnp.argmax(scores))             # EXPECT: host-sync
+    top = float(scores[best])                  # EXPECT: host-sync
+    host = np.asarray(scores)                  # EXPECT: host-sync
+    return best, top, host
+
+
+@hot_path
+def fetch_each(tokens: jax.Array):
+    got = jax.device_get(tokens)               # EXPECT: host-sync
+    return list(got)
+
+
+@hot_path
+def control_flow(x: jax.Array):
+    y = x * 2
+    if y.sum() > 0:                            # EXPECT: host-sync
+        y = -y
+    for v in y:                                # EXPECT: host-sync
+        print(v)
+    return y

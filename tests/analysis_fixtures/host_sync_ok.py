@@ -1,0 +1,42 @@
+"""host-sync near misses: sync-shaped code that must NOT flag.
+
+Covers: syncs outside hot functions, host metadata of device arrays,
+values already landed by device_get, and coercions of plain host data.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.annotations import hot_path
+
+
+def cold_path(logits: jax.Array):
+    # not @hot_path: a sync here is legal (debug helpers, tests)
+    return int(jnp.argmax(logits))
+
+
+@hot_path
+def metadata_only(x: jax.Array):
+    # .shape/.dtype/.size are host metadata, not device reads
+    rows = int(x.shape[0])
+    width = x.shape[-1]
+    if x.ndim > 2:
+        rows *= width
+    return jnp.zeros((rows,), x.dtype)
+
+
+@hot_path
+def host_after_fetch(fetch: jax.Array, counts):
+    got = jax.device_get(fetch)  # repro: allow(host-sync) -- the fetch
+    total = int(got[0]) + int(np.sum(counts))
+    for c in counts:
+        total += c
+    return total
+
+
+@hot_path
+def host_ints(budget, used):
+    # plain host arithmetic in a hot function is fine
+    remaining = int(budget) - int(used)
+    return float(remaining)

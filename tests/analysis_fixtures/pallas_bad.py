@@ -1,0 +1,74 @@
+"""pallas-index flagged fixture.
+
+``_rglru_kernel_pr2`` preserves the PR-2 seed bug verbatim: the RG-LRU
+chunk scan stored through a *raw* ``fori_loop`` counter, which addresses
+relative to the block mapping with full-block granularity instead of the
+intended element offset — fixed by wrapping the counter in
+``pl.dslice``.  It must stay flagged forever.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel_pr2(loga_ref, u_ref, o_ref, h_ref, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    log_a = loga_ref[0].astype(jnp.float32)   # [L, D]
+    u = u_ref[0].astype(jnp.float32)          # [L, D]
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))  # √(1 − a²), stable
+    bu = beta * u
+
+    def step(t, h):
+        h = a[t] * h + bu[t]
+        pl.store(o_ref, (pl.dslice(0, 1), t, slice(None)),  # EXPECT: pallas-index
+                 h[None, None].astype(o_ref.dtype))
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+
+def rglru_pr2(log_a, u, *, chunk=256, interpret=False):
+    bsz, s, d = u.shape
+    kernel = functools.partial(_rglru_kernel_pr2, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, s // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, d), lambda b, ci: (b, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d), lambda b, ci: (b, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, d), u.dtype),
+        scratch_shapes=[pltpu.VMEM((d,), jnp.float32)],
+        interpret=interpret,
+    )(log_a, u)
+
+
+def _write_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    row = pl.load(x_ref, (i * 2, slice(None)))     # EXPECT: pallas-index
+    o_ref[i, :] = row                              # EXPECT: pallas-index
+
+
+def dispatch_bad_arity(x):
+    n, d = x.shape
+    return pl.pallas_call(
+        _write_kernel,
+        grid=(n, 2),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),     # EXPECT: pallas-index
+            pl.BlockSpec((1, d), lambda i, j: (i,)),    # EXPECT: pallas-index
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+    )(x, x)

@@ -1,0 +1,33 @@
+"""Pragma fixture: suppression, multi-line reasons, and bad pragmas."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.annotations import hot_path
+
+
+@hot_path
+def suppressed_inline(logits: jax.Array):
+    # a justified pragma on the finding's own line suppresses it
+    return int(jnp.argmax(logits))  # repro: allow(host-sync) -- debug tap
+
+
+@hot_path
+def suppressed_comment_line(fetch: jax.Array):
+    # repro: allow(host-sync) -- the engine's one fetch per iteration,
+    # batched across every slot (reason wraps over two comment lines)
+    got = jax.device_get(fetch)
+    return got
+
+
+@hot_path
+def missing_reason(logits: jax.Array):
+    # repro: allow(host-sync)                   EXPECT: bad-pragma
+    best = int(jnp.argmax(logits))             # EXPECT: host-sync
+    return best
+
+
+@hot_path
+def empty_rules(logits: jax.Array):
+    # repro: allow( ) -- reason with no rules   EXPECT: bad-pragma
+    return logits.item()                       # EXPECT: host-sync

@@ -1,0 +1,31 @@
+"""prng-key flagged fixture."""
+
+import jax
+
+
+def correlated_draws(key, shape):
+    noise = jax.random.normal(key, shape)
+    jitter = jax.random.uniform(key, shape)    # EXPECT: prng-key
+    return noise + jitter
+
+
+def reuse_after_split_consumption(key, shape):
+    k1, k2 = jax.random.split(key)
+    bad = jax.random.normal(key, shape)        # EXPECT: prng-key
+    return bad + jax.random.normal(k1, shape) + jax.random.normal(k2, shape)
+
+
+def key_reused_across_loop(base_key, logits_rows):
+    toks = []
+    for row in logits_rows:
+        toks.append(jax.random.categorical(base_key, row))  # EXPECT: prng-key
+    return toks
+
+
+def iteration_keyed_sampling(base_key, engine, logits):
+    # the PR-9 desync class: iteration counts restart on preemption
+    for it in range(8):
+        k = jax.random.fold_in(base_key, it)       # EXPECT: prng-key
+        engine.emit(jax.random.categorical(k, logits))
+    k2 = jax.random.fold_in(base_key, engine.iterations)  # EXPECT: prng-key
+    return k2

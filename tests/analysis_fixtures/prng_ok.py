@@ -1,0 +1,36 @@
+"""prng-key near misses: correct key discipline that must NOT flag.
+
+Covers: the serving contract's absolute-index keying (rid × step),
+split-then-draw, per-iteration fold_in of a *position* (not a loop
+counter), and single-use keys.
+"""
+
+import jax
+
+
+def contract_keying(base_key, rids, steps, logits):
+    # the PR-9 fix shape: every draw keyed by (request id, absolute step)
+    keys = jax.vmap(
+        lambda r, s: jax.random.fold_in(jax.random.fold_in(base_key, r), s)
+    )(rids, steps)
+    return jax.vmap(jax.random.categorical)(keys, logits)
+
+
+def split_then_draw(key, shape):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, shape)
+    b = jax.random.uniform(k2, shape)
+    return a + b
+
+
+def rebind_inside_loop(base_key, requests, logits):
+    toks = []
+    for req in requests:
+        # fresh key per request from its absolute output position
+        k = jax.random.fold_in(base_key, req.next_position)
+        toks.append(jax.random.categorical(k, logits))
+    return toks
+
+
+def single_use(key, shape):
+    return jax.random.normal(key, shape)

@@ -1,0 +1,40 @@
+"""retrace-hazard flagged fixture."""
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+class Engine:
+    def __init__(self, arch):
+        self.decode_traces = 0
+        self.stats = {"steps": 0}
+
+        def _dec(p, cache, tok):
+            self.decode_traces += 1            # EXPECT: retrace-hazard
+            self.stats["steps"] += 1           # EXPECT: retrace-hazard
+            return arch.decode(p, cache, tok)
+
+        self._decode = jax.jit(_dec)
+
+
+def make_step(schedule):
+    calls = 0
+
+    def step(x):
+        nonlocal calls
+        calls += 1                             # EXPECT: retrace-hazard
+        started = time.perf_counter()          # EXPECT: retrace-hazard
+        n = len(schedule)                      # EXPECT: retrace-hazard
+        print("tracing", started)              # EXPECT: retrace-hazard
+        return x * n
+
+    return jax.jit(step)
+
+
+@functools.partial(jax.jit, static_argnames=("flip",))
+def decorated(x, flip):
+    noise = jnp.float32(time.time())           # EXPECT: retrace-hazard
+    return -x + noise if flip else x + noise

@@ -1,0 +1,39 @@
+"""retrace-hazard near misses: trace-safe code that must NOT flag.
+
+Covers: mutation in plain host methods, ``len()`` of locals/params,
+side effects outside traced functions, and locals shadowing closures.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+class Engine:
+    def step(self):
+        # not traced: host bookkeeping mutates freely
+        self.iterations += 1
+        self.last_step_at = time.perf_counter()
+
+        def _dec(p, cache, tok, schedule):
+            # len() of a *parameter* re-traces legitimately via the
+            # argument's static structure, and locals are locals
+            width = len(schedule)
+            acc = jnp.zeros((width,))
+            parts = [acc, tok]
+            return p, cache, len(parts)
+
+        self._decode = jax.jit(_dec)
+        return self._decode
+
+
+def make_step(schedule):
+    def step(x, scale):
+        # closure *reads* are fine (frozen constants by design)
+        table = schedule
+        total = len(table)
+        y = x * scale + total
+        return y
+
+    return jax.jit(step)

@@ -1,0 +1,284 @@
+"""Tests for ``repro.analysis`` — the static contract checkers.
+
+Three layers:
+
+* golden fixture tests — every file under ``tests/analysis_fixtures/``
+  carries ``# EXPECT: <rule>`` markers on the lines that must flag;
+  the checkers' findings must match the markers *exactly* (near-miss
+  ``_ok`` files have no markers and must produce zero findings);
+* CLI/CI contract — subprocess runs of ``python -m repro.analysis``:
+  the repo tree is clean (exit 0), a seeded violation fails (exit 1),
+  formats render, the baseline grandfathers and goes stale correctly;
+* meta — the checked-in baseline equals a fresh full-repo run, every
+  registered rule has a flagged and a near-miss fixture, and the
+  runtime ``@hot_path`` attribute agrees with static detection.
+"""
+
+import json
+import os
+import re
+import shutil
+import subprocess
+import sys
+import xml.etree.ElementTree as ET
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    CHECKERS, Finding, HOT_PATH_ATTR, get_checkers, hot_path,
+    load_baseline, parse_pragmas, run_paths, write_baseline,
+)
+from repro.analysis.core import SourceModule
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+FIXTURES = REPO / "tests" / "analysis_fixtures"
+FIXTURE_FILES = sorted(p.name for p in FIXTURES.glob("*.py"))
+
+# rule id → fixture file stem prefix
+RULE_PREFIX = {
+    "host-sync": "host_sync",
+    "retrace-hazard": "retrace",
+    "pallas-index": "pallas",
+    "alloc-pairing": "alloc",
+    "prng-key": "prng",
+}
+
+_MARKER = re.compile(r"EXPECT:\s*([a-z\-]+(?:\s*,\s*[a-z\-]+)*)\s*$")
+
+
+def expected_markers(path: Path):
+    out = set()
+    for i, line in enumerate(path.read_text().splitlines(), start=1):
+        m = _MARKER.search(line)
+        if m:
+            for rule in m.group(1).split(","):
+                out.add((i, rule.strip()))
+    return out
+
+
+def _cli(args, cwd=REPO):
+    env = dict(os.environ, PYTHONPATH=str(SRC))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, env=env, capture_output=True, text=True)
+
+
+# -- golden fixtures --------------------------------------------------------
+
+@pytest.mark.parametrize("name", FIXTURE_FILES)
+def test_fixture_golden(name):
+    path = FIXTURES / name
+    findings, _suppressed, errors = run_paths([str(path)])
+    assert not errors, [e.render() for e in errors]
+    got = {(f.line, f.rule) for f in findings}
+    assert got == expected_markers(path), (
+        f"{name}: findings disagree with EXPECT markers\n"
+        + "\n".join(f.render() for f in findings))
+
+
+def test_every_rule_has_fixture_pair():
+    assert set(RULE_PREFIX) == set(CHECKERS)
+    for rule, prefix in RULE_PREFIX.items():
+        bad = FIXTURES / f"{prefix}_bad.py"
+        ok = FIXTURES / f"{prefix}_ok.py"
+        assert bad.is_file() and ok.is_file(), rule
+        assert any(r == rule for _, r in expected_markers(bad)), (
+            f"{bad.name} has no EXPECT marker for {rule}")
+        assert not expected_markers(ok), f"{ok.name} must not carry markers"
+
+
+def test_pr2_regression_store_is_flagged():
+    """The PR-2 RG-LRU raw store index must trip pallas-index on the
+    exact pl.store line, and only the checker for that rule."""
+    path = FIXTURES / "pallas_bad.py"
+    lines = path.read_text().splitlines()
+    (store_line,) = [i for i, l in enumerate(lines, 1)
+                     if "pl.store(o_ref, (pl.dslice(0, 1), t," in l]
+    findings, _, _ = run_paths([str(path)], get_checkers(["pallas-index"]))
+    assert any(f.line == store_line for f in findings)
+    assert all("dslice" in f.message for f in findings
+               if f.line == store_line)
+
+
+# -- pragmas ----------------------------------------------------------------
+
+def test_pragma_inline_and_comment_coverage():
+    src = (
+        "x = sync()  # repro: allow(host-sync) -- tap\n"
+        "# repro: allow(prng-key, alloc-pairing) -- two rules,\n"
+        "# reason wraps over comment lines\n"
+        "\n"
+        "y = draw()\n")
+    suppress, bad, pragmas = parse_pragmas(src)
+    assert not bad
+    assert suppress[1] == {"host-sync"}
+    assert suppress[5] == {"prng-key", "alloc-pairing"}
+    assert len(pragmas) == 2 and pragmas[1].comment_only
+
+
+def test_pragma_requires_reason_and_rules():
+    suppress, bad, _ = parse_pragmas(
+        "a = 1  # repro: allow(host-sync)\n"
+        "b = 2  # repro: allow( ) -- no rules\n"
+        "c = 3  # repro: allowance(host-sync) -- not a pragma\n")
+    assert not suppress
+    assert [line for line, _ in bad] == [1, 2, 3]
+
+
+def test_pragma_in_string_is_ignored():
+    suppress, bad, pragmas = parse_pragmas(
+        'doc = "# repro: allow(host-sync) -- quoted, not a comment"\n')
+    assert not suppress and not bad and not pragmas
+
+
+def test_pragma_suppression_is_counted():
+    findings, suppressed, _ = run_paths(
+        [str(FIXTURES / "pragma_cases.py")])
+    assert len(suppressed) >= 2          # the two justified pragmas
+    rules = {f.rule for f in findings}
+    assert rules == {"bad-pragma", "host-sync"}
+
+
+# -- baseline ---------------------------------------------------------------
+
+def test_baseline_roundtrip_and_split(tmp_path):
+    from repro.analysis.baseline import split_baselined
+    a = Finding(file="x.py", line=3, rule="host-sync", message="m")
+    b = Finding(file="y.py", line=7, rule="prng-key", message="n")
+    path = tmp_path / "base.json"
+    write_baseline(str(path), [b, a])
+    loaded = load_baseline(str(path))
+    assert loaded == [a, b]              # sorted, stable roundtrip
+    new, old, stale = split_baselined([a], [a, b])
+    assert (new, old, stale) == ([], [a], [b])
+
+
+def test_baseline_version_guard(tmp_path):
+    path = tmp_path / "base.json"
+    path.write_text(json.dumps({"version": 99, "findings": []}))
+    with pytest.raises(ValueError):
+        load_baseline(str(path))
+
+
+def test_repo_tree_matches_checked_in_baseline():
+    """Meta-test: a fresh full-repo run must equal analysis_baseline.json
+    exactly — fixing a baselined finding without removing its entry (or
+    introducing a new finding) fails tier-1."""
+    findings, _, errors = run_paths(
+        [str(REPO / "src"), str(REPO / "tests"), str(REPO / "benchmarks")])
+    assert not errors, [e.render() for e in errors]
+    baseline = load_baseline(str(REPO / "analysis_baseline.json"))
+    fresh = sorted(f"{Path(f.file).name}:{f.line}:{f.rule}"
+                   for f in findings)
+    base = sorted(f"{Path(b.file).name}:{b.line}:{b.rule}"
+                  for b in baseline)
+    assert fresh == base
+
+
+# -- CLI / CI contract ------------------------------------------------------
+
+def test_cli_repo_clean_exit_zero():
+    """The CI shard's exact invocation must pass on the checked-in tree."""
+    r = _cli(["src", "tests", "benchmarks"])
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_seeded_violation_fails(tmp_path):
+    """Seeding a violation must fail the CI command; removing it passes."""
+    shutil.copy(FIXTURES / "alloc_bad.py", tmp_path / "seeded.py")
+    r = _cli([str(tmp_path)])
+    assert r.returncode == 1
+    assert "alloc-pairing" in r.stdout
+    (tmp_path / "seeded.py").unlink()
+    shutil.copy(FIXTURES / "alloc_ok.py", tmp_path / "clean.py")
+    assert _cli([str(tmp_path)]).returncode == 0
+
+
+def test_cli_github_format(tmp_path):
+    shutil.copy(FIXTURES / "prng_bad.py", tmp_path / "seeded.py")
+    r = _cli([str(tmp_path), "--format", "github"])
+    assert r.returncode == 1
+    assert "::error file=" in r.stdout and "prng-key" in r.stdout
+
+
+def test_cli_junit_format(tmp_path):
+    shutil.copy(FIXTURES / "host_sync_bad.py", tmp_path / "seeded.py")
+    out = tmp_path / "reports" / "junit.xml"
+    r = _cli([str(tmp_path), "--format", "junit", "--output", str(out)])
+    assert r.returncode == 1
+    suite = ET.parse(out).getroot()
+    assert suite.tag == "testsuite"
+    cases = {c.get("name"): c for c in suite.iter("testcase")}
+    assert set(CHECKERS) <= set(cases)
+    assert cases["host-sync"].find("failure") is not None
+    assert cases["prng-key"].find("failure") is None
+    assert int(suite.get("failures")) == 1
+
+
+def test_cli_rules_subset_and_unknown(tmp_path):
+    shutil.copy(FIXTURES / "host_sync_bad.py", tmp_path / "seeded.py")
+    r = _cli([str(tmp_path), "--rules", "prng-key"])
+    assert r.returncode == 0             # host-sync finder not selected
+    assert _cli(["src", "--rules", "nope"]).returncode == 2
+
+
+def test_cli_baseline_grandfathers_and_goes_stale(tmp_path):
+    shutil.copy(FIXTURES / "retrace_bad.py", tmp_path / "seeded.py")
+    base = tmp_path / "base.json"
+    r = _cli([str(tmp_path), "--write-baseline", "--baseline", str(base)])
+    assert r.returncode == 0 and base.is_file()
+    # grandfathered: same tree + baseline → clean
+    assert _cli([str(tmp_path), "--baseline", str(base)]).returncode == 0
+    # fix the finding: baseline entries go stale → fail until removed
+    (tmp_path / "seeded.py").unlink()
+    shutil.copy(FIXTURES / "retrace_ok.py", tmp_path / "seeded.py")
+    r = _cli([str(tmp_path), "--baseline", str(base)])
+    assert r.returncode == 1 and "stale" in r.stdout
+
+
+# -- annotations / roles ----------------------------------------------------
+
+def test_hot_path_attr_and_registry():
+    @hot_path
+    def f():
+        return 1
+
+    assert getattr(f, HOT_PATH_ATTR) is True
+    assert f() == 1                      # decorator is behavior-free
+    assert set(RULE_PREFIX) == set(CHECKERS)
+    with pytest.raises(ValueError):
+        get_checkers(["host-sync", "bogus"])
+
+
+def test_runtime_marks_agree_with_static_detection():
+    """The functions the engine decorates at runtime are the ones the
+    analyzer sees as hot — decorator drift fails here."""
+    api = pytest.importorskip("repro.serve.api")
+    mod = SourceModule(str(SRC / "repro" / "serve" / "api.py"))
+    static_hot = {i.qualname for i in mod.functions_of_role("hot")}
+    assert {"LLMEngine._step", "LLMEngine._fetch_and_finish",
+            "LLMEngine.step"} <= static_hot
+    for name in ("_step", "_fetch_and_finish"):
+        assert getattr(getattr(api.LLMEngine, name), HOT_PATH_ATTR, False)
+
+
+def test_traced_and_kernel_roles_from_source():
+    src = (
+        "import functools\n"
+        "import jax\n"
+        "from jax.experimental import pallas as pl\n"
+        "def k(x_ref, o_ref):\n"
+        "    o_ref[...] = x_ref[...]\n"
+        "def j(x):\n"
+        "    return x\n"
+        "def run(x):\n"
+        "    kern = functools.partial(k)\n"
+        "    f = jax.jit(functools.partial(j))\n"
+        "    return pl.pallas_call(kern, grid=(1,))(x), f(x)\n")
+    mod = SourceModule("inline.py", source=src)
+    infos = {i.qualname: i for i in mod.functions.values()}
+    assert infos["k"].kernel
+    assert infos["j"].traced
+    assert not infos["run"].traced

@@ -239,6 +239,8 @@ def test_blocks_mode_pool_split_and_placement():
     # slots 0/2 live on device 0, slots 1/3 on device 1
     assert be.choose_slot(req, [0, 1, 2, 3]) is not None
     # exhaust device 0: its slots are no longer eligible
+    # repro: allow(alloc-pairing) -- capacity-exhaustion setup; the
+    # blocks are reclaimed below by rid, the ids are never needed
     be.allocs[0].admit(rid=999, now_blocks=4, max_blocks=4)
     assert not be.allocs[0].can_admit(be._max_blocks_needed(req))
     assert be.choose_slot(req, [0, 2]) is None
